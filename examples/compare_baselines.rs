@@ -1,0 +1,80 @@
+//! Evaluate every heuristic baseline (and any cached trained checkpoints)
+//! across the paper's penalty weights and print the Fig. 6-style table.
+//!
+//! ```sh
+//! cargo run --release --example compare_baselines -- [--eval-episodes 20]
+//! ```
+
+use anyhow::Result;
+
+use edgevision::config::Config;
+use edgevision::experiments::{ExpContext, RlMethod, OMEGAS};
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::telemetry::report::method_row;
+use edgevision::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let mut cfg = Config::default();
+    cfg.apply_args(&args)?;
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    let ctx = ExpContext::new(&rt, &manifest, cfg.clone());
+
+    println!(
+        "{:<22} {:>6} {:>10} {:>8} {:>8} {:>7} {:>7}",
+        "method", "omega", "reward", "acc", "delay", "disp%", "drop%"
+    );
+    for &omega in &OMEGAS {
+        for h in [
+            "predictive",
+            "shortest_queue_min",
+            "shortest_queue_max",
+            "random_min",
+            "random_max",
+        ] {
+            let res = ctx.eval_heuristic(h, omega)?;
+            let row = method_row(h, omega, &res.metrics, res.mean_episode_reward());
+            println!(
+                "{:<22} {:>6} {:>10.2} {:>8.4} {:>8.3} {:>6.1}% {:>6.1}%",
+                row.method,
+                omega,
+                row.mean_episode_reward,
+                row.avg_accuracy,
+                row.avg_delay,
+                100.0 * row.dispatch_pct,
+                100.0 * row.drop_pct
+            );
+        }
+        // include trained methods when checkpoints are already cached
+        for method in [RlMethod::Ours, RlMethod::Ippo, RlMethod::LocalPpo] {
+            let ckpt = format!(
+                "{}/checkpoints/{}_omega{}.bin",
+                cfg.paths.results,
+                method.name(),
+                omega
+            );
+            if std::path::Path::new(&ckpt).exists() {
+                let blob = ctx.train_or_load(method, omega)?;
+                let res = ctx.eval_rl(method, omega, &blob)?;
+                let row = method_row(
+                    method.name(),
+                    omega,
+                    &res.metrics,
+                    res.mean_episode_reward(),
+                );
+                println!(
+                    "{:<22} {:>6} {:>10.2} {:>8.4} {:>8.3} {:>6.1}% {:>6.1}%",
+                    row.method,
+                    omega,
+                    row.mean_episode_reward,
+                    row.avg_accuracy,
+                    row.avg_delay,
+                    100.0 * row.dispatch_pct,
+                    100.0 * row.drop_pct
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Memory probe: loops each executable class and prints RSS growth.
+use edgevision::config::Config;
+use edgevision::rl::params::ParamStore;
+use edgevision::runtime::{lit_f32, lit_i32, lit_scalar_f32, Manifest, Runtime};
+use xla::Literal;
+
+fn rss_kb() -> u64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines().find(|l| l.starts_with("VmRSS")).unwrap()
+        .split_whitespace().nth(1).unwrap().parse().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    let n = manifest.net.n_agents;
+    let d = manifest.net.obs_dim;
+    let spec = manifest.variant("full")?;
+
+    // 1. actor_fwd loop with buffers
+    let blob = manifest.read_param_blob(&spec.params_init, spec.n_elems)?;
+    let policy = edgevision::rl::policy::ActorPolicy::with_params(&rt, &manifest, &blob, false)?;
+    let mut rng = edgevision::util::rng::Rng::new(0);
+    let obs = vec![0.1f32; n * d];
+    let r0 = rss_kb();
+    for _ in 0..3000 { policy.act(&obs, &mut rng, false)?; }
+    println!("actor_fwd x3000:   {} kB -> {} kB (delta {})", r0, rss_kb(), rss_kb() as i64 - r0 as i64);
+
+    // 2. critic_fwd loop
+    let store = ParamStore::from_init(&manifest, "full")?;
+    let critic = rt.load(&spec.critic_fwd)?;
+    let bc = manifest.net.critic_batch;
+    let obs_lit = lit_f32(&vec![0.1f32; bc * n * d], &[bc, n, d])?;
+    let r0 = rss_kb();
+    for _ in 0..200 {
+        let mut inputs: Vec<&Literal> = store.critic_params().iter().collect();
+        inputs.push(&obs_lit);
+        critic.run(&inputs)?;
+    }
+    println!("critic_fwd x200:   {} kB -> {} kB (delta {})", r0, rss_kb(), rss_kb() as i64 - r0 as i64);
+
+    // 3. train_step loop
+    let train = rt.load(&spec.train_step)?;
+    let b = manifest.net.minibatch;
+    let obs_b = lit_f32(&vec![0.1f32; b * n * d], &[b, n, d])?;
+    let act_b = lit_i32(&vec![1i32; b * n * 3], &[b, n, 3])?;
+    let f_b = lit_f32(&vec![0.0f32; b * n], &[b, n])?;
+    let mask = lit_f32(&vec![0.0f32; n * n], &[n, n])?;
+    let lr = lit_scalar_f32(5e-4);
+    let mut store = ParamStore::from_init(&manifest, "full")?;
+    let r0 = rss_kb();
+    for _ in 0..60 {
+        let mut inputs: Vec<&Literal> = Vec::new();
+        inputs.extend(store.params.iter());
+        inputs.extend(store.adam_m.iter());
+        inputs.extend(store.adam_v.iter());
+        inputs.push(&store.step);
+        inputs.push(&lr);
+        inputs.push(&obs_b); inputs.push(&act_b);
+        inputs.push(&f_b); inputs.push(&f_b); inputs.push(&f_b); inputs.push(&f_b);
+        inputs.push(&mask);
+        let outs = train.run(&inputs)?;
+        store.adopt_train_outputs(outs)?;
+    }
+    println!("train_step x60:    {} kB -> {} kB (delta {})", r0, rss_kb(), rss_kb() as i64 - r0 as i64);
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load the AOT artifacts, step the multi-edge simulator with
+//! the initial (untrained) policy and with a heuristic, and print what the
+//! system is doing. Run with:
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use edgevision::baselines::{Selection, ShortestQueueController};
+use edgevision::config::Config;
+use edgevision::env::SimConfig;
+use edgevision::rl::eval::evaluate;
+use edgevision::rl::policy::{ActorPolicy, PolicyController};
+use edgevision::runtime::{Manifest, Runtime};
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    println!(
+        "loaded artifacts: N={} agents, obs_dim={}, {} critic variants",
+        manifest.net.n_agents,
+        manifest.net.obs_dim,
+        manifest.variants.len()
+    );
+
+    let sim_cfg = SimConfig::from_env(&cfg.env);
+
+    // 1. untrained policy (random-ish init) through the real actor artifact
+    let spec = manifest.variant("full")?;
+    let blob = manifest.read_param_blob(&spec.params_init, spec.n_elems)?;
+    let policy = ActorPolicy::with_params(&rt, &manifest, &blob, false)?;
+    let mut ctrl = PolicyController::new("untrained", policy, 0, false);
+    let res = evaluate(&mut ctrl, &sim_cfg, 3, cfg.env.episode_len, 0)?;
+    println!(
+        "untrained policy : reward {:8.2}  acc {:.3}  delay {:.3}s  drop {:4.1}%",
+        res.mean_episode_reward(),
+        res.metrics.avg_accuracy(),
+        res.metrics.avg_delay(),
+        100.0 * res.metrics.drop_pct()
+    );
+
+    // 2. a heuristic for contrast
+    let mut sq = ShortestQueueController::new(Selection::Min);
+    let res = evaluate(&mut sq, &sim_cfg, 3, cfg.env.episode_len, 0)?;
+    println!(
+        "shortest-queue   : reward {:8.2}  acc {:.3}  delay {:.3}s  drop {:4.1}%",
+        res.mean_episode_reward(),
+        res.metrics.avg_accuracy(),
+        res.metrics.avg_delay(),
+        100.0 * res.metrics.drop_pct()
+    );
+
+    println!("\nnext: cargo run --release --example train_marl");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Train the EdgeVision MAPPO agents for a short run and watch the shared
+//! reward improve, then compare the trained policy against its untrained
+//! self. The full PPO update — including gradients through the Pallas
+//! attention kernel — executes inside the AOT `train_step_full` artifact.
+//!
+//! ```sh
+//! cargo run --release --example train_marl
+//! ```
+
+use anyhow::Result;
+
+use edgevision::config::Config;
+use edgevision::env::SimConfig;
+use edgevision::rl::eval::evaluate;
+use edgevision::rl::policy::{ActorPolicy, PolicyController};
+use edgevision::rl::trainer::Trainer;
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::util::stats::mean;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.rl.episodes = 120; // short demo run; experiments use more
+    cfg.env.omega = 5.0;
+
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+
+    // untrained reference
+    let spec = manifest.variant("full")?;
+    let init_blob = manifest.read_param_blob(&spec.params_init, spec.n_elems)?;
+    let policy = ActorPolicy::with_params(&rt, &manifest, &init_blob, false)?;
+    let mut untrained = PolicyController::new("untrained", policy, 1, false);
+    let sim_cfg = SimConfig::from_env(&cfg.env);
+    let before = evaluate(&mut untrained, &sim_cfg, 5, cfg.env.episode_len, 42)?;
+
+    println!("training {} episodes (omega = {})...", cfg.rl.episodes, cfg.env.omega);
+    let mut trainer = Trainer::new(&rt, &manifest, cfg.clone())?;
+    let outcome = trainer.train(|ep, r| {
+        if ep % 10 == 0 {
+            println!("  episode {ep:4}  shared reward {r:9.2}");
+        }
+    })?;
+
+    let policy = ActorPolicy::with_params(&rt, &manifest, &outcome.params_blob, false)?;
+    let mut trained = PolicyController::new("trained", policy, 2, false);
+    let after = evaluate(&mut trained, &sim_cfg, 5, cfg.env.episode_len, 42)?;
+
+    let first20 = mean(&outcome.episode_rewards[..20.min(outcome.episode_rewards.len())]);
+    let last20 = mean(
+        &outcome.episode_rewards[outcome.episode_rewards.len().saturating_sub(20)..],
+    );
+    println!("\ntraining reward: first-20 mean {first20:.2} -> last-20 mean {last20:.2}");
+    println!(
+        "eval reward: untrained {:.2} -> trained {:.2}",
+        before.mean_episode_reward(),
+        after.mean_episode_reward()
+    );
+    println!(
+        "eval drop rate: untrained {:.1}% -> trained {:.1}%",
+        100.0 * before.metrics.drop_pct(),
+        100.0 * after.metrics.drop_pct()
+    );
+    println!("({} PPO updates in {:.0}s)", outcome.updates.len(), outcome.train_secs);
+    Ok(())
+}

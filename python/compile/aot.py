@@ -1,0 +1,232 @@
+"""AOT exporter — lowers every L2/L1 computation to HLO *text* artifacts.
+
+Run once at build time (`make artifacts`); Python never appears on the
+request or training path afterwards. The Rust coordinator loads the
+artifacts via `xla::HloModuleProto::from_text_file` + PJRT-CPU.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. Everything is lowered with `return_tuple=True` and
+unwrapped tuple-wise on the Rust side.
+
+Artifacts (see DESIGN.md §3):
+  actor_fwd.hlo.txt                stacked-agent actor forward
+  critic_fwd_{variant}.hlo.txt     stacked-agent critic forward (3 variants)
+  train_step_{variant}.hlo.txt     fused PPO minibatch update (3 variants)
+  detector_{s}_{res}.hlo.txt       model-zoo CNN forward (4 sizes x 5 res)
+  preprocess_{res}.hlo.txt         Pallas bilinear resize 1080 -> res
+  params_init_{variant}.bin        initial parameters, f32 LE, flatten order
+  manifest.json                    shapes/orders/dims contract for Rust
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as tu
+from jax._src.lib import xla_client as xc
+
+from .config import (
+    CRITIC_VARIANTS,
+    MODEL_NAMES,
+    RES_ORDER,
+    RESOLUTIONS,
+    NetConfig,
+    PpoConfig,
+)
+from . import model as M
+from .kernels.resize import bilinear_matrix, resize_bilinear
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", p)) for p in path)
+
+
+def leaves_with_names(tree):
+    flat, _ = tu.tree_flatten_with_path(tree)
+    return [(_leaf_name(path), leaf) for path, leaf in flat]
+
+
+def write_artifact(outdir, name, lowered):
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) // 1024} KiB)")
+    return name
+
+
+def export_rl(outdir, cfg: NetConfig, ppo: PpoConfig, seed: int):
+    """Lower actor/critic/train_step for all critic variants; init params."""
+    manifest_variants = {}
+    n, d = cfg.n_agents, cfg.obs_dim
+    mask_spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    # --- actor forward (shared by every variant) -------------------------
+    params_full = M.init_params(jax.random.PRNGKey(seed), cfg, "full")
+    actor_specs = tu.tree_map(_spec_of, params_full["actor"])
+    obs_step = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    lowered = jax.jit(M.actor_fwd).lower(actor_specs, obs_step, mask_spec)
+    actor_name = write_artifact(outdir, "actor_fwd.hlo.txt", lowered)
+    actor_leaves = [
+        {"name": nm, "shape": list(x.shape)}
+        for nm, x in leaves_with_names(params_full["actor"])
+    ]
+
+    # --- per-variant critic forward + train step -------------------------
+    for variant in CRITIC_VARIANTS:
+        params = M.init_params(jax.random.PRNGKey(seed), cfg, variant)
+        pspecs = tu.tree_map(_spec_of, params)
+
+        obs_cb = jax.ShapeDtypeStruct((cfg.critic_batch, n, d), jnp.float32)
+        lowered = jax.jit(
+            lambda p, o, _v=variant: M.critic_fwd(p, o, cfg, _v)
+        ).lower(pspecs["critic"], obs_cb)
+        critic_name = write_artifact(
+            outdir, f"critic_fwd_{variant}.hlo.txt", lowered
+        )
+
+        b = cfg.minibatch
+        f32 = jnp.float32
+        batch_specs = dict(
+            obs=jax.ShapeDtypeStruct((b, n, d), f32),
+            actions=jax.ShapeDtypeStruct((b, n, 3), jnp.int32),
+            old_logp=jax.ShapeDtypeStruct((b, n), f32),
+            adv=jax.ShapeDtypeStruct((b, n), f32),
+            ret=jax.ShapeDtypeStruct((b, n), f32),
+            old_val=jax.ShapeDtypeStruct((b, n), f32),
+        )
+        scalar = jax.ShapeDtypeStruct((), f32)
+        ts = M.make_train_step(cfg, PpoConfig(), variant)
+        lowered = jax.jit(ts).lower(
+            pspecs, pspecs, pspecs, scalar, scalar,
+            batch_specs["obs"], batch_specs["actions"],
+            batch_specs["old_logp"], batch_specs["adv"],
+            batch_specs["ret"], batch_specs["old_val"], mask_spec,
+        )
+        ts_name = write_artifact(
+            outdir, f"train_step_{variant}.hlo.txt", lowered
+        )
+
+        # initial parameter dump, flatten order == HLO parameter order
+        named = leaves_with_names(params)
+        blob = np.concatenate(
+            [np.asarray(x, dtype=np.float32).ravel() for _, x in named]
+        )
+        bin_name = f"params_init_{variant}.bin"
+        blob.tofile(os.path.join(outdir, bin_name))
+        print(f"  wrote {bin_name} ({blob.size} f32 elems)")
+
+        manifest_variants[variant] = {
+            "params": [
+                {"name": nm, "shape": list(x.shape)} for nm, x in named
+            ],
+            "n_elems": int(blob.size),
+            "params_init": bin_name,
+            "critic_fwd": critic_name,
+            "train_step": ts_name,
+            "train_step_metrics": [
+                "total", "policy_loss", "value_loss", "entropy",
+                "approx_kl", "clip_frac", "value_mean", "grad_norm",
+            ],
+        }
+
+    return {
+        "actor_fwd": actor_name,
+        "actor_params": actor_leaves,
+        "variants": manifest_variants,
+    }
+
+
+def export_zoo(outdir, seed: int):
+    """Lower the 4-size detector zoo at every resolution + preprocessors."""
+    zoo = []
+    for s in range(len(M.ZOO_SPECS)):
+        det = M.make_detector(s, seed=seed)
+        for res in RES_ORDER:
+            h, w = RESOLUTIONS[res]
+            spec = jax.ShapeDtypeStruct((h, w, 3), jnp.float32)
+            lowered = jax.jit(det).lower(spec)
+            name = write_artifact(outdir, f"detector_s{s}_{res}.hlo.txt",
+                                  lowered)
+            zoo.append({
+                "model": s, "model_name": MODEL_NAMES[s], "res": res,
+                "file": name, "input_shape": [h, w, 3],
+                "n_scores": M.N_CLASSES,
+            })
+
+    pre = []
+    hs, ws = RESOLUTIONS[RES_ORDER[0]]
+    for res in RES_ORDER[1:]:
+        hd, wd = RESOLUTIONS[res]
+        wy = jnp.asarray(bilinear_matrix(hd, hs))
+        wx = jnp.asarray(bilinear_matrix(wd, ws))
+
+        def preprocess(img, _wy=wy, _wx=wx):
+            # the Pallas separable-bilinear kernel; weights are constants
+            return resize_bilinear(img, _wy, _wx)
+
+        spec = jax.ShapeDtypeStruct((hs, ws, 3), jnp.float32)
+        lowered = jax.jit(preprocess).lower(spec)
+        name = write_artifact(outdir, f"preprocess_{res}.hlo.txt", lowered)
+        pre.append({
+            "res": res, "file": name,
+            "input_shape": [hs, ws, 3], "output_shape": [hd, wd, 3],
+        })
+    return {"zoo": zoo, "preprocess": pre}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-zoo", action="store_true",
+                    help="RL artifacts only (fast dev cycle)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    cfg = NetConfig()
+    ppo = PpoConfig()
+    manifest = {
+        "version": 1,
+        "net": cfg.asdict(),
+        "ppo": ppo.asdict(),
+        "res_order": RES_ORDER,
+        "resolutions": {str(r): list(RESOLUTIONS[r]) for r in RES_ORDER},
+        "model_names": MODEL_NAMES,
+        "seed": args.seed,
+    }
+
+    print("[aot] RL artifacts")
+    manifest.update(export_rl(args.outdir, cfg, ppo, args.seed))
+    if not args.skip_zoo:
+        print("[aot] detector zoo + preprocess artifacts")
+        manifest.update(export_zoo(args.outdir, args.seed))
+    else:
+        manifest.update({"zoo": [], "preprocess": []})
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Network / system dimensions shared by the L2 model and the AOT exporter.
+
+These mirror the paper's experimental setting (Section VI-A):
+  * N = 4 homogeneous edge nodes,
+  * 4 DNN detector models per node (Table II/III),
+  * 5 candidate resolutions {1080, 720, 480, 360, 240}P,
+  * actor/critic MLPs with two 128-neuron hidden layers (ReLU + LayerNorm),
+  * per-agent embedding nets with 8 neurons, 8-head attentive critic.
+
+The Rust coordinator reads the same numbers from artifacts/manifest.json, so
+this file is the single source of truth for every tensor shape that crosses
+the Rust <-> HLO boundary.
+"""
+
+from dataclasses import dataclass, field
+
+
+# (height, width) per resolution, 1/8-scale of the real pixel grids so the
+# CPU-PJRT detector zoo stays fast. Aspect ratio is preserved (~16:9) and
+# every dim is even to keep the conv stack's stride-2 pyramid clean.
+RESOLUTIONS = {
+    1080: (136, 240),
+    720: (92, 160),
+    480: (60, 108),
+    360: (44, 80),
+    240: (32, 56),
+}
+
+# Order used by the `v` (resolution) action head: index 0 = 1080P ... 4 = 240P.
+RES_ORDER = [1080, 720, 480, 360, 240]
+
+# Detector zoo stand-ins for the paper's four models, ordered exactly like
+# Tables II/III: index 0 = fasterrcnn_mobilenet_320 ... 3 = maskrcnn_resnet50.
+MODEL_NAMES = [
+    "fasterrcnn_mobilenet_320",
+    "fasterrcnn_mobilenet",
+    "retinanet_resnet50",
+    "maskrcnn_resnet50",
+]
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Shapes of the MARL networks (paper Section V-B / VI-A)."""
+
+    n_agents: int = 4          # N edge nodes == agents
+    hist_len: int = 5          # arrival-rate history window in the local state
+    n_models: int = 4          # |M|
+    n_res: int = 5             # |V|
+    hidden: int = 128          # actor/critic hidden width
+    embed: int = 8             # per-agent embedding width (paper: 8 neurons)
+    heads: int = 8             # attention heads (paper: 8)
+    minibatch: int = 256       # PPO minibatch size baked into train_step
+    critic_batch: int = 128    # batch dim baked into the critic_fwd artifact
+
+    @property
+    def obs_dim(self) -> int:
+        # o_i = (lambda history, l_i, q_ij for j != i, b_ij for j != i); Eq. (6)
+        return self.hist_len + 1 + 2 * (self.n_agents - 1)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.embed % self.heads == 0
+        return self.embed // self.heads
+
+    def asdict(self) -> dict:
+        return {
+            "n_agents": self.n_agents,
+            "hist_len": self.hist_len,
+            "n_models": self.n_models,
+            "n_res": self.n_res,
+            "hidden": self.hidden,
+            "embed": self.embed,
+            "heads": self.heads,
+            "minibatch": self.minibatch,
+            "critic_batch": self.critic_batch,
+            "obs_dim": self.obs_dim,
+        }
+
+
+# PPO hyper-parameters baked into the train_step artifact (paper VI-A):
+# clip eps 0.2, entropy coefficient 0.01; value-loss clip mirrors Eq. (19).
+@dataclass(frozen=True)
+class PpoConfig:
+    clip_eps: float = 0.2
+    value_clip_eps: float = 0.2
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    max_grad_norm: float = 0.5
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-5
+
+    def asdict(self) -> dict:
+        return {
+            "clip_eps": self.clip_eps,
+            "value_clip_eps": self.value_clip_eps,
+            "entropy_coef": self.entropy_coef,
+            "value_coef": self.value_coef,
+            "max_grad_norm": self.max_grad_norm,
+            "adam_b1": self.adam_b1,
+            "adam_b2": self.adam_b2,
+            "adam_eps": self.adam_eps,
+        }
+
+
+CRITIC_VARIANTS = ("full", "noattn", "local")

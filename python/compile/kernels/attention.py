@@ -1,0 +1,145 @@
+"""Pallas multi-head attention kernel — the attentive-critic hot-spot (L1).
+
+The paper's critic distils the N agents' state embeddings through an
+8-head attention network (Section V-B). During training this runs for
+every critic, every agent, every minibatch row — it is the densest
+compute inside `train_step`, so it is implemented as a Pallas kernel
+and wired into the L2 critic with a custom VJP whose backward pass is a
+second Pallas kernel. `interpret=True` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness is validated against
+`ref.mha_ref` by the pytest/hypothesis suite.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+axis; each program holds a fat [BB, H, S, Dh] Q/K/V tile in VMEM,
+computes batched QK^T on the MXU, a numerically-stable softmax on the
+VPU, and the PV contraction back on the MXU. The batch-block size BB is
+chosen so the tile stays inside a VMEM budget — with the paper's dims
+(N=4 agents, embed 8, 8 heads) a BB=128 tile is 3×128×8×4×1×4B = 48 KiB
+of input, far under the ~16 MiB/core budget, so the grid stays tiny and
+(crucially for interpret mode, which runs grid programs sequentially)
+the kernel is a handful of fat programs instead of thousands of slivers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-budgeted batch block: number of (batch*critic) rows per program.
+DEFAULT_BLOCK_B = 128
+
+
+def _block_b(b: int) -> int:
+    """Largest divisor of b that is <= DEFAULT_BLOCK_B (grid must tile b)."""
+    bb = min(b, DEFAULT_BLOCK_B)
+    while b % bb != 0:
+        bb -= 1
+    return bb
+
+
+def _softmax_rows(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _mha_fwd_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One [BB, H, S, Dh] tile: o = softmax(q k^T / sqrt(dh)) v."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    p = _softmax_rows(s)
+    o_ref[...] = jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                            preferred_element_type=jnp.float32)
+
+
+def _mha_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+    """One [BB, H, S, Dh] tile of the attention backward pass.
+
+    Recomputes the probabilities (flash-style: cheaper than storing them)
+    and applies the softmax VJP:
+      dv = p^T do
+      dp = do v^T
+      ds = p * (dp - rowsum(dp * p))
+      dq = ds k / sqrt(dh),  dk = ds^T q / sqrt(dh)
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    p = _softmax_rows(s)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do,
+                    preferred_element_type=jnp.float32)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do, v,
+                    preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[...] = jnp.einsum("bhqk,bhkd->bhqd", ds, k,
+                             preferred_element_type=jnp.float32) * scale
+    dk_ref[...] = jnp.einsum("bhqk,bhqd->bhkd", ds, q,
+                             preferred_element_type=jnp.float32) * scale
+    dv_ref[...] = dv
+
+
+def _tile_spec(bb: int, h: int, seq: int, dh: int) -> pl.BlockSpec:
+    return pl.BlockSpec((bb, h, seq, dh), lambda i: (i, 0, 0, 0))
+
+
+def _mha_fwd(q, k, v):
+    b, h, s, dh = q.shape
+    bb = _block_b(b)
+    spec = _tile_spec(bb, h, s, dh)
+    return pl.pallas_call(
+        _mha_fwd_kernel,
+        grid=(b // bb,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _mha_bwd(q, k, v, do):
+    b, h, s, dh = q.shape
+    bb = _block_b(b)
+    spec = _tile_spec(bb, h, s, dh)
+    shape = jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32)
+    return pl.pallas_call(
+        _mha_bwd_kernel,
+        grid=(b // bb,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shape, shape, shape],
+        interpret=True,
+    )(q, k, v, do)
+
+
+@jax.custom_vjp
+def mha(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Pallas multi-head attention: [B, H, S, Dh] -> [B, H, S, Dh].
+
+    Differentiable: the VJP is the Pallas backward kernel above, so the
+    whole train_step (including attention gradients) lowers into one HLO
+    module with no Python on the training path.
+    """
+    return _mha_fwd(q, k, v)
+
+
+def _mha_vjp_fwd(q, k, v):
+    return _mha_fwd(q, k, v), (q, k, v)
+
+
+def _mha_vjp_bwd(res, do):
+    q, k, v = res
+    return _mha_bwd(q, k, v, do)
+
+
+mha.defvjp(_mha_vjp_fwd, _mha_vjp_bwd)

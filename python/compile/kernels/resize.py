@@ -1,0 +1,76 @@
+"""Pallas bilinear frame-resize kernel — the preprocessing hot-spot (L1).
+
+The paper's pipeline step (1) downsizes each 1080P frame to the resolution
+`v` chosen by the agent before local inference or dispatch. On the paper's
+GPU testbed this is a CUDA resize; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) expresses separable bilinear interpolation as two
+dense contractions so it runs on the MXU instead of gather units:
+
+    out[:, :, c] = Wy @ img[:, :, c] @ Wx^T
+
+where Wy [H_dst, H_src] and Wx [W_dst, W_src] are the (precomputed,
+constant per resolution pair) interpolation weight matrices. The grid
+tiles the channel axis; each program keeps one image plane plus both
+weight matrices in VMEM.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bilinear_matrix(dst: int, src: int) -> np.ndarray:
+    """Half-pixel-centered bilinear interpolation weights, [dst, src].
+
+    For downscaling, applies the standard anti-aliased triangle kernel
+    (support scaled by src/dst) so the result matches what a quality
+    resizer produces; for upscaling it reduces to classic bilinear.
+    Every row sums to 1.
+    """
+    if dst == src:
+        return np.eye(dst, dtype=np.float32)
+    scale = src / dst
+    radius = max(1.0, scale)  # anti-alias when downscaling
+    w = np.zeros((dst, src), dtype=np.float64)
+    for d in range(dst):
+        center = (d + 0.5) * scale - 0.5
+        lo = int(np.floor(center - radius))
+        hi = int(np.ceil(center + radius))
+        for s in range(max(lo, 0), min(hi + 1, src)):
+            t = abs(s - center) / radius
+            if t < 1.0:
+                w[d, s] = 1.0 - t
+        row = w[d].sum()
+        if row > 0:
+            w[d] /= row
+    return w.astype(np.float32)
+
+
+def _resize_kernel(img_ref, wy_ref, wx_ref, o_ref):
+    """One channel plane: o = wy @ img @ wx^T (two MXU contractions)."""
+    img = img_ref[:, :, 0]  # [H_src, W_src]
+    wy = wy_ref[...]        # [H_dst, H_src]
+    wx = wx_ref[...]        # [W_dst, W_src]
+    tmp = jnp.dot(wy, img, preferred_element_type=jnp.float32)
+    o_ref[:, :, 0] = jnp.dot(tmp, wx.T, preferred_element_type=jnp.float32)
+
+
+def resize_bilinear(img: jax.Array, wy: jax.Array, wx: jax.Array) -> jax.Array:
+    """Pallas separable resize: [H_src, W_src, C] -> [H_dst, W_dst, C]."""
+    hs, ws, c = img.shape
+    hd = wy.shape[0]
+    wd = wx.shape[0]
+    return pl.pallas_call(
+        _resize_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((hs, ws, 1), lambda i: (0, 0, i)),
+            pl.BlockSpec((hd, hs), lambda i: (0, 0)),
+            pl.BlockSpec((wd, ws), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((hd, wd, 1), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((hd, wd, c), jnp.float32),
+        interpret=True,
+    )(img, wy, wx)

@@ -1,0 +1,369 @@
+"""L2 — the EdgeVision MARL networks and fused PPO train step, in JAX.
+
+Implements Section V of the paper:
+  * per-agent actor MLPs (local state -> three categorical heads (e, m, v)),
+  * per-agent attentive critics (global state -> value) with the Pallas
+    multi-head attention kernel from `kernels.attention` as the
+    knowledge-distillation stage (Eqs. 12-14),
+  * PPO-clip policy objective (Eq. 18), clipped value loss (Eq. 19), GAE is
+    computed Rust-side; the fused `train_step` consumes (obs, actions,
+    old_logp, adv, ret, old_val) minibatches and performs one Adam update.
+
+Everything is functional (params as pytrees of f32 arrays) so the whole
+thing lowers to a single HLO module per artifact. Parameters are *stacked
+over agents* (leading dim N): each agent owns an independent network, and
+the stacked einsum formulation evaluates all N agents in one call.
+
+Critic variants (paper Section VI-D ablations + IPPO baseline):
+  * "full"   — embeddings of all agents -> 8-head Pallas attention -> MLP.
+  * "noattn" — embeddings of all agents concatenated directly -> MLP
+               ("W/O Attention": undifferentiated view of everyone).
+  * "local"  — own observation only ("W/O Other's State"; also the IPPO
+               critic, which has no access to other agents during training).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import NetConfig, PpoConfig
+from .kernels.attention import mha
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _dense_init(key, fan_in, shape, scale=None):
+    """Orthogonal-ish init: normal scaled by sqrt(2/fan_in) (He) by default."""
+    if scale is None:
+        scale = np.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# actor
+# ---------------------------------------------------------------------------
+
+
+def init_actor_params(key, cfg: NetConfig):
+    """Per-agent actor MLP params, stacked over agents (leading dim N)."""
+    n, d, h = cfg.n_agents, cfg.obs_dim, cfg.hidden
+    ks = jax.random.split(key, 5)
+    heads = {
+        "we": _dense_init(ks[2], h, (n, h, cfg.n_agents), scale=0.01),
+        "wm": _dense_init(ks[3], h, (n, h, cfg.n_models), scale=0.01),
+        "wv": _dense_init(ks[4], h, (n, h, cfg.n_res), scale=0.01),
+    }
+    return {
+        "w1": _dense_init(ks[0], d, (n, d, h)),
+        "b1": jnp.zeros((n, h)),
+        "g1": jnp.ones((n, h)),
+        "bb1": jnp.zeros((n, h)),
+        "w2": _dense_init(ks[1], h, (n, h, h)),
+        "b2": jnp.zeros((n, h)),
+        "g2": jnp.ones((n, h)),
+        "bb2": jnp.zeros((n, h)),
+        **heads,
+        "be": jnp.zeros((n, cfg.n_agents)),
+        "bm": jnp.zeros((n, cfg.n_models)),
+        "bv": jnp.zeros((n, cfg.n_res)),
+    }
+
+
+def actor_fwd(p, obs, mask_e):
+    """All agents' actor forward.
+
+    Args:
+      p:      stacked actor params (leading dim N).
+      obs:    [B, N, D] local states (or [N, D]; a batch dim is added).
+      mask_e: [N, E] additive mask on the dispatch-target head logits
+              (0 = allowed, -1e9 = forbidden; used by Local-PPO).
+    Returns:
+      (logp_e [B,N,E], logp_m [B,N,M], logp_v [B,N,V]) log-probabilities.
+    """
+    squeeze = obs.ndim == 2
+    if squeeze:
+        obs = obs[None]
+    h = jnp.einsum("bnd,ndh->bnh", obs, p["w1"]) + p["b1"]
+    h = jax.nn.relu(layer_norm(h, p["g1"], p["bb1"]))
+    h = jnp.einsum("bnh,nhk->bnk", h, p["w2"]) + p["b2"]
+    h = jax.nn.relu(layer_norm(h, p["g2"], p["bb2"]))
+    le = jnp.einsum("bnh,nhe->bne", h, p["we"]) + p["be"] + mask_e[None]
+    lm = jnp.einsum("bnh,nhm->bnm", h, p["wm"]) + p["bm"]
+    lv = jnp.einsum("bnh,nhv->bnv", h, p["wv"]) + p["bv"]
+    out = tuple(jax.nn.log_softmax(x, axis=-1) for x in (le, lm, lv))
+    if squeeze:
+        out = tuple(x[0] for x in out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# critic
+# ---------------------------------------------------------------------------
+
+
+def init_critic_params(key, cfg: NetConfig, variant: str):
+    """Per-agent critic params, stacked over critics (leading dim N = K)."""
+    n, d, h, e = cfg.n_agents, cfg.obs_dim, cfg.hidden, cfg.embed
+    ks = jax.random.split(key, 8)
+    if variant == "local":
+        head_in = e
+    else:
+        head_in = n * e
+    p = {
+        "head_w1": _dense_init(ks[0], head_in, (n, head_in, h)),
+        "head_b1": jnp.zeros((n, h)),
+        "head_g1": jnp.ones((n, h)),
+        "head_bb1": jnp.zeros((n, h)),
+        "head_w2": _dense_init(ks[1], h, (n, h, h)),
+        "head_b2": jnp.zeros((n, h)),
+        "head_g2": jnp.ones((n, h)),
+        "head_bb2": jnp.zeros((n, h)),
+        "head_w3": _dense_init(ks[2], h, (n, h, 1), scale=1.0 / np.sqrt(h)),
+        "head_b3": jnp.zeros((n, 1)),
+    }
+    if variant == "local":
+        # one embedding net per critic (its own obs only)
+        p["emb_w"] = _dense_init(ks[3], d, (n, d, e))
+        p["emb_b"] = jnp.zeros((n, e))
+    else:
+        # critic k owns an embedding net Theta_{k,i} per observed agent i
+        p["emb_w"] = _dense_init(ks[3], d, (n, n, d, e))
+        p["emb_b"] = jnp.zeros((n, n, e))
+    if variant == "full":
+        p["wq"] = _dense_init(ks[4], e, (n, e, e))
+        p["wk"] = _dense_init(ks[5], e, (n, e, e))
+        p["wv"] = _dense_init(ks[6], e, (n, e, e))
+        p["wo"] = _dense_init(ks[7], e, (n, e, e))
+    return p
+
+
+def _critic_head(p, z):
+    """z: [B, K, head_in] -> values [B, K]."""
+    h = jnp.einsum("bki,kih->bkh", z, p["head_w1"]) + p["head_b1"]
+    h = jax.nn.relu(layer_norm(h, p["head_g1"], p["head_bb1"]))
+    h = jnp.einsum("bkh,khj->bkj", h, p["head_w2"]) + p["head_b2"]
+    h = jax.nn.relu(layer_norm(h, p["head_g2"], p["head_bb2"]))
+    v = jnp.einsum("bkh,kho->bko", h, p["head_w3"]) + p["head_b3"]
+    return v[..., 0]
+
+
+def critic_fwd(p, obs, cfg: NetConfig, variant: str):
+    """All critics' value predictions.
+
+    Args:
+      p:   stacked critic params (leading critic dim K = N).
+      obs: [B, N, D] — every agent's local state (the global state, Eq. 7).
+    Returns:
+      values [B, N] — critic k's value prediction (for agent k).
+    """
+    squeeze = obs.ndim == 2
+    if squeeze:
+        obs = obs[None]
+    b, n, _ = obs.shape
+    e = cfg.embed
+    if variant == "local":
+        # e_k = Theta_k(o_k); head on own embedding only
+        emb = jnp.einsum("bkd,kde->bke", obs, p["emb_w"]) + p["emb_b"]
+        emb = jax.nn.relu(emb)
+        v = _critic_head(p, emb)
+        return v[0] if squeeze else v
+
+    # critic k embeds every agent i with its own Theta_{k,i} (Eq. 12)
+    emb = jnp.einsum("bid,kide->bkie", obs, p["emb_w"]) + p["emb_b"]
+    emb = jax.nn.relu(emb)  # [B, K, N, E]
+
+    if variant == "full":
+        # 8-head attention over the N embeddings, per critic (Eq. 13);
+        # this is the Pallas kernel — it lowers into the same HLO module.
+        hd = cfg.head_dim
+        q = jnp.einsum("bkie,kef->bkif", emb, p["wq"])
+        k_ = jnp.einsum("bkie,kef->bkif", emb, p["wk"])
+        v_ = jnp.einsum("bkie,kef->bkif", emb, p["wv"])
+
+        def split(x):  # [B,K,N,E] -> [B*K, H, N, hd]
+            return (
+                x.reshape(b * n, n, cfg.heads, hd).transpose(0, 2, 1, 3)
+            )
+
+        o = mha(split(q), split(k_), split(v_))  # [B*K, H, N, hd]
+        o = o.transpose(0, 2, 1, 3).reshape(b, n, n, e)
+        psi = jnp.einsum("bkie,kef->bkif", o, p["wo"])  # (Eq. 13 outputs)
+    else:  # "noattn": undifferentiated concatenation of all embeddings
+        psi = emb
+
+    z = psi.reshape(b, n, n * e)  # concat psi_1..psi_N (Eq. 14 input)
+    v = _critic_head(p, z)
+    return v[0] if squeeze else v
+
+
+# ---------------------------------------------------------------------------
+# PPO train step (fused: losses + grads + global-norm clip + Adam)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: NetConfig, variant: str):
+    ka, kc = jax.random.split(key)
+    return {
+        "actor": init_actor_params(ka, cfg),
+        "critic": init_critic_params(kc, cfg, variant),
+    }
+
+
+def _gather(logp, idx):
+    """logp: [B, N, A], idx: [B, N] int32 -> [B, N]."""
+    return jnp.take_along_axis(logp, idx[..., None], axis=-1)[..., 0]
+
+
+def _entropy(logp):
+    """Categorical entropy per [B, N] element from log-probs [B, N, A]."""
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def ppo_loss(params, batch, cfg: NetConfig, ppo: PpoConfig, variant: str):
+    """PPO-clip objective (Eq. 18) + clipped value loss (Eq. 19) + entropy."""
+    obs, actions, old_logp, adv, ret, old_val, mask_e = batch
+    logp_e, logp_m, logp_v = actor_fwd(params["actor"], obs, mask_e)
+    lp = (
+        _gather(logp_e, actions[..., 0])
+        + _gather(logp_m, actions[..., 1])
+        + _gather(logp_v, actions[..., 2])
+    )  # joint log-prob of the factored action, [B, N]
+
+    # advantage normalization over the minibatch (standard PPO practice)
+    adv_n = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+
+    ratio = jnp.exp(lp - old_logp)  # eta in Eq. (18)
+    s1 = ratio * adv_n
+    s2 = jnp.clip(ratio, 1.0 - ppo.clip_eps, 1.0 + ppo.clip_eps) * adv_n
+    policy_loss = -jnp.mean(jnp.minimum(s1, s2))
+
+    ent = jnp.mean(_entropy(logp_e) + _entropy(logp_m) + _entropy(logp_v))
+
+    values = critic_fwd(params["critic"], obs, cfg, variant)  # [B, N]
+    v_clip = old_val + jnp.clip(
+        values - old_val, -ppo.value_clip_eps, ppo.value_clip_eps
+    )
+    v_loss = jnp.mean(
+        jnp.maximum((values - ret) ** 2, (v_clip - ret) ** 2)
+    )  # Eq. (19)
+
+    total = policy_loss - ppo.entropy_coef * ent + ppo.value_coef * v_loss
+    approx_kl = jnp.mean(old_logp - lp)
+    clip_frac = jnp.mean(
+        (jnp.abs(ratio - 1.0) > ppo.clip_eps).astype(jnp.float32)
+    )
+    aux = (policy_loss, v_loss, ent, approx_kl, clip_frac, jnp.mean(values))
+    return total, aux
+
+
+def make_train_step(cfg: NetConfig, ppo: PpoConfig, variant: str):
+    """Builds the fused train step for one critic variant.
+
+    Signature (all f32 unless noted):
+      train_step(params, adam_m, adam_v, step, lr,
+                 obs [B,N,D], actions [B,N,3] i32, old_logp [B,N],
+                 adv [B,N], ret [B,N], old_val [B,N], mask_e [N,E])
+        -> (params', adam_m', adam_v', step', metrics [8])
+
+    metrics = [total, policy_loss, value_loss, entropy, approx_kl,
+               clip_frac, value_mean, grad_norm].
+    """
+
+    def train_step(params, m, v, step, lr, obs, actions, old_logp, adv, ret,
+                   old_val, mask_e):
+        batch = (obs, actions, old_logp, adv, ret, old_val, mask_e)
+        (total, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+            params, batch, cfg, ppo, variant
+        )
+        # per-subtree grad-norm clip: the critic's (initially large) value
+        # errors must not starve the actor of its gradient budget
+        def clip_subtree(g):
+            leaves = jax.tree_util.tree_leaves(g)
+            norm = jnp.sqrt(sum(jnp.sum(x * x) for x in leaves))
+            coef = jnp.minimum(1.0, ppo.max_grad_norm / (norm + 1e-8))
+            return jax.tree_util.tree_map(lambda x: x * coef, g), norm
+
+        grads_a, norm_a = clip_subtree(grads["actor"])
+        grads_c, norm_c = clip_subtree(grads["critic"])
+        grads = {"actor": grads_a, "critic": grads_c}
+        gnorm = jnp.sqrt(norm_a**2 + norm_c**2)
+
+        step1 = step + 1.0
+        bc1 = 1.0 - ppo.adam_b1**step1
+        bc2 = 1.0 - ppo.adam_b2**step1
+
+        def upd(p_, g_, m_, v_):
+            m2 = ppo.adam_b1 * m_ + (1.0 - ppo.adam_b1) * g_
+            v2 = ppo.adam_b2 * v_ + (1.0 - ppo.adam_b2) * g_ * g_
+            p2 = p_ - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ppo.adam_eps)
+            return p2, m2, v2
+
+        flat = jax.tree_util.tree_map(upd, params, grads, m, v)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        metrics = jnp.stack(
+            [total, aux[0], aux[1], aux[2], aux[3], aux[4], aux[5], gnorm]
+        )
+        return new_p, new_m, new_v, step1, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# detector model zoo (serving-path stand-ins for the paper's four models)
+# ---------------------------------------------------------------------------
+
+# (channels, depth) per zoo size; deeper/wider == slower + "more accurate",
+# mirroring the ordering of Tables II/III.
+ZOO_SPECS = [(8, 2), (12, 3), (20, 4), (28, 5)]
+N_CLASSES = 16
+
+
+def make_detector(size_idx: int, seed: int = 1234):
+    """A small conv detector with baked-in (constant) weights.
+
+    Returns fn: frame [H, W, 3] f32 -> scores [N_CLASSES]. Weights are
+    closure constants so the AOT artifact needs no parameter plumbing;
+    the zoo exists to put *real tensor compute* on the serving path, not
+    to be trained.
+    """
+    ch, depth = ZOO_SPECS[size_idx]
+    rng = np.random.default_rng(seed + size_idx)
+    kernels = []
+    cin = 3
+    for _ in range(depth):
+        k = rng.normal(0, np.sqrt(2.0 / (9 * cin)), (3, 3, cin, ch)).astype(
+            np.float32
+        )
+        kernels.append(jnp.asarray(k))
+        cin = ch
+    w_out = jnp.asarray(
+        rng.normal(0, np.sqrt(1.0 / ch), (ch, N_CLASSES)).astype(np.float32)
+    )
+
+    def detector(frame):
+        x = frame[None]  # NHWC
+        for k in kernels:
+            x = jax.lax.conv_general_dilated(
+                x, k, window_strides=(2, 2), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            x = jax.nn.relu(x)
+        pooled = jnp.mean(x, axis=(1, 2))  # [1, ch]
+        return jax.nn.sigmoid(pooled @ w_out)[0]
+
+    return detector

@@ -1,0 +1,221 @@
+"""L2 model tests: network shapes, distribution validity, masking,
+variant behaviour and a train-step sanity check (loss decreases on a
+fixed synthetic batch)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as tu
+from hypothesis import given, settings, strategies as st
+
+from compile.config import CRITIC_VARIANTS, NetConfig, PpoConfig
+from compile import model as M
+
+CFG = NetConfig()
+PPO = PpoConfig()
+
+
+def params_for(variant, seed=0):
+    return M.init_params(jax.random.PRNGKey(seed), CFG, variant)
+
+
+def rand_obs(b, seed=0):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (b, CFG.n_agents, CFG.obs_dim)
+    )
+
+
+ZERO_MASK = jnp.zeros((CFG.n_agents, CFG.n_agents))
+
+
+# ---------------------------------------------------------------------------
+# actor
+# ---------------------------------------------------------------------------
+
+
+def test_actor_shapes_and_normalization():
+    p = params_for("full")["actor"]
+    obs = rand_obs(7)
+    le, lm, lv = M.actor_fwd(p, obs, ZERO_MASK)
+    assert le.shape == (7, CFG.n_agents, CFG.n_agents)
+    assert lm.shape == (7, CFG.n_agents, CFG.n_models)
+    assert lv.shape == (7, CFG.n_agents, CFG.n_res)
+    for logp in (le, lm, lv):
+        sums = jnp.exp(logp).sum(-1)
+        np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-5)
+
+
+def test_actor_unbatched_matches_batched():
+    p = params_for("full")["actor"]
+    obs = rand_obs(3, seed=5)
+    le_b, _, _ = M.actor_fwd(p, obs, ZERO_MASK)
+    le_1, _, _ = M.actor_fwd(p, obs[1], ZERO_MASK)
+    np.testing.assert_allclose(le_b[1], le_1, rtol=1e-5, atol=1e-6)
+
+
+def test_actor_mask_forbids_dispatch():
+    p = params_for("full")["actor"]
+    mask = jnp.where(jnp.eye(CFG.n_agents) > 0, 0.0, -1e9)
+    le, _, _ = M.actor_fwd(p, rand_obs(4, seed=2), mask)
+    probs = jnp.exp(le)  # [B, N, E]
+    for i in range(CFG.n_agents):
+        np.testing.assert_allclose(probs[:, i, i], 1.0, atol=1e-5)
+
+
+def test_agents_are_independent_networks():
+    # perturbing agent 0's weights must not change agent 1's outputs
+    p = params_for("full")["actor"]
+    obs = rand_obs(2, seed=3)
+    le0, _, _ = M.actor_fwd(p, obs, ZERO_MASK)
+    # NB: perturb the (post-LayerNorm) head weights — uniform shifts or
+    # scalings of pre-LN weights are invisible through LayerNorm by design.
+    p2 = dict(p)
+    noise = jax.random.normal(jax.random.PRNGKey(99), p["we"].shape[1:])
+    p2["we"] = p["we"].at[0].add(noise)
+    le1, _, _ = M.actor_fwd(p2, obs, ZERO_MASK)
+    assert not np.allclose(le0[:, 0], le1[:, 0])
+    np.testing.assert_allclose(le0[:, 1:], le1[:, 1:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# critic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", CRITIC_VARIANTS)
+def test_critic_shapes(variant):
+    p = params_for(variant)["critic"]
+    vals = M.critic_fwd(p, rand_obs(6), CFG, variant)
+    assert vals.shape == (6, CFG.n_agents)
+    assert np.isfinite(np.asarray(vals)).all()
+
+
+def test_full_critic_uses_other_agents_state():
+    p = params_for("full")["critic"]
+    obs = rand_obs(4, seed=9)
+    v0 = M.critic_fwd(p, obs, CFG, "full")
+    # change agent 3's observation: every critic's value should move
+    obs2 = obs.at[:, 3].add(1.0)
+    v1 = M.critic_fwd(p, obs2, CFG, "full")
+    assert not np.allclose(v0[:, 0], v1[:, 0])
+
+
+def test_local_critic_ignores_other_agents_state():
+    p = params_for("local")["critic"]
+    obs = rand_obs(4, seed=10)
+    v0 = M.critic_fwd(p, obs, CFG, "local")
+    obs2 = obs.at[:, 3].add(1.0)  # perturb agent 3 only
+    v1 = M.critic_fwd(p, obs2, CFG, "local")
+    np.testing.assert_allclose(v0[:, :3], v1[:, :3], rtol=1e-6)
+    assert not np.allclose(v0[:, 3], v1[:, 3])
+
+
+def test_noattn_variant_differs_from_full():
+    pf = params_for("full", seed=4)
+    pn = params_for("noattn", seed=4)
+    assert "wq" in pf["critic"] and "wq" not in pn["critic"]
+
+
+# ---------------------------------------------------------------------------
+# ppo loss / train step
+# ---------------------------------------------------------------------------
+
+
+def synth_batch(b, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    obs = jax.random.normal(ks[0], (b, CFG.n_agents, CFG.obs_dim))
+    actions = jnp.stack(
+        [
+            jax.random.randint(ks[1], (b, CFG.n_agents), 0, CFG.n_agents),
+            jax.random.randint(ks[2], (b, CFG.n_agents), 0, CFG.n_models),
+            jax.random.randint(ks[3], (b, CFG.n_agents), 0, CFG.n_res),
+        ],
+        axis=-1,
+    ).astype(jnp.int32)
+    old_logp = -2.0 * jnp.ones((b, CFG.n_agents))
+    adv = jax.random.normal(ks[4], (b, CFG.n_agents))
+    ret = jax.random.normal(ks[5], (b, CFG.n_agents))
+    old_val = jnp.zeros((b, CFG.n_agents))
+    return obs, actions, old_logp, adv, ret, old_val, ZERO_MASK
+
+
+@pytest.mark.parametrize("variant", CRITIC_VARIANTS)
+def test_train_step_runs_and_is_finite(variant):
+    p = params_for(variant)
+    m = tu.tree_map(jnp.zeros_like, p)
+    v = tu.tree_map(jnp.zeros_like, p)
+    ts = jax.jit(M.make_train_step(CFG, PPO, variant))
+    batch = synth_batch(32, seed=1)
+    new_p, new_m, new_v, step, metrics = ts(p, m, v, 0.0, 5e-4, *batch)
+    assert float(step) == 1.0
+    assert np.isfinite(np.asarray(metrics)).all()
+    for leaf in tu.tree_leaves(new_p):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # parameters actually moved
+    moved = any(
+        not np.allclose(a, b)
+        for a, b in zip(tu.tree_leaves(p), tu.tree_leaves(new_p))
+    )
+    assert moved
+
+
+def test_value_loss_decreases_on_fixed_batch():
+    # repeated updates on one batch must fit the value targets
+    variant = "full"
+    p = params_for(variant)
+    m = tu.tree_map(jnp.zeros_like, p)
+    v = tu.tree_map(jnp.zeros_like, p)
+    ts = jax.jit(M.make_train_step(CFG, PPO, variant))
+    batch = synth_batch(64, seed=2)
+    step = 0.0
+    losses = []
+    for _ in range(30):
+        p, m, v, step, metrics = ts(p, m, v, step, 3e-3, *batch)
+        losses.append(float(metrics[2]))
+    assert losses[-1] < losses[0] * 0.7, f"value loss did not drop: {losses[:3]} -> {losses[-3:]}"
+
+
+def test_entropy_bounds():
+    p = params_for("full")
+    batch = synth_batch(16, seed=3)
+    _, aux = M.ppo_loss(p, batch, CFG, PPO, "full")
+    ent = float(aux[2])
+    max_ent = np.log(CFG.n_agents) + np.log(CFG.n_models) + np.log(CFG.n_res)
+    assert 0.0 < ent <= max_ent + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ppo_loss_finite_for_random_batches(seed):
+    p = params_for("full", seed=seed % 5)
+    batch = synth_batch(8, seed=seed)
+    total, aux = M.ppo_loss(p, batch, CFG, PPO, "full")
+    assert np.isfinite(float(total))
+    assert all(np.isfinite(float(a)) for a in aux)
+
+
+# ---------------------------------------------------------------------------
+# detector zoo
+# ---------------------------------------------------------------------------
+
+
+def test_detector_outputs():
+    from compile.config import RESOLUTIONS
+
+    for s in range(4):
+        det = M.make_detector(s)
+        h, w = RESOLUTIONS[240]
+        frame = jax.random.uniform(jax.random.PRNGKey(s), (h, w, 3))
+        scores = det(frame)
+        assert scores.shape == (M.N_CLASSES,)
+        assert ((scores >= 0) & (scores <= 1)).all()
+
+
+def test_detector_sizes_increase_compute():
+    # deeper zoo entries have more conv layers (proxy for Table III ordering)
+    chs = [M.ZOO_SPECS[i] for i in range(4)]
+    assert all(chs[i][1] <= chs[i + 1][1] for i in range(3))
+    assert all(chs[i][0] <= chs[i + 1][0] for i in range(3))

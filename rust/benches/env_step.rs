@@ -1,0 +1,47 @@
+//! L3 hot-path micro-benches: simulator step, observation construction,
+//! router decision, batcher and transfer scheduler throughput.
+
+use edgevision::config::EnvConfig;
+use edgevision::coordinator::{Batcher, Router, TransferScheduler};
+use edgevision::env::{Action, SimConfig, Simulator};
+use edgevision::util::bench::bench;
+
+fn main() {
+    let cfg = SimConfig::from_env(&EnvConfig::default());
+
+    let mut sim = Simulator::new(cfg.clone(), 0);
+    let actions: Vec<Action> = (0..4).map(|i| Action::new((i + 1) % 4, 1, 2)).collect();
+    bench("simulator::step (4 nodes)", 200, 5_000, || {
+        sim.step(&actions);
+    });
+
+    let sim2 = Simulator::new(cfg.clone(), 1);
+    bench("simulator::observations_flat", 200, 20_000, || {
+        std::hint::black_box(sim2.observations_flat());
+    });
+
+    let mut router = Router::new(4, false, Some(1.5));
+    bench("router::route", 1000, 100_000, || {
+        router
+            .route(0, Action::new(2, 1, 2), |_, _| 10.0, 0.96, 0.088)
+            .unwrap();
+    });
+
+    let mut batcher = Batcher::new(4, 5, 8, 0.05);
+    let mut id = 0u64;
+    bench("batcher::push+poll", 1000, 100_000, || {
+        batcher.push((id % 4) as usize, (id % 5) as usize, id, id as f64 * 1e-4);
+        batcher.poll(id as f64 * 1e-4);
+        id += 1;
+    });
+
+    let mut ts = TransferScheduler::new(4);
+    let mut t = 0.0f64;
+    let mut tid = 0u64;
+    bench("transfer_scheduler::schedule+complete", 1000, 100_000, || {
+        ts.schedule(0, 1, tid, 0.5, 20.0, t);
+        ts.completed(t + 0.1);
+        t += 0.01;
+        tid += 1;
+    });
+}

@@ -1,0 +1,56 @@
+//! Fig. 6 smoke bench: evaluates every heuristic baseline at each penalty
+//! weight and prints the comparison rows (full RL rows come from
+//! `repro experiment fig6`). Reports the who-wins ordering the paper's
+//! figure shows among the non-learned methods.
+
+use edgevision::config::Config;
+use edgevision::experiments::{ExpContext, OMEGAS};
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::telemetry::report::method_row;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.rl.eval_episodes = 10;
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    let ctx = ExpContext::new(&rt, &manifest, cfg);
+
+    println!("{:<22} {:>6} {:>10} {:>7}", "method", "omega", "reward", "drop%");
+    for &omega in &OMEGAS {
+        let mut rows = Vec::new();
+        for h in [
+            "predictive",
+            "shortest_queue_min",
+            "shortest_queue_max",
+            "random_min",
+            "random_max",
+        ] {
+            let res = ctx.eval_heuristic(h, omega)?;
+            rows.push(method_row(h, omega, &res.metrics, res.mean_episode_reward()));
+        }
+        rows.sort_by(|a, b| {
+            b.mean_episode_reward.partial_cmp(&a.mean_episode_reward).unwrap()
+        });
+        for r in &rows {
+            println!(
+                "{:<22} {:>6} {:>10.2} {:>6.1}%",
+                r.method, omega, r.mean_episode_reward, 100.0 * r.drop_pct
+            );
+        }
+        // paper shape check: at high omega, Min variants beat Max variants
+        if omega >= 5.0 {
+            let reward = |name: &str| {
+                rows.iter()
+                    .find(|r| r.method == name)
+                    .map(|r| r.mean_episode_reward)
+                    .unwrap()
+            };
+            assert!(
+                reward("shortest_queue_min") > reward("shortest_queue_max"),
+                "expected Min to beat Max at omega={omega}"
+            );
+            println!("  [shape ok] min-variants beat max-variants at omega={omega}");
+        }
+    }
+    Ok(())
+}

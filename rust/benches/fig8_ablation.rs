@@ -1,0 +1,37 @@
+//! Fig. 8 smoke bench: miniature ablation — trains the three critic
+//! variants (full / W-O attention / W-O other's state) for a short run at
+//! omega = 5 and reports the end-of-run reward ordering plus per-variant
+//! training throughput. The full figure comes from `repro experiment fig8`.
+
+use std::time::Instant;
+
+use edgevision::config::Config;
+use edgevision::experiments::RlMethod;
+use edgevision::rl::trainer::Trainer;
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::new("artifacts".to_string())?;
+
+    for method in [RlMethod::Ours, RlMethod::NoAttention, RlMethod::NoOtherState] {
+        let mut cfg = Config::default();
+        cfg.rl.episodes = 16;
+        cfg.rl.update_every = 4;
+        cfg.env.omega = 5.0;
+        method.configure(&mut cfg);
+        let mut trainer = Trainer::new(&rt, &manifest, cfg.clone())?;
+        let t0 = Instant::now();
+        let outcome = trainer.train(|_, _| {})?;
+        let eps = cfg.rl.episodes as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "{:<16} last-8 reward {:>8.2}   {:>5.2} episodes/s  (variant={})",
+            method.name(),
+            mean(&outcome.episode_rewards[outcome.episode_rewards.len() - 8..]),
+            eps,
+            cfg.rl.variant,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! PJRT execution latency for every artifact class on the hot path:
+//! actor forward (request path), critic forward + fused train step
+//! (training path), Pallas preprocess + detector zoo (serving path).
+
+use edgevision::config::Config;
+use edgevision::rl::params::ParamStore;
+use edgevision::rl::policy::ActorPolicy;
+use edgevision::runtime::{lit_f32, lit_i32, lit_scalar_f32, Manifest, Runtime};
+use edgevision::serving::{FrameSource, ModelZoo};
+use edgevision::util::bench::bench;
+use edgevision::util::rng::Rng;
+use xla::Literal;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    let n = manifest.net.n_agents;
+    let d = manifest.net.obs_dim;
+
+    // actor forward (the decentralized-execution request path)
+    let spec = manifest.variant("full")?;
+    let blob = manifest.read_param_blob(&spec.params_init, spec.n_elems)?;
+    let policy = ActorPolicy::with_params(&rt, &manifest, &blob, false)?;
+    let mut rng = Rng::new(0);
+    let obs: Vec<f32> = (0..n * d).map(|i| (i as f32 * 0.13).sin()).collect();
+    bench("actor_fwd (N=4 agents, 1 slot)", 50, 2_000, || {
+        policy.act(&obs, &mut rng, false).unwrap();
+    });
+
+    // critic forward (value estimation during training)
+    let store = ParamStore::from_init(&manifest, "full")?;
+    let critic = rt.load(&spec.critic_fwd)?;
+    let bc = manifest.net.critic_batch;
+    let obs_lit = lit_f32(&vec![0.1f32; bc * n * d], &[bc, n, d])?;
+    bench(&format!("critic_fwd_full (B={bc})"), 10, 200, || {
+        let mut inputs: Vec<&Literal> = store.critic_params().iter().collect();
+        inputs.push(&obs_lit);
+        critic.run(&inputs).unwrap();
+    });
+
+    // fused train step (the training hot loop)
+    let train = rt.load(&spec.train_step)?;
+    let b = manifest.net.minibatch;
+    let obs_b = lit_f32(&vec![0.1f32; b * n * d], &[b, n, d])?;
+    let act_b = lit_i32(&vec![1i32; b * n * 3], &[b, n, 3])?;
+    let f_b = lit_f32(&vec![0.0f32; b * n], &[b, n])?;
+    let mask = lit_f32(&vec![0.0f32; n * n], &[n, n])?;
+    let lr = lit_scalar_f32(5e-4);
+    let mut store = ParamStore::from_init(&manifest, "full")?;
+    bench(&format!("train_step_full (B={b})"), 3, 30, || {
+        let mut inputs: Vec<&Literal> = Vec::new();
+        inputs.extend(store.params.iter());
+        inputs.extend(store.adam_m.iter());
+        inputs.extend(store.adam_v.iter());
+        inputs.push(&store.step);
+        inputs.push(&lr);
+        inputs.push(&obs_b);
+        inputs.push(&act_b);
+        inputs.push(&f_b);
+        inputs.push(&f_b);
+        inputs.push(&f_b);
+        inputs.push(&f_b);
+        inputs.push(&mask);
+        let outs = train.run(&inputs).unwrap();
+        store.adopt_train_outputs(outs).unwrap();
+    });
+
+    // serving path: Pallas preprocess + detector zoo
+    if !manifest.zoo.is_empty() {
+        let zoo = ModelZoo::load(&rt, &manifest)?;
+        let mut frames = FrameSource::new(
+            zoo.native_shape[0],
+            zoo.native_shape[1],
+            0,
+        );
+        let frame = frames.next_frame();
+        bench("preprocess_240 (Pallas resize)", 20, 500, || {
+            zoo.preprocess(4, &frame).unwrap();
+        });
+        let (down, _) = zoo.preprocess(4, &frame)?;
+        bench("detector_s0@240P", 20, 500, || {
+            zoo.detect(0, 4, &down).unwrap();
+        });
+        let (down1080, _) = zoo.preprocess(0, &frame)?;
+        bench("detector_s3@1080P", 10, 100, || {
+            zoo.detect(3, 0, &down1080).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Heuristic baselines (paper Section VI-A, methods 4–5).
+//!
+//! * Shortest-Queue: requests go to the node with the shortest waiting
+//!   queue; model/resolution fixed to Min (cheapest model, lowest
+//!   resolution) or Max (largest model, highest resolution).
+//! * Random: requests go to a uniformly random node; same Min/Max split.
+
+use anyhow::Result;
+
+use crate::env::profiles::{N_MODELS, N_RES};
+use crate::env::{Action, Simulator};
+use crate::rl::eval::Controller;
+use crate::util::rng::Rng;
+
+/// Min = smallest model + lowest resolution; Max = largest + highest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    Min,
+    Max,
+}
+
+impl Selection {
+    pub fn model(&self) -> usize {
+        match self {
+            Selection::Min => 0,
+            Selection::Max => N_MODELS - 1,
+        }
+    }
+
+    pub fn res(&self) -> usize {
+        match self {
+            // resolution index 0 = 1080P (highest), N_RES-1 = 240P (lowest)
+            Selection::Min => N_RES - 1,
+            Selection::Max => 0,
+        }
+    }
+
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Selection::Min => "min",
+            Selection::Max => "max",
+        }
+    }
+}
+
+pub struct ShortestQueueController {
+    name: String,
+    sel: Selection,
+}
+
+impl ShortestQueueController {
+    pub fn new(sel: Selection) -> Self {
+        ShortestQueueController {
+            name: format!("shortest_queue_{}", sel.suffix()),
+            sel,
+        }
+    }
+}
+
+impl Controller for ShortestQueueController {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
+        let n = sim.cfg.n_nodes;
+        // the node with the least pending inference work (Eq. 1 estimate)
+        let mut best = 0;
+        let mut best_q = f64::INFINITY;
+        for j in 0..n {
+            let q = sim.queue_delay_estimate(j);
+            if q < best_q {
+                best_q = q;
+                best = j;
+            }
+        }
+        Ok((0..n)
+            .map(|_| Action::new(best, self.sel.model(), self.sel.res()))
+            .collect())
+    }
+}
+
+pub struct RandomController {
+    name: String,
+    sel: Selection,
+    rng: Rng,
+    seed: u64,
+}
+
+impl RandomController {
+    pub fn new(sel: Selection, seed: u64) -> Self {
+        RandomController {
+            name: format!("random_{}", sel.suffix()),
+            sel,
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+}
+
+impl Controller for RandomController {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn reset(&mut self, episode_seed: u64) {
+        self.rng = Rng::new(self.seed ^ episode_seed);
+    }
+
+    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
+        let n = sim.cfg.n_nodes;
+        Ok((0..n)
+            .map(|_| {
+                Action::new(self.rng.below(n), self.sel.model(), self.sel.res())
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+    use crate::env::SimConfig;
+
+    #[test]
+    fn selection_indices() {
+        assert_eq!(Selection::Min.model(), 0);
+        assert_eq!(Selection::Min.res(), N_RES - 1);
+        assert_eq!(Selection::Max.model(), N_MODELS - 1);
+        assert_eq!(Selection::Max.res(), 0);
+    }
+
+    #[test]
+    fn shortest_queue_picks_emptiest() {
+        let cfg = SimConfig::from_env(&EnvConfig::default());
+        let mut sim = Simulator::new(cfg, 0);
+        // overload node 0 by dispatching everything there for a while
+        let all_to_0: Vec<Action> = (0..4).map(|_| Action::new(0, 3, 0)).collect();
+        for _ in 0..20 {
+            sim.step(&all_to_0);
+        }
+        let mut ctrl = ShortestQueueController::new(Selection::Min);
+        let acts = ctrl.act(&sim).unwrap();
+        assert!(acts.iter().all(|a| a.edge != 0));
+        assert!(acts.iter().all(|a| a.model == 0 && a.res == N_RES - 1));
+    }
+
+    #[test]
+    fn random_targets_all_nodes() {
+        let cfg = SimConfig::from_env(&EnvConfig::default());
+        let sim = Simulator::new(cfg, 0);
+        let mut ctrl = RandomController::new(Selection::Max, 1);
+        let mut seen = [false; 4];
+        for _ in 0..100 {
+            for a in ctrl.act(&sim).unwrap() {
+                seen[a.edge] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

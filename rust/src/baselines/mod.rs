@@ -1,0 +1,10 @@
+//! Baseline methods from the paper's evaluation (Section VI-A):
+//! Shortest-Queue-{Min,Max}, Random-{Min,Max} and the Predictive
+//! controller. (IPPO and Local-PPO are trained through the same
+//! [`crate::rl::Trainer`] with `--ippo` / `--local-only`.)
+
+pub mod heuristics;
+pub mod predictive;
+
+pub use heuristics::{RandomController, ShortestQueueController, Selection};
+pub use predictive::PredictiveController;

@@ -1,0 +1,184 @@
+//! Dynamic batcher — groups pending inference work by (model, resolution)
+//! so the serving engine amortizes executable dispatch overhead, with a
+//! max-batch bound and a max-wait deadline (vLLM-style continuous
+//! batching, adapted to per-(m,v) executables).
+
+use std::collections::VecDeque;
+
+/// An opaque work item id grouped by the batcher.
+pub type ItemId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub model: usize,
+    pub res: usize,
+    pub items: Vec<ItemId>,
+    /// Virtual time the oldest item entered the batcher.
+    pub oldest: f64,
+}
+
+#[derive(Debug, Clone)]
+struct Lane {
+    model: usize,
+    res: usize,
+    items: VecDeque<(ItemId, f64)>,
+}
+
+/// Groups items into per-(model, res) lanes; a lane flushes when it reaches
+/// `max_batch` items or its oldest item has waited `max_wait` (virtual
+/// seconds).
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    lanes: Vec<Lane>,
+    max_batch: usize,
+    max_wait: f64,
+}
+
+impl Batcher {
+    pub fn new(n_models: usize, n_res: usize, max_batch: usize, max_wait: f64) -> Self {
+        let mut lanes = Vec::with_capacity(n_models * n_res);
+        for m in 0..n_models {
+            for v in 0..n_res {
+                lanes.push(Lane { model: m, res: v, items: VecDeque::new() });
+            }
+        }
+        Batcher { lanes, max_batch, max_wait }
+    }
+
+    fn lane_mut(&mut self, model: usize, res: usize) -> &mut Lane {
+        let n_res = self.lanes.iter().filter(|l| l.model == 0).count();
+        &mut self.lanes[model * n_res + res]
+    }
+
+    /// Add an item; returns a full batch if the lane hit `max_batch`.
+    pub fn push(
+        &mut self,
+        model: usize,
+        res: usize,
+        id: ItemId,
+        now: f64,
+    ) -> Option<Batch> {
+        let max_batch = self.max_batch;
+        let lane = self.lane_mut(model, res);
+        lane.items.push_back((id, now));
+        if lane.items.len() >= max_batch {
+            return Self::drain_lane(lane, max_batch);
+        }
+        None
+    }
+
+    /// Flush lanes whose oldest item has exceeded the wait deadline.
+    pub fn poll(&mut self, now: f64) -> Vec<Batch> {
+        let max_batch = self.max_batch;
+        let max_wait = self.max_wait;
+        let mut out = Vec::new();
+        for lane in &mut self.lanes {
+            if let Some(&(_, oldest)) = lane.items.front() {
+                if now - oldest >= max_wait {
+                    if let Some(b) = Self::drain_lane(lane, max_batch) {
+                        out.push(b);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let max_batch = self.max_batch;
+        let mut out = Vec::new();
+        for lane in &mut self.lanes {
+            while let Some(b) = Self::drain_lane(lane, max_batch) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.items.len()).sum()
+    }
+
+    /// Earliest enqueue time across lanes (None when empty) — lets the
+    /// event loop schedule the next timeout poll precisely.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.items.front().map(|&(_, t)| t + self.max_wait))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    fn drain_lane(lane: &mut Lane, max_batch: usize) -> Option<Batch> {
+        if lane.items.is_empty() {
+            return None;
+        }
+        let take = lane.items.len().min(max_batch);
+        let oldest = lane.items.front().unwrap().1;
+        let items = lane.items.drain(..take).map(|(id, _)| id).collect();
+        Some(Batch { model: lane.model, res: lane.res, items, oldest })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut b = Batcher::new(4, 5, 3, 1.0);
+        assert!(b.push(1, 2, 10, 0.0).is_none());
+        assert!(b.push(1, 2, 11, 0.1).is_none());
+        let batch = b.push(1, 2, 12, 0.2).expect("full batch");
+        assert_eq!(batch.items, vec![10, 11, 12]);
+        assert_eq!(batch.model, 1);
+        assert_eq!(batch.res, 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(4, 5, 8, 0.5);
+        b.push(0, 0, 1, 0.0);
+        b.push(3, 4, 2, 0.2);
+        assert!(b.poll(0.4).is_empty());
+        let batches = b.poll(0.55);
+        assert_eq!(batches.len(), 1); // only lane (0,0) is old enough
+        assert_eq!(batches[0].items, vec![1]);
+        let batches = b.poll(0.9);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].items, vec![2]);
+    }
+
+    #[test]
+    fn lanes_are_isolated() {
+        let mut b = Batcher::new(2, 2, 2, 1.0);
+        b.push(0, 0, 1, 0.0);
+        b.push(0, 1, 2, 0.0);
+        b.push(1, 0, 3, 0.0);
+        assert_eq!(b.pending(), 3);
+        let full = b.push(0, 0, 4, 0.1).unwrap();
+        assert_eq!(full.items, vec![1, 4]);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(1, 1, 10, 0.5);
+        assert!(b.next_deadline().is_none());
+        b.push(0, 0, 1, 2.0);
+        assert_eq!(b.next_deadline(), Some(2.5));
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let mut b = Batcher::new(2, 2, 10, 1.0);
+        for i in 0..7 {
+            b.push((i % 2) as usize, 0, i, 0.0);
+        }
+        let batches = b.flush_all();
+        let total: usize = batches.iter().map(|x| x.items.len()).sum();
+        assert_eq!(total, 7);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordination — the serving-shaped pieces that turn the paper's
+//! control policy into a request-path runtime: routing validation,
+//! dynamic batching, bandwidth-aware dispatch scheduling and the
+//! virtual-time edge cluster used by the online serving runtime.
+
+pub mod batcher;
+pub mod cluster;
+pub mod dispatcher;
+pub mod router;
+
+pub use batcher::{Batch, Batcher};
+pub use cluster::{ClusterEvent, EdgeCluster, ServedRequest};
+pub use dispatcher::TransferScheduler;
+pub use router::{Router, RoutingStats};

@@ -1,0 +1,157 @@
+//! Request router — validates and applies control actions, and keeps
+//! per-link routing statistics. The decentralized policy decides (e, m, v);
+//! the router is the enforcement point: it rejects out-of-range targets,
+//! honours local-only mode, and can veto dispatches whose transfer could
+//! not possibly meet the drop deadline (a cheap admission check the
+//! serving runtime enables).
+
+use anyhow::{bail, Result};
+
+use crate::env::profiles::{N_MODELS, N_RES};
+use crate::env::Action;
+
+#[derive(Debug, Clone, Default)]
+pub struct RoutingStats {
+    pub local: u64,
+    pub dispatched: u64,
+    pub vetoed: u64,
+    /// dispatch counts per directed link, indexed i * n + j
+    pub per_link: Vec<u64>,
+}
+
+impl RoutingStats {
+    pub fn new(n: usize) -> Self {
+        RoutingStats { per_link: vec![0; n * n], ..Default::default() }
+    }
+
+    pub fn dispatch_fraction(&self) -> f64 {
+        let total = self.local + self.dispatched;
+        if total == 0 {
+            0.0
+        } else {
+            self.dispatched as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    n_nodes: usize,
+    local_only: bool,
+    /// Veto dispatches whose lower-bound delay already exceeds this.
+    deadline: Option<f64>,
+    pub stats: RoutingStats,
+}
+
+impl Router {
+    pub fn new(n_nodes: usize, local_only: bool, deadline: Option<f64>) -> Self {
+        Router {
+            n_nodes,
+            local_only,
+            deadline,
+            stats: RoutingStats::new(n_nodes),
+        }
+    }
+
+    /// Validate an action for a request arriving at `origin`; returns the
+    /// (possibly corrected) action to execute.
+    ///
+    /// * out-of-range indices are an error (a policy bug, not load);
+    /// * in local-only mode any dispatch is rewritten to local inference;
+    /// * with a deadline, a dispatch whose optimistic total delay (transfer
+    ///   at the current link bandwidth + inference) already exceeds the
+    ///   deadline is vetoed and served locally instead.
+    pub fn route(
+        &mut self,
+        origin: usize,
+        action: Action,
+        link_bw_mbps: impl Fn(usize, usize) -> f64,
+        frame_mbits: f64,
+        infer_secs: f64,
+    ) -> Result<Action> {
+        if action.edge >= self.n_nodes {
+            bail!("action routes to node {} of {}", action.edge, self.n_nodes);
+        }
+        if action.model >= N_MODELS || action.res >= N_RES {
+            bail!("action indices out of range: {action:?}");
+        }
+        let mut a = action;
+        if self.local_only && a.edge != origin {
+            a.edge = origin;
+        }
+        if a.edge != origin {
+            if let Some(deadline) = self.deadline {
+                let bw = link_bw_mbps(origin, a.edge).max(1e-9);
+                let lower_bound = frame_mbits / bw + infer_secs;
+                if lower_bound > deadline {
+                    self.stats.vetoed += 1;
+                    a.edge = origin;
+                }
+            }
+        }
+        if a.edge == origin {
+            self.stats.local += 1;
+        } else {
+            self.stats.dispatched += 1;
+            self.stats.per_link[origin * self.n_nodes + a.edge] += 1;
+        }
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bw_const(v: f64) -> impl Fn(usize, usize) -> f64 {
+        move |_, _| v
+    }
+
+    #[test]
+    fn local_only_rewrites() {
+        let mut r = Router::new(4, true, None);
+        let a = r
+            .route(1, Action::new(3, 0, 0), bw_const(10.0), 1.0, 0.1)
+            .unwrap();
+        assert_eq!(a.edge, 1);
+        assert_eq!(r.stats.local, 1);
+        assert_eq!(r.stats.dispatched, 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut r = Router::new(4, false, None);
+        assert!(r
+            .route(0, Action::new(9, 0, 0), bw_const(10.0), 1.0, 0.1)
+            .is_err());
+        assert!(r
+            .route(0, Action::new(0, 99, 0), bw_const(10.0), 1.0, 0.1)
+            .is_err());
+    }
+
+    #[test]
+    fn deadline_veto() {
+        let mut r = Router::new(4, false, Some(0.5));
+        // 4 Mbit over 1 Mbps = 4 s transfer >> 0.5 s deadline: veto
+        let a = r
+            .route(0, Action::new(2, 3, 0), bw_const(1.0), 4.0, 0.17)
+            .unwrap();
+        assert_eq!(a.edge, 0);
+        assert_eq!(r.stats.vetoed, 1);
+        // fast link passes
+        let a = r
+            .route(0, Action::new(2, 0, 4), bw_const(100.0), 0.32, 0.03)
+            .unwrap();
+        assert_eq!(a.edge, 2);
+        assert_eq!(r.stats.dispatched, 1);
+    }
+
+    #[test]
+    fn stats_fraction() {
+        let mut r = Router::new(2, false, None);
+        r.route(0, Action::new(0, 0, 0), bw_const(1.0), 1.0, 0.1).unwrap();
+        r.route(0, Action::new(1, 0, 0), bw_const(1.0), 1.0, 0.1).unwrap();
+        assert!((r.stats.dispatch_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(r.stats.per_link[0 * 2 + 1], 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Time-varying inter-edge bandwidth traces.
+//!
+//! The paper replays Oboe bandwidth traces [44] between its edge nodes.
+//! Those traces span roughly 1–40 Mbps with strong temporal correlation and
+//! occasional regime shifts; we synthesize the same structure with a
+//! Markov-modulated process: a small set of bandwidth regimes with sticky
+//! transitions, plus within-regime AR(1) jitter. Each directed link (i, j)
+//! gets an independent trace.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BandwidthConfig {
+    pub n_nodes: usize,
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    /// Number of Markov regimes spread log-uniformly over [min, max].
+    pub regimes: usize,
+    /// Probability of switching regime per slot.
+    pub switch_prob: f64,
+    /// AR(1) jitter coefficient and std (fraction of regime level).
+    pub ar: f64,
+    pub jitter: f64,
+}
+
+impl Default for BandwidthConfig {
+    fn default() -> Self {
+        BandwidthConfig {
+            n_nodes: 4,
+            min_mbps: 1.0,
+            max_mbps: 40.0,
+            regimes: 5,
+            switch_prob: 0.03,
+            ar: 0.85,
+            jitter: 0.15,
+        }
+    }
+}
+
+/// Per-link Markov-modulated bandwidth process; `get(i, j)` returns the
+/// current bandwidth of directed link i->j in Mbps.
+#[derive(Debug, Clone)]
+pub struct Bandwidth {
+    cfg: BandwidthConfig,
+    levels: Vec<f64>,
+    regime: Vec<usize>, // [n*n]
+    ar_state: Vec<f64>, // [n*n]
+    current: Vec<f64>,  // [n*n]
+    rng: Rng,
+}
+
+impl Bandwidth {
+    pub fn new(cfg: BandwidthConfig, seed: u64) -> Self {
+        let n = cfg.n_nodes;
+        let mut rng = Rng::new(seed ^ 0xA5A5A5A5DEADBEEF);
+        let lo = cfg.min_mbps.ln();
+        let hi = cfg.max_mbps.ln();
+        let levels: Vec<f64> = (0..cfg.regimes)
+            .map(|r| {
+                (lo + (hi - lo) * (r as f64 + 0.5) / cfg.regimes as f64).exp()
+            })
+            .collect();
+        let regime: Vec<usize> =
+            (0..n * n).map(|_| rng.below(cfg.regimes)).collect();
+        let mut bw = Bandwidth {
+            cfg,
+            levels,
+            regime,
+            ar_state: vec![0.0; n * n],
+            current: vec![0.0; n * n],
+            rng,
+        };
+        bw.refresh();
+        bw
+    }
+
+    fn refresh(&mut self) {
+        let n = self.cfg.n_nodes;
+        for idx in 0..n * n {
+            if idx / n == idx % n {
+                self.current[idx] = f64::INFINITY; // self-link: no transfer
+                continue;
+            }
+            let level = self.levels[self.regime[idx]];
+            let jittered = level * (1.0 + self.ar_state[idx]);
+            self.current[idx] =
+                jittered.clamp(self.cfg.min_mbps * 0.5, self.cfg.max_mbps * 1.2);
+        }
+    }
+
+    /// Advance all links one slot.
+    pub fn step(&mut self) {
+        let n = self.cfg.n_nodes;
+        for idx in 0..n * n {
+            if idx / n == idx % n {
+                continue;
+            }
+            if self.rng.f64() < self.cfg.switch_prob {
+                self.regime[idx] = self.rng.below(self.cfg.regimes);
+            }
+            self.ar_state[idx] = self.cfg.ar * self.ar_state[idx]
+                + self.cfg.jitter * self.rng.normal();
+        }
+        self.refresh();
+    }
+
+    /// Bandwidth of link i->j in Mbps (infinite for i == j).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.current[i * self.cfg.n_nodes + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_envelope() {
+        let cfg = BandwidthConfig::default();
+        let mut bw = Bandwidth::new(cfg.clone(), 1);
+        for _ in 0..2000 {
+            bw.step();
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i == j {
+                        continue;
+                    }
+                    let b = bw.get(i, j);
+                    assert!(
+                        b >= cfg.min_mbps * 0.5 && b <= cfg.max_mbps * 1.2,
+                        "bw {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_link_infinite() {
+        let bw = Bandwidth::new(BandwidthConfig::default(), 2);
+        assert!(bw.get(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn temporally_correlated() {
+        // consecutive samples should be closer than far-apart samples on avg
+        let mut bw = Bandwidth::new(BandwidthConfig::default(), 3);
+        let mut near = 0.0;
+        let mut prev = bw.get(0, 1);
+        let mut samples = Vec::new();
+        for _ in 0..3000 {
+            bw.step();
+            let cur = bw.get(0, 1);
+            near += (cur - prev).abs();
+            samples.push(cur);
+            prev = cur;
+        }
+        near /= 3000.0;
+        // mean |x_t - x_{t+500}| should exceed mean |x_t - x_{t+1}|
+        let mut far = 0.0;
+        let mut cnt = 0.0;
+        for i in 0..samples.len().saturating_sub(500) {
+            far += (samples[i + 500] - samples[i]).abs();
+            cnt += 1.0;
+        }
+        far /= cnt;
+        assert!(far > near, "far={far} near={near}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Bandwidth::new(BandwidthConfig::default(), 5);
+        let mut b = Bandwidth::new(BandwidthConfig::default(), 5);
+        for _ in 0..50 {
+            a.step();
+            b.step();
+            assert_eq!(a.get(1, 2), b.get(1, 2));
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Episode-level metric aggregation — the quantities plotted in the
+//! paper's Figs. 4–8: average accuracy, overall delay, dispatch percentage,
+//! drop percentage, reward per episode, and the model/resolution
+//! selection histograms.
+
+use super::profiles::{N_MODELS, N_RES};
+use super::request::{Finished, Outcome};
+use super::simulator::StepOutcome;
+
+#[derive(Debug, Clone, Default)]
+pub struct EpisodeMetrics {
+    pub steps: usize,
+    pub total_reward: f64,
+    pub arrivals: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub dispatched_done: usize,
+    pub dispatched_sent: usize,
+    pub accuracy_sum: f64,
+    pub delay_sum: f64,
+    pub model_hist: [usize; N_MODELS],
+    pub res_hist: [usize; N_RES],
+    pub node_rewards: Vec<f64>,
+}
+
+impl EpisodeMetrics {
+    pub fn new(n_nodes: usize) -> Self {
+        EpisodeMetrics { node_rewards: vec![0.0; n_nodes], ..Default::default() }
+    }
+
+    pub fn absorb(&mut self, out: &StepOutcome) {
+        self.steps += 1;
+        self.total_reward += out.shared_reward;
+        self.arrivals += out.arrivals.iter().sum::<usize>();
+        self.dispatched_sent += out.dispatched;
+        for (i, r) in out.node_rewards.iter().enumerate() {
+            self.node_rewards[i] += r;
+        }
+        for f in &out.finished {
+            self.absorb_finished(f);
+        }
+    }
+
+    pub fn absorb_finished(&mut self, f: &Finished) {
+        match f.outcome {
+            Outcome::Completed => {
+                self.completed += 1;
+                self.accuracy_sum += f.accuracy;
+                self.delay_sum += f.delay;
+                self.model_hist[f.model] += 1;
+                self.res_hist[f.res] += 1;
+                if f.dispatched {
+                    self.dispatched_done += 1;
+                }
+            }
+            Outcome::Dropped => self.dropped += 1,
+        }
+    }
+
+    /// Average recognition accuracy over completed requests (Fig. 5a).
+    pub fn avg_accuracy(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.accuracy_sum / self.completed as f64
+        }
+    }
+
+    /// Average overall delay per completed frame in seconds (Fig. 5b).
+    pub fn avg_delay(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.delay_sum / self.completed as f64
+        }
+    }
+
+    /// Fraction of finished requests that were served off-origin (Fig. 5c).
+    pub fn dispatch_pct(&self) -> f64 {
+        let fin = self.completed + self.dropped;
+        if fin == 0 {
+            0.0
+        } else {
+            self.dispatched_done as f64 / fin as f64
+        }
+    }
+
+    /// Fraction of finished requests dropped (Fig. 5d).
+    pub fn drop_pct(&self) -> f64 {
+        let fin = self.completed + self.dropped;
+        if fin == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / fin as f64
+        }
+    }
+
+    /// Normalized model-selection distribution (Fig. 4a).
+    pub fn model_dist(&self) -> [f64; N_MODELS] {
+        let total: usize = self.model_hist.iter().sum();
+        let mut out = [0.0; N_MODELS];
+        if total > 0 {
+            for (o, h) in out.iter_mut().zip(self.model_hist.iter()) {
+                *o = *h as f64 / total as f64;
+            }
+        }
+        out
+    }
+
+    /// Normalized resolution-selection distribution (Fig. 4b).
+    pub fn res_dist(&self) -> [f64; N_RES] {
+        let total: usize = self.res_hist.iter().sum();
+        let mut out = [0.0; N_RES];
+        if total > 0 {
+            for (o, h) in out.iter_mut().zip(self.res_hist.iter()) {
+                *o = *h as f64 / total as f64;
+            }
+        }
+        out
+    }
+
+    /// Merge another episode's metrics (for multi-episode averaging).
+    pub fn merge(&mut self, other: &EpisodeMetrics) {
+        self.steps += other.steps;
+        self.total_reward += other.total_reward;
+        self.arrivals += other.arrivals;
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.dispatched_done += other.dispatched_done;
+        self.dispatched_sent += other.dispatched_sent;
+        self.accuracy_sum += other.accuracy_sum;
+        self.delay_sum += other.delay_sum;
+        for m in 0..N_MODELS {
+            self.model_hist[m] += other.model_hist[m];
+        }
+        for v in 0..N_RES {
+            self.res_hist[v] += other.res_hist[v];
+        }
+        for (a, b) in self.node_rewards.iter_mut().zip(&other.node_rewards) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::request::Finished;
+
+    fn fin(outcome: Outcome, model: usize, res: usize, disp: bool) -> Finished {
+        Finished {
+            node: 0,
+            origin: if disp { 1 } else { 0 },
+            model,
+            res,
+            outcome,
+            delay: 0.3,
+            perf: 0.5,
+            accuracy: if outcome == Outcome::Completed { 0.8 } else { 0.0 },
+            dispatched: disp,
+        }
+    }
+
+    #[test]
+    fn percentages() {
+        let mut m = EpisodeMetrics::new(4);
+        m.absorb_finished(&fin(Outcome::Completed, 0, 0, false));
+        m.absorb_finished(&fin(Outcome::Completed, 1, 2, true));
+        m.absorb_finished(&fin(Outcome::Dropped, 3, 4, false));
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.dropped, 1);
+        assert!((m.drop_pct() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.dispatch_pct() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.avg_accuracy() - 0.8).abs() < 1e-12);
+        let md = m.model_dist();
+        assert!((md[0] - 0.5).abs() < 1e-12);
+        assert!((md[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = EpisodeMetrics::new(4);
+        a.absorb_finished(&fin(Outcome::Completed, 0, 0, false));
+        let mut b = EpisodeMetrics::new(4);
+        b.absorb_finished(&fin(Outcome::Dropped, 1, 1, true));
+        a.merge(&b);
+        assert_eq!(a.completed, 1);
+        assert_eq!(a.dropped, 1);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = EpisodeMetrics::new(4);
+        assert_eq!(m.avg_accuracy(), 0.0);
+        assert_eq!(m.avg_delay(), 0.0);
+        assert_eq!(m.drop_pct(), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The multi-edge video-analytics environment (Section IV system model):
+//! request arrival processes, bandwidth traces, model profiles and the
+//! discrete-time simulator implementing Eqs. (1)–(5).
+
+pub mod bandwidth;
+pub mod metrics;
+pub mod profiles;
+pub mod request;
+pub mod simulator;
+pub mod workload;
+
+pub use profiles::{Profiles, N_MODELS, N_RES};
+pub use request::{Action, Request};
+pub use simulator::{Observation, SimConfig, Simulator, StepOutcome};

@@ -1,0 +1,125 @@
+//! Model/resolution profiles — the paper's Tables II and III, verbatim,
+//! plus the preprocessing-delay (`D_v`) and frame-size (`B_v`) profiles the
+//! paper uses but does not tabulate (values chosen to match its testbed
+//! behaviour; see DESIGN.md §2 Substitutions).
+//!
+//! Model index order (Tables II/III):
+//!   0 = fasterrcnn_mobilenet_320   (smallest)
+//!   1 = fasterrcnn_mobilenet
+//!   2 = retinanet_resnet50
+//!   3 = maskrcnn_resnet50          (largest)
+//! Resolution index order: 0 = 1080P, 1 = 720P, 2 = 480P, 3 = 360P, 4 = 240P.
+
+pub const N_MODELS: usize = 4;
+pub const N_RES: usize = 5;
+
+pub const MODEL_NAMES: [&str; N_MODELS] = [
+    "fasterrcnn_mobilenet_320",
+    "fasterrcnn_mobilenet",
+    "retinanet_resnet50",
+    "maskrcnn_resnet50",
+];
+
+pub const RES_NAMES: [&str; N_RES] = ["1080P", "720P", "480P", "360P", "240P"];
+
+/// Table II — recognition accuracy P_{m,v}.
+pub const ACCURACY: [[f64; N_RES]; N_MODELS] = [
+    [0.4158, 0.4056, 0.3834, 0.3795, 0.3426],
+    [0.6503, 0.6194, 0.5987, 0.5676, 0.5055],
+    [0.8202, 0.7630, 0.7341, 0.6917, 0.5858],
+    [0.8614, 0.8102, 0.7807, 0.7457, 0.6191],
+];
+
+/// Table III — average inference delay I_{m,v} in seconds.
+pub const INFER_DELAY: [[f64; N_RES]; N_MODELS] = [
+    [0.087, 0.056, 0.037, 0.030, 0.026],
+    [0.103, 0.065, 0.049, 0.045, 0.039],
+    [0.147, 0.113, 0.088, 0.074, 0.068],
+    [0.171, 0.138, 0.110, 0.090, 0.074],
+];
+
+/// D_v — preprocessing (downsizing) delay in seconds. 1080P is the native
+/// resolution (no resize). Values follow CPU bilinear-resize measurements.
+pub const PREPROC_DELAY: [f64; N_RES] = [0.0, 0.008, 0.006, 0.005, 0.004];
+
+/// B_v — encoded frame size in megabits. JPEG-quality frames at each
+/// resolution (~0.23 bpp), consistent with the Oboe-trace bandwidth scale
+/// (1–40 Mbps) so 1080P transmission is expensive and 240P is cheap.
+pub const FRAME_MBITS: [f64; N_RES] = [4.0, 2.0, 0.96, 0.64, 0.32];
+
+/// Profile bundle handed to the simulator (replaceable for what-if tests).
+#[derive(Debug, Clone)]
+pub struct Profiles {
+    pub accuracy: [[f64; N_RES]; N_MODELS],
+    pub infer_delay: [[f64; N_RES]; N_MODELS],
+    pub preproc_delay: [f64; N_RES],
+    pub frame_mbits: [f64; N_RES],
+}
+
+impl Default for Profiles {
+    fn default() -> Self {
+        Profiles {
+            accuracy: ACCURACY,
+            infer_delay: INFER_DELAY,
+            preproc_delay: PREPROC_DELAY,
+            frame_mbits: FRAME_MBITS,
+        }
+    }
+}
+
+impl Profiles {
+    pub fn accuracy_of(&self, m: usize, v: usize) -> f64 {
+        self.accuracy[m][v]
+    }
+
+    pub fn infer_delay_of(&self, m: usize, v: usize) -> f64 {
+        self.infer_delay[m][v]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_monotonic_in_model_size() {
+        // bigger model => higher accuracy, at every resolution (Table II)
+        for v in 0..N_RES {
+            for m in 1..N_MODELS {
+                assert!(ACCURACY[m][v] > ACCURACY[m - 1][v]);
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_monotonic_in_resolution() {
+        // higher resolution => higher accuracy, for every model (Table II)
+        for m in 0..N_MODELS {
+            for v in 1..N_RES {
+                assert!(ACCURACY[m][v] < ACCURACY[m][v - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn delay_monotonic() {
+        for v in 0..N_RES {
+            for m in 1..N_MODELS {
+                assert!(INFER_DELAY[m][v] > INFER_DELAY[m - 1][v]);
+            }
+        }
+        for m in 0..N_MODELS {
+            for v in 1..N_RES {
+                assert!(INFER_DELAY[m][v] < INFER_DELAY[m][v - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn frame_sizes_decrease_with_resolution() {
+        for v in 1..N_RES {
+            assert!(FRAME_MBITS[v] < FRAME_MBITS[v - 1]);
+        }
+        assert_eq!(PREPROC_DELAY[0], 0.0); // native resolution: no resize
+    }
+}

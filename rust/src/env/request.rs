@@ -1,0 +1,61 @@
+//! Request and action types shared by the simulator, coordinator and
+//! serving runtime.
+
+/// A control action for one inference request / time slot (Eq. 8):
+/// the inference node `e`, the DNN model `m` and the resolution `v`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Action {
+    pub edge: usize,
+    pub model: usize,
+    pub res: usize,
+}
+
+impl Action {
+    pub fn new(edge: usize, model: usize, res: usize) -> Self {
+        Action { edge, model, res }
+    }
+}
+
+/// One inference request (a video frame awaiting recognition).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Node that received the request from the user/camera.
+    pub origin: usize,
+    /// Node chosen to run inference (== origin for local inference).
+    pub target: usize,
+    pub model: usize,
+    pub res: usize,
+    /// Absolute sim time the request arrived at the origin node (s).
+    pub arrival: f64,
+    /// Time the frame becomes ready to queue/transmit (arrival + D_v).
+    pub ready: f64,
+    /// Megabits left to transmit (dispatch path only).
+    pub mbits_left: f64,
+}
+
+/// Terminal state of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed within the drop threshold; reward = P_{m,v} - omega * d.
+    Completed,
+    /// Queuing/total delay exceeded the threshold; reward = -omega * F.
+    Dropped,
+}
+
+/// Record of a finished request (completion or drop) within a slot.
+#[derive(Debug, Clone)]
+pub struct Finished {
+    pub node: usize,
+    pub origin: usize,
+    pub model: usize,
+    pub res: usize,
+    pub outcome: Outcome,
+    /// Overall delay d (Eqs. 2/4); for drops, the delay at drop time.
+    pub delay: f64,
+    /// chi — the request's contribution to the reward (Eq. 5).
+    pub perf: f64,
+    /// Accuracy P_{m,v} (0 for drops).
+    pub accuracy: f64,
+    pub dispatched: bool,
+}

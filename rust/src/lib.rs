@@ -1,0 +1,40 @@
+//! # EdgeVision
+//!
+//! Reproduction of *EdgeVision: Towards Collaborative Video Analytics on
+//! Distributed Edges for Performance Maximization* (Gao, Dong, Wang, Zhou,
+//! 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the multi-edge coordinator: simulator, request
+//!   router/dispatcher, MARL training loop, baselines, serving runtime.
+//! * **L2 (python/compile/model.py)** — actor + attentive-critic networks
+//!   and the fused PPO train step, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: the attentive
+//!   critic's multi-head attention (fwd + bwd) and the bilinear frame
+//!   resize, both inside the lowered HLO modules.
+//!
+//! Python runs only at build time (`make artifacts`); the Rust binary is
+//! self-contained afterwards and executes everything through PJRT.
+//!
+//! Quickstart:
+//! ```no_run
+//! use edgevision::config::Config;
+//! use edgevision::env::{Simulator, SimConfig, Action};
+//!
+//! let cfg = Config::default();
+//! let mut sim = Simulator::new(SimConfig::from_env(&cfg.env), 0);
+//! let actions: Vec<Action> =
+//!     (0..cfg.env.n_nodes).map(|i| Action::new(i, 1, 2)).collect();
+//! let out = sim.step(&actions);
+//! println!("shared reward: {}", out.shared_reward);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod experiments;
+pub mod rl;
+pub mod runtime;
+pub mod serving;
+pub mod telemetry;
+pub mod util;

@@ -1,0 +1,220 @@
+//! `repro` — the EdgeVision launcher.
+//!
+//! Subcommands:
+//!   info                         show artifact/manifest summary
+//!   train [--omega W ...]        train one configuration, save checkpoint
+//!   evaluate --params FILE       evaluate a trained policy
+//!   baselines [--omega W]        evaluate the heuristic baselines
+//!   serve [--duration S]         online serving with real PJRT inference
+//!   experiment fig3|fig4|fig5|fig6|fig7|fig8|headline|all
+//!
+//! Common flags: --artifacts DIR --results DIR --episodes N --seed S
+//! --variant full|noattn|local --ippo --local-only --config FILE
+
+use anyhow::{bail, Context, Result};
+
+use edgevision::config::Config;
+use edgevision::experiments::ExpContext;
+use edgevision::rl::eval::evaluate;
+use edgevision::rl::policy::{ActorPolicy, PolicyController};
+use edgevision::rl::trainer::Trainer;
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::serving::{run_serving, ServingOptions};
+use edgevision::telemetry::report::method_row;
+use edgevision::util::cli::Args;
+
+const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|experiment> [flags]
+  repro info
+  repro train --omega 5 --episodes 600 [--variant full|noattn|local] [--ippo] [--local-only] [--save FILE]
+  repro evaluate --params FILE [--omega 5] [--eval-episodes 30] [--greedy]
+  repro baselines [--omega 5]
+  repro serve [--duration 30] [--policy FILE]
+  repro experiment <fig3|fig45|fig6|fig7|fig8|headline|all> [--episodes N]";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let mut cfg = Config::default();
+    cfg.apply_args(&args)?;
+
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+
+    match cmd {
+        "info" => info(&manifest),
+        "train" => train(&rt, &manifest, cfg, &args),
+        "evaluate" => eval_cmd(&rt, &manifest, cfg, &args),
+        "baselines" => baselines_cmd(&rt, &manifest, cfg, &args),
+        "serve" => serve_cmd(&rt, &manifest, cfg, &args),
+        "experiment" => experiment(&rt, &manifest, cfg, &args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn info(manifest: &Manifest) -> Result<()> {
+    let n = &manifest.net;
+    println!("EdgeVision artifacts @ {}", manifest.dir.display());
+    println!(
+        "  agents={} obs_dim={} models={} resolutions={}",
+        n.n_agents, n.obs_dim, n.n_models, n.n_res
+    );
+    println!(
+        "  minibatch={} critic_batch={} hidden={} embed={} heads={}",
+        n.minibatch, n.critic_batch, n.hidden, n.embed, n.heads
+    );
+    println!("  actor artifact: {}", manifest.actor_fwd);
+    for (name, v) in &manifest.variants {
+        println!(
+            "  variant {name}: {} leaves / {} params ({} + {})",
+            v.params.len(),
+            v.n_elems,
+            v.critic_fwd,
+            v.train_step
+        );
+    }
+    println!(
+        "  zoo: {} detector artifacts, {} preprocess artifacts",
+        manifest.zoo.len(),
+        manifest.preprocess.len()
+    );
+    Ok(())
+}
+
+fn train(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
+    let save = args.get("save").map(|s| s.to_string()).unwrap_or_else(|| {
+        format!(
+            "{}/checkpoints/manual_{}_omega{}.bin",
+            cfg.paths.results, cfg.rl.variant, cfg.env.omega
+        )
+    });
+    println!(
+        "training variant={} omega={} episodes={} shared_reward={} local_only={}",
+        cfg.rl.variant, cfg.env.omega, cfg.rl.episodes, cfg.rl.shared_reward,
+        cfg.rl.local_only
+    );
+    let mut trainer = Trainer::new(rt, manifest, cfg)?;
+    let every = (trainer.cfg.rl.episodes / 20).max(1);
+    let outcome = trainer.train(|ep, r| {
+        if ep % every == 0 {
+            println!("  ep {ep:5}  reward {r:9.2}");
+        }
+    })?;
+    trainer.store.save(&save)?;
+    let last = &outcome.episode_rewards[outcome.episode_rewards.len().saturating_sub(50)..];
+    println!(
+        "done in {:.0}s; final-50-episode mean reward {:.2}; checkpoint {}",
+        outcome.train_secs,
+        edgevision::util::stats::mean(last),
+        save
+    );
+    if let Some(u) = outcome.updates.last() {
+        println!(
+            "last update: policy_loss {:.4} value_loss {:.4} entropy {:.3} kl {:.4}",
+            u.policy_loss, u.value_loss, u.entropy, u.approx_kl
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
+    let path = args.get("params").context("--params FILE required")?;
+    let spec = manifest.variant(&cfg.rl.variant)?;
+    let store = edgevision::rl::params::ParamStore::load(&spec.params, path)?;
+    let blob = store.to_blob()?;
+    let policy =
+        ActorPolicy::with_params(rt, manifest, &blob, cfg.rl.local_only)?;
+    let mut ctrl =
+        PolicyController::new("policy", policy, cfg.rl.seed, args.bool("greedy"));
+    let res = evaluate(
+        &mut ctrl,
+        &edgevision::env::SimConfig::from_env(&cfg.env),
+        cfg.rl.eval_episodes,
+        cfg.env.episode_len,
+        cfg.rl.seed ^ 0x5EED,
+    )?;
+    let row = method_row("policy", cfg.env.omega, &res.metrics, res.mean_episode_reward());
+    println!(
+        "mean episode reward {:.2} | accuracy {:.4} | delay {:.3}s | dispatch {:.1}% | drop {:.1}%",
+        row.mean_episode_reward,
+        row.avg_accuracy,
+        row.avg_delay,
+        100.0 * row.dispatch_pct,
+        100.0 * row.drop_pct
+    );
+    Ok(())
+}
+
+fn baselines_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, _args: &Args) -> Result<()> {
+    let ctx = ExpContext::new(rt, manifest, cfg.clone());
+    println!("omega = {}", cfg.env.omega);
+    println!("{:<22} {:>10} {:>8} {:>8} {:>7} {:>7}", "method", "reward", "acc", "delay", "disp%", "drop%");
+    for h in [
+        "predictive",
+        "shortest_queue_min",
+        "shortest_queue_max",
+        "random_min",
+        "random_max",
+    ] {
+        let res = ctx.eval_heuristic(h, cfg.env.omega)?;
+        let row = method_row(h, cfg.env.omega, &res.metrics, res.mean_episode_reward());
+        println!(
+            "{:<22} {:>10.2} {:>8.4} {:>8.3} {:>6.1}% {:>6.1}%",
+            row.method,
+            row.mean_episode_reward,
+            row.avg_accuracy,
+            row.avg_delay,
+            100.0 * row.dispatch_pct,
+            100.0 * row.drop_pct
+        );
+    }
+    Ok(())
+}
+
+fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
+    let opts = ServingOptions {
+        n_nodes: cfg.env.n_nodes,
+        duration_virtual_secs: args.f64_or("duration", 30.0)?,
+        drop_deadline: cfg.env.drop_threshold,
+        seed: cfg.rl.seed,
+        greedy: true,
+    };
+    let blob = match args.get("policy") {
+        Some(path) => {
+            let spec = manifest.variant(&cfg.rl.variant)?;
+            let store = edgevision::rl::params::ParamStore::load(&spec.params, path)?;
+            Some(store.to_blob()?)
+        }
+        None => None,
+    };
+    println!(
+        "serving {} virtual seconds on {} nodes (policy: {})...",
+        opts.duration_virtual_secs,
+        opts.n_nodes,
+        if blob.is_some() { "trained actor" } else { "shortest-queue" }
+    );
+    let report = run_serving(rt, manifest, blob.as_deref(), &opts)?;
+    report.print();
+    Ok(())
+}
+
+fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|headline|all)")?;
+    let ctx = ExpContext::new(rt, manifest, cfg);
+    match which {
+        "fig3" => ctx.fig3(),
+        "fig4" | "fig5" | "fig45" => ctx.fig45(),
+        "fig6" => ctx.fig6(),
+        "fig7" => ctx.fig7(),
+        "fig8" => ctx.fig8(),
+        "headline" => ctx.headline(),
+        "all" => ctx.all(),
+        other => bail!("unknown experiment {other:?}"),
+    }
+}

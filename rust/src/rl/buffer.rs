@@ -1,0 +1,135 @@
+//! On-policy replay buffer (Algorithm 1, lines 14–16): stores the
+//! transitions of the episodes collected since the last update phase and
+//! assembles fixed-size minibatches as flat arrays ready to become PJRT
+//! literals.
+
+use crate::util::rng::Rng;
+
+/// One time-slot transition for all N agents.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    /// Flattened [N * obs_dim] local states.
+    pub obs: Vec<f32>,
+    /// [N * 3] (e, m, v) action indices.
+    pub actions: Vec<i32>,
+    /// [N] joint log-probs of the factored actions.
+    pub logp: Vec<f32>,
+    /// [N] advantages (GAE).
+    pub adv: Vec<f32>,
+    /// [N] reward-to-go targets.
+    pub ret: Vec<f32>,
+    /// [N] critic values at collection time (for value clipping).
+    pub val: Vec<f32>,
+}
+
+/// A minibatch in the exact layout the train_step artifact expects.
+#[derive(Debug, Clone)]
+pub struct Minibatch {
+    pub obs: Vec<f32>,     // [B, N, D]
+    pub actions: Vec<i32>, // [B, N, 3]
+    pub logp: Vec<f32>,    // [B, N]
+    pub adv: Vec<f32>,     // [B, N]
+    pub ret: Vec<f32>,     // [B, N]
+    pub val: Vec<f32>,     // [B, N]
+}
+
+#[derive(Debug, Default)]
+pub struct ReplayBuffer {
+    data: Vec<Transition>,
+}
+
+impl ReplayBuffer {
+    pub fn new() -> Self {
+        ReplayBuffer { data: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.data.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Clear after an update phase (on-policy; Algorithm 1 line 21).
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    /// Sample a size-B minibatch uniformly (with replacement when the
+    /// buffer is smaller than B, without meaningful bias otherwise —
+    /// Algorithm 1 line 16 samples randomly per minibatch).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> Minibatch {
+        assert!(!self.data.is_empty(), "sampling from empty buffer");
+        let n_agents = self.data[0].logp.len();
+        let obs_dim = self.data[0].obs.len();
+        let mut mb = Minibatch {
+            obs: Vec::with_capacity(batch * obs_dim),
+            actions: Vec::with_capacity(batch * n_agents * 3),
+            logp: Vec::with_capacity(batch * n_agents),
+            adv: Vec::with_capacity(batch * n_agents),
+            ret: Vec::with_capacity(batch * n_agents),
+            val: Vec::with_capacity(batch * n_agents),
+        };
+        for _ in 0..batch {
+            let t = &self.data[rng.below(self.data.len())];
+            mb.obs.extend_from_slice(&t.obs);
+            mb.actions.extend_from_slice(&t.actions);
+            mb.logp.extend_from_slice(&t.logp);
+            mb.adv.extend_from_slice(&t.adv);
+            mb.ret.extend_from_slice(&t.ret);
+            mb.val.extend_from_slice(&t.val);
+        }
+        mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(v: f32) -> Transition {
+        Transition {
+            obs: vec![v; 8],
+            actions: vec![v as i32; 12],
+            logp: vec![v; 4],
+            adv: vec![v; 4],
+            ret: vec![v; 4],
+            val: vec![v; 4],
+        }
+    }
+
+    #[test]
+    fn sample_shapes() {
+        let mut b = ReplayBuffer::new();
+        for i in 0..10 {
+            b.push(tr(i as f32));
+        }
+        let mut rng = Rng::new(0);
+        let mb = b.sample(32, &mut rng);
+        assert_eq!(mb.obs.len(), 32 * 8);
+        assert_eq!(mb.actions.len(), 32 * 12);
+        assert_eq!(mb.logp.len(), 32 * 4);
+    }
+
+    #[test]
+    fn sample_draws_from_buffer_contents() {
+        let mut b = ReplayBuffer::new();
+        b.push(tr(3.0));
+        let mut rng = Rng::new(1);
+        let mb = b.sample(4, &mut rng);
+        assert!(mb.obs.iter().all(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut b = ReplayBuffer::new();
+        b.push(tr(1.0));
+        b.clear();
+        assert!(b.is_empty());
+    }
+}

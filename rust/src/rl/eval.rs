@@ -1,0 +1,94 @@
+//! Evaluation harness — runs any controller (trained policy or baseline)
+//! in the simulator and aggregates the metrics the paper's Figs. 4–8 plot.
+
+use anyhow::Result;
+
+use crate::env::metrics::EpisodeMetrics;
+use crate::env::{Action, SimConfig, Simulator};
+
+/// A control policy: observes the simulator, emits one action per node per
+/// slot. Implemented by the trained MARL actor and by every baseline.
+pub trait Controller {
+    fn name(&self) -> &str;
+
+    /// Called once at the start of each episode.
+    fn reset(&mut self, _episode_seed: u64) {}
+
+    /// Decide all nodes' (e, m, v) for the upcoming slot.
+    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>>;
+}
+
+/// Result of an evaluation run.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub metrics: EpisodeMetrics,
+    /// Total shared reward per episode.
+    pub episode_rewards: Vec<f64>,
+}
+
+impl EvalResult {
+    pub fn mean_episode_reward(&self) -> f64 {
+        crate::util::stats::mean(&self.episode_rewards)
+    }
+}
+
+/// Run `episodes` episodes of `steps` slots each and aggregate.
+pub fn evaluate(
+    ctrl: &mut dyn Controller,
+    sim_cfg: &SimConfig,
+    episodes: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<EvalResult> {
+    let mut sim = Simulator::new(sim_cfg.clone(), seed);
+    let mut agg = EpisodeMetrics::new(sim_cfg.n_nodes);
+    let mut episode_rewards = Vec::with_capacity(episodes);
+    for ep in 0..episodes {
+        let ep_seed = seed.wrapping_add(1000).wrapping_add(ep as u64);
+        sim.reset(ep_seed);
+        ctrl.reset(ep_seed);
+        let mut ep_metrics = EpisodeMetrics::new(sim_cfg.n_nodes);
+        for _ in 0..steps {
+            let actions = ctrl.act(&sim)?;
+            let out = sim.step(&actions);
+            ep_metrics.absorb(&out);
+        }
+        episode_rewards.push(ep_metrics.total_reward);
+        agg.merge(&ep_metrics);
+    }
+    Ok(EvalResult { metrics: agg, episode_rewards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnvConfig;
+
+    struct FixedController;
+    impl Controller for FixedController {
+        fn name(&self) -> &str {
+            "fixed"
+        }
+        fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
+            Ok((0..sim.cfg.n_nodes).map(|i| Action::new(i, 0, 4)).collect())
+        }
+    }
+
+    #[test]
+    fn evaluate_aggregates() {
+        let cfg = SimConfig::from_env(&EnvConfig::default());
+        let mut ctrl = FixedController;
+        let res = evaluate(&mut ctrl, &cfg, 3, 50, 0).unwrap();
+        assert_eq!(res.episode_rewards.len(), 3);
+        assert!(res.metrics.completed > 0);
+        assert_eq!(res.metrics.steps, 150);
+    }
+
+    #[test]
+    fn evaluation_deterministic() {
+        let cfg = SimConfig::from_env(&EnvConfig::default());
+        let a = evaluate(&mut FixedController, &cfg, 2, 40, 7).unwrap();
+        let b = evaluate(&mut FixedController, &cfg, 2, 40, 7).unwrap();
+        assert_eq!(a.episode_rewards, b.episode_rewards);
+    }
+}

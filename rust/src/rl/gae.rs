@@ -1,0 +1,158 @@
+//! Generalized Advantage Estimation (Eq. 16) and discounted reward-to-go
+//! (Eq. 17), computed per agent over an episode trajectory.
+
+/// Compute GAE advantages.
+///
+/// * `rewards[t][i]` — reward for agent i at step t (shared reward is
+///   simply the same value for all i).
+/// * `values[t][i]` — critic value at step t; must have T+1 rows (the last
+///   row bootstraps the value of the post-episode state).
+///
+/// Returns `adv[t][i]` with T rows.
+pub fn gae(
+    rewards: &[Vec<f64>],
+    values: &[Vec<f64>],
+    gamma: f64,
+    lambda: f64,
+) -> Vec<Vec<f64>> {
+    let t_len = rewards.len();
+    assert_eq!(values.len(), t_len + 1, "values must include bootstrap row");
+    if t_len == 0 {
+        return Vec::new();
+    }
+    let n = rewards[0].len();
+    let mut adv = vec![vec![0.0; n]; t_len];
+    let mut running = vec![0.0; n];
+    for t in (0..t_len).rev() {
+        for i in 0..n {
+            let delta =
+                rewards[t][i] + gamma * values[t + 1][i] - values[t][i];
+            running[i] = delta + gamma * lambda * running[i];
+            adv[t][i] = running[i];
+        }
+    }
+    adv
+}
+
+/// Discounted reward-to-go R̂_t (Eq. 17), bootstrapped with the final value
+/// row: R̂_t = r_t + γ r_{t+1} + ... + γ^{T-t} V(s_T).
+pub fn reward_to_go(
+    rewards: &[Vec<f64>],
+    bootstrap: &[f64],
+    gamma: f64,
+) -> Vec<Vec<f64>> {
+    let t_len = rewards.len();
+    if t_len == 0 {
+        return Vec::new();
+    }
+    let n = rewards[0].len();
+    let mut out = vec![vec![0.0; n]; t_len];
+    let mut running: Vec<f64> = bootstrap.to_vec();
+    for t in (0..t_len).rev() {
+        for i in 0..n {
+            running[i] = rewards[t][i] + gamma * running[i];
+            out[t][i] = running[i];
+        }
+    }
+    out
+}
+
+/// O(T^2) reference implementation of GAE (tests compare against this).
+pub fn gae_reference(
+    rewards: &[Vec<f64>],
+    values: &[Vec<f64>],
+    gamma: f64,
+    lambda: f64,
+) -> Vec<Vec<f64>> {
+    let t_len = rewards.len();
+    if t_len == 0 {
+        return Vec::new();
+    }
+    let n = rewards[0].len();
+    let delta = |t: usize, i: usize| {
+        rewards[t][i] + gamma * values[t + 1][i] - values[t][i]
+    };
+    let mut adv = vec![vec![0.0; n]; t_len];
+    for t in 0..t_len {
+        for i in 0..n {
+            let mut acc = 0.0;
+            for k in 0..(t_len - t) {
+                acc += (gamma * lambda).powi(k as i32) * delta(t + k, i);
+            }
+            adv[t][i] = acc;
+        }
+    }
+    adv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_traj(seed: u64, t: usize, n: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(seed);
+        let rewards =
+            (0..t).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let values = (0..=t)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        (rewards, values)
+    }
+
+    #[test]
+    fn matches_reference() {
+        for seed in 0..5 {
+            let (r, v) = random_traj(seed, 37, 4);
+            let fast = gae(&r, &v, 0.99, 0.95);
+            let slow = gae_reference(&r, &v, 0.99, 0.95);
+            for t in 0..r.len() {
+                for i in 0..4 {
+                    assert!(
+                        (fast[t][i] - slow[t][i]).abs() < 1e-9,
+                        "t={t} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_td_error() {
+        let (r, v) = random_traj(9, 20, 2);
+        let adv = gae(&r, &v, 0.9, 0.0);
+        for t in 0..20 {
+            for i in 0..2 {
+                let delta = r[t][i] + 0.9 * v[t + 1][i] - v[t][i];
+                assert!((adv[t][i] - delta).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_to_go_zero_gamma() {
+        let (r, _) = random_traj(11, 10, 3);
+        let rtg = reward_to_go(&r, &[5.0, 5.0, 5.0], 0.0);
+        for t in 0..10 {
+            for i in 0..3 {
+                assert_eq!(rtg[t][i], r[t][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_to_go_accumulates() {
+        let r = vec![vec![1.0], vec![1.0], vec![1.0]];
+        let rtg = reward_to_go(&r, &[0.0], 1.0);
+        assert_eq!(rtg[0][0], 3.0);
+        assert_eq!(rtg[2][0], 1.0);
+        let rtg_boot = reward_to_go(&r, &[10.0], 1.0);
+        assert_eq!(rtg_boot[0][0], 13.0);
+    }
+
+    #[test]
+    fn empty_trajectory() {
+        let adv = gae(&[], &[vec![0.0]], 0.99, 0.95);
+        assert!(adv.is_empty());
+    }
+}

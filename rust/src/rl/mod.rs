@@ -1,0 +1,15 @@
+//! The MARL stack (Section V): parameter store, actor policy, GAE,
+//! replay buffer, rollout collection and the PPO trainer driving the
+//! AOT-compiled `train_step` artifact through PJRT.
+
+pub mod buffer;
+pub mod eval;
+pub mod gae;
+pub mod params;
+pub mod policy;
+pub mod trainer;
+
+pub use eval::{evaluate, Controller};
+pub use params::ParamStore;
+pub use policy::ActorPolicy;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,136 @@
+//! Manifest-driven parameter store.
+//!
+//! Network parameters, Adam moments and the step counter live as PJRT
+//! literals in the exact flatten order recorded in `manifest.json`; the
+//! fused `train_step` consumes them and returns the updated set, which we
+//! adopt wholesale (no host round-trip on the training path). Checkpoints
+//! serialize the same order as raw little-endian f32 — byte-compatible
+//! with `params_init_<variant>.bin` from the AOT exporter.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::runtime::{lit_f32, lit_scalar_f32, to_vec_f32, LeafSpec, Manifest};
+
+pub struct ParamStore {
+    pub leaves: Vec<LeafSpec>,
+    /// How many leading leaves belong to the actor subtree ("actor/...").
+    pub n_actor_leaves: usize,
+    pub params: Vec<Literal>,
+    pub adam_m: Vec<Literal>,
+    pub adam_v: Vec<Literal>,
+    pub step: Literal,
+}
+
+impl ParamStore {
+    /// Initialize from the exporter's `params_init_<variant>.bin`.
+    pub fn from_init(manifest: &Manifest, variant: &str) -> Result<ParamStore> {
+        let spec = manifest.variant(variant)?;
+        let blob = manifest.read_param_blob(&spec.params_init, spec.n_elems)?;
+        Self::from_blob(&spec.params, &blob)
+    }
+
+    /// Initialize from an arbitrary blob in manifest leaf order.
+    pub fn from_blob(leaves: &[LeafSpec], blob: &[f32]) -> Result<ParamStore> {
+        let total: usize = leaves.iter().map(|l| l.numel()).sum();
+        anyhow::ensure!(
+            blob.len() == total,
+            "param blob has {} elems, leaves need {total}",
+            blob.len()
+        );
+        let mut params = Vec::with_capacity(leaves.len());
+        let mut adam_m = Vec::with_capacity(leaves.len());
+        let mut adam_v = Vec::with_capacity(leaves.len());
+        let mut off = 0;
+        for leaf in leaves {
+            let n = leaf.numel();
+            params.push(lit_f32(&blob[off..off + n], &leaf.shape)?);
+            adam_m.push(lit_f32(&vec![0.0; n], &leaf.shape)?);
+            adam_v.push(lit_f32(&vec![0.0; n], &leaf.shape)?);
+            off += n;
+        }
+        let n_actor_leaves =
+            leaves.iter().take_while(|l| l.name.starts_with("actor/")).count();
+        anyhow::ensure!(n_actor_leaves > 0, "no actor/ leaves in manifest");
+        Ok(ParamStore {
+            leaves: leaves.to_vec(),
+            n_actor_leaves,
+            params,
+            adam_m,
+            adam_v,
+            step: lit_scalar_f32(0.0),
+        })
+    }
+
+    /// Actor-subtree literals (the leading `actor/` leaves).
+    pub fn actor_params(&self) -> &[Literal] {
+        &self.params[..self.n_actor_leaves]
+    }
+
+    /// Critic-subtree literals.
+    pub fn critic_params(&self) -> &[Literal] {
+        &self.params[self.n_actor_leaves..]
+    }
+
+    /// Adopt the outputs of a train_step execution:
+    /// [params' | m' | v' | step' | metrics] -> store, returning metrics.
+    pub fn adopt_train_outputs(
+        &mut self,
+        mut outs: Vec<Literal>,
+    ) -> Result<Vec<f32>> {
+        let p = self.leaves.len();
+        anyhow::ensure!(
+            outs.len() == 3 * p + 2,
+            "train_step returned {} outputs, expected {}",
+            outs.len(),
+            3 * p + 2
+        );
+        let metrics = to_vec_f32(&outs.pop().unwrap())?;
+        self.step = outs.pop().unwrap();
+        self.adam_v = outs.split_off(2 * p);
+        self.adam_m = outs.split_off(p);
+        self.params = outs;
+        Ok(metrics)
+    }
+
+    /// Dump parameters to host in manifest leaf order.
+    pub fn to_blob(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for lit in &self.params {
+            out.extend(to_vec_f32(lit)?);
+        }
+        Ok(out)
+    }
+
+    /// Save a checkpoint (raw f32 LE, manifest order).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let blob = self.to_blob()?;
+        let mut bytes = Vec::with_capacity(blob.len() * 4);
+        for v in blob {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, bytes)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`ParamStore::save`].
+    pub fn load(
+        leaves: &[LeafSpec],
+        path: impl AsRef<Path>,
+    ) -> Result<ParamStore> {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "checkpoint not f32-aligned");
+        let blob: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Self::from_blob(leaves, &blob)
+    }
+}

@@ -1,0 +1,206 @@
+//! Actor policy — wraps the `actor_fwd` HLO artifact: local states in,
+//! factored categorical log-probs out, sampled (training) or argmax'd
+//! (deployment) into `(e, m, v)` actions. This is the *only* network that
+//! runs post-training, exactly as the paper's decentralized execution
+//! prescribes.
+//!
+//! Hot-path note: actor parameters and the dispatch mask live as
+//! device-resident PJRT buffers (`execute_b`), so a policy step only
+//! uploads the observation tensor — see EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+use std::rc::Rc;
+use xla::PjRtBuffer;
+
+use crate::env::Action;
+use crate::runtime::{to_vec_f32, Executable, Manifest, Runtime};
+use crate::util::rng::{argmax, Rng};
+
+pub struct ActorPolicy {
+    exe: Rc<Executable>,
+    rt_handle: RtHandle,
+    mask: PjRtBuffer,
+    pub n_agents: usize,
+    pub obs_dim: usize,
+    pub n_models: usize,
+    pub n_res: usize,
+    /// Owned device-resident actor parameters (eval/serving mode); empty
+    /// when the caller passes parameters explicitly via [`act_with`].
+    params: Vec<PjRtBuffer>,
+}
+
+/// Thin handle for uploading tensors (keeps `ActorPolicy` self-contained
+/// without borrowing the Runtime for its whole life).
+struct RtHandle {
+    client: xla::PjRtClient,
+}
+
+impl RtHandle {
+    fn buffer_f32(&self, data: &[f32], shape: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+}
+
+impl ActorPolicy {
+    /// Stateless policy: parameters are supplied per call (training mode).
+    pub fn new(rt: &Runtime, manifest: &Manifest, local_only: bool) -> Result<Self> {
+        let exe = rt.load(&manifest.actor_fwd)?;
+        let n = manifest.net.n_agents;
+        let handle = RtHandle { client: rt.client.clone() };
+        let mask_host = build_mask(n, local_only);
+        let mask = handle.buffer_f32(&mask_host, &[n, n])?;
+        Ok(ActorPolicy {
+            exe,
+            rt_handle: handle,
+            mask,
+            n_agents: n,
+            obs_dim: manifest.net.obs_dim,
+            n_models: manifest.net.n_models,
+            n_res: manifest.net.n_res,
+            params: Vec::new(),
+        })
+    }
+
+    /// Policy with owned parameters from an actor-prefix blob
+    /// (checkpoint / params_init layout — eval and serving mode).
+    pub fn with_params(
+        rt: &Runtime,
+        manifest: &Manifest,
+        blob: &[f32],
+        local_only: bool,
+    ) -> Result<Self> {
+        let mut policy = Self::new(rt, manifest, local_only)?;
+        let mut off = 0;
+        for leaf in &manifest.actor_params {
+            let n = leaf.numel();
+            anyhow::ensure!(
+                off + n <= blob.len(),
+                "actor blob too short at leaf {}",
+                leaf.name
+            );
+            policy
+                .params
+                .push(policy.rt_handle.buffer_f32(&blob[off..off + n], &leaf.shape)?);
+            off += n;
+        }
+        Ok(policy)
+    }
+
+    /// Upload an actor-parameter blob slice as device buffers (used by the
+    /// trainer to refresh its resident copy after each update phase).
+    pub fn upload_params(
+        &self,
+        manifest: &Manifest,
+        blob: &[f32],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mut out = Vec::with_capacity(manifest.actor_params.len());
+        let mut off = 0;
+        for leaf in &manifest.actor_params {
+            let n = leaf.numel();
+            out.push(self.rt_handle.buffer_f32(&blob[off..off + n], &leaf.shape)?);
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Forward + sample with explicit device-resident parameters.
+    /// Returns the per-agent actions and joint log-probs.
+    pub fn act_with(
+        &self,
+        actor_params: &[PjRtBuffer],
+        obs_flat: &[f32],
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> Result<(Vec<Action>, Vec<f32>)> {
+        let n = self.n_agents;
+        debug_assert_eq!(obs_flat.len(), n * self.obs_dim);
+        let obs = self.rt_handle.buffer_f32(obs_flat, &[n, self.obs_dim])?;
+        let mut inputs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(actor_params.len() + 2);
+        inputs.extend(actor_params.iter());
+        inputs.push(&obs);
+        inputs.push(&self.mask);
+        let outs = self.exe.run_b(&inputs)?;
+        anyhow::ensure!(outs.len() == 3, "actor_fwd returned {}", outs.len());
+        let logp_e = to_vec_f32(&outs[0])?;
+        let logp_m = to_vec_f32(&outs[1])?;
+        let logp_v = to_vec_f32(&outs[2])?;
+
+        let mut actions = Vec::with_capacity(n);
+        let mut joint = Vec::with_capacity(n);
+        for i in 0..n {
+            let le = &logp_e[i * n..(i + 1) * n];
+            let lm = &logp_m[i * self.n_models..(i + 1) * self.n_models];
+            let lv = &logp_v[i * self.n_res..(i + 1) * self.n_res];
+            let (e, m, v) = if greedy {
+                (argmax(le), argmax(lm), argmax(lv))
+            } else {
+                (
+                    rng.categorical_from_logp(le),
+                    rng.categorical_from_logp(lm),
+                    rng.categorical_from_logp(lv),
+                )
+            };
+            actions.push(Action::new(e, m, v));
+            joint.push(le[e] + lm[m] + lv[v]);
+        }
+        Ok((actions, joint))
+    }
+
+    /// Forward + sample with the owned parameters (eval/serving path).
+    pub fn act(
+        &self,
+        obs_flat: &[f32],
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> Result<(Vec<Action>, Vec<f32>)> {
+        anyhow::ensure!(
+            !self.params.is_empty(),
+            "ActorPolicy::act needs owned params; use with_params()"
+        );
+        self.act_with(&self.params, obs_flat, rng, greedy)
+    }
+}
+
+/// A trained policy as an evaluation [`Controller`]: greedy (argmax)
+/// decentralized execution, exactly what runs on each node post-training.
+pub struct PolicyController {
+    pub label: String,
+    policy: ActorPolicy,
+    rng: Rng,
+    greedy: bool,
+}
+
+impl PolicyController {
+    pub fn new(label: impl Into<String>, policy: ActorPolicy, seed: u64, greedy: bool) -> Self {
+        PolicyController { label: label.into(), policy, rng: Rng::new(seed), greedy }
+    }
+}
+
+impl crate::rl::eval::Controller for PolicyController {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn act(&mut self, sim: &crate::env::Simulator) -> Result<Vec<Action>> {
+        let obs = sim.observations_flat();
+        let (actions, _) = self.policy.act(&obs, &mut self.rng, self.greedy)?;
+        Ok(actions)
+    }
+}
+
+/// Dispatch-head mask: all-zeros normally; Local-PPO gets -1e9 off-diagonal
+/// so agent i can only select e == i.
+fn build_mask(n: usize, local_only: bool) -> Vec<f32> {
+    let mut mask = vec![0.0f32; n * n];
+    if local_only {
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    mask[i * n + j] = -1e9;
+                }
+            }
+        }
+    }
+    mask
+}

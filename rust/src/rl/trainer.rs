@@ -1,0 +1,331 @@
+//! The MAPPO trainer (Algorithm 1): centralized training with the
+//! attentive critic, decentralized execution through the actor.
+//!
+//! The whole numeric training path runs inside two AOT HLO artifacts —
+//! `critic_fwd_<variant>` for value estimation and `train_step_<variant>`
+//! for the fused PPO update (losses Eq. 18/19 + Adam). Rust owns rollouts,
+//! GAE (Eq. 16), reward-to-go (Eq. 17), minibatch assembly and the episode
+//! loop. Parameters stay resident as PJRT literals; nothing crosses the
+//! host boundary between updates except minibatch tensors.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::config::Config;
+use crate::env::metrics::EpisodeMetrics;
+use crate::env::{SimConfig, Simulator};
+use crate::rl::buffer::{ReplayBuffer, Transition};
+use crate::rl::gae::{gae, reward_to_go};
+use crate::rl::params::ParamStore;
+use crate::rl::policy::ActorPolicy;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Executable, Manifest, Runtime};
+use crate::util::rng::Rng;
+
+/// Per-update-phase diagnostics (mean of the J minibatch metric vectors).
+#[derive(Debug, Clone)]
+pub struct UpdateMetrics {
+    pub episode: usize,
+    pub total: f32,
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+    pub grad_norm: f32,
+}
+
+/// Everything a training run produces.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// Shared reward per training episode (the Fig. 3 series).
+    pub episode_rewards: Vec<f64>,
+    /// Per-episode metrics (drop/dispatch/accuracy trends during training).
+    pub episode_metrics: Vec<EpisodeMetrics>,
+    pub updates: Vec<UpdateMetrics>,
+    pub train_secs: f64,
+    /// Final actor+critic parameters, manifest leaf order.
+    pub params_blob: Vec<f32>,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    manifest: &'rt Manifest,
+    pub cfg: Config,
+    pub store: ParamStore,
+    policy: ActorPolicy,
+    critic_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    mask: Literal,
+    sim: Simulator,
+    buffer: ReplayBuffer,
+    rng: Rng,
+    /// Device-resident copies of the actor / critic parameters, refreshed
+    /// after each update phase — rollouts never re-upload parameters.
+    actor_dev: Vec<xla::PjRtBuffer>,
+    critic_dev: Vec<xla::PjRtBuffer>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest, cfg: Config) -> Result<Self> {
+        let variant = manifest.variant(&cfg.rl.variant)?;
+        let store = ParamStore::from_init(manifest, &cfg.rl.variant)?;
+        let policy = ActorPolicy::new(rt, manifest, cfg.rl.local_only)?;
+        let critic_exe = rt.load(&variant.critic_fwd)?;
+        let train_exe = rt.load(&variant.train_step)?;
+        let n = manifest.net.n_agents;
+        let mask = build_mask_literal(n, cfg.rl.local_only)?;
+        let sim = Simulator::new(SimConfig::from_env(&cfg.env), cfg.rl.seed);
+        let rng = Rng::new(cfg.rl.seed ^ 0xC0FFEE);
+        anyhow::ensure!(
+            cfg.env.n_nodes == n,
+            "config n_nodes={} but artifacts were built for N={n}; re-run `make artifacts`",
+            cfg.env.n_nodes
+        );
+        anyhow::ensure!(
+            cfg.env.obs_dim() == manifest.net.obs_dim,
+            "config obs_dim={} but artifacts have {}",
+            cfg.env.obs_dim(),
+            manifest.net.obs_dim
+        );
+        let mut trainer = Trainer {
+            rt,
+            manifest,
+            cfg,
+            store,
+            policy,
+            critic_exe,
+            train_exe,
+            mask,
+            sim,
+            buffer: ReplayBuffer::new(),
+            rng,
+            actor_dev: Vec::new(),
+            critic_dev: Vec::new(),
+        };
+        trainer.refresh_device_params()?;
+        Ok(trainer)
+    }
+
+    /// Re-upload the current parameters as device-resident buffers.
+    /// Goes through host vectors: uploading literals that came out of
+    /// `decompose_tuple` via `buffer_from_host_literal` segfaults in the
+    /// C++ layer (missing layout), while raw host data is always safe.
+    fn refresh_device_params(&mut self) -> Result<()> {
+        let n_actor = self.store.n_actor_leaves;
+        let mut actor = Vec::with_capacity(n_actor);
+        let mut critic = Vec::with_capacity(self.store.leaves.len() - n_actor);
+        for (leaf, lit) in self.store.leaves.iter().zip(self.store.params.iter()) {
+            let host = to_vec_f32(lit)?;
+            let buf = self.rt.buffer_f32(&host, &leaf.shape)?;
+            if actor.len() < n_actor {
+                actor.push(buf);
+            } else {
+                critic.push(buf);
+            }
+        }
+        self.actor_dev = actor;
+        self.critic_dev = critic;
+        Ok(())
+    }
+
+    /// Run the full training loop. `progress` is called once per episode
+    /// with (episode index, episode shared reward).
+    pub fn train(
+        &mut self,
+        mut progress: impl FnMut(usize, f64),
+    ) -> Result<TrainOutcome> {
+        let t0 = Instant::now();
+        let mut episode_rewards = Vec::with_capacity(self.cfg.rl.episodes);
+        let mut episode_metrics = Vec::with_capacity(self.cfg.rl.episodes);
+        let mut updates = Vec::new();
+
+        for ep in 0..self.cfg.rl.episodes {
+            let (transitions, metrics) = self.rollout(ep as u64)?;
+            for t in transitions {
+                self.buffer.push(t);
+            }
+            episode_rewards.push(metrics.total_reward);
+            progress(ep, metrics.total_reward);
+            episode_metrics.push(metrics);
+
+            if (ep + 1) % self.cfg.rl.update_every == 0 {
+                // linear lr anneal to 10% over the run (stabilizes the tail)
+                let progress = (ep + 1) as f64 / self.cfg.rl.episodes as f64;
+                let lr = self.cfg.rl.lr * (1.0 - 0.9 * progress);
+                let m = self.update_phase(ep, lr)?;
+                updates.push(m);
+                self.buffer.clear();
+            }
+        }
+
+        Ok(TrainOutcome {
+            episode_rewards,
+            episode_metrics,
+            updates,
+            train_secs: t0.elapsed().as_secs_f64(),
+            params_blob: self.store.to_blob()?,
+        })
+    }
+
+    /// Collect one episode of transitions (Algorithm 1 lines 4–13).
+    fn rollout(&mut self, episode: u64) -> Result<(Vec<Transition>, EpisodeMetrics)> {
+        let n = self.policy.n_agents;
+        let t_len = self.cfg.env.episode_len;
+        let scale = self.cfg.rl.reward_scale;
+        self.sim.reset(self.cfg.rl.seed.wrapping_mul(0x10001).wrapping_add(episode));
+
+        let mut obs_seq: Vec<Vec<f32>> = Vec::with_capacity(t_len + 1);
+        let mut actions_seq: Vec<Vec<i32>> = Vec::with_capacity(t_len);
+        let mut logp_seq: Vec<Vec<f32>> = Vec::with_capacity(t_len);
+        let mut rewards: Vec<Vec<f64>> = Vec::with_capacity(t_len);
+        let mut metrics = EpisodeMetrics::new(n);
+
+        let mut obs = self.sim.observations_flat();
+        for _ in 0..t_len {
+            let (actions, joint_logp) =
+                self.policy.act_with(&self.actor_dev, &obs, &mut self.rng, false)?;
+            let out = self.sim.step(&actions);
+            metrics.absorb(&out);
+
+            let r_row: Vec<f64> = if self.cfg.rl.shared_reward {
+                vec![out.shared_reward * scale; n]
+            } else {
+                out.node_rewards.iter().map(|r| r * scale).collect()
+            };
+            obs_seq.push(obs);
+            actions_seq.push(
+                actions
+                    .iter()
+                    .flat_map(|a| {
+                        [a.edge as i32, a.model as i32, a.res as i32]
+                    })
+                    .collect(),
+            );
+            logp_seq.push(joint_logp);
+            rewards.push(r_row);
+            obs = self.sim.observations_flat();
+        }
+        obs_seq.push(obs); // bootstrap observation
+
+        // critic values for all T+1 states
+        let values = self.values(&obs_seq)?;
+        let adv = gae(&rewards, &values, self.cfg.rl.gamma, self.cfg.rl.gae_lambda);
+        let rtg = reward_to_go(&rewards, &values[t_len], self.cfg.rl.gamma);
+
+        let mut transitions = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            transitions.push(Transition {
+                obs: obs_seq[t].clone(),
+                actions: actions_seq[t].clone(),
+                logp: logp_seq[t].clone(),
+                adv: adv[t].iter().map(|&x| x as f32).collect(),
+                ret: rtg[t].iter().map(|&x| x as f32).collect(),
+                val: values[t].iter().map(|&x| x as f32).collect(),
+            });
+        }
+        Ok((transitions, metrics))
+    }
+
+    /// Critic forward over a sequence of global states, chunked to the
+    /// critic_batch the artifact was compiled for.
+    fn values(&self, obs_seq: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+        let n = self.policy.n_agents;
+        let d = self.policy.obs_dim;
+        let bc = self.manifest.net.critic_batch;
+
+        let mut out = Vec::with_capacity(obs_seq.len());
+        let mut idx = 0;
+        while idx < obs_seq.len() {
+            let take = (obs_seq.len() - idx).min(bc);
+            let mut flat = Vec::with_capacity(bc * n * d);
+            for row in &obs_seq[idx..idx + take] {
+                flat.extend_from_slice(row);
+            }
+            flat.resize(bc * n * d, 0.0); // pad; padded rows are discarded
+            let obs_buf = self.rt.buffer_f32(&flat, &[bc, n, d])?;
+            let mut inputs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.critic_dev.len() + 1);
+            inputs.extend(self.critic_dev.iter());
+            inputs.push(&obs_buf);
+            let outs = self.critic_exe.run_b(&inputs)?;
+            let vals = to_vec_f32(&outs[0])?; // [bc, n]
+            for b in 0..take {
+                out.push(
+                    (0..n).map(|i| vals[b * n + i] as f64).collect::<Vec<_>>(),
+                );
+            }
+            idx += take;
+        }
+        Ok(out)
+    }
+
+    /// One PPO update phase: J random minibatches through train_step
+    /// (Algorithm 1 lines 15–20).
+    fn update_phase(&mut self, episode: usize, lr: f64) -> Result<UpdateMetrics> {
+        let n = self.policy.n_agents;
+        let d = self.policy.obs_dim;
+        let b = self.manifest.net.minibatch;
+        let mut acc = [0.0f32; 8];
+        let j = self.cfg.rl.minibatches;
+        for _ in 0..j {
+            let mb = self.buffer.sample(b, &mut self.rng);
+            let obs = lit_f32(&mb.obs, &[b, n, d])?;
+            let actions = lit_i32(&mb.actions, &[b, n, 3])?;
+            let logp = lit_f32(&mb.logp, &[b, n])?;
+            let adv = lit_f32(&mb.adv, &[b, n])?;
+            let ret = lit_f32(&mb.ret, &[b, n])?;
+            let val = lit_f32(&mb.val, &[b, n])?;
+            let lr = lit_scalar_f32(lr as f32);
+
+            let p = self.store.leaves.len();
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 9);
+            inputs.extend(self.store.params.iter());
+            inputs.extend(self.store.adam_m.iter());
+            inputs.extend(self.store.adam_v.iter());
+            inputs.push(&self.store.step);
+            inputs.push(&lr);
+            inputs.push(&obs);
+            inputs.push(&actions);
+            inputs.push(&logp);
+            inputs.push(&adv);
+            inputs.push(&ret);
+            inputs.push(&val);
+            inputs.push(&self.mask);
+
+            let outs = self.train_exe.run(&inputs)?;
+            let metrics = self.store.adopt_train_outputs(outs)?;
+            for (a, m) in acc.iter_mut().zip(metrics.iter()) {
+                *a += m / j as f32;
+            }
+        }
+        // rollouts use device-resident params; refresh them post-update
+        self.refresh_device_params()?;
+        Ok(UpdateMetrics {
+            episode,
+            total: acc[0],
+            policy_loss: acc[1],
+            value_loss: acc[2],
+            entropy: acc[3],
+            approx_kl: acc[4],
+            clip_frac: acc[5],
+            grad_norm: acc[7],
+        })
+    }
+}
+
+fn build_mask_literal(n: usize, local_only: bool) -> Result<Literal> {
+    let mut mask = vec![0.0f32; n * n];
+    if local_only {
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    mask[i * n + j] = -1e9;
+                }
+            }
+        }
+    }
+    lit_f32(&mask, &[n, n])
+}

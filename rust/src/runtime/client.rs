@@ -1,0 +1,216 @@
+//! PJRT client + executable cache.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which we decompose into per-output literals.
+//!
+//! PJRT handles are not `Send`: the runtime lives on one thread (the
+//! serving runtime routes all tensor work through a dedicated inference
+//! thread; see `serving::server`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled HLO artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+    /// cumulative execution stats (perf telemetry)
+    pub calls: RefCell<u64>,
+    pub total_time: RefCell<Duration>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// Accepts owned literals or references (`&[Literal]` / `&[&Literal]`),
+    /// so hot loops can keep parameters resident and pass borrows.
+    ///
+    /// Inputs are explicitly staged to device buffers and executed through
+    /// `execute_b`: the crate's literal-input `execute` path leaks the
+    /// device copies of its arguments (~input size per call, measured via
+    /// examples/leak_probe.rs), while buffers drop cleanly.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l.borrow())
+                    .with_context(|| format!("staging input for {}", self.name))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        let outs = tuple
+            .to_tuple()
+            .with_context(|| format!("decomposing {} output tuple", self.name))?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_time.borrow_mut() += t0.elapsed();
+        Ok(outs)
+    }
+
+    /// Execute with device-resident buffer inputs (hot path: avoids the
+    /// host->device copy of parameters on every call).
+    pub fn run_b<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute_b::<L>(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        let outs = tuple
+            .to_tuple()
+            .with_context(|| format!("decomposing {} output tuple", self.name))?;
+        *self.calls.borrow_mut() += 1;
+        *self.total_time.borrow_mut() += t0.elapsed();
+        Ok(outs)
+    }
+
+    /// Mean execution latency so far (perf telemetry).
+    pub fn mean_latency(&self) -> Duration {
+        let calls = *self.calls.borrow();
+        if calls == 0 {
+            Duration::ZERO
+        } else {
+            *self.total_time.borrow() / calls as u32
+        }
+    }
+}
+
+/// PJRT CPU client + compile cache over the artifact directory.
+pub struct Runtime {
+    pub client: PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.into(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let handle = Rc::new(Executable {
+            name: file.to_string(),
+            exe,
+            client: self.client.clone(),
+            calls: RefCell::new(0),
+            total_time: RefCell::new(Duration::ZERO),
+        });
+        self.cache.borrow_mut().insert(file.to_string(), handle.clone());
+        Ok(handle)
+    }
+
+    /// Upload an f32 tensor to the device (for resident parameters).
+    pub fn buffer_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload a literal to the device.
+    ///
+    /// WARNING: only safe for literals created host-side (`lit_f32` etc.).
+    /// Literals obtained from `decompose_tuple` of an execution result can
+    /// segfault the C++ layer here (missing layout) — round-trip those
+    /// through `to_vec_f32` + [`Runtime::buffer_f32`] instead.
+    pub fn buffer_from_literal(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Compile-cache statistics: (artifact, calls, mean latency).
+    pub fn exec_stats(&self) -> Vec<(String, u64, Duration)> {
+        self.cache
+            .borrow()
+            .values()
+            .map(|e| (e.name.clone(), *e.calls.borrow(), e.mean_latency()))
+            .collect()
+    }
+}
+
+// ---- literal helpers -------------------------------------------------------
+
+/// f32 literal with shape (row-major).
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with shape (row-major).
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal out as Vec<f32>.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn i32_literal() {
+        let l = lit_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+}

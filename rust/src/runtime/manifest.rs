@@ -1,0 +1,239 @@
+//! `artifacts/manifest.json` — the shape/order contract between the AOT
+//! exporter and this runtime. Every tensor that crosses the Rust <-> HLO
+//! boundary is described here; the Rust side never hard-codes a shape.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter leaf (name like "actor/w1", row-major shape).
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Network dimensions (mirror of python/compile/config.py NetConfig).
+#[derive(Debug, Clone)]
+pub struct NetDims {
+    pub n_agents: usize,
+    pub obs_dim: usize,
+    pub hist_len: usize,
+    pub n_models: usize,
+    pub n_res: usize,
+    pub hidden: usize,
+    pub embed: usize,
+    pub heads: usize,
+    pub minibatch: usize,
+    pub critic_batch: usize,
+}
+
+/// Artifacts + parameter layout for one critic variant.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub params: Vec<LeafSpec>,
+    pub n_elems: usize,
+    pub params_init: String,
+    pub critic_fwd: String,
+    pub train_step: String,
+    pub metrics: Vec<String>,
+}
+
+/// One detector-zoo artifact (model size x resolution).
+#[derive(Debug, Clone)]
+pub struct ZooEntry {
+    pub model: usize,
+    pub model_name: String,
+    pub res: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub n_scores: usize,
+}
+
+/// One Pallas-resize preprocessing artifact.
+#[derive(Debug, Clone)]
+pub struct PreprocEntry {
+    pub res: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub net: NetDims,
+    pub res_order: Vec<usize>,
+    pub model_names: Vec<String>,
+    pub actor_fwd: String,
+    pub actor_params: Vec<LeafSpec>,
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub zoo: Vec<ZooEntry>,
+    pub preprocess: Vec<PreprocEntry>,
+}
+
+fn leaf_list(v: &Json) -> Result<Vec<LeafSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(LeafSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let net = j.get("net")?;
+        let dims = NetDims {
+            n_agents: net.get("n_agents")?.as_usize()?,
+            obs_dim: net.get("obs_dim")?.as_usize()?,
+            hist_len: net.get("hist_len")?.as_usize()?,
+            n_models: net.get("n_models")?.as_usize()?,
+            n_res: net.get("n_res")?.as_usize()?,
+            hidden: net.get("hidden")?.as_usize()?,
+            embed: net.get("embed")?.as_usize()?,
+            heads: net.get("heads")?.as_usize()?,
+            minibatch: net.get("minibatch")?.as_usize()?,
+            critic_batch: net.get("critic_batch")?.as_usize()?,
+        };
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            let params = leaf_list(v.get("params")?)?;
+            let n_elems = v.get("n_elems")?.as_usize()?;
+            let declared: usize = params.iter().map(|l| l.numel()).sum();
+            anyhow::ensure!(
+                declared == n_elems,
+                "variant {name}: leaf shapes sum to {declared}, manifest says {n_elems}"
+            );
+            variants.insert(
+                name.clone(),
+                VariantSpec {
+                    params,
+                    n_elems,
+                    params_init: v.get("params_init")?.as_str()?.to_string(),
+                    critic_fwd: v.get("critic_fwd")?.as_str()?.to_string(),
+                    train_step: v.get("train_step")?.as_str()?.to_string(),
+                    metrics: v
+                        .get("train_step_metrics")?
+                        .as_arr()?
+                        .iter()
+                        .map(|m| Ok(m.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let zoo = j
+            .get("zoo")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ZooEntry {
+                    model: e.get("model")?.as_usize()?,
+                    model_name: e.get("model_name")?.as_str()?.to_string(),
+                    res: e.get("res")?.as_usize()?,
+                    file: e.get("file")?.as_str()?.to_string(),
+                    input_shape: e.get("input_shape")?.usize_vec()?,
+                    n_scores: e.get("n_scores")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let preprocess = j
+            .get("preprocess")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(PreprocEntry {
+                    res: e.get("res")?.as_usize()?,
+                    file: e.get("file")?.as_str()?.to_string(),
+                    input_shape: e.get("input_shape")?.usize_vec()?,
+                    output_shape: e.get("output_shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir,
+            net: dims,
+            res_order: j.get("res_order")?.usize_vec()?,
+            model_names: j
+                .get("model_names")?
+                .as_arr()?
+                .iter()
+                .map(|m| Ok(m.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            actor_fwd: j.get("actor_fwd")?.as_str()?.to_string(),
+            actor_params: leaf_list(j.get("actor_params")?)?,
+            variants,
+            zoo,
+            preprocess,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("unknown critic variant {name:?}"))
+    }
+
+    /// Load a raw f32 parameter blob (params_init / checkpoints).
+    pub fn read_param_blob(&self, file: &str, expect_elems: usize) -> Result<Vec<f32>> {
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == expect_elems * 4,
+            "{}: expected {} f32 elems, file has {} bytes",
+            path.display(),
+            expect_elems,
+            bytes.len()
+        );
+        let mut out = Vec::with_capacity(expect_elems);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_numel() {
+        let l = LeafSpec { name: "x".into(), shape: vec![2, 3, 4] };
+        assert_eq!(l.numel(), 24);
+    }
+
+    #[test]
+    fn missing_dir_gives_helpful_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs at request/training time; the `xla` crate's PJRT CPU
+//! client is the only execution engine.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Executable, Runtime};
+pub use manifest::{LeafSpec, Manifest, NetDims, PreprocEntry, VariantSpec, ZooEntry};

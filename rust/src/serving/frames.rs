@@ -1,0 +1,98 @@
+//! Synthetic camera frames — stand-in for the road-traffic videos of the
+//! paper's testbed (DESIGN.md §2). Deterministic moving-blob scenes at the
+//! native (1080P-scaled) resolution; enough structure that detector scores
+//! vary frame to frame, with none of the licensing/size baggage.
+
+use crate::util::rng::Rng;
+
+pub struct FrameSource {
+    pub height: usize,
+    pub width: usize,
+    rng: Rng,
+    /// (x, y, vx, vy, radius, intensity) per blob
+    blobs: Vec<(f64, f64, f64, f64, f64, f64)>,
+    t: u64,
+}
+
+impl FrameSource {
+    pub fn new(height: usize, width: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let blobs = (0..6)
+            .map(|_| {
+                (
+                    rng.range_f64(0.0, width as f64),
+                    rng.range_f64(0.0, height as f64),
+                    rng.range_f64(-3.0, 3.0),
+                    rng.range_f64(-2.0, 2.0),
+                    rng.range_f64(4.0, 14.0),
+                    rng.range_f64(0.4, 1.0),
+                )
+            })
+            .collect();
+        FrameSource { height, width, rng, blobs, t: 0 }
+    }
+
+    /// Produce the next frame as row-major [H, W, 3] f32 in [0, 1].
+    pub fn next_frame(&mut self) -> Vec<f32> {
+        let (h, w) = (self.height, self.width);
+        let mut img = vec![0.08f32; h * w * 3];
+        // advance blobs (toroidal wrap)
+        for b in &mut self.blobs {
+            b.0 = (b.0 + b.2).rem_euclid(w as f64);
+            b.1 = (b.1 + b.3).rem_euclid(h as f64);
+        }
+        for (bi, &(bx, by, _, _, r, inten)) in self.blobs.iter().enumerate() {
+            let r2 = r * r;
+            let x0 = (bx - r).max(0.0) as usize;
+            let x1 = ((bx + r) as usize + 1).min(w);
+            let y0 = (by - r).max(0.0) as usize;
+            let y1 = ((by + r) as usize + 1).min(h);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    let d2 = (x as f64 - bx).powi(2) + (y as f64 - by).powi(2);
+                    if d2 < r2 {
+                        let fall = (1.0 - d2 / r2) * inten;
+                        let px = (y * w + x) * 3;
+                        img[px + bi % 3] += fall as f32;
+                    }
+                }
+            }
+        }
+        // light sensor noise
+        for v in img.iter_mut() {
+            *v = (*v + 0.02 * self.rng.f32()).clamp(0.0, 1.0);
+        }
+        self.t += 1;
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_shape_and_range() {
+        let mut fs = FrameSource::new(136, 240, 0);
+        let f = fs.next_frame();
+        assert_eq!(f.len(), 136 * 240 * 3);
+        assert!(f.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn frames_change_over_time() {
+        let mut fs = FrameSource::new(64, 64, 1);
+        let a = fs.next_frame();
+        let b = fs.next_frame();
+        let diff: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>();
+        assert!(diff > 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = FrameSource::new(32, 32, 5);
+        let mut b = FrameSource::new(32, 32, 5);
+        assert_eq!(a.next_frame(), b.next_frame());
+    }
+}

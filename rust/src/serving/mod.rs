@@ -1,0 +1,12 @@
+//! Online serving runtime — the end-to-end request path: synthetic camera
+//! frames, real Pallas-resize preprocessing and detector-zoo inference
+//! executed through PJRT, policy-driven routing over the virtual-time edge
+//! cluster, and latency/throughput reporting.
+
+pub mod frames;
+pub mod server;
+pub mod zoo;
+
+pub use frames::FrameSource;
+pub use server::{run_serving, ServingOptions, ServingReport};
+pub use zoo::ModelZoo;

@@ -1,0 +1,252 @@
+//! The online serving loop: policy-routed requests over the virtual-time
+//! edge cluster with *real* PJRT compute (Pallas preprocessing + detector
+//! zoo) supplying the service times. Produces the latency/throughput
+//! report the serving benchmark and the end-to-end example print.
+
+use anyhow::Result;
+
+use crate::coordinator::cluster::{ComputeHook, EdgeCluster, ServingPolicy};
+use crate::env::bandwidth::BandwidthConfig;
+use crate::env::profiles::Profiles;
+use crate::env::workload::WorkloadConfig;
+use crate::env::Action;
+use crate::rl::policy::ActorPolicy;
+use crate::runtime::{Manifest, Runtime};
+use crate::serving::frames::FrameSource;
+use crate::serving::zoo::ModelZoo;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Serving-run options.
+#[derive(Debug, Clone)]
+pub struct ServingOptions {
+    pub n_nodes: usize,
+    pub duration_virtual_secs: f64,
+    pub drop_deadline: f64,
+    pub seed: u64,
+    /// Use the trained policy (blob) or the shortest-queue fallback.
+    pub greedy: bool,
+}
+
+impl Default for ServingOptions {
+    fn default() -> Self {
+        ServingOptions {
+            n_nodes: 4,
+            duration_virtual_secs: 30.0,
+            drop_deadline: 1.5,
+            seed: 0,
+            greedy: true,
+        }
+    }
+}
+
+/// End-of-run report.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub total: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub dispatched: usize,
+    pub virtual_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    pub mean_accuracy: f64,
+    /// Mean measured PJRT wall-clock per preprocess / detect call.
+    pub mean_preproc_ms: f64,
+    pub mean_detect_ms: f64,
+}
+
+impl ServingReport {
+    pub fn print(&self) {
+        println!("serving report:");
+        println!("  requests        {}", self.total);
+        println!("  completed       {}", self.completed);
+        println!(
+            "  dropped         {} ({:.1}%)",
+            self.dropped,
+            100.0 * self.dropped as f64 / self.total.max(1) as f64
+        );
+        println!("  dispatched      {}", self.dispatched);
+        println!("  throughput      {:.1} req/s (virtual)", self.throughput_rps);
+        println!(
+            "  latency         mean {:.0} ms, p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms",
+            self.mean_latency * 1e3,
+            self.p50_latency * 1e3,
+            self.p95_latency * 1e3,
+            self.p99_latency * 1e3
+        );
+        println!("  mean accuracy   {:.4}", self.mean_accuracy);
+        println!(
+            "  real exec       preprocess {:.2} ms, detect {:.2} ms (PJRT wall-clock)",
+            self.mean_preproc_ms, self.mean_detect_ms
+        );
+    }
+}
+
+/// Policy adapter: trained actor over cluster observations, with per-event
+/// caching so all nodes of one decision instant share one forward pass.
+struct ActorServingPolicy {
+    policy: ActorPolicy,
+    rng: Rng,
+    greedy: bool,
+    cache_t: f64,
+    cache: Vec<Action>,
+}
+
+impl ServingPolicy for ActorServingPolicy {
+    fn decide(&mut self, cluster: &EdgeCluster, node: usize) -> Result<Action> {
+        if cluster.now() != self.cache_t || self.cache.is_empty() {
+            let mut obs = Vec::new();
+            for i in 0..cluster.n_nodes {
+                obs.extend(cluster.observation(i));
+            }
+            let (actions, _) = self.policy.act(&obs, &mut self.rng, self.greedy)?;
+            self.cache = actions;
+            self.cache_t = cluster.now();
+        }
+        Ok(self.cache[node])
+    }
+}
+
+/// Shortest-queue fallback policy (no trained blob supplied).
+struct ShortestQueuePolicy;
+
+impl ServingPolicy for ShortestQueuePolicy {
+    fn decide(&mut self, cluster: &EdgeCluster, _node: usize) -> Result<Action> {
+        let mut best = 0;
+        for j in 1..cluster.n_nodes {
+            if cluster.queue_len(j) < cluster.queue_len(best) {
+                best = j;
+            }
+        }
+        Ok(Action::new(best, 1, 2))
+    }
+}
+
+/// Real-compute hook: every preprocess/detect call generates a frame and
+/// executes the actual HLO artifacts, feeding measured durations into the
+/// virtual clock.
+struct RealCompute<'a> {
+    zoo: &'a ModelZoo,
+    frames: FrameSource,
+    preproc_calls: usize,
+    preproc_secs: f64,
+    detect_calls: usize,
+    detect_secs: f64,
+    /// downsized frame cache per resolution index (reused across detects)
+    last_frames: Vec<Option<Vec<f32>>>,
+}
+
+impl<'a> RealCompute<'a> {
+    fn new(zoo: &'a ModelZoo, seed: u64) -> Self {
+        let h = zoo.native_shape[0];
+        let w = zoo.native_shape[1];
+        RealCompute {
+            zoo,
+            frames: FrameSource::new(h, w, seed),
+            preproc_calls: 0,
+            preproc_secs: 0.0,
+            detect_calls: 0,
+            detect_secs: 0.0,
+            last_frames: vec![None; 8],
+        }
+    }
+}
+
+impl ComputeHook for RealCompute<'_> {
+    fn preprocess(&mut self, _node: usize, res: usize) -> Result<f64> {
+        let frame = self.frames.next_frame();
+        let (down, secs) = self.zoo.preprocess(res, &frame)?;
+        self.last_frames[res] = Some(down);
+        self.preproc_calls += 1;
+        self.preproc_secs += secs;
+        Ok(secs)
+    }
+
+    fn detect(&mut self, _node: usize, model: usize, res: usize) -> Result<f64> {
+        let frame = match &self.last_frames[res] {
+            Some(f) => f.clone(),
+            None => {
+                let native = self.frames.next_frame();
+                let (down, _) = self.zoo.preprocess(res, &native)?;
+                down
+            }
+        };
+        let (_scores, secs) = self.zoo.detect(model, res, &frame)?;
+        self.detect_calls += 1;
+        self.detect_secs += secs;
+        Ok(secs)
+    }
+}
+
+/// Run the serving loop end to end. `policy_blob` is an actor-prefix
+/// checkpoint (None = shortest-queue fallback).
+pub fn run_serving(
+    rt: &Runtime,
+    manifest: &Manifest,
+    policy_blob: Option<&[f32]>,
+    opts: &ServingOptions,
+) -> Result<ServingReport> {
+    let zoo = ModelZoo::load(rt, manifest)?;
+    let mut cluster = EdgeCluster::new(
+        opts.n_nodes,
+        WorkloadConfig::default(),
+        BandwidthConfig { n_nodes: opts.n_nodes, ..BandwidthConfig::default() },
+        Profiles::default(),
+        0.2,
+        opts.drop_deadline,
+        manifest.net.hist_len,
+        opts.seed,
+    );
+    let mut compute = RealCompute::new(&zoo, opts.seed);
+
+    let mut policy: Box<dyn ServingPolicy> = match policy_blob {
+        Some(blob) => Box::new(ActorServingPolicy {
+            policy: ActorPolicy::with_params(rt, manifest, blob, false)?,
+            rng: Rng::new(opts.seed ^ 0xACE),
+            greedy: opts.greedy,
+            cache_t: -1.0,
+            cache: Vec::new(),
+        }),
+        None => Box::new(ShortestQueuePolicy),
+    };
+
+    cluster.run(policy.as_mut(), &mut compute, opts.duration_virtual_secs)?;
+
+    let served = &cluster.served;
+    let total = served.len();
+    let completed: Vec<_> = served.iter().filter(|s| !s.dropped).collect();
+    let latencies: Vec<f64> = completed.iter().map(|s| s.latency()).collect();
+    let dropped = total - completed.len();
+    Ok(ServingReport {
+        total,
+        completed: completed.len(),
+        dropped,
+        dispatched: served.iter().filter(|s| s.origin != s.target).count(),
+        virtual_secs: opts.duration_virtual_secs,
+        throughput_rps: completed.len() as f64 / opts.duration_virtual_secs,
+        mean_latency: crate::util::stats::mean(&latencies),
+        p50_latency: percentile(&latencies, 50.0),
+        p95_latency: percentile(&latencies, 95.0),
+        p99_latency: percentile(&latencies, 99.0),
+        mean_accuracy: if completed.is_empty() {
+            0.0
+        } else {
+            completed.iter().map(|s| s.accuracy).sum::<f64>()
+                / completed.len() as f64
+        },
+        mean_preproc_ms: if compute.preproc_calls == 0 {
+            0.0
+        } else {
+            1e3 * compute.preproc_secs / compute.preproc_calls as f64
+        },
+        mean_detect_ms: if compute.detect_calls == 0 {
+            0.0
+        } else {
+            1e3 * compute.detect_secs / compute.detect_calls as f64
+        },
+    })
+}

@@ -1,0 +1,103 @@
+//! Detector model zoo — loads the `detector_s{0..3}_{res}` and
+//! `preprocess_{res}` HLO artifacts and executes them through PJRT. This is
+//! the *real* compute on the serving request path: the preprocessing step
+//! runs the Pallas separable-bilinear kernel, the detectors run the conv
+//! stacks, and the measured wall-clock durations feed the virtual-time
+//! cluster as GPU/CPU service times.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{lit_f32, to_vec_f32, Executable, Manifest, Runtime};
+
+pub struct ModelZoo {
+    /// (model, res) -> detector executable + input shape
+    detectors: HashMap<(usize, usize), (Rc<Executable>, Vec<usize>)>,
+    /// res -> preprocess executable (1080-native input)
+    preproc: HashMap<usize, Rc<Executable>>,
+    /// res order from the manifest: index (action v) -> pixel resolution
+    pub res_order: Vec<usize>,
+    pub native_shape: Vec<usize>,
+    pub n_scores: usize,
+}
+
+impl ModelZoo {
+    pub fn load(rt: &Runtime, manifest: &Manifest) -> Result<ModelZoo> {
+        anyhow::ensure!(
+            !manifest.zoo.is_empty(),
+            "manifest has no detector zoo — rebuild artifacts without --skip-zoo"
+        );
+        let mut detectors = HashMap::new();
+        let mut n_scores = 0;
+        for entry in &manifest.zoo {
+            let exe = rt.load(&entry.file).with_context(|| {
+                format!("loading detector {}", entry.file)
+            })?;
+            n_scores = entry.n_scores;
+            detectors
+                .insert((entry.model, entry.res), (exe, entry.input_shape.clone()));
+        }
+        let mut preproc = HashMap::new();
+        let mut native_shape = Vec::new();
+        for entry in &manifest.preprocess {
+            native_shape = entry.input_shape.clone();
+            preproc.insert(entry.res, rt.load(&entry.file)?);
+        }
+        Ok(ModelZoo {
+            detectors,
+            preproc,
+            res_order: manifest.res_order.clone(),
+            native_shape,
+            n_scores,
+        })
+    }
+
+    /// Pixel resolution for action index v.
+    pub fn res_of_index(&self, v: usize) -> usize {
+        self.res_order[v]
+    }
+
+    /// Run Pallas-resize preprocessing on a native frame. Returns the
+    /// downsized frame and the measured wall-clock seconds. Resolution
+    /// index 0 (native 1080P) is a no-op copy.
+    pub fn preprocess(&self, v: usize, frame: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let res = self.res_of_index(v);
+        let Some(exe) = self.preproc.get(&res) else {
+            return Ok((frame.to_vec(), 0.0)); // native resolution
+        };
+        let t0 = Instant::now();
+        let lit = lit_f32(frame, &self.native_shape)?;
+        let outs = exe.run(&[lit])?;
+        let out = to_vec_f32(&outs[0])?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Run a detector on a (already downsized) frame. Returns the score
+    /// vector and the measured wall-clock seconds.
+    pub fn detect(
+        &self,
+        model: usize,
+        v: usize,
+        frame: &[f32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let res = self.res_of_index(v);
+        let (exe, shape) = self
+            .detectors
+            .get(&(model, res))
+            .with_context(|| format!("no detector for model {model} res {res}"))?;
+        anyhow::ensure!(
+            frame.len() == shape.iter().product::<usize>(),
+            "frame has {} elems, detector {model}@{res} wants {:?}",
+            frame.len(),
+            shape
+        );
+        let t0 = Instant::now();
+        let lit = lit_f32(frame, shape)?;
+        let outs = exe.run(&[lit])?;
+        let scores = to_vec_f32(&outs[0])?;
+        Ok((scores, t0.elapsed().as_secs_f64()))
+    }
+}

@@ -1,0 +1,6 @@
+//! Telemetry: result persistence (CSV + JSON) and the paper-vs-measured
+//! report generator.
+
+pub mod report;
+
+pub use report::{method_row, write_method_csv, MethodSummary};

@@ -1,0 +1,91 @@
+//! Result rows shared by the experiment harness: one summary per
+//! (method, omega) — exactly the series the paper's Figs. 5–8 plot.
+
+use anyhow::Result;
+
+use crate::env::metrics::EpisodeMetrics;
+use crate::env::profiles::{MODEL_NAMES, N_MODELS, N_RES, RES_NAMES};
+use crate::util::csv::CsvWriter;
+
+/// One method's aggregate at one penalty weight.
+#[derive(Debug, Clone)]
+pub struct MethodSummary {
+    pub method: String,
+    pub omega: f64,
+    pub mean_episode_reward: f64,
+    pub avg_accuracy: f64,
+    pub avg_delay: f64,
+    pub dispatch_pct: f64,
+    pub drop_pct: f64,
+    pub model_dist: [f64; N_MODELS],
+    pub res_dist: [f64; N_RES],
+}
+
+pub fn method_row(
+    method: &str,
+    omega: f64,
+    metrics: &EpisodeMetrics,
+    mean_episode_reward: f64,
+) -> MethodSummary {
+    MethodSummary {
+        method: method.to_string(),
+        omega,
+        mean_episode_reward,
+        avg_accuracy: metrics.avg_accuracy(),
+        avg_delay: metrics.avg_delay(),
+        dispatch_pct: metrics.dispatch_pct(),
+        drop_pct: metrics.drop_pct(),
+        model_dist: metrics.model_dist(),
+        res_dist: metrics.res_dist(),
+    }
+}
+
+/// Write rows to CSV with the standard column layout.
+pub fn write_method_csv(path: &str, rows: &[MethodSummary]) -> Result<()> {
+    let mut header = vec![
+        "method".to_string(),
+        "omega".into(),
+        "mean_episode_reward".into(),
+        "avg_accuracy".into(),
+        "avg_delay_s".into(),
+        "dispatch_pct".into(),
+        "drop_pct".into(),
+    ];
+    header.extend(MODEL_NAMES.iter().map(|m| format!("model_{m}")));
+    header.extend(RES_NAMES.iter().map(|r| format!("res_{r}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut w = CsvWriter::create(path, &header_refs)?;
+    for r in rows {
+        let mut cells = vec![
+            r.method.clone(),
+            format!("{}", r.omega),
+            format!("{:.4}", r.mean_episode_reward),
+            format!("{:.4}", r.avg_accuracy),
+            format!("{:.4}", r.avg_delay),
+            format!("{:.4}", r.dispatch_pct),
+            format!("{:.4}", r.drop_pct),
+        ];
+        cells.extend(r.model_dist.iter().map(|v| format!("{v:.4}")));
+        cells.extend(r.res_dist.iter().map(|v| format!("{v:.4}")));
+        w.row(&cells)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_has_all_columns() {
+        let m = EpisodeMetrics::new(4);
+        let row = method_row("ours", 5.0, &m, 1.25);
+        let dir = std::env::temp_dir().join("ev_report_test");
+        let path = dir.join("rows.csv").to_string_lossy().to_string();
+        write_method_csv(&path, &[row]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert_eq!(header.split(',').count(), 7 + N_MODELS + N_RES);
+        assert!(text.contains("ours,5,1.25"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Micro-bench harness (substrate — criterion is not in the offline vendor
+//! set): warmup + timed iterations with mean/p50/p95 reporting, and a
+//! throughput variant. Used by every `rust/benches/*.rs` target.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<40} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        );
+    }
+}
+
+/// Run `f` for `iters` timed iterations (after `warmup` untimed ones).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
+        p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+    };
+    res.print();
+    res
+}
+
+/// Report an ops/sec style metric computed by the caller.
+pub fn report_rate(name: &str, ops: f64, elapsed: Duration) {
+    println!(
+        "{:<40} {:>12.1} ops/s  ({} ops in {:?})",
+        name,
+        ops / elapsed.as_secs_f64(),
+        ops as u64,
+        elapsed
+    );
+}

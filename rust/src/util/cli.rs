@@ -1,0 +1,123 @@
+//! Minimal CLI argument parser (substrate — no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `true` marks bare flags.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    let is_val = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_val {
+                        out.flags
+                            .insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(stripped.to_string(), "true".into());
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--omega", "5", "--episodes=100", "--fast"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.f64_or("omega", 1.0).unwrap(), 5.0);
+        assert_eq!(a.usize_or("episodes", 1).unwrap(), 100);
+        assert!(a.bool("fast"));
+        assert!(!a.bool("slow"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("variant", "full"), "full");
+        assert_eq!(a.usize_or("n", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--omega", "abc"]);
+        assert!(a.f64_or("omega", 1.0).is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! Tiny CSV writer for experiment outputs (`results/*.csv`). Each
+//! experiment regenerates the rows/series of one paper figure or table.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+pub struct CsvWriter {
+    file: fs::File,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, writing the header row first.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, label: &str, values: &[f64]) -> Result<()> {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.6}")));
+        self.row(&cells)
+    }
+}
+
+/// Format a float cell compactly.
+pub fn f(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let dir = std::env::temp_dir().join("ev_csv_test");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        w.row_mixed("m", &[0.5]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n1,2\n"));
+        assert!(text.contains("m,0.5"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates (the offline build has no serde / rand /
+//! clap / criterion, so we carry our own): JSON, PRNG, statistics, CSV and
+//! a mini CLI parser.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;

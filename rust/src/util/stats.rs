@@ -1,0 +1,125 @@
+//! Summary statistics used by telemetry, benches and the report generator.
+
+/// Running mean/min/max/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Acc {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl Acc {
+    pub fn new() -> Self {
+        Acc { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile of a sample (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Simple moving average used to smooth training curves in reports.
+pub fn moving_avg(xs: &[f64], window: usize) -> Vec<f64> {
+    let w = window.max(1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for i in 0..xs.len() {
+        sum += xs[i];
+        if i >= w {
+            sum -= xs[i - w];
+        }
+        out.push(sum / (i.min(w - 1) + 1) as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut a = Acc::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        assert!((a.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 10.0);
+        let naive_var = xs
+            .iter()
+            .map(|x| (x - 4.0) * (x - 4.0))
+            .sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((a.var() - naive_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn moving_avg_converges() {
+        let xs = vec![2.0; 50];
+        let ma = moving_avg(&xs, 10);
+        assert!((ma[49] - 2.0).abs() < 1e-12);
+        assert_eq!(ma.len(), xs.len());
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration tests over the real AOT artifacts: the full
+//! manifest -> PJRT -> actor/critic/train_step/zoo pipeline.
+//! These require `make artifacts` to have run (the Makefile test target
+//! guarantees it).
+
+use edgevision::config::Config;
+use edgevision::env::SimConfig;
+use edgevision::rl::eval::evaluate;
+use edgevision::rl::params::ParamStore;
+use edgevision::rl::policy::{ActorPolicy, PolicyController};
+use edgevision::rl::trainer::Trainer;
+use edgevision::runtime::{Manifest, Runtime};
+use edgevision::serving::{run_serving, FrameSource, ModelZoo, ServingOptions};
+use edgevision::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    assert_eq!(m.net.n_agents, 4);
+    assert_eq!(m.net.obs_dim, 12);
+    assert_eq!(m.variants.len(), 3);
+    for v in m.variants.values() {
+        let total: usize = v.params.iter().map(|l| l.numel()).sum();
+        assert_eq!(total, v.n_elems);
+    }
+    // actor params must be the leading leaves of every variant
+    for v in m.variants.values() {
+        for (a, b) in m.actor_params.iter().zip(v.params.iter()) {
+            assert_eq!(a.shape, b.shape, "{} vs {}", a.name, b.name);
+            assert!(b.name.starts_with("actor/"));
+        }
+    }
+}
+
+#[test]
+fn actor_fwd_produces_valid_distributions() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let spec = m.variant("full").unwrap();
+    let blob = m.read_param_blob(&spec.params_init, spec.n_elems).unwrap();
+    let policy = ActorPolicy::with_params(&rt, &m, &blob, false).unwrap();
+    let mut rng = Rng::new(0);
+    let obs = vec![0.1f32; m.net.n_agents * m.net.obs_dim];
+    let (actions, logp) = policy.act(&obs, &mut rng, false).unwrap();
+    assert_eq!(actions.len(), 4);
+    for a in &actions {
+        assert!(a.edge < 4 && a.model < 4 && a.res < 5);
+    }
+    for lp in logp {
+        assert!(lp <= 0.0 && lp.is_finite());
+    }
+}
+
+#[test]
+fn local_only_mask_prevents_dispatch() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let spec = m.variant("full").unwrap();
+    let blob = m.read_param_blob(&spec.params_init, spec.n_elems).unwrap();
+    let policy = ActorPolicy::with_params(&rt, &m, &blob, true).unwrap();
+    let mut rng = Rng::new(1);
+    let obs = vec![0.3f32; m.net.n_agents * m.net.obs_dim];
+    for _ in 0..20 {
+        let (actions, _) = policy.act(&obs, &mut rng, false).unwrap();
+        for (i, a) in actions.iter().enumerate() {
+            assert_eq!(a.edge, i, "local-only policy dispatched");
+        }
+    }
+}
+
+#[test]
+fn train_step_improves_reward_on_short_run() {
+    require_artifacts!();
+    let mut cfg = Config::default();
+    cfg.rl.episodes = 40;
+    cfg.rl.update_every = 4;
+    cfg.env.omega = 5.0;
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let mut trainer = Trainer::new(&rt, &m, cfg).unwrap();
+    let outcome = trainer.train(|_, _| {}).unwrap();
+    assert_eq!(outcome.episode_rewards.len(), 40);
+    assert_eq!(outcome.updates.len(), 10);
+    // losses and grads must be finite and the entropy positive
+    for u in &outcome.updates {
+        assert!(u.policy_loss.is_finite());
+        assert!(u.value_loss.is_finite());
+        assert!(u.entropy > 0.0);
+        assert!(u.grad_norm.is_finite());
+    }
+    // adopting outputs must keep the parameter count stable
+    assert_eq!(
+        outcome.params_blob.len(),
+        m.variant("full").unwrap().n_elems
+    );
+    assert!(outcome.params_blob.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn all_variants_train_one_update() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    for variant in ["full", "noattn", "local"] {
+        let mut cfg = Config::default();
+        cfg.rl.episodes = 4;
+        cfg.rl.update_every = 4;
+        cfg.rl.minibatches = 2;
+        cfg.rl.variant = variant.into();
+        let mut trainer = Trainer::new(&rt, &m, cfg).unwrap();
+        let outcome = trainer.train(|_, _| {}).unwrap();
+        assert_eq!(outcome.updates.len(), 1, "variant {variant}");
+        assert!(outcome.updates[0].total.is_finite(), "variant {variant}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_policy() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let spec = m.variant("full").unwrap();
+    let store = ParamStore::from_init(&m, "full").unwrap();
+    let dir = std::env::temp_dir().join("ev_ckpt_test");
+    let path = dir.join("p.bin");
+    store.save(&path).unwrap();
+    let loaded = ParamStore::load(&spec.params, &path).unwrap();
+    assert_eq!(store.to_blob().unwrap(), loaded.to_blob().unwrap());
+
+    // both blobs must drive the actor to identical greedy decisions
+    let b1 = store.to_blob().unwrap();
+    let p1 = ActorPolicy::with_params(&rt, &m, &b1, false).unwrap();
+    let p2 = ActorPolicy::with_params(&rt, &m, &loaded.to_blob().unwrap(), false).unwrap();
+    let obs = vec![0.05f32; m.net.n_agents * m.net.obs_dim];
+    let mut r1 = Rng::new(3);
+    let mut r2 = Rng::new(3);
+    let (a1, _) = p1.act(&obs, &mut r1, true).unwrap();
+    let (a2, _) = p2.act(&obs, &mut r2, true).unwrap();
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn trained_policy_evaluates_in_simulator() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let cfg = Config::default();
+    let spec = m.variant("full").unwrap();
+    let blob = m.read_param_blob(&spec.params_init, spec.n_elems).unwrap();
+    let policy = ActorPolicy::with_params(&rt, &m, &blob, false).unwrap();
+    let mut ctrl = PolicyController::new("t", policy, 0, false);
+    let res = evaluate(&mut ctrl, &SimConfig::from_env(&cfg.env), 2, 50, 0).unwrap();
+    assert_eq!(res.episode_rewards.len(), 2);
+    assert!(res.metrics.completed + res.metrics.dropped > 0);
+}
+
+#[test]
+fn zoo_detects_and_preprocesses() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    if m.zoo.is_empty() {
+        eprintln!("skipping: artifacts built with --skip-zoo");
+        return;
+    }
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let zoo = ModelZoo::load(&rt, &m).unwrap();
+    let mut frames = FrameSource::new(zoo.native_shape[0], zoo.native_shape[1], 0);
+    let frame = frames.next_frame();
+    // native path
+    let (native, _) = zoo.preprocess(0, &frame).unwrap();
+    assert_eq!(native.len(), frame.len());
+    // Pallas downsize to every resolution + detect with every model
+    for v in 1..5 {
+        let (down, _) = zoo.preprocess(v, &frame).unwrap();
+        assert!(down.len() < frame.len());
+        assert!(down.iter().all(|x| x.is_finite()));
+        for model in 0..4 {
+            let (scores, secs) = zoo.detect(model, v, &down).unwrap();
+            assert_eq!(scores.len(), zoo.n_scores);
+            assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+            assert!(secs >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn serving_end_to_end() {
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    if m.zoo.is_empty() {
+        return;
+    }
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let opts = ServingOptions {
+        n_nodes: 4,
+        duration_virtual_secs: 5.0,
+        drop_deadline: 1.5,
+        seed: 0,
+        greedy: true,
+    };
+    let report = run_serving(&rt, &m, None, &opts).unwrap();
+    assert!(report.total > 0);
+    assert!(report.completed > 0);
+    assert!(report.mean_latency > 0.0);
+    assert!(report.p99_latency >= report.p50_latency);
+    assert!(report.mean_detect_ms > 0.0, "no real compute measured");
+}

@@ -1,0 +1,279 @@
+//! Property-based tests (hand-rolled harness — proptest is not in the
+//! offline vendor set): randomized inputs over many seeds, asserting the
+//! coordinator/simulator invariants listed in DESIGN.md §6. On failure the
+//! seed is printed so the case can be replayed.
+
+use edgevision::config::EnvConfig;
+use edgevision::coordinator::{Batcher, Router, TransferScheduler};
+use edgevision::env::request::Outcome;
+use edgevision::env::{Action, SimConfig, Simulator};
+use edgevision::rl::gae::{gae, gae_reference, reward_to_go};
+use edgevision::util::json::Json;
+use edgevision::util::rng::Rng;
+
+/// Run `f` over `cases` random seeds, reporting the failing seed.
+fn forall(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xABCD);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_actions(rng: &mut Rng, n: usize) -> Vec<Action> {
+    (0..n)
+        .map(|_| Action::new(rng.below(n), rng.below(4), rng.below(5)))
+        .collect()
+}
+
+#[test]
+fn prop_request_conservation() {
+    // arrivals == finished + still-queued, under arbitrary action streams
+    forall(25, |rng| {
+        let mut env = EnvConfig::default();
+        env.omega = [0.2, 1.0, 5.0, 15.0][rng.below(4)];
+        let mut sim = Simulator::new(SimConfig::from_env(&env), rng.next_u64());
+        let steps = 50 + rng.below(100);
+        let mut arrived = 0;
+        let mut finished = 0;
+        for _ in 0..steps {
+            let out = sim.step(&random_actions(rng, 4));
+            arrived += out.arrivals.iter().sum::<usize>();
+            finished += out.finished.len();
+        }
+        assert_eq!(arrived, finished + sim.in_flight());
+    });
+}
+
+#[test]
+fn prop_delay_accounting() {
+    // completed => delay within threshold and at least preproc+infer;
+    // dropped => exactly the fixed penalty
+    forall(15, |rng| {
+        let env = EnvConfig::default();
+        let cfg = SimConfig::from_env(&env);
+        let mut sim = Simulator::new(cfg.clone(), rng.next_u64());
+        for _ in 0..120 {
+            let out = sim.step(&random_actions(rng, 4));
+            for f in &out.finished {
+                match f.outcome {
+                    Outcome::Completed => {
+                        assert!(f.delay <= cfg.drop_threshold + 1e-9);
+                        let min_d = cfg.profiles.preproc_delay[f.res]
+                            + cfg.profiles.infer_delay[f.model][f.res];
+                        assert!(f.delay >= min_d - 1e-9);
+                        assert!(
+                            (f.perf
+                                - (f.accuracy - cfg.omega * f.delay))
+                                .abs()
+                                < 1e-9
+                        );
+                    }
+                    Outcome::Dropped => {
+                        assert!(
+                            (f.perf + cfg.omega * cfg.drop_penalty).abs() < 1e-12
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_shared_reward_is_sum() {
+    forall(15, |rng| {
+        let env = EnvConfig::default();
+        let mut sim = Simulator::new(SimConfig::from_env(&env), rng.next_u64());
+        for _ in 0..60 {
+            let out = sim.step(&random_actions(rng, 4));
+            let sum: f64 = out.node_rewards.iter().sum();
+            assert!((out.shared_reward - sum).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_gae_matches_reference() {
+    forall(40, |rng| {
+        let t = 1 + rng.below(60);
+        let n = 1 + rng.below(6);
+        let rewards: Vec<Vec<f64>> = (0..t)
+            .map(|_| (0..n).map(|_| rng.normal() * 3.0).collect())
+            .collect();
+        let values: Vec<Vec<f64>> = (0..=t)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let gamma = rng.range_f64(0.0, 0.999);
+        let lambda = rng.range_f64(0.0, 1.0);
+        let fast = gae(&rewards, &values, gamma, lambda);
+        let slow = gae_reference(&rewards, &values, gamma, lambda);
+        for ti in 0..t {
+            for i in 0..n {
+                assert!(
+                    (fast[ti][i] - slow[ti][i]).abs() < 1e-7,
+                    "mismatch at t={ti} i={i}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reward_to_go_recursion() {
+    // R_t = r_t + gamma * R_{t+1}
+    forall(30, |rng| {
+        let t = 2 + rng.below(50);
+        let rewards: Vec<Vec<f64>> =
+            (0..t).map(|_| vec![rng.normal()]).collect();
+        let gamma = rng.range_f64(0.0, 1.0);
+        let boot = vec![rng.normal()];
+        let rtg = reward_to_go(&rewards, &boot, gamma);
+        for ti in 0..t - 1 {
+            let expect = rewards[ti][0] + gamma * rtg[ti + 1][0];
+            assert!((rtg[ti][0] - expect).abs() < 1e-9);
+        }
+        let last = rewards[t - 1][0] + gamma * boot[0];
+        assert!((rtg[t - 1][0] - last).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_router_always_valid() {
+    forall(40, |rng| {
+        let n = 2 + rng.below(6);
+        let local_only = rng.below(2) == 0;
+        let deadline = if rng.below(2) == 0 {
+            Some(rng.range_f64(0.1, 2.0))
+        } else {
+            None
+        };
+        let mut router = Router::new(n, local_only, deadline);
+        for _ in 0..200 {
+            let origin = rng.below(n);
+            let a = Action::new(rng.below(n), rng.below(4), rng.below(5));
+            let bw = rng.range_f64(0.5, 40.0);
+            let routed = router
+                .route(origin, a, |_, _| bw, rng.range_f64(0.3, 4.0), 0.1)
+                .unwrap();
+            assert!(routed.edge < n);
+            if local_only {
+                assert_eq!(routed.edge, origin);
+            }
+        }
+        let s = &router.stats;
+        assert_eq!(
+            s.local + s.dispatched,
+            200 * 1,
+            "every routed request is counted exactly once"
+        );
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_items() {
+    forall(30, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut b = Batcher::new(4, 5, max_batch, 0.05);
+        let mut pushed = 0u64;
+        let mut flushed = 0u64;
+        let mut now = 0.0;
+        for i in 0..300u64 {
+            now += rng.range_f64(0.0, 0.01);
+            if let Some(batch) = b.push(rng.below(4), rng.below(5), i, now) {
+                assert!(batch.items.len() <= max_batch);
+                flushed += batch.items.len() as u64;
+            }
+            pushed += 1;
+            for batch in b.poll(now) {
+                assert!(batch.items.len() <= max_batch);
+                flushed += batch.items.len() as u64;
+            }
+        }
+        for batch in b.flush_all() {
+            flushed += batch.items.len() as u64;
+        }
+        assert_eq!(pushed, flushed);
+        assert_eq!(b.pending(), 0);
+    });
+}
+
+#[test]
+fn prop_transfers_fifo_and_complete() {
+    forall(30, |rng| {
+        let n = 2 + rng.below(4);
+        let mut ts = TransferScheduler::new(n);
+        let mut scheduled = Vec::new();
+        let mut now = 0.0;
+        for id in 0..100u64 {
+            now += rng.range_f64(0.0, 0.2);
+            let i = rng.below(n);
+            let mut j = rng.below(n);
+            if j == i {
+                j = (j + 1) % n;
+            }
+            let finish = ts.schedule(
+                i,
+                j,
+                id,
+                rng.range_f64(0.1, 4.0),
+                rng.range_f64(0.5, 40.0),
+                now,
+            );
+            assert!(finish >= now);
+            scheduled.push(finish);
+        }
+        let horizon = scheduled.iter().cloned().fold(0.0, f64::max) + 1.0;
+        let done = ts.completed(horizon);
+        assert_eq!(done.len(), 100);
+        assert!(ts.next_completion().is_none());
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // random JSON trees survive serialize -> parse
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.below(1000))),
+            4 => Json::Arr(
+                (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(60, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string_pretty();
+        let re = Json::parse(&text).unwrap();
+        assert_eq!(v, re);
+    });
+}
+
+#[test]
+fn prop_observation_normalized_and_finite() {
+    forall(20, |rng| {
+        let env = EnvConfig::default();
+        let mut sim = Simulator::new(SimConfig::from_env(&env), rng.next_u64());
+        for _ in 0..80 {
+            sim.step(&random_actions(rng, 4));
+            let obs = sim.observations_flat();
+            assert_eq!(obs.len(), 4 * env.obs_dim());
+            for &x in &obs {
+                assert!(x.is_finite());
+                assert!(x >= 0.0, "normalized features are non-negative");
+            }
+        }
+    });
+}
