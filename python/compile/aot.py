@@ -91,6 +91,19 @@ def export_rl(outdir, cfg: NetConfig, ppo: PpoConfig, seed: int):
         for nm, x in leaves_with_names(params_full["actor"])
     ]
 
+    # batched-rollout actor: identical network, leading env dim E, so one
+    # PJRT execution (and one observation upload) serves E simulators per
+    # slot during training rollouts (the mask broadcasts over E)
+    actor_batched_name = None
+    if cfg.rollout_envs > 1:
+        obs_roll = jax.ShapeDtypeStruct(
+            (cfg.rollout_envs, n, d), jnp.float32
+        )
+        lowered = jax.jit(M.actor_fwd).lower(actor_specs, obs_roll, mask_spec)
+        actor_batched_name = write_artifact(
+            outdir, "actor_fwd_batched.hlo.txt", lowered
+        )
+
     # --- per-variant critic forward + train step -------------------------
     for variant in CRITIC_VARIANTS:
         params = M.init_params(jax.random.PRNGKey(seed), cfg, variant)
@@ -149,11 +162,14 @@ def export_rl(outdir, cfg: NetConfig, ppo: PpoConfig, seed: int):
             ],
         }
 
-    return {
+    out = {
         "actor_fwd": actor_name,
         "actor_params": actor_leaves,
         "variants": manifest_variants,
     }
+    if actor_batched_name:
+        out["actor_fwd_batched"] = actor_batched_name
+    return out
 
 
 def export_zoo(outdir, seed: int):

@@ -52,6 +52,7 @@ class NetConfig:
     heads: int = 8             # attention heads (paper: 8)
     minibatch: int = 256       # PPO minibatch size baked into train_step
     critic_batch: int = 128    # batch dim baked into the critic_fwd artifact
+    rollout_envs: int = 4      # env count E baked into actor_fwd_batched
 
     @property
     def obs_dim(self) -> int:
@@ -74,6 +75,7 @@ class NetConfig:
             "heads": self.heads,
             "minibatch": self.minibatch,
             "critic_batch": self.critic_batch,
+            "rollout_envs": self.rollout_envs,
             "obs_dim": self.obs_dim,
         }
 

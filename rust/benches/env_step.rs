@@ -1,27 +1,69 @@
-//! L3 hot-path micro-benches: simulator step, observation construction,
-//! router decision, batcher and transfer scheduler throughput.
+//! L3 hot-path micro-benches: simulator step (zero-alloc and allocating
+//! paths), observation construction, batched VecEnv stepping, queue-delay
+//! estimation, router decision, batcher and transfer scheduler throughput.
+//!
+//! Emits `BENCH_env_step.json` (name/iters/mean/p50/p95 per target, plus
+//! the delta vs the previous run's file) — the perf-trajectory record for
+//! this crate's hot path. Iteration counts scale with the
+//! `EDGEVISION_BENCH_SCALE` env var (CI smoke runs use a small fraction).
 
 use edgevision::config::EnvConfig;
 use edgevision::coordinator::{Batcher, Router, TransferScheduler};
-use edgevision::env::{Action, SimConfig, Simulator};
-use edgevision::util::bench::bench;
+use edgevision::env::{Action, SimConfig, Simulator, StepOutcome, VecEnv};
+use edgevision::util::bench::BenchReport;
 
 fn main() {
     let cfg = SimConfig::from_env(&EnvConfig::default());
+    let mut report = BenchReport::new("env_step");
 
     let mut sim = Simulator::new(cfg.clone(), 0);
+    let mut out = StepOutcome::new(cfg.n_nodes);
     let actions: Vec<Action> = (0..4).map(|i| Action::new((i + 1) % 4, 1, 2)).collect();
-    bench("simulator::step (4 nodes)", 200, 5_000, || {
-        sim.step(&actions);
+    report.bench("simulator::step (4 nodes)", 200, 5_000, || {
+        sim.step_into(&actions, &mut out);
+    });
+
+    let mut sim_alloc = Simulator::new(cfg.clone(), 0);
+    report.bench("simulator::step (allocating)", 200, 5_000, || {
+        std::hint::black_box(sim_alloc.step(&actions));
     });
 
     let sim2 = Simulator::new(cfg.clone(), 1);
-    bench("simulator::observations_flat", 200, 20_000, || {
+    report.bench("simulator::observations_flat", 200, 20_000, || {
         std::hint::black_box(sim2.observations_flat());
     });
 
+    let mut obs_buf: Vec<f32> = Vec::new();
+    report.bench("simulator::observations_into", 200, 20_000, || {
+        sim2.observations_into(&mut obs_buf);
+        std::hint::black_box(obs_buf.len());
+    });
+
+    let mut venv = VecEnv::new(cfg.clone(), 8, 100);
+    let vactions: Vec<Action> = (0..8 * 4)
+        .map(|k| Action::new((k + 1) % 4, 1, 2))
+        .collect();
+    let mut vobs: Vec<f32> = Vec::new();
+    report.bench("vecenv::step+obs (8 envs x 4 nodes)", 100, 2_000, || {
+        std::hint::black_box(venv.step(&vactions).len());
+        venv.observations_into(8, &mut vobs);
+    });
+
+    let mut qsim = Simulator::new(cfg.clone(), 2);
+    let all_to_0: Vec<Action> = (0..4).map(|_| Action::new(0, 3, 0)).collect();
+    for _ in 0..50 {
+        qsim.step(&all_to_0);
+    }
+    report.bench("simulator::queue_delay_estimate x4", 1000, 100_000, || {
+        let mut acc = 0.0;
+        for i in 0..4 {
+            acc += qsim.queue_delay_estimate(i);
+        }
+        std::hint::black_box(acc);
+    });
+
     let mut router = Router::new(4, false, Some(1.5));
-    bench("router::route", 1000, 100_000, || {
+    report.bench("router::route", 1000, 100_000, || {
         router
             .route(0, Action::new(2, 1, 2), |_, _| 10.0, 0.96, 0.088)
             .unwrap();
@@ -29,7 +71,7 @@ fn main() {
 
     let mut batcher = Batcher::new(4, 5, 8, 0.05);
     let mut id = 0u64;
-    bench("batcher::push+poll", 1000, 100_000, || {
+    report.bench("batcher::push+poll", 1000, 100_000, || {
         batcher.push((id % 4) as usize, (id % 5) as usize, id, id as f64 * 1e-4);
         batcher.poll(id as f64 * 1e-4);
         id += 1;
@@ -38,10 +80,12 @@ fn main() {
     let mut ts = TransferScheduler::new(4);
     let mut t = 0.0f64;
     let mut tid = 0u64;
-    bench("transfer_scheduler::schedule+complete", 1000, 100_000, || {
+    report.bench("transfer_scheduler::schedule+complete", 1000, 100_000, || {
         ts.schedule(0, 1, tid, 0.5, 20.0, t);
         ts.completed(t + 0.1);
         t += 0.01;
         tid += 1;
     });
+
+    report.write_json().expect("writing BENCH_env_step.json");
 }

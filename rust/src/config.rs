@@ -77,6 +77,13 @@ pub struct RlConfig {
     pub episodes: usize,
     /// Episodes collected between PPO update phases.
     pub update_every: usize,
+    /// Environments stepped in lockstep per rollout phase (E): each
+    /// `actor_fwd` execution and observation upload is amortized over E
+    /// simulators, and E episodes are collected per rollout phase. The
+    /// trainer rounds E down to a divisor of `update_every` so a PPO
+    /// update always fires exactly at a batch boundary (a mid-batch update
+    /// would feed stale-logp episodes to the next update).
+    pub rollout_envs: usize,
     /// Minibatches per update phase (J in Algorithm 1).
     pub minibatches: usize,
     pub lr: f64,
@@ -99,6 +106,7 @@ impl Default for RlConfig {
             local_only: false,
             episodes: 600,
             update_every: 4,
+            rollout_envs: 4,
             minibatches: 16,
             lr: 1e-3,
             gamma: 0.95,
@@ -156,6 +164,7 @@ impl Config {
         r.variant = args.str_or("variant", &r.variant).to_string();
         r.episodes = args.usize_or("episodes", r.episodes)?;
         r.update_every = args.usize_or("update-every", r.update_every)?;
+        r.rollout_envs = args.usize_or("rollout-envs", r.rollout_envs)?;
         r.minibatches = args.usize_or("minibatches", r.minibatches)?;
         r.lr = args.f64_or("lr", r.lr)?;
         r.gamma = args.f64_or("gamma", r.gamma)?;
@@ -226,6 +235,7 @@ impl Config {
                 "rl.local_only" => self.rl.local_only = v.parse()?,
                 "rl.episodes" => self.rl.episodes = v.parse()?,
                 "rl.update_every" => self.rl.update_every = v.parse()?,
+                "rl.rollout_envs" => self.rl.rollout_envs = v.parse()?,
                 "rl.minibatches" => self.rl.minibatches = v.parse()?,
                 "rl.lr" => self.rl.lr = v.parse()?,
                 "rl.gamma" => self.rl.gamma = v.parse()?,

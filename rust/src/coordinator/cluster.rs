@@ -136,6 +136,10 @@ pub struct EdgeCluster {
     rate_hist: Vec<VecDeque<f64>>,
     hist_len: usize,
     pub served: Vec<ServedRequest>,
+    /// Reusable per-slot workload buffers (serving hot path: no fresh
+    /// Vecs per slot — same `*_into` idiom as the simulator core).
+    rates_scratch: Vec<f64>,
+    counts_scratch: Vec<usize>,
 }
 
 impl EdgeCluster {
@@ -172,6 +176,8 @@ impl EdgeCluster {
                 .collect(),
             hist_len,
             served: Vec::new(),
+            rates_scratch: Vec::new(),
+            counts_scratch: Vec::new(),
         }
     }
 
@@ -195,9 +201,10 @@ impl EdgeCluster {
         self.rate_hist[node].iter().copied()
     }
 
-    /// Normalized policy observation, same layout as the slot simulator.
-    pub fn observation(&self, node: usize) -> Vec<f32> {
-        let mut f = Vec::with_capacity(self.hist_len + 1 + 2 * (self.n_nodes - 1));
+    /// Append node `node`'s normalized policy observation to `f` — same
+    /// layout as the slot simulator's `observation_into`, reusable-buffer
+    /// variant for the serving hot path.
+    pub fn observation_into(&self, node: usize, f: &mut Vec<f32>) {
         for r in &self.rate_hist[node] {
             f.push((r / 2.0) as f32);
         }
@@ -212,6 +219,12 @@ impl EdgeCluster {
                 f.push((self.bandwidth.get(node, j) / 40.0) as f32);
             }
         }
+    }
+
+    /// Normalized policy observation, same layout as the slot simulator.
+    pub fn observation(&self, node: usize) -> Vec<f32> {
+        let mut f = Vec::with_capacity(self.hist_len + 1 + 2 * (self.n_nodes - 1));
+        self.observation_into(node, &mut f);
         f
     }
 
@@ -248,15 +261,17 @@ impl EdgeCluster {
 
     fn on_slot(&mut self, horizon: f64) -> Result<()> {
         self.bandwidth.step();
-        let (rates, counts) = self.workload.step();
+        self.workload
+            .step_into(&mut self.rates_scratch, &mut self.counts_scratch);
         for i in 0..self.n_nodes {
-            self.rate_hist[i].push_back(rates[i]);
+            self.rate_hist[i].push_back(self.rates_scratch[i]);
             if self.rate_hist[i].len() > self.hist_len {
                 self.rate_hist[i].pop_front();
             }
-            for k in 0..counts[i] {
+            for k in 0..self.counts_scratch[i] {
                 let at = self.now
-                    + self.slot_secs * (k as f64 + 0.5) / counts[i] as f64;
+                    + self.slot_secs * (k as f64 + 0.5)
+                        / self.counts_scratch[i] as f64;
                 let id = self.next_id;
                 self.next_id += 1;
                 self.reqs.insert(

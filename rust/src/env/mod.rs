@@ -7,8 +7,10 @@ pub mod metrics;
 pub mod profiles;
 pub mod request;
 pub mod simulator;
+pub mod vecenv;
 pub mod workload;
 
 pub use profiles::{Profiles, N_MODELS, N_RES};
 pub use request::{Action, Request};
 pub use simulator::{Observation, SimConfig, Simulator, StepOutcome};
+pub use vecenv::VecEnv;

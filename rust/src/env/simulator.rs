@@ -6,18 +6,26 @@
 //!   * per-node FIFO inference task queues with service time I_{m,v}
 //!     (IV-D, Eq. 1–2),
 //!   * per-link FIFO dispatch queues drained at the time-varying bandwidth
-//!     b_ij(t) (IV-E, Eq. 3–4),
+//!     b_ij(t) (IV-E, Eq. 3–4) — a frame only consumes link time from
+//!     max(slot start, its `ready` instant),
 //!   * the drop rule and performance metric chi (IV-F, Eq. 5),
 //!   * local observations o_i(t) (Eq. 6) and the shared reward (Eq. 10).
 //!
 //! The simulator is the substrate for RL training, for every baseline, and
 //! (wrapped by `coordinator::Cluster`) for the online serving runtime. It is
 //! fully deterministic given a seed.
+//!
+//! Hot-path contract: [`Simulator::step_into`] and the `*_into` observation
+//! builders perform **zero heap allocations** once queues and scratch
+//! buffers have reached their steady-state high-water marks (enforced by
+//! `tests/alloc_probe.rs`). `queue_delay_estimate` is O(models x
+//! resolutions), not O(queue length), thanks to an incrementally-maintained
+//! per-node backlog tally.
 
 use std::collections::VecDeque;
 
 use super::bandwidth::{Bandwidth, BandwidthConfig};
-use super::profiles::Profiles;
+use super::profiles::{Profiles, N_MODELS, N_RES};
 use super::request::{Action, Finished, Outcome, Request};
 use super::workload::{Workload, WorkloadConfig};
 use crate::config::EnvConfig;
@@ -82,6 +90,10 @@ pub struct Observation {
 }
 
 /// Everything produced by one simulator step.
+///
+/// All vectors are reusable scratch: [`Simulator::step_into`] clears and
+/// refills them in place, so a caller that keeps one `StepOutcome` alive
+/// across slots steps without heap traffic.
 #[derive(Debug, Clone)]
 pub struct StepOutcome {
     /// Shared reward r(t) (Eq. 10).
@@ -98,6 +110,56 @@ pub struct StepOutcome {
     pub dispatched: usize,
 }
 
+impl StepOutcome {
+    /// An empty outcome ready to be (re)filled by [`Simulator::step_into`].
+    pub fn new(n_nodes: usize) -> Self {
+        StepOutcome {
+            shared_reward: 0.0,
+            node_rewards: Vec::with_capacity(n_nodes),
+            finished: Vec::new(),
+            arrivals: Vec::with_capacity(n_nodes),
+            rates: Vec::with_capacity(n_nodes),
+            dispatched: 0,
+        }
+    }
+}
+
+/// Per-node tally of queued inference work, bucketed by (model, resolution).
+/// Supports O(1) insert/remove and an O(N_MODELS * N_RES) exact backlog-
+/// seconds readout — the substrate behind the O(1)-ish
+/// [`Simulator::queue_delay_estimate`].
+#[derive(Debug, Clone, Default)]
+struct BacklogTally {
+    counts: [[u32; N_RES]; N_MODELS],
+}
+
+impl BacklogTally {
+    #[inline]
+    fn add(&mut self, model: usize, res: usize) {
+        self.counts[model][res] += 1;
+    }
+
+    #[inline]
+    fn remove(&mut self, model: usize, res: usize) {
+        debug_assert!(self.counts[model][res] > 0, "backlog tally underflow");
+        self.counts[model][res] -= 1;
+    }
+
+    /// Total inference seconds represented by the tallied requests.
+    fn secs(&self, profiles: &Profiles) -> f64 {
+        let mut total = 0.0;
+        for m in 0..N_MODELS {
+            for v in 0..N_RES {
+                let c = self.counts[m][v];
+                if c > 0 {
+                    total += c as f64 * profiles.infer_delay_of(m, v);
+                }
+            }
+        }
+        total
+    }
+}
+
 pub struct Simulator {
     pub cfg: SimConfig,
     workload: Workload,
@@ -106,6 +168,9 @@ pub struct Simulator {
     task_queues: Vec<VecDeque<Request>>,
     /// Per-directed-link FIFO dispatch queues, indexed i * n + j.
     dispatch_queues: Vec<VecDeque<Request>>,
+    /// Incremental (model, res) tallies of each node's task queue, kept in
+    /// lockstep with `task_queues` by every push/pop.
+    backlog: Vec<BacklogTally>,
     /// Absolute time each node's GPU frees up.
     gpu_busy_until: Vec<f64>,
     /// Arrival-rate history per node (most recent last).
@@ -124,6 +189,7 @@ impl Simulator {
             bandwidth: Bandwidth::new(cfg.bandwidth.clone(), seed.wrapping_add(1)),
             task_queues: (0..n).map(|_| VecDeque::new()).collect(),
             dispatch_queues: (0..n * n).map(|_| VecDeque::new()).collect(),
+            backlog: vec![BacklogTally::default(); n],
             gpu_busy_until: vec![0.0; n],
             rate_hist: (0..n).map(|_| VecDeque::new()).collect(),
             now: 0.0,
@@ -163,14 +229,29 @@ impl Simulator {
         self.task_queues[i].len()
     }
 
-    /// Estimated queuing delay at node i given current queue contents (Eq. 1).
+    /// Estimated queuing delay at node i given current queue contents
+    /// (Eq. 1): residual GPU busy time plus the inference seconds of every
+    /// queued request. O(N_MODELS * N_RES) via the incremental tally — it
+    /// does not walk the queue.
     pub fn queue_delay_estimate(&self, i: usize) -> f64 {
         let gpu_backlog = (self.gpu_busy_until[i] - self.now).max(0.0);
-        gpu_backlog
-            + self.task_queues[i]
-                .iter()
-                .map(|r| self.cfg.profiles.infer_delay_of(r.model, r.res))
-                .sum::<f64>()
+        gpu_backlog + self.backlog[i].secs(&self.cfg.profiles)
+    }
+
+    /// Queued inference seconds at node i from the incremental tally.
+    pub fn queue_backlog_secs(&self, i: usize) -> f64 {
+        self.backlog[i].secs(&self.cfg.profiles)
+    }
+
+    /// Recompute node i's queued inference seconds by walking the queue —
+    /// the O(queue length) oracle the incremental tally must always match
+    /// (see `tests/proptests.rs`).
+    pub fn queue_backlog_recomputed(&self, i: usize) -> f64 {
+        let mut tally = BacklogTally::default();
+        for r in &self.task_queues[i] {
+            tally.add(r.model, r.res);
+        }
+        tally.secs(&self.cfg.profiles)
     }
 
     pub fn dispatch_queue_len(&self, i: usize, j: usize) -> usize {
@@ -185,17 +266,19 @@ impl Simulator {
         self.rate_hist[i].iter().copied()
     }
 
-    /// Build the normalized local observation o_i(t) (Eq. 6).
-    pub fn observation(&self, i: usize) -> Observation {
+    /// Append node i's normalized local observation o_i(t) (Eq. 6) to `out`
+    /// — exactly `obs_dim` features, no clearing, no allocation beyond
+    /// `out`'s own growth to its high-water mark.
+    pub fn observation_into(&self, i: usize, out: &mut Vec<f32>) {
         let n = self.cfg.n_nodes;
-        let mut f = Vec::with_capacity(self.cfg.obs_dim());
+        let start = out.len();
         for r in &self.rate_hist[i] {
-            f.push((r / self.cfg.rate_norm) as f32);
+            out.push((r / self.cfg.rate_norm) as f32);
         }
-        f.push((self.task_queues[i].len() as f64 / self.cfg.queue_norm) as f32);
+        out.push((self.task_queues[i].len() as f64 / self.cfg.queue_norm) as f32);
         for j in 0..n {
             if j != i {
-                f.push(
+                out.push(
                     (self.dispatch_queue_len(i, j) as f64 / self.cfg.queue_norm)
                         as f32,
                 );
@@ -203,53 +286,76 @@ impl Simulator {
         }
         for j in 0..n {
             if j != i {
-                f.push((self.bandwidth.get(i, j) / self.cfg.bw_norm) as f32);
+                out.push((self.bandwidth.get(i, j) / self.cfg.bw_norm) as f32);
             }
         }
-        debug_assert_eq!(f.len(), self.cfg.obs_dim());
+        debug_assert_eq!(out.len() - start, self.cfg.obs_dim());
+    }
+
+    /// Build the normalized local observation o_i(t) (Eq. 6).
+    pub fn observation(&self, i: usize) -> Observation {
+        let mut f = Vec::with_capacity(self.cfg.obs_dim());
+        self.observation_into(i, &mut f);
         Observation { features: f }
+    }
+
+    /// Write the flattened [N * obs_dim] observation matrix into `out`
+    /// (cleared first; zero-alloc once `out` holds its full capacity).
+    pub fn observations_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for i in 0..self.cfg.n_nodes {
+            self.observation_into(i, out);
+        }
     }
 
     /// Flattened [N * obs_dim] observation matrix for all nodes.
     pub fn observations_flat(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.cfg.n_nodes * self.cfg.obs_dim());
-        for i in 0..self.cfg.n_nodes {
-            out.extend(self.observation(i).features);
-        }
+        self.observations_into(&mut out);
         out
     }
 
     // ---- the step function -------------------------------------------------
 
-    /// Advance one time slot. `actions[i]` is agent i's (e, m, v) control,
-    /// applied to every request arriving at node i this slot (Eq. 8).
+    /// Advance one time slot, allocating a fresh [`StepOutcome`].
+    /// `actions[i]` is agent i's (e, m, v) control, applied to every request
+    /// arriving at node i this slot (Eq. 8).
     pub fn step(&mut self, actions: &[Action]) -> StepOutcome {
+        let mut out = StepOutcome::new(self.cfg.n_nodes);
+        self.step_into(actions, &mut out);
+        out
+    }
+
+    /// Advance one time slot, writing the outcome into the caller's
+    /// reusable buffers. In steady state this touches the heap zero times.
+    pub fn step_into(&mut self, actions: &[Action], out: &mut StepOutcome) {
         let n = self.cfg.n_nodes;
         assert_eq!(actions.len(), n);
         let t0 = self.now;
         let t1 = t0 + self.cfg.slot_secs;
 
+        out.finished.clear();
+        out.dispatched = 0;
+
         self.bandwidth.step();
-        let (rates, counts) = self.workload.step();
+        self.workload.step_into(&mut out.rates, &mut out.arrivals);
         for i in 0..n {
-            self.rate_hist[i].push_back(rates[i]);
+            self.rate_hist[i].push_back(out.rates[i]);
             if self.rate_hist[i].len() > self.cfg.hist_len {
                 self.rate_hist[i].pop_front();
             }
         }
 
-        let mut finished: Vec<Finished> = Vec::new();
-        let mut dispatched = 0usize;
-
         // 1. new arrivals, preprocessed and routed per the slot's action
         for i in 0..n {
             let a = actions[i];
             debug_assert!(a.edge < n);
-            for k in 0..counts[i] {
+            let count = out.arrivals[i];
+            for k in 0..count {
                 // spread arrivals uniformly inside the slot
                 let arrival = t0
                     + self.cfg.slot_secs * (k as f64 + 0.5)
-                        / counts[i] as f64;
+                        / count as f64;
                 let ready = arrival + self.cfg.profiles.preproc_delay[a.res];
                 let req = Request {
                     id: self.next_id,
@@ -263,39 +369,44 @@ impl Simulator {
                 };
                 self.next_id += 1;
                 if a.edge == i {
+                    self.backlog[i].add(a.model, a.res);
                     self.task_queues[i].push_back(req);
                 } else {
-                    dispatched += 1;
+                    out.dispatched += 1;
                     self.dispatch_queues[i * n + a.edge].push_back(req);
                 }
             }
         }
 
-        // 2. drain dispatch links at b_ij(t) for the slot duration
+        // 2. drain dispatch links at b_ij(t) for the slot duration. A frame
+        //    starts consuming link time at max(slot start, its `ready`
+        //    instant): budget accrued before the frame finished
+        //    preprocessing is never charged to it.
         for i in 0..n {
             for j in 0..n {
                 if i == j {
                     continue;
                 }
                 let bw = self.bandwidth.get(i, j); // Mbps, constant in slot
-                let mut budget = self.cfg.slot_secs * bw; // Mbit this slot
                 let q = &mut self.dispatch_queues[i * n + j];
+                let mut cursor = t0; // link-time cursor within the slot
                 while let Some(head) = q.front_mut() {
                     // cannot start transmitting before preprocessing is done
                     if head.ready >= t1 {
                         break;
                     }
-                    if head.mbits_left <= budget {
-                        budget -= head.mbits_left;
+                    let start = cursor.max(head.ready);
+                    let avail = (t1 - start) * bw; // Mbit transmittable
+                    if head.mbits_left <= avail {
+                        let finish = start + head.mbits_left / bw;
                         let mut req = q.pop_front().unwrap();
                         req.mbits_left = 0.0;
-                        // arrival instant at j: end-of-transfer within slot
-                        let frac = 1.0 - budget / (self.cfg.slot_secs * bw);
-                        req.ready = (t0 + frac * self.cfg.slot_secs)
-                            .max(head_ready(&req));
+                        req.ready = finish; // arrival instant at node j
+                        cursor = finish;
+                        self.backlog[j].add(req.model, req.res);
                         self.task_queues[j].push_back(req);
                     } else {
-                        head.mbits_left -= budget;
+                        head.mbits_left -= avail;
                         break;
                     }
                 }
@@ -311,10 +422,11 @@ impl Simulator {
                     break;
                 }
                 let req = self.task_queues[i].pop_front().unwrap();
+                self.backlog[i].remove(req.model, req.res);
                 let waited = start - req.arrival;
                 if waited > self.cfg.drop_threshold {
                     // proactive drop: cannot possibly finish in time (IV-D)
-                    finished.push(self.drop(&req, i, waited));
+                    out.finished.push(self.drop(&req, i, waited));
                     continue;
                 }
                 let infer =
@@ -322,14 +434,14 @@ impl Simulator {
                 let complete = start + infer;
                 let delay = complete - req.arrival;
                 if delay > self.cfg.drop_threshold {
-                    finished.push(self.drop(&req, i, delay));
+                    out.finished.push(self.drop(&req, i, delay));
                     // the GPU still burned the time attempting it
                     cursor = complete;
                     self.gpu_busy_until[i] = complete;
                     continue;
                 }
                 let acc = self.cfg.profiles.accuracy_of(req.model, req.res);
-                finished.push(Finished {
+                out.finished.push(Finished {
                     node: i,
                     origin: req.origin,
                     model: req.model,
@@ -345,76 +457,56 @@ impl Simulator {
             }
         }
 
-        // 4. scavenge doomed requests still waiting in queues
+        // 4. scavenge doomed requests still waiting in queues — in-place
+        //    retain, no per-slot queue rebuilds
+        let threshold = self.cfg.drop_threshold;
+        let drop_perf = -self.cfg.omega * self.cfg.drop_penalty;
         for i in 0..n {
-            let threshold = self.cfg.drop_threshold;
-            let mut kept = VecDeque::new();
-            while let Some(req) = self.task_queues[i].pop_front() {
-                if t1 - req.arrival > threshold {
-                    finished.push(self.drop(&req, i, t1 - req.arrival));
+            let backlog = &mut self.backlog[i];
+            let finished = &mut out.finished;
+            self.task_queues[i].retain(|req| {
+                let age = t1 - req.arrival;
+                if age > threshold {
+                    backlog.remove(req.model, req.res);
+                    finished.push(dropped(req, i, age, drop_perf, req.origin != i));
+                    false
                 } else {
-                    kept.push_back(req);
+                    true
                 }
-            }
-            self.task_queues[i] = kept;
+            });
             for j in 0..n {
                 if i == j {
                     continue;
                 }
-                let q = &mut self.dispatch_queues[i * n + j];
-                let mut kept = VecDeque::new();
-                while let Some(req) = q.pop_front() {
-                    if t1 - req.arrival > threshold {
-                        finished.push(Finished {
-                            node: i,
-                            origin: req.origin,
-                            model: req.model,
-                            res: req.res,
-                            outcome: Outcome::Dropped,
-                            delay: t1 - req.arrival,
-                            perf: -self.cfg.omega * self.cfg.drop_penalty,
-                            accuracy: 0.0,
-                            dispatched: true,
-                        });
+                self.dispatch_queues[i * n + j].retain(|req| {
+                    let age = t1 - req.arrival;
+                    if age > threshold {
+                        // still en route to j: always an off-node drop
+                        finished.push(dropped(req, i, age, drop_perf, true));
+                        false
                     } else {
-                        kept.push_back(req);
+                        true
                     }
-                }
-                *q = kept;
+                });
             }
         }
 
         // 5. rewards (Eqs. 9-10)
-        let mut node_rewards = vec![0.0; n];
-        for f in &finished {
-            node_rewards[f.node] += f.perf;
+        out.node_rewards.clear();
+        out.node_rewards.resize(n, 0.0);
+        for f in &out.finished {
+            out.node_rewards[f.node] += f.perf;
         }
-        let shared_reward = node_rewards.iter().sum();
+        out.shared_reward = out.node_rewards.iter().sum();
 
         self.now = t1;
         self.slot += 1;
-        StepOutcome {
-            shared_reward,
-            node_rewards,
-            finished,
-            arrivals: counts,
-            rates,
-            dispatched,
-        }
     }
 
     fn drop(&self, req: &Request, node: usize, delay: f64) -> Finished {
-        Finished {
-            node,
-            origin: req.origin,
-            model: req.model,
-            res: req.res,
-            outcome: Outcome::Dropped,
-            delay,
-            perf: -self.cfg.omega * self.cfg.drop_penalty, // Eq. (5), d > T
-            accuracy: 0.0,
-            dispatched: req.origin != node,
-        }
+        // Eq. (5), d > T
+        let perf = -self.cfg.omega * self.cfg.drop_penalty;
+        dropped(req, node, delay, perf, req.origin != node)
     }
 
     /// Total requests currently in-flight (waiting in any queue).
@@ -424,8 +516,27 @@ impl Simulator {
     }
 }
 
-fn head_ready(r: &Request) -> f64 {
-    r.ready
+/// The one place a Dropped [`Finished`] record is assembled — the GPU drop
+/// path and both scavenge passes all route through here (a free fn so the
+/// retain closures can call it while the queues are mutably borrowed).
+fn dropped(
+    req: &Request,
+    node: usize,
+    delay: f64,
+    perf: f64,
+    dispatched: bool,
+) -> Finished {
+    Finished {
+        node,
+        origin: req.origin,
+        model: req.model,
+        res: req.res,
+        outcome: Outcome::Dropped,
+        delay,
+        perf,
+        accuracy: 0.0,
+        dispatched,
+    }
 }
 
 #[cfg(test)]
@@ -449,6 +560,37 @@ mod tests {
             s.observations_flat().len(),
             s.cfg.n_nodes * s.cfg.obs_dim()
         );
+    }
+
+    #[test]
+    fn observations_into_matches_flat() {
+        let mut s = sim(17);
+        let mut buf = Vec::new();
+        for t in 0..50 {
+            let a: Vec<Action> =
+                (0..4).map(|i| Action::new((i + t) % 4, t % 4, t % 5)).collect();
+            s.step(&a);
+            s.observations_into(&mut buf);
+            assert_eq!(buf, s.observations_flat());
+        }
+    }
+
+    #[test]
+    fn step_into_reuse_matches_step() {
+        let mut a = sim(19);
+        let mut b = sim(19);
+        let mut out = StepOutcome::new(4);
+        for t in 0..200 {
+            let acts: Vec<Action> =
+                (0..4).map(|i| Action::new((i + t) % 4, t % 4, t % 5)).collect();
+            let fresh = a.step(&acts);
+            b.step_into(&acts, &mut out);
+            assert_eq!(fresh.shared_reward.to_bits(), out.shared_reward.to_bits());
+            assert_eq!(fresh.node_rewards, out.node_rewards);
+            assert_eq!(fresh.finished.len(), out.finished.len());
+            assert_eq!(fresh.arrivals, out.arrivals);
+            assert_eq!(fresh.dispatched, out.dispatched);
+        }
     }
 
     #[test]
@@ -532,6 +674,67 @@ mod tests {
     }
 
     #[test]
+    fn dispatched_delay_includes_full_transmission_time() {
+        // regression (mid-slot bandwidth charging): the link must not spend
+        // budget accrued before a frame's `ready` instant. With a constant
+        // bandwidth link every completed dispatched frame therefore obeys
+        // delay >= D_v + B_v / bw + I_{m,v}.
+        let bw_mbps = 6.0;
+        let mut cfg = SimConfig::from_env(&EnvConfig::default());
+        cfg.bandwidth = BandwidthConfig {
+            n_nodes: 4,
+            min_mbps: bw_mbps,
+            max_mbps: bw_mbps,
+            regimes: 1,
+            switch_prob: 0.0,
+            ar: 0.0,
+            jitter: 0.0,
+        };
+        let mut s = Simulator::new(cfg, 21);
+        // every node dispatches 720P frames to its neighbour
+        let a: Vec<Action> =
+            (0..4).map(|i| Action::new((i + 1) % 4, 1, 1)).collect();
+        let mut checked = 0;
+        for _ in 0..300 {
+            let out = s.step(&a);
+            for f in &out.finished {
+                if f.outcome == Outcome::Completed && f.dispatched {
+                    let min_d = s.cfg.profiles.preproc_delay[f.res]
+                        + s.cfg.profiles.frame_mbits[f.res] / bw_mbps
+                        + s.cfg.profiles.infer_delay_of(f.model, f.res);
+                    assert!(
+                        f.delay >= min_d - 1e-9,
+                        "delay {} < physical minimum {min_d}",
+                        f.delay
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 50, "checked={checked}");
+    }
+
+    #[test]
+    fn backlog_tally_tracks_queue_exactly() {
+        let mut s = sim(22);
+        for t in 0..150 {
+            let a: Vec<Action> = (0..4)
+                .map(|i| Action::new((i + t) % 4, t % 4, (t + i) % 5))
+                .collect();
+            s.step(&a);
+            for i in 0..4 {
+                let inc = s.queue_backlog_secs(i);
+                let oracle = s.queue_backlog_recomputed(i);
+                assert_eq!(
+                    inc.to_bits(),
+                    oracle.to_bits(),
+                    "node {i}: incremental {inc} != recomputed {oracle}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn shared_reward_is_sum_of_node_rewards() {
         let mut s = sim(5);
         for _ in 0..100 {
@@ -584,6 +787,9 @@ mod tests {
         assert_eq!(s.slot(), 0);
         assert_eq!(s.in_flight(), 0);
         assert_eq!(s.now(), 0.0);
+        for i in 0..4 {
+            assert_eq!(s.queue_backlog_secs(i), 0.0);
+        }
     }
 
     #[test]

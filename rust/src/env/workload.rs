@@ -75,9 +75,19 @@ impl Workload {
 
     /// Advance one slot; returns (rates, arrival counts) per node.
     pub fn step(&mut self) -> (Vec<f64>, Vec<usize>) {
+        let mut rates = Vec::with_capacity(self.n_nodes());
+        let mut counts = Vec::with_capacity(self.n_nodes());
+        self.step_into(&mut rates, &mut counts);
+        (rates, counts)
+    }
+
+    /// Advance one slot, writing per-node rates and Poisson arrival counts
+    /// into the caller's buffers (cleared first). Zero-alloc in steady
+    /// state — the simulator's hot path reuses the same buffers each slot.
+    pub fn step_into(&mut self, rates: &mut Vec<f64>, counts: &mut Vec<usize>) {
         let n = self.n_nodes();
-        let mut rates = Vec::with_capacity(n);
-        let mut counts = Vec::with_capacity(n);
+        rates.clear();
+        counts.clear();
         for i in 0..n {
             // AR(1) log-noise
             self.ar_state[i] = self.cfg.ar * self.ar_state[i]
@@ -104,7 +114,6 @@ impl Workload {
             counts.push(self.rng.poisson(rate));
         }
         self.t += 1;
-        (rates, counts)
     }
 }
 

@@ -15,6 +15,12 @@
 //! Python runs only at build time (`make artifacts`); the Rust binary is
 //! self-contained afterwards and executes everything through PJRT.
 //!
+//! The PJRT execution stack (runtime, trained policy, trainer, serving,
+//! experiments) requires the `pjrt` cargo feature, which pulls in the
+//! `xla` crate. The simulator, coordinator, baselines and bench substrate
+//! build with no features enabled — that is what tier-1
+//! `cargo build --release && cargo test -q` verifies offline.
+//!
 //! Quickstart:
 //! ```no_run
 //! use edgevision::config::Config;
@@ -32,8 +38,10 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod env;
+#[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod rl;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serving;
 pub mod telemetry;

@@ -23,7 +23,10 @@ pub struct Transition {
 }
 
 /// A minibatch in the exact layout the train_step artifact expects.
-#[derive(Debug, Clone)]
+/// Reusable: [`ReplayBuffer::sample_into`] clears and refills one in
+/// place, so the update loop assembles J minibatches with no fresh
+/// allocations after the first.
+#[derive(Debug, Clone, Default)]
 pub struct Minibatch {
     pub obs: Vec<f32>,     // [B, N, D]
     pub actions: Vec<i32>, // [B, N, 3]
@@ -64,17 +67,21 @@ impl ReplayBuffer {
     /// buffer is smaller than B, without meaningful bias otherwise —
     /// Algorithm 1 line 16 samples randomly per minibatch).
     pub fn sample(&self, batch: usize, rng: &mut Rng) -> Minibatch {
+        let mut mb = Minibatch::default();
+        self.sample_into(batch, rng, &mut mb);
+        mb
+    }
+
+    /// [`ReplayBuffer::sample`], but refilling the caller's reusable
+    /// minibatch buffers in place (cleared first).
+    pub fn sample_into(&self, batch: usize, rng: &mut Rng, mb: &mut Minibatch) {
         assert!(!self.data.is_empty(), "sampling from empty buffer");
-        let n_agents = self.data[0].logp.len();
-        let obs_dim = self.data[0].obs.len();
-        let mut mb = Minibatch {
-            obs: Vec::with_capacity(batch * obs_dim),
-            actions: Vec::with_capacity(batch * n_agents * 3),
-            logp: Vec::with_capacity(batch * n_agents),
-            adv: Vec::with_capacity(batch * n_agents),
-            ret: Vec::with_capacity(batch * n_agents),
-            val: Vec::with_capacity(batch * n_agents),
-        };
+        mb.obs.clear();
+        mb.actions.clear();
+        mb.logp.clear();
+        mb.adv.clear();
+        mb.ret.clear();
+        mb.val.clear();
         for _ in 0..batch {
             let t = &self.data[rng.below(self.data.len())];
             mb.obs.extend_from_slice(&t.obs);
@@ -84,7 +91,6 @@ impl ReplayBuffer {
             mb.ret.extend_from_slice(&t.ret);
             mb.val.extend_from_slice(&t.val);
         }
-        mb
     }
 }
 

@@ -1,15 +1,25 @@
 //! The MARL stack (Section V): parameter store, actor policy, GAE,
 //! replay buffer, rollout collection and the PPO trainer driving the
 //! AOT-compiled `train_step` artifact through PJRT.
+//!
+//! The PJRT-backed pieces (params / policy / trainer) sit behind the
+//! `pjrt` cargo feature; buffer, GAE and the evaluation harness are pure
+//! Rust and always available.
 
 pub mod buffer;
 pub mod eval;
 pub mod gae;
+#[cfg(feature = "pjrt")]
 pub mod params;
+#[cfg(feature = "pjrt")]
 pub mod policy;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use eval::{evaluate, Controller};
+#[cfg(feature = "pjrt")]
 pub use params::ParamStore;
+#[cfg(feature = "pjrt")]
 pub use policy::ActorPolicy;
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainOutcome, Trainer};

@@ -6,6 +6,13 @@
 //! adopt wholesale (no host round-trip on the training path). Checkpoints
 //! serialize the same order as raw little-endian f32 — byte-compatible
 //! with `params_init_<variant>.bin` from the AOT exporter.
+//!
+//! A per-leaf host-side cache backs the trainer's device refresh: leaves
+//! initialized from a host blob never pay the `Literal -> Vec<f32>`
+//! decompose, and after an update phase each leaf is decomposed at most
+//! once (shared by the device re-upload and `to_blob`). The cache is
+//! invalidated wholesale by [`ParamStore::adopt_train_outputs`] and
+//! re-validated lazily against the manifest leaf shapes.
 
 use std::path::Path;
 
@@ -22,6 +29,9 @@ pub struct ParamStore {
     pub adam_m: Vec<Literal>,
     pub adam_v: Vec<Literal>,
     pub step: Literal,
+    /// Host copies of `params`, leaf-aligned; `None` = stale (device-side
+    /// literal changed since the last decompose).
+    host_cache: Vec<Option<Vec<f32>>>,
 }
 
 impl ParamStore {
@@ -43,12 +53,15 @@ impl ParamStore {
         let mut params = Vec::with_capacity(leaves.len());
         let mut adam_m = Vec::with_capacity(leaves.len());
         let mut adam_v = Vec::with_capacity(leaves.len());
+        let mut host_cache = Vec::with_capacity(leaves.len());
         let mut off = 0;
         for leaf in leaves {
             let n = leaf.numel();
             params.push(lit_f32(&blob[off..off + n], &leaf.shape)?);
             adam_m.push(lit_f32(&vec![0.0; n], &leaf.shape)?);
             adam_v.push(lit_f32(&vec![0.0; n], &leaf.shape)?);
+            // the blob IS the host copy — seed the cache for free
+            host_cache.push(Some(blob[off..off + n].to_vec()));
             off += n;
         }
         let n_actor_leaves =
@@ -61,6 +74,7 @@ impl ParamStore {
             adam_m,
             adam_v,
             step: lit_scalar_f32(0.0),
+            host_cache,
         })
     }
 
@@ -72,6 +86,35 @@ impl ParamStore {
     /// Critic-subtree literals.
     pub fn critic_params(&self) -> &[Literal] {
         &self.params[self.n_actor_leaves..]
+    }
+
+    /// Make every leaf's host copy available, decomposing only stale
+    /// leaves (and re-decomposing any whose cached length no longer
+    /// matches the manifest shape).
+    pub fn ensure_host_cache(&mut self) -> Result<()> {
+        for i in 0..self.params.len() {
+            let need = self.leaves[i].numel();
+            let stale = match &self.host_cache[i] {
+                Some(h) => h.len() != need,
+                None => true,
+            };
+            if stale {
+                let host = to_vec_f32(&self.params[i])?;
+                anyhow::ensure!(
+                    host.len() == need,
+                    "leaf {} decomposed to {} elems, manifest says {need}",
+                    self.leaves[i].name,
+                    host.len()
+                );
+                self.host_cache[i] = Some(host);
+            }
+        }
+        Ok(())
+    }
+
+    /// The cached host copy of leaf `i`, if fresh.
+    pub fn cached_host(&self, i: usize) -> Option<&[f32]> {
+        self.host_cache.get(i).and_then(|c| c.as_deref())
     }
 
     /// Adopt the outputs of a train_step execution:
@@ -92,14 +135,21 @@ impl ParamStore {
         self.adam_v = outs.split_off(2 * p);
         self.adam_m = outs.split_off(p);
         self.params = outs;
+        for c in &mut self.host_cache {
+            *c = None; // device-side values changed; host copies are stale
+        }
         Ok(metrics)
     }
 
-    /// Dump parameters to host in manifest leaf order.
+    /// Dump parameters to host in manifest leaf order (cache-aware).
     pub fn to_blob(&self) -> Result<Vec<f32>> {
-        let mut out = Vec::new();
-        for lit in &self.params {
-            out.extend(to_vec_f32(lit)?);
+        let total: usize = self.leaves.iter().map(|l| l.numel()).sum();
+        let mut out = Vec::with_capacity(total);
+        for (i, lit) in self.params.iter().enumerate() {
+            match self.cached_host(i) {
+                Some(h) => out.extend_from_slice(h),
+                None => out.extend(to_vec_f32(lit)?),
+            }
         }
         Ok(out)
     }

@@ -6,7 +6,10 @@
 //!
 //! Hot-path note: actor parameters and the dispatch mask live as
 //! device-resident PJRT buffers (`execute_b`), so a policy step only
-//! uploads the observation tensor — see EXPERIMENTS.md §Perf.
+//! uploads the observation tensor — see EXPERIMENTS.md §Perf. When the
+//! artifact set includes `actor_fwd_batched` (a lowering with a leading
+//! env dim), [`ActorPolicy::act_batch_with`] serves E simulators with a
+//! single PJRT execution and a single observation upload per slot.
 
 use anyhow::Result;
 use std::rc::Rc;
@@ -18,6 +21,9 @@ use crate::util::rng::{argmax, Rng};
 
 pub struct ActorPolicy {
     exe: Rc<Executable>,
+    /// Batched-rollout lowering of the same network, when the artifact set
+    /// provides one: `.0` is the env count E baked into its input shape.
+    batched: Option<(usize, Rc<Executable>)>,
     rt_handle: RtHandle,
     mask: PjRtBuffer,
     pub n_agents: usize,
@@ -43,6 +49,8 @@ impl RtHandle {
 
 impl ActorPolicy {
     /// Stateless policy: parameters are supplied per call (training mode).
+    /// The batched-rollout executable is NOT loaded here — only the
+    /// trainer needs it; call [`ActorPolicy::preload_batched`] for that.
     pub fn new(rt: &Runtime, manifest: &Manifest, local_only: bool) -> Result<Self> {
         let exe = rt.load(&manifest.actor_fwd)?;
         let n = manifest.net.n_agents;
@@ -51,6 +59,7 @@ impl ActorPolicy {
         let mask = handle.buffer_f32(&mask_host, &[n, n])?;
         Ok(ActorPolicy {
             exe,
+            batched: None,
             rt_handle: handle,
             mask,
             n_agents: n,
@@ -86,6 +95,23 @@ impl ActorPolicy {
         Ok(policy)
     }
 
+    /// Compile/load the `actor_fwd_batched` artifact if the manifest ships
+    /// one. Only the trainer's rollout loop benefits, so the serving and
+    /// eval paths skip the extra compile + resident executable entirely.
+    /// Without it, [`ActorPolicy::act_batch_with`] still works via the
+    /// per-env fallback.
+    pub fn preload_batched(&mut self, rt: &Runtime, manifest: &Manifest) -> Result<()> {
+        if self.batched.is_none() {
+            if let Some(file) = &manifest.actor_fwd_batched {
+                if manifest.net.rollout_envs > 1 {
+                    self.batched =
+                        Some((manifest.net.rollout_envs, rt.load(file)?));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Upload an actor-parameter blob slice as device buffers (used by the
     /// trainer to refresh its resident copy after each update phase).
     pub fn upload_params(
@@ -101,6 +127,39 @@ impl ActorPolicy {
             off += n;
         }
         Ok(out)
+    }
+
+    /// Sample / argmax `rows` factored actions from flattened per-row
+    /// log-prob planes (`rows * n_agents` dispatch logits, etc.).
+    fn sample_rows(
+        &self,
+        rows: usize,
+        logp_e: &[f32],
+        logp_m: &[f32],
+        logp_v: &[f32],
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> (Vec<Action>, Vec<f32>) {
+        let n = self.n_agents;
+        let mut actions = Vec::with_capacity(rows);
+        let mut joint = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let le = &logp_e[r * n..(r + 1) * n];
+            let lm = &logp_m[r * self.n_models..(r + 1) * self.n_models];
+            let lv = &logp_v[r * self.n_res..(r + 1) * self.n_res];
+            let (e, m, v) = if greedy {
+                (argmax(le), argmax(lm), argmax(lv))
+            } else {
+                (
+                    rng.categorical_from_logp(le),
+                    rng.categorical_from_logp(lm),
+                    rng.categorical_from_logp(lv),
+                )
+            };
+            actions.push(Action::new(e, m, v));
+            joint.push(le[e] + lm[m] + lv[v]);
+        }
+        (actions, joint)
     }
 
     /// Forward + sample with explicit device-resident parameters.
@@ -125,24 +184,71 @@ impl ActorPolicy {
         let logp_e = to_vec_f32(&outs[0])?;
         let logp_m = to_vec_f32(&outs[1])?;
         let logp_v = to_vec_f32(&outs[2])?;
+        Ok(self.sample_rows(n, &logp_e, &logp_m, &logp_v, rng, greedy))
+    }
 
-        let mut actions = Vec::with_capacity(n);
-        let mut joint = Vec::with_capacity(n);
-        for i in 0..n {
-            let le = &logp_e[i * n..(i + 1) * n];
-            let lm = &logp_m[i * self.n_models..(i + 1) * self.n_models];
-            let lv = &logp_v[i * self.n_res..(i + 1) * self.n_res];
-            let (e, m, v) = if greedy {
-                (argmax(le), argmax(lm), argmax(lv))
-            } else {
-                (
-                    rng.categorical_from_logp(le),
-                    rng.categorical_from_logp(lm),
-                    rng.categorical_from_logp(lv),
-                )
-            };
-            actions.push(Action::new(e, m, v));
-            joint.push(le[e] + lm[m] + lv[v]);
+    /// Forward + sample for `envs` stacked environments in one go.
+    /// `obs_flat` is the `[envs * N, obs_dim]` row-major matrix a
+    /// [`crate::env::VecEnv`] packs. When the `actor_fwd_batched` artifact
+    /// matches `envs`, this is one PJRT execution and one observation
+    /// upload for all envs; otherwise it degrades to one execution per env
+    /// (identical results, just unamortized).
+    pub fn act_batch_with(
+        &self,
+        actor_params: &[PjRtBuffer],
+        obs_flat: &[f32],
+        envs: usize,
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> Result<(Vec<Action>, Vec<f32>)> {
+        let n = self.n_agents;
+        let d = self.obs_dim;
+        anyhow::ensure!(
+            envs > 0 && obs_flat.len() == envs * n * d,
+            "obs len {} != {envs} envs x {n} agents x {d} features",
+            obs_flat.len()
+        );
+        if envs == 1 {
+            return self.act_with(actor_params, obs_flat, rng, greedy);
+        }
+        if let Some((e_art, exe)) = &self.batched {
+            if *e_art == envs {
+                let obs = self.rt_handle.buffer_f32(obs_flat, &[envs, n, d])?;
+                let mut inputs: Vec<&PjRtBuffer> =
+                    Vec::with_capacity(actor_params.len() + 2);
+                inputs.extend(actor_params.iter());
+                inputs.push(&obs);
+                inputs.push(&self.mask);
+                let outs = exe.run_b(&inputs)?;
+                anyhow::ensure!(
+                    outs.len() == 3,
+                    "actor_fwd_batched returned {}",
+                    outs.len()
+                );
+                let logp_e = to_vec_f32(&outs[0])?;
+                let logp_m = to_vec_f32(&outs[1])?;
+                let logp_v = to_vec_f32(&outs[2])?;
+                return Ok(self.sample_rows(
+                    envs * n,
+                    &logp_e,
+                    &logp_m,
+                    &logp_v,
+                    rng,
+                    greedy,
+                ));
+            }
+        }
+        let mut actions = Vec::with_capacity(envs * n);
+        let mut joint = Vec::with_capacity(envs * n);
+        for e in 0..envs {
+            let (a, j) = self.act_with(
+                actor_params,
+                &obs_flat[e * n * d..(e + 1) * n * d],
+                rng,
+                greedy,
+            )?;
+            actions.extend(a);
+            joint.extend(j);
         }
         Ok((actions, joint))
     }
@@ -169,11 +275,18 @@ pub struct PolicyController {
     policy: ActorPolicy,
     rng: Rng,
     greedy: bool,
+    obs_scratch: Vec<f32>,
 }
 
 impl PolicyController {
     pub fn new(label: impl Into<String>, policy: ActorPolicy, seed: u64, greedy: bool) -> Self {
-        PolicyController { label: label.into(), policy, rng: Rng::new(seed), greedy }
+        PolicyController {
+            label: label.into(),
+            policy,
+            rng: Rng::new(seed),
+            greedy,
+            obs_scratch: Vec::new(),
+        }
     }
 }
 
@@ -183,8 +296,9 @@ impl crate::rl::eval::Controller for PolicyController {
     }
 
     fn act(&mut self, sim: &crate::env::Simulator) -> Result<Vec<Action>> {
-        let obs = sim.observations_flat();
-        let (actions, _) = self.policy.act(&obs, &mut self.rng, self.greedy)?;
+        sim.observations_into(&mut self.obs_scratch);
+        let (actions, _) =
+            self.policy.act(&self.obs_scratch, &mut self.rng, self.greedy)?;
         Ok(actions)
     }
 }

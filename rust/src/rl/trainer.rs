@@ -7,6 +7,13 @@
 //! GAE (Eq. 16), reward-to-go (Eq. 17), minibatch assembly and the episode
 //! loop. Parameters stay resident as PJRT literals; nothing crosses the
 //! host boundary between updates except minibatch tensors.
+//!
+//! Rollouts are batched: a [`VecEnv`] steps E independent simulators per
+//! slot and packs their observations into one `[E * N, obs_dim]` tensor,
+//! so each `actor_fwd` execution (and each host->device observation
+//! upload) is amortized over E episodes. Every update phase therefore
+//! consumes E episodes' worth of transitions through the unchanged
+//! GAE / minibatch plumbing.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -16,12 +23,12 @@ use xla::Literal;
 
 use crate::config::Config;
 use crate::env::metrics::EpisodeMetrics;
-use crate::env::{SimConfig, Simulator};
-use crate::rl::buffer::{ReplayBuffer, Transition};
+use crate::env::{SimConfig, VecEnv};
+use crate::rl::buffer::{Minibatch, ReplayBuffer, Transition};
 use crate::rl::gae::{gae, reward_to_go};
 use crate::rl::params::ParamStore;
 use crate::rl::policy::ActorPolicy;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Executable, Manifest, Runtime};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Executable, Manifest, Runtime};
 use crate::util::rng::Rng;
 
 /// Per-update-phase diagnostics (mean of the J minibatch metric vectors).
@@ -59,25 +66,57 @@ pub struct Trainer<'rt> {
     critic_exe: Rc<Executable>,
     train_exe: Rc<Executable>,
     mask: Literal,
-    sim: Simulator,
+    envs: VecEnv,
     buffer: ReplayBuffer,
     rng: Rng,
     /// Device-resident copies of the actor / critic parameters, refreshed
     /// after each update phase — rollouts never re-upload parameters.
     actor_dev: Vec<xla::PjRtBuffer>,
     critic_dev: Vec<xla::PjRtBuffer>,
+    /// Reusable `[E * N, obs_dim]` observation packing buffer.
+    obs_scratch: Vec<f32>,
+    /// Reusable minibatch assembly buffers for the update phase.
+    mb_scratch: Minibatch,
 }
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest, cfg: Config) -> Result<Self> {
         let variant = manifest.variant(&cfg.rl.variant)?;
         let store = ParamStore::from_init(manifest, &cfg.rl.variant)?;
-        let policy = ActorPolicy::new(rt, manifest, cfg.rl.local_only)?;
+        let mut policy = ActorPolicy::new(rt, manifest, cfg.rl.local_only)?;
         let critic_exe = rt.load(&variant.critic_fwd)?;
         let train_exe = rt.load(&variant.train_step)?;
         let n = manifest.net.n_agents;
         let mask = build_mask_literal(n, cfg.rl.local_only)?;
-        let sim = Simulator::new(SimConfig::from_env(&cfg.env), cfg.rl.seed);
+        // The rollout batch must be a divisor of the update cadence —
+        // updates fire exactly at batch boundaries, otherwise a batch's
+        // remaining episodes (collected with pre-update params and logp)
+        // would silently train the next update off-policy. Among the valid
+        // sizes, prefer the E baked into the actor_fwd_batched artifact so
+        // the single-execution batched path actually engages.
+        let cadence = cfg.rl.update_every.max(1);
+        let want = cfg.rl.rollout_envs.max(1);
+        let art_e = manifest.net.rollout_envs;
+        let n_envs = if art_e > 1 && art_e <= want && cadence % art_e == 0 {
+            art_e
+        } else {
+            largest_divisor_at_most(cadence, want)
+        };
+        if n_envs == art_e {
+            // only the trainer pays for the batched executable
+            policy.preload_batched(rt, manifest)?;
+        } else if manifest.actor_fwd_batched.is_some() && art_e > 1 && want >= art_e {
+            // batching was wanted but could not engage (a deliberately
+            // smaller --rollout-envs is not worth a warning)
+            eprintln!(
+                "note: actor_fwd_batched is built for E={art_e} but the \
+                 effective rollout batch is {n_envs} (rollout_envs={want}, \
+                 update_every={cadence}); rollouts fall back to one \
+                 execution per env — rebuild artifacts or align the config \
+                 to restore batched amortization"
+            );
+        }
+        let envs = VecEnv::new(SimConfig::from_env(&cfg.env), n_envs, cfg.rl.seed);
         let rng = Rng::new(cfg.rl.seed ^ 0xC0FFEE);
         anyhow::ensure!(
             cfg.env.n_nodes == n,
@@ -99,11 +138,13 @@ impl<'rt> Trainer<'rt> {
             critic_exe,
             train_exe,
             mask,
-            sim,
+            envs,
             buffer: ReplayBuffer::new(),
             rng,
             actor_dev: Vec::new(),
             critic_dev: Vec::new(),
+            obs_scratch: Vec::new(),
+            mb_scratch: Minibatch::default(),
         };
         trainer.refresh_device_params()?;
         Ok(trainer)
@@ -113,13 +154,20 @@ impl<'rt> Trainer<'rt> {
     /// Goes through host vectors: uploading literals that came out of
     /// `decompose_tuple` via `buffer_from_host_literal` segfaults in the
     /// C++ layer (missing layout), while raw host data is always safe.
+    /// The host vectors come from the store's leaf cache, so leaves whose
+    /// host copy is already known (initial blob, or a prior decompose
+    /// since the last update) skip the `Literal -> Vec<f32>` round-trip.
     fn refresh_device_params(&mut self) -> Result<()> {
+        self.store.ensure_host_cache()?;
         let n_actor = self.store.n_actor_leaves;
         let mut actor = Vec::with_capacity(n_actor);
         let mut critic = Vec::with_capacity(self.store.leaves.len() - n_actor);
-        for (leaf, lit) in self.store.leaves.iter().zip(self.store.params.iter()) {
-            let host = to_vec_f32(lit)?;
-            let buf = self.rt.buffer_f32(&host, &leaf.shape)?;
+        for (i, leaf) in self.store.leaves.iter().enumerate() {
+            let host = self
+                .store
+                .cached_host(i)
+                .expect("ensure_host_cache just filled every leaf");
+            let buf = self.rt.buffer_f32(host, &leaf.shape)?;
             if actor.len() < n_actor {
                 actor.push(buf);
             } else {
@@ -138,27 +186,43 @@ impl<'rt> Trainer<'rt> {
         mut progress: impl FnMut(usize, f64),
     ) -> Result<TrainOutcome> {
         let t0 = Instant::now();
-        let mut episode_rewards = Vec::with_capacity(self.cfg.rl.episodes);
-        let mut episode_metrics = Vec::with_capacity(self.cfg.rl.episodes);
+        let total = self.cfg.rl.episodes;
+        let update_every = self.cfg.rl.update_every.max(1);
+        let mut episode_rewards = Vec::with_capacity(total);
+        let mut episode_metrics = Vec::with_capacity(total);
         let mut updates = Vec::new();
+        let mut since_update = 0usize;
 
-        for ep in 0..self.cfg.rl.episodes {
-            let (transitions, metrics) = self.rollout(ep as u64)?;
-            for t in transitions {
-                self.buffer.push(t);
-            }
-            episode_rewards.push(metrics.total_reward);
-            progress(ep, metrics.total_reward);
-            episode_metrics.push(metrics);
+        let mut ep = 0usize;
+        while ep < total {
+            let count = self.envs.n_envs().min(total - ep);
+            let (batch_transitions, batch_metrics) = self.rollout_batch(ep, count)?;
+            for (k, (transitions, metrics)) in batch_transitions
+                .into_iter()
+                .zip(batch_metrics)
+                .enumerate()
+            {
+                for t in transitions {
+                    self.buffer.push(t);
+                }
+                episode_rewards.push(metrics.total_reward);
+                progress(ep + k, metrics.total_reward);
+                episode_metrics.push(metrics);
+                since_update += 1;
 
-            if (ep + 1) % self.cfg.rl.update_every == 0 {
-                // linear lr anneal to 10% over the run (stabilizes the tail)
-                let progress = (ep + 1) as f64 / self.cfg.rl.episodes as f64;
-                let lr = self.cfg.rl.lr * (1.0 - 0.9 * progress);
-                let m = self.update_phase(ep, lr)?;
-                updates.push(m);
-                self.buffer.clear();
+                if since_update >= update_every {
+                    let done = ep + k;
+                    // linear lr anneal to 10% over the run (stabilizes the
+                    // tail)
+                    let frac = (done + 1) as f64 / total as f64;
+                    let lr = self.cfg.rl.lr * (1.0 - 0.9 * frac);
+                    let m = self.update_phase(done, lr)?;
+                    updates.push(m);
+                    self.buffer.clear();
+                    since_update = 0;
+                }
             }
+            ep += count;
         }
 
         Ok(TrainOutcome {
@@ -170,61 +234,93 @@ impl<'rt> Trainer<'rt> {
         })
     }
 
-    /// Collect one episode of transitions (Algorithm 1 lines 4–13).
-    fn rollout(&mut self, episode: u64) -> Result<(Vec<Transition>, EpisodeMetrics)> {
+    /// Collect `count` episodes in lockstep across the VecEnv (Algorithm 1
+    /// lines 4–13, batched): every slot is one `actor_fwd` execution over
+    /// all active envs. Returns per-env transitions and metrics in episode
+    /// order (`first_episode + e` for env `e`).
+    fn rollout_batch(
+        &mut self,
+        first_episode: usize,
+        count: usize,
+    ) -> Result<(Vec<Vec<Transition>>, Vec<EpisodeMetrics>)> {
         let n = self.policy.n_agents;
+        let d = self.policy.obs_dim;
         let t_len = self.cfg.env.episode_len;
         let scale = self.cfg.rl.reward_scale;
-        self.sim.reset(self.cfg.rl.seed.wrapping_mul(0x10001).wrapping_add(episode));
-
-        let mut obs_seq: Vec<Vec<f32>> = Vec::with_capacity(t_len + 1);
-        let mut actions_seq: Vec<Vec<i32>> = Vec::with_capacity(t_len);
-        let mut logp_seq: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        let mut rewards: Vec<Vec<f64>> = Vec::with_capacity(t_len);
-        let mut metrics = EpisodeMetrics::new(n);
-
-        let mut obs = self.sim.observations_flat();
-        for _ in 0..t_len {
-            let (actions, joint_logp) =
-                self.policy.act_with(&self.actor_dev, &obs, &mut self.rng, false)?;
-            let out = self.sim.step(&actions);
-            metrics.absorb(&out);
-
-            let r_row: Vec<f64> = if self.cfg.rl.shared_reward {
-                vec![out.shared_reward * scale; n]
-            } else {
-                out.node_rewards.iter().map(|r| r * scale).collect()
-            };
-            obs_seq.push(obs);
-            actions_seq.push(
-                actions
-                    .iter()
-                    .flat_map(|a| {
-                        [a.edge as i32, a.model as i32, a.res as i32]
-                    })
-                    .collect(),
-            );
-            logp_seq.push(joint_logp);
-            rewards.push(r_row);
-            obs = self.sim.observations_flat();
+        for e in 0..count {
+            let ep = (first_episode + e) as u64;
+            self.envs
+                .reset(e, self.cfg.rl.seed.wrapping_mul(0x10001).wrapping_add(ep));
         }
-        obs_seq.push(obs); // bootstrap observation
 
-        // critic values for all T+1 states
-        let values = self.values(&obs_seq)?;
-        let adv = gae(&rewards, &values, self.cfg.rl.gamma, self.cfg.rl.gae_lambda);
-        let rtg = reward_to_go(&rewards, &values[t_len], self.cfg.rl.gamma);
+        let mut obs_seq: Vec<Vec<Vec<f32>>> =
+            (0..count).map(|_| Vec::with_capacity(t_len + 1)).collect();
+        let mut actions_seq: Vec<Vec<Vec<i32>>> =
+            (0..count).map(|_| Vec::with_capacity(t_len)).collect();
+        let mut logp_seq: Vec<Vec<Vec<f32>>> =
+            (0..count).map(|_| Vec::with_capacity(t_len)).collect();
+        let mut rewards: Vec<Vec<Vec<f64>>> =
+            (0..count).map(|_| Vec::with_capacity(t_len)).collect();
+        let mut metrics: Vec<EpisodeMetrics> =
+            (0..count).map(|_| EpisodeMetrics::new(n)).collect();
 
-        let mut transitions = Vec::with_capacity(t_len);
-        for t in 0..t_len {
-            transitions.push(Transition {
-                obs: obs_seq[t].clone(),
-                actions: actions_seq[t].clone(),
-                logp: logp_seq[t].clone(),
-                adv: adv[t].iter().map(|&x| x as f32).collect(),
-                ret: rtg[t].iter().map(|&x| x as f32).collect(),
-                val: values[t].iter().map(|&x| x as f32).collect(),
-            });
+        self.envs.observations_into(count, &mut self.obs_scratch);
+        for _ in 0..t_len {
+            let (actions, joint) = self.policy.act_batch_with(
+                &self.actor_dev,
+                &self.obs_scratch,
+                count,
+                &mut self.rng,
+                false,
+            )?;
+            let outs = self.envs.step(&actions);
+            for e in 0..count {
+                let out = &outs[e];
+                metrics[e].absorb(out);
+                let r_row: Vec<f64> = if self.cfg.rl.shared_reward {
+                    vec![out.shared_reward * scale; n]
+                } else {
+                    out.node_rewards.iter().map(|r| r * scale).collect()
+                };
+                rewards[e].push(r_row);
+                obs_seq[e]
+                    .push(self.obs_scratch[e * n * d..(e + 1) * n * d].to_vec());
+                actions_seq[e].push(
+                    actions[e * n..(e + 1) * n]
+                        .iter()
+                        .flat_map(|a| {
+                            [a.edge as i32, a.model as i32, a.res as i32]
+                        })
+                        .collect(),
+                );
+                logp_seq[e].push(joint[e * n..(e + 1) * n].to_vec());
+            }
+            self.envs.observations_into(count, &mut self.obs_scratch);
+        }
+        for (e, seq) in obs_seq.iter_mut().enumerate() {
+            // bootstrap observation
+            seq.push(self.obs_scratch[e * n * d..(e + 1) * n * d].to_vec());
+        }
+
+        let mut transitions: Vec<Vec<Transition>> = Vec::with_capacity(count);
+        for e in 0..count {
+            // critic values for all T+1 states of this episode
+            let values = self.values(&obs_seq[e])?;
+            let adv =
+                gae(&rewards[e], &values, self.cfg.rl.gamma, self.cfg.rl.gae_lambda);
+            let rtg = reward_to_go(&rewards[e], &values[t_len], self.cfg.rl.gamma);
+            let mut episode = Vec::with_capacity(t_len);
+            for t in 0..t_len {
+                episode.push(Transition {
+                    obs: std::mem::take(&mut obs_seq[e][t]),
+                    actions: std::mem::take(&mut actions_seq[e][t]),
+                    logp: std::mem::take(&mut logp_seq[e][t]),
+                    adv: adv[t].iter().map(|&x| x as f32).collect(),
+                    ret: rtg[t].iter().map(|&x| x as f32).collect(),
+                    val: values[t].iter().map(|&x| x as f32).collect(),
+                });
+            }
+            transitions.push(episode);
         }
         Ok((transitions, metrics))
     }
@@ -251,7 +347,7 @@ impl<'rt> Trainer<'rt> {
             inputs.extend(self.critic_dev.iter());
             inputs.push(&obs_buf);
             let outs = self.critic_exe.run_b(&inputs)?;
-            let vals = to_vec_f32(&outs[0])?; // [bc, n]
+            let vals = crate::runtime::to_vec_f32(&outs[0])?; // [bc, n]
             for b in 0..take {
                 out.push(
                     (0..n).map(|i| vals[b * n + i] as f64).collect::<Vec<_>>(),
@@ -271,7 +367,8 @@ impl<'rt> Trainer<'rt> {
         let mut acc = [0.0f32; 8];
         let j = self.cfg.rl.minibatches;
         for _ in 0..j {
-            let mb = self.buffer.sample(b, &mut self.rng);
+            self.buffer.sample_into(b, &mut self.rng, &mut self.mb_scratch);
+            let mb = &self.mb_scratch;
             let obs = lit_f32(&mb.obs, &[b, n, d])?;
             let actions = lit_i32(&mb.actions, &[b, n, 3])?;
             let logp = lit_f32(&mb.logp, &[b, n])?;
@@ -314,6 +411,18 @@ impl<'rt> Trainer<'rt> {
             grad_norm: acc[7],
         })
     }
+}
+
+/// Largest divisor of `n` that is <= `cap` (>= 1 for n, cap >= 1). Keeps
+/// the rollout batch aligned to the update cadence.
+fn largest_divisor_at_most(n: usize, cap: usize) -> usize {
+    let mut best = 1;
+    for d in 1..=cap.min(n) {
+        if n % d == 0 {
+            best = d;
+        }
+    }
+    best
 }
 
 fn build_mask_literal(n: usize, local_only: bool) -> Result<Literal> {

@@ -35,6 +35,9 @@ pub struct NetDims {
     pub heads: usize,
     pub minibatch: usize,
     pub critic_batch: usize,
+    /// Env count E baked into the `actor_fwd_batched` lowering (1 when the
+    /// artifact set predates batched rollouts).
+    pub rollout_envs: usize,
 }
 
 /// Artifacts + parameter layout for one critic variant.
@@ -75,6 +78,9 @@ pub struct Manifest {
     pub res_order: Vec<usize>,
     pub model_names: Vec<String>,
     pub actor_fwd: String,
+    /// Batched rollout lowering of the actor (input `[E, N, obs_dim]`),
+    /// absent in artifact sets built before batched rollouts existed.
+    pub actor_fwd_batched: Option<String>,
     pub actor_params: Vec<LeafSpec>,
     pub variants: BTreeMap<String, VariantSpec>,
     pub zoo: Vec<ZooEntry>,
@@ -118,6 +124,10 @@ impl Manifest {
             heads: net.get("heads")?.as_usize()?,
             minibatch: net.get("minibatch")?.as_usize()?,
             critic_batch: net.get("critic_batch")?.as_usize()?,
+            rollout_envs: match net.opt("rollout_envs") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
         };
 
         let mut variants = BTreeMap::new();
@@ -188,6 +198,10 @@ impl Manifest {
                 .map(|m| Ok(m.as_str()?.to_string()))
                 .collect::<Result<_>>()?,
             actor_fwd: j.get("actor_fwd")?.as_str()?.to_string(),
+            actor_fwd_batched: match j.opt("actor_fwd_batched") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            },
             actor_params: leaf_list(j.get("actor_params")?)?,
             variants,
             zoo,

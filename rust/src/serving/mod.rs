@@ -2,11 +2,18 @@
 //! frames, real Pallas-resize preprocessing and detector-zoo inference
 //! executed through PJRT, policy-driven routing over the virtual-time edge
 //! cluster, and latency/throughput reporting.
+//!
+//! The PJRT-backed server and detector zoo sit behind the `pjrt` cargo
+//! feature; the synthetic frame source is pure Rust and always available.
 
 pub mod frames;
+#[cfg(feature = "pjrt")]
 pub mod server;
+#[cfg(feature = "pjrt")]
 pub mod zoo;
 
 pub use frames::FrameSource;
+#[cfg(feature = "pjrt")]
 pub use server::{run_serving, ServingOptions, ServingReport};
+#[cfg(feature = "pjrt")]
 pub use zoo::ModelZoo;

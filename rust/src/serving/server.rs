@@ -94,16 +94,18 @@ struct ActorServingPolicy {
     greedy: bool,
     cache_t: f64,
     cache: Vec<Action>,
+    obs_scratch: Vec<f32>,
 }
 
 impl ServingPolicy for ActorServingPolicy {
     fn decide(&mut self, cluster: &EdgeCluster, node: usize) -> Result<Action> {
         if cluster.now() != self.cache_t || self.cache.is_empty() {
-            let mut obs = Vec::new();
+            self.obs_scratch.clear();
             for i in 0..cluster.n_nodes {
-                obs.extend(cluster.observation(i));
+                cluster.observation_into(i, &mut self.obs_scratch);
             }
-            let (actions, _) = self.policy.act(&obs, &mut self.rng, self.greedy)?;
+            let (actions, _) =
+                self.policy.act(&self.obs_scratch, &mut self.rng, self.greedy)?;
             self.cache = actions;
             self.cache_t = cluster.now();
         }
@@ -210,6 +212,7 @@ pub fn run_serving(
             greedy: opts.greedy,
             cache_t: -1.0,
             cache: Vec::new(),
+            obs_scratch: Vec::new(),
         }),
         None => Box::new(ShortestQueuePolicy),
     };

@@ -1,9 +1,15 @@
 //! Micro-bench harness (substrate — criterion is not in the offline vendor
-//! set): warmup + timed iterations with mean/p50/p95 reporting, and a
-//! throughput variant. Used by every `rust/benches/*.rs` target.
+//! set): warmup + timed iterations with mean/p50/p95 reporting, a
+//! throughput variant, and machine-readable provenance: a [`BenchReport`]
+//! collects every target's numbers and emits `BENCH_<name>.json`, folding
+//! in the previous run's means as a before/after delta so each bench
+//! invocation records its own point on the perf trajectory. Used by every
+//! `rust/benches/*.rs` target.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::percentile;
 
 pub struct BenchResult {
@@ -21,6 +27,21 @@ impl BenchResult {
             self.name, self.iters, self.mean, self.p50, self.p95
         );
     }
+}
+
+/// Global iteration multiplier from the `EDGEVISION_BENCH_SCALE` env var
+/// (e.g. `0.02` for a CI smoke run). Defaults to 1.0.
+pub fn iter_scale() -> f64 {
+    std::env::var("EDGEVISION_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|s| *s > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Apply [`iter_scale`] to an iteration count (never below 1).
+pub fn scaled(iters: usize) -> usize {
+    ((iters as f64 * iter_scale()).round() as usize).max(1)
 }
 
 /// Run `f` for `iters` timed iterations (after `warmup` untimed ones).
@@ -55,4 +76,135 @@ pub fn report_rate(name: &str, ops: f64, elapsed: Duration) {
         ops as u64,
         elapsed
     );
+}
+
+/// Collects the results of one bench binary and writes
+/// `BENCH_<name>.json` with per-target name/iters/mean/p50/p95 (seconds).
+/// If a previous `BENCH_<name>.json` exists in the working directory, each
+/// matching target also records `prev_mean_secs` and `speedup_vs_prev`, so
+/// the emitted file pins the before/after delta of the run that produced
+/// it.
+pub struct BenchReport {
+    name: String,
+    results: Vec<BenchResult>,
+}
+
+impl BenchReport {
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchReport { name: name.into(), results: Vec::new() }
+    }
+
+    /// [`bench`] with `warmup`/`iters` scaled by `EDGEVISION_BENCH_SCALE`,
+    /// recording the result for [`BenchReport::write_json`].
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        let r = bench(name, scaled(warmup), scaled(iters), f);
+        self.results.push(r);
+    }
+
+    pub fn path(&self) -> PathBuf {
+        PathBuf::from(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write `BENCH_<name>.json` into the working directory.
+    pub fn write_json(&self) -> std::io::Result<PathBuf> {
+        self.write_json_in(".")
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`, reading any previous report
+    /// there for the before/after delta.
+    pub fn write_json_in(
+        &self,
+        dir: impl AsRef<std::path::Path>,
+    ) -> std::io::Result<PathBuf> {
+        let path = dir.as_ref().join(self.path());
+        let prev = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            // only compare runs measured at the same iteration scale: a
+            // smoke run (EDGEVISION_BENCH_SCALE << 1) against a full run
+            // would record iteration-count noise as a perf delta
+            .filter(|p| {
+                p.opt("scale")
+                    .and_then(|s| s.as_f64().ok())
+                    .is_some_and(|s| (s - iter_scale()).abs() < 1e-12)
+            });
+        let prev_mean = |name: &str| -> Option<f64> {
+            prev.as_ref()?
+                .opt("targets")?
+                .as_arr()
+                .ok()?
+                .iter()
+                .find(|t| {
+                    t.opt("name").and_then(|n| n.as_str().ok()) == Some(name)
+                })?
+                .opt("mean_secs")?
+                .as_f64()
+                .ok()
+        };
+        let targets: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mean_secs = r.mean.as_secs_f64();
+                let mut pairs = vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_secs", Json::num(mean_secs)),
+                    ("p50_secs", Json::num(r.p50.as_secs_f64())),
+                    ("p95_secs", Json::num(r.p95.as_secs_f64())),
+                ];
+                if let Some(pm) = prev_mean(&r.name) {
+                    pairs.push(("prev_mean_secs", Json::num(pm)));
+                    if mean_secs > 0.0 {
+                        pairs.push(("speedup_vs_prev", Json::num(pm / mean_secs)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("scale", Json::num(iter_scale())),
+            ("targets", Json::Arr(targets)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_never_zero() {
+        assert!(scaled(1) >= 1);
+        assert!(scaled(10_000) >= 1);
+    }
+
+    #[test]
+    fn report_json_roundtrips_with_delta() {
+        let dir = std::env::temp_dir().join("ev_bench_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut rep = BenchReport::new("unit_test");
+        rep.bench("noop", 1, 3, || {});
+        let path = rep.write_json_in(&dir).unwrap();
+        let first = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let t0 = &first.get("targets").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t0.get("name").unwrap().as_str().unwrap(), "noop");
+        assert!(t0.opt("prev_mean_secs").is_none());
+
+        // second run folds in the first run's mean as the baseline
+        let mut rep2 = BenchReport::new("unit_test");
+        rep2.bench("noop", 1, 3, || {});
+        rep2.write_json_in(&dir).unwrap();
+        let second = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let t0 = &second.get("targets").unwrap().as_arr().unwrap()[0];
+        assert!(t0.opt("prev_mean_secs").is_some());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -1,0 +1,240 @@
+//! Golden numerical-equivalence test for the optimized simulator core.
+//!
+//! `Simulator::step` went through a zero-allocation refactor (in-place
+//! retain scavenging, incremental backlog tallies, reusable outcome
+//! buffers) plus the corrected mid-slot bandwidth charging. This file
+//! keeps a straightforward, allocation-happy reference implementation of
+//! the exact same system-model semantics — the seed implementation's
+//! structure, with the bandwidth fix — and asserts the optimized core
+//! reproduces its per-slot `shared_reward` sequence bit for bit across
+//! seeds and action mixes. Any numerical drift introduced by a future
+//! "optimization" fails here, slot-indexed.
+
+use std::collections::VecDeque;
+
+use edgevision::config::EnvConfig;
+use edgevision::env::bandwidth::Bandwidth;
+use edgevision::env::workload::Workload;
+use edgevision::env::{Action, SimConfig, Simulator};
+
+struct RefReq {
+    model: usize,
+    res: usize,
+    arrival: f64,
+    ready: f64,
+    mbits_left: f64,
+}
+
+/// Naive reference simulator: same RNG streams, same arithmetic, fresh
+/// allocations everywhere, no incremental state.
+struct RefSim {
+    cfg: SimConfig,
+    workload: Workload,
+    bandwidth: Bandwidth,
+    task: Vec<VecDeque<RefReq>>,
+    disp: Vec<VecDeque<RefReq>>,
+    gpu: Vec<f64>,
+    now: f64,
+}
+
+impl RefSim {
+    fn new(cfg: SimConfig, seed: u64) -> Self {
+        let n = cfg.n_nodes;
+        RefSim {
+            workload: Workload::new(cfg.workload.clone(), seed),
+            bandwidth: Bandwidth::new(cfg.bandwidth.clone(), seed.wrapping_add(1)),
+            task: (0..n).map(|_| VecDeque::new()).collect(),
+            disp: (0..n * n).map(|_| VecDeque::new()).collect(),
+            gpu: vec![0.0; n],
+            now: 0.0,
+            cfg,
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.task.iter().map(|q| q.len()).sum::<usize>()
+            + self.disp.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// One slot; returns (shared_reward, finished count).
+    fn step(&mut self, actions: &[Action]) -> (f64, usize) {
+        let n = self.cfg.n_nodes;
+        let t0 = self.now;
+        let t1 = t0 + self.cfg.slot_secs;
+
+        self.bandwidth.step();
+        let (_rates, counts) = self.workload.step();
+
+        // (node, perf) per finished request, in the optimized core's order
+        let mut finished: Vec<(usize, f64)> = Vec::new();
+        let drop_perf = -self.cfg.omega * self.cfg.drop_penalty;
+
+        // 1. arrivals
+        for i in 0..n {
+            let a = actions[i];
+            for k in 0..counts[i] {
+                let arrival =
+                    t0 + self.cfg.slot_secs * (k as f64 + 0.5) / counts[i] as f64;
+                let ready = arrival + self.cfg.profiles.preproc_delay[a.res];
+                let req = RefReq {
+                    model: a.model,
+                    res: a.res,
+                    arrival,
+                    ready,
+                    mbits_left: self.cfg.profiles.frame_mbits[a.res],
+                };
+                if a.edge == i {
+                    self.task[i].push_back(req);
+                } else {
+                    self.disp[i * n + a.edge].push_back(req);
+                }
+            }
+        }
+
+        // 2. drain links; charging starts at max(t0, ready)
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let bw = self.bandwidth.get(i, j);
+                let mut cursor = t0;
+                loop {
+                    let (ready, mbits_left) = match self.disp[i * n + j].front() {
+                        Some(h) => (h.ready, h.mbits_left),
+                        None => break,
+                    };
+                    if ready >= t1 {
+                        break;
+                    }
+                    let start = cursor.max(ready);
+                    let avail = (t1 - start) * bw;
+                    if mbits_left <= avail {
+                        let finish = start + mbits_left / bw;
+                        let mut req = self.disp[i * n + j].pop_front().unwrap();
+                        req.mbits_left = 0.0;
+                        req.ready = finish;
+                        cursor = finish;
+                        self.task[j].push_back(req);
+                    } else {
+                        self.disp[i * n + j].front_mut().unwrap().mbits_left -= avail;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 3. serve GPUs
+        for i in 0..n {
+            let mut cursor = self.gpu[i].max(t0);
+            while let Some(head) = self.task[i].front() {
+                let start = cursor.max(head.ready);
+                if start >= t1 {
+                    break;
+                }
+                let req = self.task[i].pop_front().unwrap();
+                let waited = start - req.arrival;
+                if waited > self.cfg.drop_threshold {
+                    finished.push((i, drop_perf));
+                    continue;
+                }
+                let infer = self.cfg.profiles.infer_delay_of(req.model, req.res);
+                let complete = start + infer;
+                let delay = complete - req.arrival;
+                if delay > self.cfg.drop_threshold {
+                    finished.push((i, drop_perf));
+                    cursor = complete;
+                    self.gpu[i] = complete;
+                    continue;
+                }
+                let acc = self.cfg.profiles.accuracy_of(req.model, req.res);
+                finished.push((i, acc - self.cfg.omega * delay));
+                cursor = complete;
+                self.gpu[i] = complete;
+            }
+        }
+
+        // 4. scavenge (rebuild-style, order-preserving)
+        for i in 0..n {
+            let mut kept = VecDeque::new();
+            while let Some(req) = self.task[i].pop_front() {
+                if t1 - req.arrival > self.cfg.drop_threshold {
+                    finished.push((i, drop_perf));
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            self.task[i] = kept;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let mut kept = VecDeque::new();
+                while let Some(req) = self.disp[i * n + j].pop_front() {
+                    if t1 - req.arrival > self.cfg.drop_threshold {
+                        finished.push((i, drop_perf));
+                    } else {
+                        kept.push_back(req);
+                    }
+                }
+                self.disp[i * n + j] = kept;
+            }
+        }
+
+        // 5. rewards, accumulated exactly like the optimized core
+        let mut node_rewards = vec![0.0f64; n];
+        for (node, perf) in &finished {
+            node_rewards[*node] += perf;
+        }
+        let shared: f64 = node_rewards.iter().sum();
+
+        self.now = t1;
+        (shared, finished.len())
+    }
+}
+
+fn run_comparison(seed: u64, slots: usize, actions_of: impl Fn(usize) -> Vec<Action>) {
+    let cfg = SimConfig::from_env(&EnvConfig::default());
+    let mut sim = Simulator::new(cfg.clone(), seed);
+    let mut oracle = RefSim::new(cfg, seed);
+    for t in 0..slots {
+        let acts = actions_of(t);
+        let out = sim.step(&acts);
+        let (reward, fin) = oracle.step(&acts);
+        assert_eq!(
+            out.shared_reward.to_bits(),
+            reward.to_bits(),
+            "seed {seed} slot {t}: optimized {} vs reference {reward}",
+            out.shared_reward
+        );
+        assert_eq!(out.finished.len(), fin, "seed {seed} slot {t}");
+    }
+    assert_eq!(sim.in_flight(), oracle.in_flight(), "seed {seed}");
+}
+
+#[test]
+fn golden_mixed_actions_match_reference() {
+    for seed in [1u64, 7, 23, 101] {
+        run_comparison(seed, 300, |t| {
+            (0..4)
+                .map(|i| Action::new((i + t) % 4, t % 4, (t + i) % 5))
+                .collect()
+        });
+    }
+}
+
+#[test]
+fn golden_all_local_matches_reference() {
+    run_comparison(5, 250, |_| {
+        (0..4).map(|i| Action::new(i, 1, 1)).collect()
+    });
+}
+
+#[test]
+fn golden_heavy_dispatch_matches_reference() {
+    // everything funnels to node 0: exercises the transfer path, remote
+    // queue buildup and the dispatch-queue scavenger
+    run_comparison(13, 250, |t| {
+        (0..4).map(|_| Action::new(0, 3, t % 5)).collect()
+    });
+}

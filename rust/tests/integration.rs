@@ -1,7 +1,8 @@
 //! Integration tests over the real AOT artifacts: the full
 //! manifest -> PJRT -> actor/critic/train_step/zoo pipeline.
 //! These require `make artifacts` to have run (the Makefile test target
-//! guarantees it).
+//! guarantees it) and the `pjrt` cargo feature (the xla crate).
+#![cfg(feature = "pjrt")]
 
 use edgevision::config::Config;
 use edgevision::env::SimConfig;

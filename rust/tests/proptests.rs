@@ -6,7 +6,7 @@
 use edgevision::config::EnvConfig;
 use edgevision::coordinator::{Batcher, Router, TransferScheduler};
 use edgevision::env::request::Outcome;
-use edgevision::env::{Action, SimConfig, Simulator};
+use edgevision::env::{Action, SimConfig, Simulator, VecEnv};
 use edgevision::rl::gae::{gae, gae_reference, reward_to_go};
 use edgevision::util::json::Json;
 use edgevision::util::rng::Rng;
@@ -258,6 +258,63 @@ fn prop_json_roundtrip() {
         let text = v.to_string_pretty();
         let re = Json::parse(&text).unwrap();
         assert_eq!(v, re);
+    });
+}
+
+#[test]
+fn prop_backlog_counter_equals_recompute() {
+    // the incremental (model, res) backlog tally behind the O(1)
+    // queue_delay_estimate must always equal the recomputed-from-scratch
+    // sum over the live queue — bit for bit, at every node, after any
+    // action stream
+    forall(25, |rng| {
+        let mut env = EnvConfig::default();
+        env.omega = [0.2, 1.0, 5.0, 15.0][rng.below(4)];
+        let mut sim = Simulator::new(SimConfig::from_env(&env), rng.next_u64());
+        let steps = 60 + rng.below(120);
+        for _ in 0..steps {
+            sim.step(&random_actions(rng, 4));
+            for i in 0..4 {
+                let inc = sim.queue_backlog_secs(i);
+                let oracle = sim.queue_backlog_recomputed(i);
+                assert!(
+                    inc.to_bits() == oracle.to_bits(),
+                    "node {i}: incremental {inc} != recomputed {oracle}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_vecenv_bit_identical_to_solo_sims() {
+    // a VecEnv of E >= 4 must be indistinguishable from E standalone
+    // simulators fed the same seeds and action slices
+    forall(10, |rng| {
+        let cfg = SimConfig::from_env(&EnvConfig::default());
+        let e = 4 + rng.below(3);
+        let base = rng.next_u64();
+        let mut venv = VecEnv::new(cfg.clone(), e, base);
+        let mut solo: Vec<Simulator> = (0..e)
+            .map(|k| Simulator::new(cfg.clone(), base.wrapping_add(k as u64)))
+            .collect();
+        for _ in 0..60 {
+            let actions: Vec<Action> = (0..e * 4)
+                .map(|_| Action::new(rng.below(4), rng.below(4), rng.below(5)))
+                .collect();
+            let outs = venv.step(&actions);
+            for (k, s) in solo.iter_mut().enumerate() {
+                let o = s.step(&actions[k * 4..(k + 1) * 4]);
+                assert!(
+                    outs[k].shared_reward.to_bits() == o.shared_reward.to_bits(),
+                    "env {k}: {} vs {}",
+                    outs[k].shared_reward,
+                    o.shared_reward
+                );
+                assert_eq!(outs[k].finished.len(), o.finished.len());
+                assert_eq!(outs[k].arrivals, o.arrivals);
+            }
+        }
     });
 }
 
