@@ -42,6 +42,8 @@ fn main() -> Result<()> {
         drop_deadline: cfg.env.drop_threshold,
         seed: args.u64_or("seed", 0)?,
         greedy: true,
+        max_batch: args.u64_or("max-batch", 8)? as usize,
+        batch_wait: args.f64_or("batch-wait", 0.004)?,
     };
     println!(
         "serving {}s of virtual time on {} edge nodes with REAL PJRT inference...",

@@ -70,19 +70,24 @@ fn main() {
     });
 
     let mut batcher = Batcher::new(4, 5, 8, 0.05);
+    let mut batch_buf: Vec<u64> = Vec::new();
     let mut id = 0u64;
-    report.bench("batcher::push+poll", 1000, 100_000, || {
-        batcher.push((id % 4) as usize, (id % 5) as usize, id, id as f64 * 1e-4);
-        batcher.poll(id as f64 * 1e-4);
+    report.bench("batcher::offer+pop_ready", 1000, 100_000, || {
+        let now = id as f64 * 1e-4;
+        batcher.offer((id % 4) as usize, (id % 5) as usize, id, now);
+        while batcher.pop_ready_into(now, &mut batch_buf).is_some() {
+            std::hint::black_box(batch_buf.len());
+        }
         id += 1;
     });
 
     let mut ts = TransferScheduler::new(4);
+    let mut done_buf: Vec<u64> = Vec::new();
     let mut t = 0.0f64;
     let mut tid = 0u64;
     report.bench("transfer_scheduler::schedule+complete", 1000, 100_000, || {
         ts.schedule(0, 1, tid, 0.5, 20.0, t);
-        ts.completed(t + 0.1);
+        ts.completed_into(t + 0.1, &mut done_buf);
         t += 0.01;
         tid += 1;
     });

@@ -1,28 +1,70 @@
-//! Serving-path bench: end-to-end virtual-time serving with real PJRT
-//! inference (Pallas preprocess + detector zoo). Reports completed
-//! requests/sec of virtual time and the real wall-clock cost per request —
-//! the headline numbers a serving deployment cares about.
+//! Serving-path bench: the virtual-time serving engine end to end.
+//!
+//! Always benches the dep-free engine (shortest-queue policy over the
+//! profile tables — the event loop, batcher and GPU service model are the
+//! code under test) and emits `BENCH_serving.json` with the same prev-run
+//! speedup provenance as `BENCH_env_step.json`. With the `pjrt` feature
+//! and built artifacts it additionally runs real PJRT inference (Pallas
+//! preprocess + detector zoo) and reports the wall-clock cost per request.
 
-use std::time::Instant;
-
-use edgevision::config::Config;
-use edgevision::runtime::{Manifest, Runtime};
-use edgevision::serving::{run_serving, ServingOptions};
+use edgevision::serving::{run_profile_serving, ServingOptions};
+use edgevision::util::bench::BenchReport;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = Config::default();
-    let manifest = Manifest::load(&cfg.paths.artifacts)?;
-    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+    let mut rep = BenchReport::new("serving");
 
     let opts = ServingOptions {
         n_nodes: 4,
         duration_virtual_secs: 20.0,
         drop_deadline: 1.5,
         seed: 0,
-        greedy: true,
+        ..Default::default()
     };
+
+    // headline report from one run (batch formation, conservation, drops)
+    let report = run_profile_serving(&opts)?;
+    report.print();
+    anyhow::ensure!(report.conserved(), "request accounting leaked");
+
+    // engine throughput: virtual-time serving with profile-table compute
+    rep.bench("serving_engine::profile (4 nodes, 20s virtual)", 2, 30, || {
+        run_profile_serving(&opts).unwrap();
+    });
+    let unbatched = ServingOptions { max_batch: 1, ..opts.clone() };
+    rep.bench("serving_engine::profile (max_batch=1)", 2, 30, || {
+        run_profile_serving(&unbatched).unwrap();
+    });
+
+    #[cfg(feature = "pjrt")]
+    real_pjrt_bench(&opts, &mut rep)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt feature off: skipping real-inference serving bench)");
+
+    rep.write_json()?;
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn real_pjrt_bench(
+    opts: &ServingOptions,
+    rep: &mut BenchReport,
+) -> anyhow::Result<()> {
+    use std::time::Instant;
+
+    use edgevision::config::Config;
+    use edgevision::runtime::{Manifest, Runtime};
+    use edgevision::serving::run_serving;
+
+    let cfg = Config::default();
+    if !std::path::Path::new(&cfg.paths.artifacts).join("manifest.json").exists() {
+        println!("(artifacts missing: skipping real-inference serving bench)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&cfg.paths.artifacts)?;
+    let rt = Runtime::new(cfg.paths.artifacts.clone())?;
+
     let t0 = Instant::now();
-    let report = run_serving(&rt, &manifest, None, &opts)?;
+    let report = run_serving(&rt, &manifest, None, opts)?;
     let wall = t0.elapsed();
     report.print();
     println!(
@@ -32,5 +74,8 @@ fn main() -> anyhow::Result<()> {
         opts.duration_virtual_secs / wall.as_secs_f64(),
         1e3 * wall.as_secs_f64() / report.total.max(1) as f64
     );
+    rep.bench("serving::real_pjrt (4 nodes, 20s virtual)", 0, 3, || {
+        run_serving(&rt, &manifest, None, opts).unwrap();
+    });
     Ok(())
 }

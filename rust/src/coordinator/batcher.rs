@@ -2,20 +2,16 @@
 //! so the serving engine amortizes executable dispatch overhead, with a
 //! max-batch bound and a max-wait deadline (vLLM-style continuous
 //! batching, adapted to per-(m,v) executables).
+//!
+//! Pull-based: producers [`Batcher::offer`] ready frames into lanes; the
+//! GPU pulls the oldest ready lane with [`Batcher::pop_ready_into`]
+//! whenever it is free. The batcher never decides *when* work executes —
+//! only *what* runs together (a ready lane, FIFO order).
 
 use std::collections::VecDeque;
 
 /// An opaque work item id grouped by the batcher.
 pub type ItemId = u64;
-
-#[derive(Debug, Clone)]
-pub struct Batch {
-    pub model: usize,
-    pub res: usize,
-    pub items: Vec<ItemId>,
-    /// Virtual time the oldest item entered the batcher.
-    pub oldest: f64,
-}
 
 #[derive(Debug, Clone)]
 struct Lane {
@@ -24,99 +20,90 @@ struct Lane {
     items: VecDeque<(ItemId, f64)>,
 }
 
-/// Groups items into per-(model, res) lanes; a lane flushes when it reaches
-/// `max_batch` items or its oldest item has waited `max_wait` (virtual
-/// seconds).
+/// Groups items into per-(model, res) lanes; a lane is ready to pull when
+/// it reaches `max_batch` items or its oldest item has waited `max_wait`
+/// (virtual seconds).
 #[derive(Debug, Clone)]
 pub struct Batcher {
     lanes: Vec<Lane>,
+    n_res: usize,
     max_batch: usize,
     max_wait: f64,
 }
 
 impl Batcher {
     pub fn new(n_models: usize, n_res: usize, max_batch: usize, max_wait: f64) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
         let mut lanes = Vec::with_capacity(n_models * n_res);
         for m in 0..n_models {
             for v in 0..n_res {
                 lanes.push(Lane { model: m, res: v, items: VecDeque::new() });
             }
         }
-        Batcher { lanes, max_batch, max_wait }
+        Batcher { lanes, n_res, max_batch, max_wait }
     }
 
     fn lane_mut(&mut self, model: usize, res: usize) -> &mut Lane {
-        let n_res = self.lanes.iter().filter(|l| l.model == 0).count();
-        &mut self.lanes[model * n_res + res]
+        &mut self.lanes[model * self.n_res + res]
     }
 
-    /// Add an item; returns a full batch if the lane hit `max_batch`.
-    pub fn push(
+    /// Add an item to its (model, res) lane. Full lanes stay in place
+    /// until the GPU pulls them with [`Batcher::pop_ready_into`].
+    pub fn offer(&mut self, model: usize, res: usize, id: ItemId, now: f64) {
+        self.lane_mut(model, res).items.push_back((id, now));
+    }
+
+    /// Pull the ready lane with the oldest head item into `out` (cleared
+    /// first; at most `max_batch` items), returning its `(model, res)`.
+    /// A lane is ready when it holds `max_batch` items or its oldest item
+    /// has waited `max_wait`. Reusable-buffer variant: zero allocations in
+    /// steady state, per the hot-path contract.
+    pub fn pop_ready_into(
         &mut self,
-        model: usize,
-        res: usize,
-        id: ItemId,
         now: f64,
-    ) -> Option<Batch> {
-        let max_batch = self.max_batch;
-        let lane = self.lane_mut(model, res);
-        lane.items.push_back((id, now));
-        if lane.items.len() >= max_batch {
-            return Self::drain_lane(lane, max_batch);
-        }
-        None
-    }
-
-    /// Flush lanes whose oldest item has exceeded the wait deadline.
-    pub fn poll(&mut self, now: f64) -> Vec<Batch> {
-        let max_batch = self.max_batch;
-        let max_wait = self.max_wait;
-        let mut out = Vec::new();
-        for lane in &mut self.lanes {
-            if let Some(&(_, oldest)) = lane.items.front() {
-                if now - oldest >= max_wait {
-                    if let Some(b) = Self::drain_lane(lane, max_batch) {
-                        out.push(b);
-                    }
-                }
+        out: &mut Vec<ItemId>,
+    ) -> Option<(usize, usize)> {
+        out.clear();
+        let mut pick: Option<(usize, f64)> = None;
+        for (idx, lane) in self.lanes.iter().enumerate() {
+            let Some(&(_, oldest)) = lane.items.front() else { continue };
+            // `now >= oldest + max_wait` must match `next_deadline`'s
+            // `oldest + max_wait` bit for bit: a deadline event fired at
+            // exactly that instant has to find the lane ready, or the
+            // event loop would re-arm the same instant forever.
+            let ready = lane.items.len() >= self.max_batch
+                || now >= oldest + self.max_wait;
+            if ready && pick.map_or(true, |(_, t)| oldest < t) {
+                pick = Some((idx, oldest));
             }
         }
-        out
+        let (idx, _) = pick?;
+        let lane = &mut self.lanes[idx];
+        let take = lane.items.len().min(self.max_batch);
+        out.extend(lane.items.drain(..take).map(|(id, _)| id));
+        Some((lane.model, lane.res))
     }
 
-    /// Flush everything (shutdown).
-    pub fn flush_all(&mut self) -> Vec<Batch> {
-        let max_batch = self.max_batch;
-        let mut out = Vec::new();
+    /// Discard everything still lanes-resident (end-of-run teardown; the
+    /// caller accounts the items as residual first). No allocations.
+    pub fn clear(&mut self) {
         for lane in &mut self.lanes {
-            while let Some(b) = Self::drain_lane(lane, max_batch) {
-                out.push(b);
-            }
+            lane.items.clear();
         }
-        out
     }
 
     pub fn pending(&self) -> usize {
         self.lanes.iter().map(|l| l.items.len()).sum()
     }
 
-    /// Earliest enqueue time across lanes (None when empty) — lets the
-    /// event loop schedule the next timeout poll precisely.
+    /// Earliest pull deadline across lanes (`oldest + max_wait`; None when
+    /// empty) — lets the event loop schedule the next timeout poll
+    /// precisely.
     pub fn next_deadline(&self) -> Option<f64> {
         self.lanes
             .iter()
             .filter_map(|l| l.items.front().map(|&(_, t)| t + self.max_wait))
             .min_by(|a, b| a.partial_cmp(b).unwrap())
-    }
-
-    fn drain_lane(lane: &mut Lane, max_batch: usize) -> Option<Batch> {
-        if lane.items.is_empty() {
-            return None;
-        }
-        let take = lane.items.len().min(max_batch);
-        let oldest = lane.items.front().unwrap().1;
-        let items = lane.items.drain(..take).map(|(id, _)| id).collect();
-        Some(Batch { model: lane.model, res: lane.res, items, oldest })
     }
 }
 
@@ -125,40 +112,44 @@ mod tests {
     use super::*;
 
     #[test]
-    fn flushes_on_max_batch() {
+    fn full_lane_is_ready_immediately() {
         let mut b = Batcher::new(4, 5, 3, 1.0);
-        assert!(b.push(1, 2, 10, 0.0).is_none());
-        assert!(b.push(1, 2, 11, 0.1).is_none());
-        let batch = b.push(1, 2, 12, 0.2).expect("full batch");
-        assert_eq!(batch.items, vec![10, 11, 12]);
-        assert_eq!(batch.model, 1);
-        assert_eq!(batch.res, 2);
+        b.offer(1, 2, 10, 0.0);
+        b.offer(1, 2, 11, 0.1);
+        let mut out = Vec::new();
+        assert_eq!(b.pop_ready_into(0.1, &mut out), None, "2 < max_batch, young");
+        b.offer(1, 2, 12, 0.2);
+        assert_eq!(b.pop_ready_into(0.2, &mut out), Some((1, 2)));
+        assert_eq!(out, vec![10, 11, 12]);
         assert_eq!(b.pending(), 0);
     }
 
     #[test]
-    fn flushes_on_timeout() {
+    fn lane_becomes_ready_at_wait_deadline() {
         let mut b = Batcher::new(4, 5, 8, 0.5);
-        b.push(0, 0, 1, 0.0);
-        b.push(3, 4, 2, 0.2);
-        assert!(b.poll(0.4).is_empty());
-        let batches = b.poll(0.55);
-        assert_eq!(batches.len(), 1); // only lane (0,0) is old enough
-        assert_eq!(batches[0].items, vec![1]);
-        let batches = b.poll(0.9);
-        assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].items, vec![2]);
+        b.offer(0, 0, 1, 0.0);
+        b.offer(3, 4, 2, 0.2);
+        let mut out = Vec::new();
+        assert_eq!(b.pop_ready_into(0.4, &mut out), None);
+        // only lane (0,0) is old enough at its exact deadline
+        assert_eq!(b.pop_ready_into(0.5, &mut out), Some((0, 0)));
+        assert_eq!(out, vec![1]);
+        assert_eq!(b.pop_ready_into(0.55, &mut out), None);
+        assert_eq!(b.pop_ready_into(0.7, &mut out), Some((3, 4)));
+        assert_eq!(out, vec![2]);
     }
 
     #[test]
     fn lanes_are_isolated() {
         let mut b = Batcher::new(2, 2, 2, 1.0);
-        b.push(0, 0, 1, 0.0);
-        b.push(0, 1, 2, 0.0);
-        b.push(1, 0, 3, 0.0);
+        b.offer(0, 0, 1, 0.0);
+        b.offer(0, 1, 2, 0.0);
+        b.offer(1, 0, 3, 0.0);
         assert_eq!(b.pending(), 3);
-        let full = b.push(0, 0, 4, 0.1).unwrap();
-        assert_eq!(full.items, vec![1, 4]);
+        b.offer(0, 0, 4, 0.1);
+        let mut out = Vec::new();
+        assert_eq!(b.pop_ready_into(0.1, &mut out), Some((0, 0)));
+        assert_eq!(out, vec![1, 4]);
         assert_eq!(b.pending(), 2);
     }
 
@@ -166,19 +157,52 @@ mod tests {
     fn next_deadline_tracks_oldest() {
         let mut b = Batcher::new(1, 1, 10, 0.5);
         assert!(b.next_deadline().is_none());
-        b.push(0, 0, 1, 2.0);
+        b.offer(0, 0, 1, 2.0);
         assert_eq!(b.next_deadline(), Some(2.5));
+        // fired exactly at the armed deadline, the lane must be ready
+        let mut out = Vec::new();
+        assert_eq!(b.pop_ready_into(2.5, &mut out), Some((0, 0)));
     }
 
     #[test]
-    fn flush_all_drains_everything() {
+    fn pop_ready_prefers_oldest_ready_lane() {
+        let mut b = Batcher::new(2, 2, 2, 0.5);
+        b.offer(0, 0, 1, 0.0);
+        b.offer(1, 1, 2, 0.1);
+        b.offer(1, 1, 3, 0.2); // lane (1,1) is full
+        let mut out = Vec::new();
+        // at t=0.3 only (1,1) is ready (full); (0,0) has waited < max_wait
+        assert_eq!(b.pop_ready_into(0.3, &mut out), Some((1, 1)));
+        assert_eq!(out, vec![2, 3]);
+        assert_eq!(b.pop_ready_into(0.3, &mut out), None);
+        assert!(out.is_empty());
+        // past the wait deadline the (0,0) singleton flushes
+        assert_eq!(b.pop_ready_into(0.6, &mut out), Some((0, 0)));
+        assert_eq!(out, vec![1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn pop_ready_caps_at_max_batch() {
+        let mut b = Batcher::new(1, 1, 3, 0.0);
+        for i in 0..7 {
+            b.offer(0, 0, i, 0.0);
+        }
+        let mut out = Vec::new();
+        assert_eq!(b.pop_ready_into(0.0, &mut out), Some((0, 0)));
+        assert_eq!(out, vec![0, 1, 2]);
+        assert_eq!(b.pending(), 4);
+    }
+
+    #[test]
+    fn clear_drops_everything() {
         let mut b = Batcher::new(2, 2, 10, 1.0);
         for i in 0..7 {
-            b.push((i % 2) as usize, 0, i, 0.0);
+            b.offer((i % 2) as usize, 0, i, 0.0);
         }
-        let batches = b.flush_all();
-        let total: usize = batches.iter().map(|x| x.items.len()).sum();
-        assert_eq!(total, 7);
+        assert_eq!(b.pending(), 7);
+        b.clear();
         assert_eq!(b.pending(), 0);
+        assert!(b.next_deadline().is_none());
     }
 }

@@ -5,18 +5,37 @@
 //! the online serving runtime drives it with **measured wall-clock PJRT
 //! executions** of the detector-zoo artifacts (real tensor compute on the
 //! request path).
+//!
+//! GPU service model: each node's GPU is a serial resource. Frames that
+//! finish preprocessing (or arrive over a link) are *offered* to the node's
+//! per-(model, res) [`Batcher`]; the GPU pulls a ready batch whenever it is
+//! free — a lane is ready when it is full (`max_batch`) or its oldest frame
+//! has waited `batch_wait`. `gpu_busy` is set when a batch starts executing
+//! and cleared **only** by the matching [`Event::GpuDone`] completion, so
+//! no two service intervals on one node can ever overlap (pinned by
+//! `prop_gpu_mutual_exclusion`). Every emitted request is accounted:
+//! `emitted == completed + dropped + residual` (pinned by
+//! `prop_serving_conservation`), where residual counts requests still in
+//! flight when the horizon cuts the run.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use anyhow::Result;
 
+use crate::coordinator::batcher::Batcher;
 use crate::coordinator::dispatcher::TransferScheduler;
 use crate::coordinator::router::Router;
 use crate::env::bandwidth::{Bandwidth, BandwidthConfig};
-use crate::env::profiles::Profiles;
+use crate::env::profiles::{Profiles, N_MODELS, N_RES};
 use crate::env::workload::{Workload, WorkloadConfig};
 use crate::env::Action;
+
+/// Marginal cost of each additional frame in a profile-table batch,
+/// relative to the single-frame inference delay: a batch of `k` takes
+/// `d * (1 + MARGINAL * (k - 1))` seconds — sublinear per-item scaling,
+/// the shape measured for conv detectors on a shared GPU.
+pub const PROFILE_BATCH_MARGINAL: f64 = 0.7;
 
 /// Supplies compute durations (and optionally runs the real kernels).
 pub trait ComputeHook {
@@ -24,11 +43,37 @@ pub trait ComputeHook {
     fn preprocess(&mut self, node: usize, res: usize) -> Result<f64>;
     /// Detector inference; returns elapsed virtual seconds.
     fn detect(&mut self, node: usize, model: usize, res: usize) -> Result<f64>;
+    /// Detector inference over a batch of `k` frames of one (model, res);
+    /// returns total elapsed virtual seconds for the whole batch. The
+    /// default runs `k` sequential single-frame inferences (no batching
+    /// benefit); real hooks override with amortized execution.
+    fn detect_batch(
+        &mut self,
+        node: usize,
+        model: usize,
+        res: usize,
+        k: usize,
+    ) -> Result<f64> {
+        let mut total = 0.0;
+        for _ in 0..k {
+            total += self.detect(node, model, res)?;
+        }
+        Ok(total)
+    }
 }
 
 /// Profile-table compute (tests, capacity planning).
 pub struct ProfileCompute {
     pub profiles: Profiles,
+    /// Per-extra-frame marginal cost of a batch (see
+    /// [`PROFILE_BATCH_MARGINAL`]).
+    pub batch_marginal: f64,
+}
+
+impl ProfileCompute {
+    pub fn new(profiles: Profiles) -> Self {
+        ProfileCompute { profiles, batch_marginal: PROFILE_BATCH_MARGINAL }
+    }
 }
 
 impl ComputeHook for ProfileCompute {
@@ -38,6 +83,17 @@ impl ComputeHook for ProfileCompute {
 
     fn detect(&mut self, _node: usize, model: usize, res: usize) -> Result<f64> {
         Ok(self.profiles.infer_delay[model][res])
+    }
+
+    fn detect_batch(
+        &mut self,
+        _node: usize,
+        model: usize,
+        res: usize,
+        k: usize,
+    ) -> Result<f64> {
+        let d = self.profiles.infer_delay[model][res];
+        Ok(d * (1.0 + self.batch_marginal * (k.max(1) - 1) as f64))
     }
 }
 
@@ -55,9 +111,18 @@ pub struct ServedRequest {
     pub model: usize,
     pub res: usize,
     pub arrival: f64,
+    /// Virtual time GPU service of this request's batch began. For
+    /// requests dropped before service, equals `finish`.
+    pub service_start: f64,
     pub finish: f64,
     pub dropped: bool,
     pub accuracy: f64,
+    /// Id of the GPU batch execution that served this request
+    /// (`u64::MAX` for requests dropped before service).
+    pub batch_id: u64,
+    /// Number of frames in that batch execution (0 when dropped before
+    /// service).
+    pub batch_size: usize,
 }
 
 impl ServedRequest {
@@ -71,7 +136,14 @@ enum Event {
     SlotBoundary,
     Arrival { node: usize, req: u64 },
     TransferDone { req: u64 },
-    GpuFree { node: usize },
+    /// Frame finished preprocessing (local) or transfer (remote) and is
+    /// eligible for batching/service. Distinct from GPU completion: this
+    /// never touches `gpu_busy`.
+    FrameReady { node: usize, req: u64 },
+    /// True GPU completion — the only event that clears `gpu_busy`.
+    GpuDone { node: usize },
+    /// Max-wait poll for a node whose batcher holds a non-full lane.
+    BatchDeadline { node: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -109,13 +181,11 @@ struct PendingReq {
     origin: usize,
     action: Action,
     arrival: f64,
-    /// Earliest time the frame can start inference (preprocessing /
-    /// transfer completed).
-    ready: f64,
+    /// Currently on a link (its readiness is driven by the transfer
+    /// scheduler's completion pop, not a per-request event). Readiness
+    /// itself is encoded as the `FrameReady` event time, not stored here.
+    in_transfer: bool,
 }
-
-/// Observable cluster telemetry (used by policies to build observations).
-pub struct ClusterEvent;
 
 pub struct EdgeCluster {
     pub n_nodes: usize,
@@ -129,20 +199,35 @@ pub struct EdgeCluster {
     now: f64,
     seq: u64,
     next_id: u64,
+    next_batch_id: u64,
     heap: BinaryHeap<Timed>,
     reqs: HashMap<u64, PendingReq>,
-    node_queues: Vec<VecDeque<u64>>,
+    /// Per-node dynamic batcher: ready frames wait here until the node's
+    /// GPU pulls a per-(model, res) batch.
+    batchers: Vec<Batcher>,
     gpu_busy: Vec<bool>,
+    /// Earliest armed BatchDeadline per node (f64::INFINITY = none armed)
+    /// — dedupes poll events so each idle wait schedules one wakeup.
+    next_poll: Vec<f64>,
     rate_hist: Vec<VecDeque<f64>>,
     hist_len: usize,
     pub served: Vec<ServedRequest>,
+    /// Requests emitted into the cluster (slot arrivals + injected).
+    pub emitted: u64,
+    /// Requests still in flight (queued, batching or on a link) when the
+    /// horizon ended the run; set by [`EdgeCluster::run`].
+    pub residual: u64,
     /// Reusable per-slot workload buffers (serving hot path: no fresh
     /// Vecs per slot — same `*_into` idiom as the simulator core).
     rates_scratch: Vec<f64>,
     counts_scratch: Vec<usize>,
+    /// Reusable batch-pull / transfer-completion buffers (hot path).
+    batch_scratch: Vec<u64>,
+    transfer_scratch: Vec<u64>,
 }
 
 impl EdgeCluster {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         n_nodes: usize,
         workload_cfg: WorkloadConfig,
@@ -151,6 +236,8 @@ impl EdgeCluster {
         slot_secs: f64,
         drop_deadline: f64,
         hist_len: usize,
+        max_batch: usize,
+        batch_wait: f64,
         seed: u64,
     ) -> Self {
         let mut heap = BinaryHeap::new();
@@ -167,17 +254,25 @@ impl EdgeCluster {
             now: 0.0,
             seq: 1,
             next_id: 0,
+            next_batch_id: 0,
             heap,
             reqs: HashMap::new(),
-            node_queues: (0..n_nodes).map(|_| VecDeque::new()).collect(),
+            batchers: (0..n_nodes)
+                .map(|_| Batcher::new(N_MODELS, N_RES, max_batch, batch_wait))
+                .collect(),
             gpu_busy: vec![false; n_nodes],
+            next_poll: vec![f64::INFINITY; n_nodes],
             rate_hist: (0..n_nodes)
                 .map(|_| VecDeque::from(vec![0.0; hist_len]))
                 .collect(),
             hist_len,
             served: Vec::new(),
+            emitted: 0,
+            residual: 0,
             rates_scratch: Vec::new(),
             counts_scratch: Vec::new(),
+            batch_scratch: Vec::new(),
+            transfer_scratch: Vec::new(),
         }
     }
 
@@ -185,8 +280,13 @@ impl EdgeCluster {
         self.now
     }
 
+    /// Frames waiting for GPU service at `node` (batcher backlog).
     pub fn queue_len(&self, node: usize) -> usize {
-        self.node_queues[node].len()
+        self.batchers[node].pending()
+    }
+
+    pub fn gpu_busy(&self, node: usize) -> bool {
+        self.gpu_busy[node]
     }
 
     pub fn bandwidth_mbps(&self, i: usize, j: usize) -> f64 {
@@ -208,7 +308,7 @@ impl EdgeCluster {
         for r in &self.rate_hist[node] {
             f.push((r / 2.0) as f32);
         }
-        f.push(self.node_queues[node].len() as f32 / 25.0);
+        f.push(self.queue_len(node) as f32 / 25.0);
         for j in 0..self.n_nodes {
             if j != node {
                 f.push(self.transfers.in_flight(node, j) as f32 / 25.0);
@@ -234,7 +334,38 @@ impl EdgeCluster {
         self.heap.push(Timed { at, seq, ev });
     }
 
-    /// Run the serving loop for `duration` virtual seconds.
+    /// Emit one request into the cluster: id + `emitted` bookkeeping (the
+    /// conservation invariant counts from here), pending record, arrival
+    /// event. Shared by slot arrivals and the test-injection hook so the
+    /// accounting can never diverge between them.
+    fn emit_request(&mut self, node: usize, at: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.emitted += 1;
+        self.reqs.insert(
+            id,
+            PendingReq {
+                id,
+                origin: node,
+                action: Action::new(node, 0, 0),
+                arrival: at,
+                in_transfer: false,
+            },
+        );
+        self.push_event(at, Event::Arrival { node, req: id });
+        id
+    }
+
+    /// Inject one request arriving at `node` at virtual time `at` —
+    /// deterministic test hook (pairs with a zero-rate [`WorkloadConfig`]
+    /// to script exact arrival patterns). Returns the request id.
+    pub fn inject_request(&mut self, node: usize, at: f64) -> u64 {
+        self.emit_request(node, at)
+    }
+
+    /// Run the serving loop for `duration` virtual seconds, then account
+    /// every request still in flight as residual (`emitted ==
+    /// completed + dropped + residual` afterwards).
     pub fn run(
         &mut self,
         policy: &mut dyn ServingPolicy,
@@ -251,11 +382,28 @@ impl EdgeCluster {
                 Event::Arrival { node, req } => {
                     self.on_arrival(node, req, policy, compute)?
                 }
-                Event::TransferDone { req } => self.on_transfer_done(req)?,
-                Event::GpuFree { node } => self.gpu_free(node, compute)?,
+                Event::TransferDone { .. } => self.on_transfer_done(compute)?,
+                Event::FrameReady { node, req } => {
+                    self.frame_ready(node, req, compute)?
+                }
+                Event::GpuDone { node } => {
+                    self.gpu_busy[node] = false;
+                    self.try_dispatch(node, compute)?;
+                }
+                Event::BatchDeadline { node } => {
+                    self.next_poll[node] = f64::INFINITY;
+                    self.try_dispatch(node, compute)?;
+                }
             }
         }
         self.now = duration;
+        // End-of-horizon drain: whatever is still pending (queued in a
+        // batcher, on a link, or created but not yet arrived) is residual.
+        self.residual = self.reqs.len() as u64;
+        self.reqs.clear();
+        for b in &mut self.batchers {
+            b.clear();
+        }
         Ok(())
     }
 
@@ -272,19 +420,7 @@ impl EdgeCluster {
                 let at = self.now
                     + self.slot_secs * (k as f64 + 0.5)
                         / self.counts_scratch[i] as f64;
-                let id = self.next_id;
-                self.next_id += 1;
-                self.reqs.insert(
-                    id,
-                    PendingReq {
-                        id,
-                        origin: i,
-                        action: Action::new(i, 0, 0),
-                        arrival: at,
-                        ready: at,
-                    },
-                );
-                self.push_event(at, Event::Arrival { node: i, req: id });
+                self.emit_request(i, at);
             }
         }
         let next = self.now + self.slot_secs;
@@ -314,12 +450,14 @@ impl EdgeCluster {
         // preprocessing happens at the origin (Pallas resize / real exec)
         let pre_secs = compute.preprocess(node, action.res)?;
         let ready = self.now + pre_secs;
-        if let Some(r) = self.reqs.get_mut(&req) {
-            r.action = action;
-            r.ready = ready;
-        }
         if action.edge == node {
-            self.enqueue_local(node, req, ready);
+            if let Some(r) = self.reqs.get_mut(&req) {
+                r.action = action;
+            }
+            self.push_event(
+                ready.max(self.now),
+                Event::FrameReady { node, req },
+            );
         } else {
             let finish = self.transfers.schedule(
                 node,
@@ -329,49 +467,137 @@ impl EdgeCluster {
                 self.bandwidth.get(node, action.edge),
                 ready,
             );
+            if let Some(r) = self.reqs.get_mut(&req) {
+                r.action = action;
+                r.in_transfer = true;
+            }
             self.push_event(finish, Event::TransferDone { req });
         }
         Ok(())
     }
 
-    fn enqueue_local(&mut self, node: usize, req: u64, ready: f64) {
-        self.node_queues[node].push_back(req);
-        // GPU wakeup when the frame is ready (or immediately if queued)
-        let at = ready.max(self.now);
-        self.push_event(at, Event::GpuFree { node });
-    }
-
-    fn on_transfer_done(&mut self, req: u64) -> Result<()> {
-        let target = self.reqs.get(&req).map(|r| r.action.edge).unwrap_or(0);
-        if let Some(r) = self.reqs.get_mut(&req) {
-            r.ready = r.ready.max(self.now);
+    /// A transfer-completion instant: pop every transfer the scheduler has
+    /// finished by `now` (there may be several across links at one
+    /// timestamp) and make each frame ready at its target. Later
+    /// `TransferDone` events for already-popped ids find nothing left and
+    /// are no-ops — `in_transfer` guards double handling.
+    fn on_transfer_done(&mut self, compute: &mut dyn ComputeHook) -> Result<()> {
+        let mut scratch = std::mem::take(&mut self.transfer_scratch);
+        self.transfers.completed_into(self.now, &mut scratch);
+        for &id in scratch.iter() {
+            let Some(r) = self.reqs.get_mut(&id) else { continue };
+            if !r.in_transfer {
+                continue;
+            }
+            r.in_transfer = false;
+            let target = r.action.edge;
+            self.frame_ready(target, id, compute)?;
         }
-        self.transfers.completed(self.now);
-        self.enqueue_local(target, req, self.now);
+        self.transfer_scratch = scratch;
         Ok(())
     }
 
-    fn serve_next(&mut self, node: usize, compute: &mut dyn ComputeHook) -> Result<()> {
-        if self.gpu_busy[node] {
-            return Ok(());
-        }
-        let Some(req_id) = self.node_queues[node].pop_front() else {
+    /// Frame is ready for inference at `node`: offer it to the node's
+    /// batcher and let the GPU pull if it is free.
+    fn frame_ready(
+        &mut self,
+        node: usize,
+        req: u64,
+        compute: &mut dyn ComputeHook,
+    ) -> Result<()> {
+        let Some(r) = self.reqs.get(&req) else {
             return Ok(());
         };
-        // frame not ready yet (still preprocessing): retry at ready time
-        if let Some(r) = self.reqs.get(&req_id) {
-            if r.ready > self.now {
-                let at = r.ready;
-                self.node_queues[node].push_front(req_id);
-                self.push_event(at, Event::GpuFree { node });
+        self.batchers[node].offer(r.action.model, r.action.res, req, self.now);
+        self.try_dispatch(node, compute)
+    }
+
+    /// Pull ready batches onto the GPU while it is free. The drop-drain is
+    /// a loop (not recursion): a pulled batch whose every frame has
+    /// already blown the deadline is recorded as drops and the next batch
+    /// is pulled immediately.
+    fn try_dispatch(
+        &mut self,
+        node: usize,
+        compute: &mut dyn ComputeHook,
+    ) -> Result<()> {
+        while !self.gpu_busy[node] {
+            let mut scratch = std::mem::take(&mut self.batch_scratch);
+            let pulled = self.batchers[node].pop_ready_into(self.now, &mut scratch);
+            let Some((model, res)) = pulled else {
+                self.batch_scratch = scratch;
+                // nothing ready: arm the max-wait poll for a pending lane
+                if let Some(dl) = self.batchers[node].next_deadline() {
+                    if dl < self.next_poll[node] {
+                        self.next_poll[node] = dl;
+                        self.push_event(
+                            dl.max(self.now),
+                            Event::BatchDeadline { node },
+                        );
+                    }
+                }
+                return Ok(());
+            };
+            let started =
+                self.execute_batch(node, model, res, &scratch, compute)?;
+            self.batch_scratch = scratch;
+            if started {
                 return Ok(());
             }
         }
-        let Some(r) = self.reqs.remove(&req_id) else {
-            return Ok(());
-        };
-        let waited = self.now - r.arrival;
-        if waited > self.drop_deadline {
+        Ok(())
+    }
+
+    /// Execute one pulled batch on `node`'s GPU. Frames whose queueing wait
+    /// already exceeds the drop deadline are dropped (accuracy 0.0, never
+    /// serviced); the survivors run as one `detect_batch` execution.
+    /// Returns whether the GPU actually started (false = all dropped).
+    fn execute_batch(
+        &mut self,
+        node: usize,
+        model: usize,
+        res: usize,
+        items: &[u64],
+        compute: &mut dyn ComputeHook,
+    ) -> Result<bool> {
+        debug_assert!(!self.gpu_busy[node]);
+        // first pass: separate survivors from already-expired frames
+        let mut survivors = 0usize;
+        for &id in items {
+            let Some(r) = self.reqs.get(&id) else { continue };
+            if self.now - r.arrival > self.drop_deadline {
+                let r = self.reqs.remove(&id).unwrap();
+                self.served.push(ServedRequest {
+                    id: r.id,
+                    origin: r.origin,
+                    target: node,
+                    model: r.action.model,
+                    res: r.action.res,
+                    arrival: r.arrival,
+                    service_start: self.now,
+                    finish: self.now,
+                    dropped: true,
+                    accuracy: 0.0,
+                    batch_id: u64::MAX,
+                    batch_size: 0,
+                });
+            } else {
+                survivors += 1;
+            }
+        }
+        if survivors == 0 {
+            return Ok(false);
+        }
+        let secs = compute.detect_batch(node, model, res, survivors)?;
+        let finish = self.now + secs;
+        let batch_id = self.next_batch_id;
+        self.next_batch_id += 1;
+        self.gpu_busy[node] = true;
+        for &id in items {
+            let Some(r) = self.reqs.remove(&id) else { continue };
+            // a completion past the deadline still counts as a drop —
+            // and a drop earns no accuracy (the paper's reward definition)
+            let dropped = finish - r.arrival > self.drop_deadline;
             self.served.push(ServedRequest {
                 id: r.id,
                 origin: r.origin,
@@ -379,36 +605,20 @@ impl EdgeCluster {
                 model: r.action.model,
                 res: r.action.res,
                 arrival: r.arrival,
-                finish: self.now,
-                dropped: true,
-                accuracy: 0.0,
+                service_start: self.now,
+                finish,
+                dropped,
+                accuracy: if dropped {
+                    0.0
+                } else {
+                    self.profiles.accuracy[r.action.model][r.action.res]
+                },
+                batch_id,
+                batch_size: survivors,
             });
-            // keep draining the queue
-            return self.serve_next(node, compute);
         }
-        let secs = compute.detect(node, r.action.model, r.action.res)?;
-        let finish = self.now + secs;
-        self.gpu_busy[node] = true;
-        self.served.push(ServedRequest {
-            id: r.id,
-            origin: r.origin,
-            target: node,
-            model: r.action.model,
-            res: r.action.res,
-            arrival: r.arrival,
-            finish,
-            dropped: finish - r.arrival > self.drop_deadline,
-            accuracy: self.profiles.accuracy[r.action.model][r.action.res],
-        });
-        // GPU frees (and pulls the next queued item) when this finishes
-        self.push_event(finish, Event::GpuFree { node });
-        Ok(())
-    }
-
-    /// GpuFree event: clear the busy flag, then pull the next queued item.
-    fn gpu_free(&mut self, node: usize, compute: &mut dyn ComputeHook) -> Result<()> {
-        self.gpu_busy[node] = false;
-        self.serve_next(node, compute)
+        self.push_event(finish, Event::GpuDone { node });
+        Ok(true)
     }
 }
 
@@ -432,6 +642,8 @@ mod tests {
             0.2,
             1.5,
             5,
+            8,
+            0.004,
             seed,
         )
     }
@@ -439,7 +651,7 @@ mod tests {
     #[test]
     fn serves_requests_local_min() {
         let mut c = cluster(0);
-        let mut hook = ProfileCompute { profiles: Profiles::default() };
+        let mut hook = ProfileCompute::new(Profiles::default());
         c.run(&mut LocalMin, &mut hook, 20.0).unwrap();
         assert!(!c.served.is_empty());
         let drops = c.served.iter().filter(|s| s.dropped).count();
@@ -447,6 +659,7 @@ mod tests {
         assert!((drops as f64) < 0.1 * c.served.len() as f64);
         for s in &c.served {
             assert!(s.finish >= s.arrival);
+            assert!(s.service_start >= s.arrival);
         }
     }
 
@@ -459,7 +672,7 @@ mod tests {
             }
         }
         let mut c = cluster(1);
-        let mut hook = ProfileCompute { profiles: Profiles::default() };
+        let mut hook = ProfileCompute::new(Profiles::default());
         c.run(&mut AllToZero, &mut hook, 10.0).unwrap();
         assert!(c.served.iter().any(|s| s.origin != 0 && s.target == 0));
     }
@@ -468,7 +681,7 @@ mod tests {
     fn deterministic() {
         let run = |seed| {
             let mut c = cluster(seed);
-            let mut hook = ProfileCompute { profiles: Profiles::default() };
+            let mut hook = ProfileCompute::new(Profiles::default());
             c.run(&mut LocalMin, &mut hook, 10.0).unwrap();
             c.served.len()
         };
@@ -479,5 +692,13 @@ mod tests {
     fn observation_layout() {
         let c = cluster(3);
         assert_eq!(c.observation(0).len(), 5 + 1 + 3 + 3);
+    }
+
+    #[test]
+    fn request_conservation_after_run() {
+        let mut c = cluster(11);
+        let mut hook = ProfileCompute::new(Profiles::default());
+        c.run(&mut LocalMin, &mut hook, 12.0).unwrap();
+        assert_eq!(c.emitted, c.served.len() as u64 + c.residual);
     }
 }

@@ -8,7 +8,9 @@ pub mod cluster;
 pub mod dispatcher;
 pub mod router;
 
-pub use batcher::{Batch, Batcher};
-pub use cluster::{ClusterEvent, EdgeCluster, ServedRequest};
+pub use batcher::Batcher;
+pub use cluster::{
+    ComputeHook, EdgeCluster, ProfileCompute, ServedRequest, ServingPolicy,
+};
 pub use dispatcher::TransferScheduler;
 pub use router::{Router, RoutingStats};

@@ -180,6 +180,7 @@ fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Res
         drop_deadline: cfg.env.drop_threshold,
         seed: cfg.rl.seed,
         greedy: true,
+        ..Default::default()
     };
     let blob = match args.get("policy") {
         Some(path) => {

@@ -1,0 +1,262 @@
+//! Dep-free serving engine — the options/report/policy layer of the online
+//! serving loop, shared by the PJRT-backed server (`serving::server`) and
+//! the profile-table path (tests, the dep-free `serving_throughput` bench,
+//! capacity planning). Builds on the invariant-checked [`EdgeCluster`]:
+//! GPU mutual exclusion per node, request conservation
+//! (`emitted == completed + dropped + residual`), and per-(model, res)
+//! batched service.
+
+use anyhow::Result;
+
+use crate::coordinator::cluster::{
+    ComputeHook, EdgeCluster, ProfileCompute, ServingPolicy,
+};
+use crate::env::bandwidth::BandwidthConfig;
+use crate::env::profiles::Profiles;
+use crate::env::workload::WorkloadConfig;
+use crate::env::Action;
+use crate::util::stats::{mean, percentile};
+
+/// Serving-run options.
+#[derive(Debug, Clone)]
+pub struct ServingOptions {
+    pub n_nodes: usize,
+    pub duration_virtual_secs: f64,
+    pub drop_deadline: f64,
+    pub seed: u64,
+    /// Use the trained policy (blob) or the shortest-queue fallback.
+    pub greedy: bool,
+    /// Largest per-(model, res) GPU batch a node pulls at once.
+    pub max_batch: usize,
+    /// Longest a ready frame waits (virtual seconds) for batch-mates
+    /// before an idle GPU pulls its lane anyway.
+    pub batch_wait: f64,
+}
+
+impl Default for ServingOptions {
+    fn default() -> Self {
+        ServingOptions {
+            n_nodes: 4,
+            duration_virtual_secs: 30.0,
+            drop_deadline: 1.5,
+            seed: 0,
+            greedy: true,
+            max_batch: 8,
+            batch_wait: 0.004,
+        }
+    }
+}
+
+/// End-of-run report. Request accounting is exhaustive:
+/// `emitted == completed + dropped + residual`.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Requests emitted into the cluster over the horizon.
+    pub emitted: usize,
+    /// Requests resolved (completed or dropped) by end of run.
+    pub total: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Requests still in flight when the horizon cut the run.
+    pub residual: usize,
+    pub dispatched: usize,
+    /// GPU batch executions and their size distribution.
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub max_batch_size: usize,
+    pub virtual_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    pub mean_accuracy: f64,
+    /// Mean measured PJRT wall-clock per preprocess / detect call
+    /// (0.0 on the profile-table path).
+    pub mean_preproc_ms: f64,
+    pub mean_detect_ms: f64,
+}
+
+impl ServingReport {
+    /// Build the report from a finished cluster run. `mean_preproc_ms` /
+    /// `mean_detect_ms` are the real-compute wall-clock means (0.0 when
+    /// profile tables supplied the durations).
+    pub fn from_cluster(
+        cluster: &EdgeCluster,
+        virtual_secs: f64,
+        mean_preproc_ms: f64,
+        mean_detect_ms: f64,
+    ) -> Self {
+        let served = &cluster.served;
+        let total = served.len();
+        let completed: Vec<_> = served.iter().filter(|s| !s.dropped).collect();
+        let latencies: Vec<f64> = completed.iter().map(|s| s.latency()).collect();
+        let dropped = total - completed.len();
+        let mut batches = 0usize;
+        let mut max_batch_size = 0usize;
+        let mut batch_frames = 0usize;
+        let mut last_batch = u64::MAX;
+        for s in served.iter().filter(|s| s.batch_size > 0) {
+            // batch members are recorded contiguously per execution
+            if s.batch_id != last_batch {
+                last_batch = s.batch_id;
+                batches += 1;
+                batch_frames += s.batch_size;
+                max_batch_size = max_batch_size.max(s.batch_size);
+            }
+        }
+        ServingReport {
+            emitted: cluster.emitted as usize,
+            total,
+            completed: completed.len(),
+            dropped,
+            residual: cluster.residual as usize,
+            dispatched: served.iter().filter(|s| s.origin != s.target).count(),
+            batches,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                batch_frames as f64 / batches as f64
+            },
+            max_batch_size,
+            virtual_secs,
+            throughput_rps: completed.len() as f64 / virtual_secs,
+            mean_latency: mean(&latencies),
+            p50_latency: percentile(&latencies, 50.0),
+            p95_latency: percentile(&latencies, 95.0),
+            p99_latency: percentile(&latencies, 99.0),
+            mean_accuracy: if completed.is_empty() {
+                0.0
+            } else {
+                completed.iter().map(|s| s.accuracy).sum::<f64>()
+                    / completed.len() as f64
+            },
+            mean_preproc_ms,
+            mean_detect_ms,
+        }
+    }
+
+    /// Request conservation: every emitted request is accounted for.
+    pub fn conserved(&self) -> bool {
+        self.emitted == self.completed + self.dropped + self.residual
+    }
+
+    pub fn print(&self) {
+        println!("serving report:");
+        println!("  emitted         {}", self.emitted);
+        println!("  completed       {}", self.completed);
+        println!(
+            "  dropped         {} ({:.1}%)",
+            self.dropped,
+            100.0 * self.dropped as f64 / self.total.max(1) as f64
+        );
+        println!("  residual        {} (in flight at horizon)", self.residual);
+        println!("  dispatched      {}", self.dispatched);
+        println!(
+            "  gpu batches     {} (mean size {:.2}, max {})",
+            self.batches, self.mean_batch_size, self.max_batch_size
+        );
+        println!("  throughput      {:.1} req/s (virtual)", self.throughput_rps);
+        println!(
+            "  latency         mean {:.0} ms, p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms",
+            self.mean_latency * 1e3,
+            self.p50_latency * 1e3,
+            self.p95_latency * 1e3,
+            self.p99_latency * 1e3
+        );
+        println!("  mean accuracy   {:.4}", self.mean_accuracy);
+        println!(
+            "  real exec       preprocess {:.2} ms, detect {:.2} ms (PJRT wall-clock)",
+            self.mean_preproc_ms, self.mean_detect_ms
+        );
+    }
+}
+
+/// Shortest-queue fallback policy (no trained blob supplied).
+pub struct ShortestQueuePolicy;
+
+impl ServingPolicy for ShortestQueuePolicy {
+    fn decide(&mut self, cluster: &EdgeCluster, _node: usize) -> Result<Action> {
+        let mut best = 0;
+        for j in 1..cluster.n_nodes {
+            if cluster.queue_len(j) < cluster.queue_len(best) {
+                best = j;
+            }
+        }
+        Ok(Action::new(best, 1, 2))
+    }
+}
+
+/// Build the serving cluster the engine runs over (default workload and
+/// bandwidth traces at `opts.n_nodes` scale).
+pub fn build_cluster(opts: &ServingOptions, hist_len: usize) -> EdgeCluster {
+    EdgeCluster::new(
+        opts.n_nodes,
+        WorkloadConfig::default(),
+        BandwidthConfig { n_nodes: opts.n_nodes, ..BandwidthConfig::default() },
+        Profiles::default(),
+        0.2,
+        opts.drop_deadline,
+        hist_len,
+        opts.max_batch,
+        opts.batch_wait,
+        opts.seed,
+    )
+}
+
+/// Run the serving loop with the supplied policy/compute pair and report.
+pub fn run_with(
+    opts: &ServingOptions,
+    hist_len: usize,
+    policy: &mut dyn ServingPolicy,
+    compute: &mut dyn ComputeHook,
+) -> Result<(EdgeCluster, ServingReport)> {
+    let mut cluster = build_cluster(opts, hist_len);
+    cluster.run(policy, compute, opts.duration_virtual_secs)?;
+    let report =
+        ServingReport::from_cluster(&cluster, opts.duration_virtual_secs, 0.0, 0.0);
+    Ok((cluster, report))
+}
+
+/// Dep-free serving run: shortest-queue policy over profile-table compute.
+/// The engine bench and the offline tests drive this; the PJRT server
+/// (`serving::server::run_serving`) swaps in real compute and the trained
+/// actor.
+pub fn run_profile_serving(opts: &ServingOptions) -> Result<ServingReport> {
+    let mut policy = ShortestQueuePolicy;
+    let mut compute = ProfileCompute::new(Profiles::default());
+    let (_, report) = run_with(opts, 5, &mut policy, &mut compute)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_serving_report_is_conserved() {
+        let opts = ServingOptions {
+            duration_virtual_secs: 10.0,
+            ..Default::default()
+        };
+        let report = run_profile_serving(&opts).unwrap();
+        assert!(report.emitted > 0);
+        assert!(report.completed > 0);
+        assert!(report.conserved(), "{report:?}");
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p99_latency >= report.p50_latency);
+    }
+
+    #[test]
+    fn batch_stats_count_each_execution_once() {
+        let opts = ServingOptions {
+            duration_virtual_secs: 15.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let report = run_profile_serving(&opts).unwrap();
+        assert!(report.batches > 0);
+        assert!(report.mean_batch_size >= 1.0);
+        assert!(report.max_batch_size <= opts.max_batch);
+    }
+}

@@ -1,19 +1,26 @@
 //! Online serving runtime — the end-to-end request path: synthetic camera
 //! frames, real Pallas-resize preprocessing and detector-zoo inference
 //! executed through PJRT, policy-driven routing over the virtual-time edge
-//! cluster, and latency/throughput reporting.
+//! cluster with per-(model, res) GPU batching, and latency/throughput
+//! reporting with exhaustive request accounting.
 //!
-//! The PJRT-backed server and detector zoo sit behind the `pjrt` cargo
-//! feature; the synthetic frame source is pure Rust and always available.
+//! The engine (options, report, shortest-queue policy, profile-table runs)
+//! is dep-free; the PJRT-backed server and detector zoo sit behind the
+//! `pjrt` cargo feature. The synthetic frame source is pure Rust and
+//! always available.
 
+pub mod engine;
 pub mod frames;
 #[cfg(feature = "pjrt")]
 pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod zoo;
 
+pub use engine::{
+    run_profile_serving, ServingOptions, ServingReport, ShortestQueuePolicy,
+};
 pub use frames::FrameSource;
 #[cfg(feature = "pjrt")]
-pub use server::{run_serving, ServingOptions, ServingReport};
+pub use server::run_serving;
 #[cfg(feature = "pjrt")]
 pub use zoo::ModelZoo;

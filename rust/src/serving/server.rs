@@ -1,90 +1,20 @@
-//! The online serving loop: policy-routed requests over the virtual-time
-//! edge cluster with *real* PJRT compute (Pallas preprocessing + detector
-//! zoo) supplying the service times. Produces the latency/throughput
-//! report the serving benchmark and the end-to-end example print.
+//! The online serving loop, PJRT-backed: policy-routed requests over the
+//! virtual-time edge cluster with *real* PJRT compute (Pallas preprocessing
+//! + detector zoo) supplying the service times. Batches pulled by a node's
+//! GPU run as one stacked zoo execution when the artifact accepts a leading
+//! batch dimension (sequential fallback otherwise). The options/report
+//! layer lives dep-free in [`crate::serving::engine`].
 
 use anyhow::Result;
 
 use crate::coordinator::cluster::{ComputeHook, EdgeCluster, ServingPolicy};
-use crate::env::bandwidth::BandwidthConfig;
-use crate::env::profiles::Profiles;
-use crate::env::workload::WorkloadConfig;
 use crate::env::Action;
 use crate::rl::policy::ActorPolicy;
 use crate::runtime::{Manifest, Runtime};
+use crate::serving::engine::{ServingOptions, ServingReport, ShortestQueuePolicy};
 use crate::serving::frames::FrameSource;
 use crate::serving::zoo::ModelZoo;
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
-
-/// Serving-run options.
-#[derive(Debug, Clone)]
-pub struct ServingOptions {
-    pub n_nodes: usize,
-    pub duration_virtual_secs: f64,
-    pub drop_deadline: f64,
-    pub seed: u64,
-    /// Use the trained policy (blob) or the shortest-queue fallback.
-    pub greedy: bool,
-}
-
-impl Default for ServingOptions {
-    fn default() -> Self {
-        ServingOptions {
-            n_nodes: 4,
-            duration_virtual_secs: 30.0,
-            drop_deadline: 1.5,
-            seed: 0,
-            greedy: true,
-        }
-    }
-}
-
-/// End-of-run report.
-#[derive(Debug, Clone)]
-pub struct ServingReport {
-    pub total: usize,
-    pub completed: usize,
-    pub dropped: usize,
-    pub dispatched: usize,
-    pub virtual_secs: f64,
-    pub throughput_rps: f64,
-    pub mean_latency: f64,
-    pub p50_latency: f64,
-    pub p95_latency: f64,
-    pub p99_latency: f64,
-    pub mean_accuracy: f64,
-    /// Mean measured PJRT wall-clock per preprocess / detect call.
-    pub mean_preproc_ms: f64,
-    pub mean_detect_ms: f64,
-}
-
-impl ServingReport {
-    pub fn print(&self) {
-        println!("serving report:");
-        println!("  requests        {}", self.total);
-        println!("  completed       {}", self.completed);
-        println!(
-            "  dropped         {} ({:.1}%)",
-            self.dropped,
-            100.0 * self.dropped as f64 / self.total.max(1) as f64
-        );
-        println!("  dispatched      {}", self.dispatched);
-        println!("  throughput      {:.1} req/s (virtual)", self.throughput_rps);
-        println!(
-            "  latency         mean {:.0} ms, p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms",
-            self.mean_latency * 1e3,
-            self.p50_latency * 1e3,
-            self.p95_latency * 1e3,
-            self.p99_latency * 1e3
-        );
-        println!("  mean accuracy   {:.4}", self.mean_accuracy);
-        println!(
-            "  real exec       preprocess {:.2} ms, detect {:.2} ms (PJRT wall-clock)",
-            self.mean_preproc_ms, self.mean_detect_ms
-        );
-    }
-}
 
 /// Policy adapter: trained actor over cluster observations, with per-event
 /// caching so all nodes of one decision instant share one forward pass.
@@ -113,24 +43,9 @@ impl ServingPolicy for ActorServingPolicy {
     }
 }
 
-/// Shortest-queue fallback policy (no trained blob supplied).
-struct ShortestQueuePolicy;
-
-impl ServingPolicy for ShortestQueuePolicy {
-    fn decide(&mut self, cluster: &EdgeCluster, _node: usize) -> Result<Action> {
-        let mut best = 0;
-        for j in 1..cluster.n_nodes {
-            if cluster.queue_len(j) < cluster.queue_len(best) {
-                best = j;
-            }
-        }
-        Ok(Action::new(best, 1, 2))
-    }
-}
-
 /// Real-compute hook: every preprocess/detect call generates a frame and
 /// executes the actual HLO artifacts, feeding measured durations into the
-/// virtual clock.
+/// virtual clock. Batched detections stack frames into one execution.
 struct RealCompute<'a> {
     zoo: &'a ModelZoo,
     frames: FrameSource,
@@ -156,6 +71,18 @@ impl<'a> RealCompute<'a> {
             last_frames: vec![None; 8],
         }
     }
+
+    /// Make sure a downsized frame for `res` is cached (first detect of a
+    /// resolution before any preprocess call lands here; synthetic frame
+    /// content is interchangeable, so detects borrow the cached frame).
+    fn ensure_frame(&mut self, res: usize) -> Result<()> {
+        if self.last_frames[res].is_none() {
+            let native = self.frames.next_frame();
+            let (down, _) = self.zoo.preprocess(res, &native)?;
+            self.last_frames[res] = Some(down);
+        }
+        Ok(())
+    }
 }
 
 impl ComputeHook for RealCompute<'_> {
@@ -169,16 +96,25 @@ impl ComputeHook for RealCompute<'_> {
     }
 
     fn detect(&mut self, _node: usize, model: usize, res: usize) -> Result<f64> {
-        let frame = match &self.last_frames[res] {
-            Some(f) => f.clone(),
-            None => {
-                let native = self.frames.next_frame();
-                let (down, _) = self.zoo.preprocess(res, &native)?;
-                down
-            }
-        };
-        let (_scores, secs) = self.zoo.detect(model, res, &frame)?;
+        self.ensure_frame(res)?;
+        let frame = self.last_frames[res].as_deref().unwrap();
+        let (_scores, secs) = self.zoo.detect(model, res, frame)?;
         self.detect_calls += 1;
+        self.detect_secs += secs;
+        Ok(secs)
+    }
+
+    fn detect_batch(
+        &mut self,
+        _node: usize,
+        model: usize,
+        res: usize,
+        k: usize,
+    ) -> Result<f64> {
+        self.ensure_frame(res)?;
+        let frame = self.last_frames[res].as_deref().unwrap();
+        let (_scores, secs) = self.zoo.detect_batch(model, res, frame, k)?;
+        self.detect_calls += k;
         self.detect_secs += secs;
         Ok(secs)
     }
@@ -193,16 +129,8 @@ pub fn run_serving(
     opts: &ServingOptions,
 ) -> Result<ServingReport> {
     let zoo = ModelZoo::load(rt, manifest)?;
-    let mut cluster = EdgeCluster::new(
-        opts.n_nodes,
-        WorkloadConfig::default(),
-        BandwidthConfig { n_nodes: opts.n_nodes, ..BandwidthConfig::default() },
-        Profiles::default(),
-        0.2,
-        opts.drop_deadline,
-        manifest.net.hist_len,
-        opts.seed,
-    );
+    let mut cluster =
+        crate::serving::engine::build_cluster(opts, manifest.net.hist_len);
     let mut compute = RealCompute::new(&zoo, opts.seed);
 
     let mut policy: Box<dyn ServingPolicy> = match policy_blob {
@@ -219,37 +147,20 @@ pub fn run_serving(
 
     cluster.run(policy.as_mut(), &mut compute, opts.duration_virtual_secs)?;
 
-    let served = &cluster.served;
-    let total = served.len();
-    let completed: Vec<_> = served.iter().filter(|s| !s.dropped).collect();
-    let latencies: Vec<f64> = completed.iter().map(|s| s.latency()).collect();
-    let dropped = total - completed.len();
-    Ok(ServingReport {
-        total,
-        completed: completed.len(),
-        dropped,
-        dispatched: served.iter().filter(|s| s.origin != s.target).count(),
-        virtual_secs: opts.duration_virtual_secs,
-        throughput_rps: completed.len() as f64 / opts.duration_virtual_secs,
-        mean_latency: crate::util::stats::mean(&latencies),
-        p50_latency: percentile(&latencies, 50.0),
-        p95_latency: percentile(&latencies, 95.0),
-        p99_latency: percentile(&latencies, 99.0),
-        mean_accuracy: if completed.is_empty() {
-            0.0
-        } else {
-            completed.iter().map(|s| s.accuracy).sum::<f64>()
-                / completed.len() as f64
-        },
-        mean_preproc_ms: if compute.preproc_calls == 0 {
-            0.0
-        } else {
-            1e3 * compute.preproc_secs / compute.preproc_calls as f64
-        },
-        mean_detect_ms: if compute.detect_calls == 0 {
-            0.0
-        } else {
-            1e3 * compute.detect_secs / compute.detect_calls as f64
-        },
-    })
+    let mean_preproc_ms = if compute.preproc_calls == 0 {
+        0.0
+    } else {
+        1e3 * compute.preproc_secs / compute.preproc_calls as f64
+    };
+    let mean_detect_ms = if compute.detect_calls == 0 {
+        0.0
+    } else {
+        1e3 * compute.detect_secs / compute.detect_calls as f64
+    };
+    Ok(ServingReport::from_cluster(
+        &cluster,
+        opts.duration_virtual_secs,
+        mean_preproc_ms,
+        mean_detect_ms,
+    ))
 }

@@ -16,6 +16,11 @@ use crate::runtime::{lit_f32, to_vec_f32, Executable, Manifest, Runtime};
 pub struct ModelZoo {
     /// (model, res) -> detector executable + input shape
     detectors: HashMap<(usize, usize), (Rc<Executable>, Vec<usize>)>,
+    /// (model, res) -> verdict from the first stacked-batch attempt:
+    /// `false` means the artifact is fixed-shape and `detect_batch` goes
+    /// straight to the sequential fallback instead of re-paying a doomed
+    /// stacked execution per batch.
+    batchable: std::cell::RefCell<HashMap<(usize, usize), bool>>,
     /// res -> preprocess executable (1080-native input)
     preproc: HashMap<usize, Rc<Executable>>,
     /// res order from the manifest: index (action v) -> pixel resolution
@@ -48,6 +53,7 @@ impl ModelZoo {
         }
         Ok(ModelZoo {
             detectors,
+            batchable: std::cell::RefCell::new(HashMap::new()),
             preproc,
             res_order: manifest.res_order.clone(),
             native_shape,
@@ -99,5 +105,80 @@ impl ModelZoo {
         let outs = exe.run(&[lit])?;
         let scores = to_vec_f32(&outs[0])?;
         Ok((scores, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Run a detector over a batch of `k` frames (the one supplied frame
+    /// replicated — the serving engine batches by (model, res), and the
+    /// synthetic sources make frame content interchangeable). Attempts a
+    /// single stacked execution with a leading batch dimension; artifacts
+    /// compiled for a fixed single-frame shape reject the stacked literal,
+    /// in which case the frames run sequentially and the measured
+    /// wall-clock still covers the whole batch. Returns the concatenated
+    /// scores and total elapsed seconds.
+    pub fn detect_batch(
+        &self,
+        model: usize,
+        v: usize,
+        frame: &[f32],
+        k: usize,
+    ) -> Result<(Vec<f32>, f64)> {
+        if k <= 1 {
+            return self.detect(model, v, frame);
+        }
+        let res = self.res_of_index(v);
+        let (exe, shape) = self
+            .detectors
+            .get(&(model, res))
+            .with_context(|| format!("no detector for model {model} res {res}"))?;
+        anyhow::ensure!(
+            frame.len() == shape.iter().product::<usize>(),
+            "frame has {} elems, detector {model}@{res} wants {:?}",
+            frame.len(),
+            shape
+        );
+        let try_stacked =
+            self.batchable.borrow().get(&(model, res)).copied() != Some(false);
+        if try_stacked {
+            // leading batch dim: replace a leading 1, else prepend k
+            let mut batch_shape = shape.clone();
+            if batch_shape.first() == Some(&1) {
+                batch_shape[0] = k;
+            } else {
+                batch_shape.insert(0, k);
+            }
+            let mut stacked = Vec::with_capacity(frame.len() * k);
+            for _ in 0..k {
+                stacked.extend_from_slice(frame);
+            }
+            let t0 = Instant::now();
+            let stacked_run =
+                lit_f32(&stacked, &batch_shape).and_then(|lit| exe.run(&[lit]));
+            match stacked_run {
+                Ok(outs) => {
+                    self.batchable.borrow_mut().insert((model, res), true);
+                    let scores = to_vec_f32(&outs[0])?;
+                    return Ok((scores, t0.elapsed().as_secs_f64()));
+                }
+                Err(e) => {
+                    // Remember the verdict so later batches skip straight
+                    // to the sequential path — and say why once, since a
+                    // transient failure caught here degrades this
+                    // (model, res) to sequential for the process lifetime.
+                    eprintln!(
+                        "detector {model}@{res}: stacked batch rejected, \
+                         falling back to sequential ({e:#})"
+                    );
+                    self.batchable.borrow_mut().insert((model, res), false);
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let mut all = Vec::new();
+        for _ in 0..k {
+            let lit = lit_f32(frame, shape)?;
+            let outs = exe.run(&[lit])?;
+            all.extend(to_vec_f32(&outs[0])?);
+        }
+        Ok((all, t0.elapsed().as_secs_f64()))
     }
 }

@@ -39,13 +39,19 @@ pub fn iter_scale() -> f64 {
         .unwrap_or(1.0)
 }
 
-/// Apply [`iter_scale`] to an iteration count (never below 1).
+/// Apply [`iter_scale`] to an iteration count. A nonzero count never
+/// scales below 1; zero stays zero (e.g. "no warmup" means no warmup).
 pub fn scaled(iters: usize) -> usize {
+    if iters == 0 {
+        return 0;
+    }
     ((iters as f64 * iter_scale()).round() as usize).max(1)
 }
 
 /// Run `f` for `iters` timed iterations (after `warmup` untimed ones).
+/// `warmup` may be 0; `iters` must be at least 1 (the stats divide by it).
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1, "bench {name:?} needs at least one timed iteration");
     for _ in 0..warmup {
         f();
     }

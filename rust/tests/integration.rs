@@ -214,10 +214,12 @@ fn serving_end_to_end() {
         drop_deadline: 1.5,
         seed: 0,
         greedy: true,
+        ..Default::default()
     };
     let report = run_serving(&rt, &m, None, &opts).unwrap();
     assert!(report.total > 0);
     assert!(report.completed > 0);
+    assert!(report.conserved(), "emitted != completed + dropped + residual");
     assert!(report.mean_latency > 0.0);
     assert!(report.p99_latency >= report.p50_latency);
     assert!(report.mean_detect_ms > 0.0, "no real compute measured");

@@ -4,9 +4,14 @@
 //! seed is printed so the case can be replayed.
 
 use edgevision::config::EnvConfig;
-use edgevision::coordinator::{Batcher, Router, TransferScheduler};
+use edgevision::coordinator::{
+    Batcher, EdgeCluster, ProfileCompute, Router, ServedRequest,
+    ServingPolicy, TransferScheduler,
+};
+use edgevision::env::bandwidth::BandwidthConfig;
 use edgevision::env::request::Outcome;
-use edgevision::env::{Action, SimConfig, Simulator, VecEnv};
+use edgevision::env::workload::WorkloadConfig;
+use edgevision::env::{Action, Profiles, SimConfig, Simulator, VecEnv};
 use edgevision::rl::gae::{gae, gae_reference, reward_to_go};
 use edgevision::util::json::Json;
 use edgevision::util::rng::Rng;
@@ -179,25 +184,26 @@ fn prop_batcher_conserves_items() {
     forall(30, |rng| {
         let max_batch = 1 + rng.below(8);
         let mut b = Batcher::new(4, 5, max_batch, 0.05);
-        let mut pushed = 0u64;
-        let mut flushed = 0u64;
+        let mut out = Vec::new();
+        let mut offered = 0u64;
+        let mut pulled = 0u64;
         let mut now = 0.0;
         for i in 0..300u64 {
             now += rng.range_f64(0.0, 0.01);
-            if let Some(batch) = b.push(rng.below(4), rng.below(5), i, now) {
-                assert!(batch.items.len() <= max_batch);
-                flushed += batch.items.len() as u64;
-            }
-            pushed += 1;
-            for batch in b.poll(now) {
-                assert!(batch.items.len() <= max_batch);
-                flushed += batch.items.len() as u64;
+            b.offer(rng.below(4), rng.below(5), i, now);
+            offered += 1;
+            // a free GPU pulls every lane that is ready right now
+            while b.pop_ready_into(now, &mut out).is_some() {
+                assert!(!out.is_empty() && out.len() <= max_batch);
+                pulled += out.len() as u64;
             }
         }
-        for batch in b.flush_all() {
-            flushed += batch.items.len() as u64;
+        // past every wait deadline each remaining lane becomes ready
+        while b.pop_ready_into(now + 1.0, &mut out).is_some() {
+            assert!(!out.is_empty() && out.len() <= max_batch);
+            pulled += out.len() as u64;
         }
-        assert_eq!(pushed, flushed);
+        assert_eq!(offered, pulled);
         assert_eq!(b.pending(), 0);
     });
 }
@@ -231,6 +237,155 @@ fn prop_transfers_fifo_and_complete() {
         let done = ts.completed(horizon);
         assert_eq!(done.len(), 100);
         assert!(ts.next_completion().is_none());
+    });
+}
+
+/// Uniformly random serving decisions — stresses every (node, model, res)
+/// lane and the dispatch/transfer path of the serving cluster.
+struct RandServingPolicy {
+    rng: Rng,
+}
+
+impl ServingPolicy for RandServingPolicy {
+    fn decide(
+        &mut self,
+        c: &EdgeCluster,
+        _node: usize,
+    ) -> anyhow::Result<Action> {
+        Ok(Action::new(
+            self.rng.below(c.n_nodes),
+            self.rng.below(4),
+            self.rng.below(5),
+        ))
+    }
+}
+
+fn random_serving_run(rng: &mut Rng) -> EdgeCluster {
+    let n = 2 + rng.below(3);
+    let max_batch = 1 + rng.below(8);
+    let batch_wait = [0.0, 0.002, 0.01, 0.05][rng.below(4)];
+    let mut cluster = EdgeCluster::new(
+        n,
+        WorkloadConfig {
+            means: (0..n).map(|i| 0.4 + 0.6 * i as f64).collect(),
+            ..WorkloadConfig::default()
+        },
+        BandwidthConfig { n_nodes: n, ..BandwidthConfig::default() },
+        Profiles::default(),
+        0.2,
+        0.3 + rng.range_f64(0.0, 1.5),
+        5,
+        max_batch,
+        batch_wait,
+        rng.next_u64(),
+    );
+    let mut policy = RandServingPolicy { rng: Rng::new(rng.next_u64()) };
+    let mut compute = ProfileCompute::new(Profiles::default());
+    cluster
+        .run(&mut policy, &mut compute, 6.0 + rng.range_f64(0.0, 6.0))
+        .unwrap();
+    cluster
+}
+
+#[test]
+fn prop_gpu_mutual_exclusion() {
+    // no two GPU service intervals on one node may overlap: requests that
+    // actually occupied the GPU (batch_size > 0, dropped or not) either
+    // share a batch execution (identical interval) or are disjoint
+    forall(12, |rng| {
+        let cluster = random_serving_run(rng);
+        for node in 0..cluster.n_nodes {
+            let mut iv: Vec<&ServedRequest> = cluster
+                .served
+                .iter()
+                .filter(|s| s.batch_size > 0 && s.target == node)
+                .collect();
+            iv.sort_by(|a, b| {
+                a.service_start
+                    .partial_cmp(&b.service_start)
+                    .unwrap()
+                    .then(a.batch_id.cmp(&b.batch_id))
+            });
+            for w in iv.windows(2) {
+                if w[0].batch_id == w[1].batch_id {
+                    assert_eq!(
+                        w[0].service_start.to_bits(),
+                        w[1].service_start.to_bits()
+                    );
+                    assert_eq!(w[0].finish.to_bits(), w[1].finish.to_bits());
+                } else {
+                    assert!(
+                        w[1].service_start >= w[0].finish - 1e-9,
+                        "node {node}: batch {} [{}, {}) overlaps batch {} [{}, {})",
+                        w[0].batch_id,
+                        w[0].service_start,
+                        w[0].finish,
+                        w[1].batch_id,
+                        w[1].service_start,
+                        w[1].finish
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_serving_conservation() {
+    // every emitted request is accounted: completed + dropped + residual;
+    // drops earn zero accuracy, completions earn the profile-table value
+    forall(12, |rng| {
+        let cluster = random_serving_run(rng);
+        let completed =
+            cluster.served.iter().filter(|s| !s.dropped).count() as u64;
+        let dropped =
+            cluster.served.iter().filter(|s| s.dropped).count() as u64;
+        assert!(cluster.emitted > 0);
+        assert_eq!(
+            cluster.emitted,
+            completed + dropped + cluster.residual,
+            "requests leaked: emitted {} != {} + {} + {}",
+            cluster.emitted,
+            completed,
+            dropped,
+            cluster.residual
+        );
+        let profiles = Profiles::default();
+        for s in &cluster.served {
+            assert!(s.finish >= s.arrival - 1e-9);
+            assert!(s.latency() <= cluster.drop_deadline + 1e-9 || s.dropped);
+            if s.dropped {
+                assert_eq!(s.accuracy, 0.0, "drop earned accuracy: {s:?}");
+            } else {
+                assert_eq!(s.accuracy, profiles.accuracy[s.model][s.res]);
+                assert!(s.batch_size >= 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batch_flush_determinism() {
+    // identical seeds and knobs => bit-identical served streams (ids,
+    // service intervals, batch assignment)
+    forall(8, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let mut r = Rng::new(seed);
+            random_serving_run(&mut r)
+        };
+        let (a, b) = (run(seed), run(seed));
+        assert_eq!(a.emitted, b.emitted);
+        assert_eq!(a.residual, b.residual);
+        assert_eq!(a.served.len(), b.served.len());
+        for (x, y) in a.served.iter().zip(b.served.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.batch_id, y.batch_id);
+            assert_eq!(x.batch_size, y.batch_size);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(x.service_start.to_bits(), y.service_start.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
     });
 }
 

@@ -1,0 +1,232 @@
+//! Serving-core regression tests (dep-free): pin the GPU service model of
+//! the event-driven cluster with deterministic, hand-scripted arrival
+//! patterns (zero-rate workload + `inject_request`).
+//!
+//! The headline repro, `gpu_waits_for_inflight_inference`, encodes the
+//! GPU double-service bug this suite guards against: pre-fix,
+//! `enqueue_local` pushed a GPU wakeup at frame-ready time even while the
+//! GPU was mid-inference and the wakeup handler unconditionally cleared
+//! `gpu_busy`, so a frame becoming ready mid-inference was served
+//! immediately — two overlapping service intervals on one GPU, inflated
+//! throughput, deflated latency. Post-fix the second frame must wait for
+//! the true completion event.
+
+use anyhow::Result;
+
+use edgevision::coordinator::cluster::PROFILE_BATCH_MARGINAL;
+use edgevision::coordinator::{
+    ComputeHook, EdgeCluster, ProfileCompute, ServedRequest, ServingPolicy,
+};
+use edgevision::env::bandwidth::BandwidthConfig;
+use edgevision::env::workload::WorkloadConfig;
+use edgevision::env::{Action, Profiles};
+
+const EPS: f64 = 1e-9;
+
+/// Policy returning one fixed action for every arrival.
+struct Fixed(Action);
+impl ServingPolicy for Fixed {
+    fn decide(&mut self, _c: &EdgeCluster, _node: usize) -> Result<Action> {
+        Ok(self.0)
+    }
+}
+
+/// Cluster with a silent workload (all arrivals are injected by the test)
+/// and a far-off drop deadline unless overridden.
+fn quiet_cluster(max_batch: usize, batch_wait: f64, deadline: f64) -> EdgeCluster {
+    EdgeCluster::new(
+        2,
+        WorkloadConfig {
+            means: vec![0.0; 2],
+            burst_prob: 0.0,
+            ..WorkloadConfig::default()
+        },
+        BandwidthConfig { n_nodes: 2, ..BandwidthConfig::default() },
+        Profiles::default(),
+        0.2,
+        deadline,
+        5,
+        max_batch,
+        batch_wait,
+        0,
+    )
+}
+
+fn by_id(served: &[ServedRequest], id: u64) -> &ServedRequest {
+    served.iter().find(|s| s.id == id).expect("request accounted")
+}
+
+/// THE double-service regression: a frame that becomes ready while the GPU
+/// is mid-inference must wait for the in-flight batch to complete. On the
+/// pre-fix `EdgeCluster` the second request was served at its ready time
+/// (t=0.05), overlapping the first's [0, 0.171) service interval.
+#[test]
+fn gpu_waits_for_inflight_inference() {
+    let mut c = quiet_cluster(4, 0.0, 10.0);
+    let infer = Profiles::default().infer_delay[3][0]; // 0.171 s
+    let a = c.inject_request(0, 0.0);
+    let b = c.inject_request(0, 0.05); // becomes ready mid-inference of A
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 5.0).unwrap();
+
+    assert_eq!(c.served.len(), 2);
+    assert_eq!(c.residual, 0);
+    let (sa, sb) = (by_id(&c.served, a), by_id(&c.served, b));
+    assert!((sa.service_start - 0.0).abs() < EPS);
+    assert!((sa.finish - infer).abs() < EPS);
+    // B must start no earlier than A's completion — not at its ready time
+    assert!(
+        sb.service_start >= sa.finish - EPS,
+        "GPU double-service: B started at {} while A ran until {}",
+        sb.service_start,
+        sa.finish
+    );
+    assert!((sb.service_start - infer).abs() < EPS);
+    assert!((sb.finish - 2.0 * infer).abs() < EPS);
+}
+
+/// Under load the GPU pulls multi-frame per-(model, res) batches, and the
+/// profile path charges sublinear batch time.
+#[test]
+fn batches_form_under_load() {
+    let mut c = quiet_cluster(4, 0.0, 10.0);
+    let infer = Profiles::default().infer_delay[3][0];
+    c.inject_request(0, 0.0);
+    for _ in 0..5 {
+        c.inject_request(0, 0.01); // arrive while the GPU serves the first
+    }
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 10.0).unwrap();
+
+    assert_eq!(c.served.len(), 6);
+    let max_size = c.served.iter().map(|s| s.batch_size).max().unwrap();
+    assert_eq!(max_size, 4, "GPU should pull a full batch of the 5 queued");
+    // the size-4 batch runs as ONE execution: shared id, shared interval,
+    // sublinear duration
+    let four: Vec<_> =
+        c.served.iter().filter(|s| s.batch_size == 4).collect();
+    assert_eq!(four.len(), 4);
+    let bid = four[0].batch_id;
+    let dur = four[0].finish - four[0].service_start;
+    for s in &four {
+        assert_eq!(s.batch_id, bid);
+        assert!((s.service_start - four[0].service_start).abs() < EPS);
+        assert!((s.finish - four[0].finish).abs() < EPS);
+    }
+    let expect = infer * (1.0 + PROFILE_BATCH_MARGINAL * 3.0);
+    assert!((dur - expect).abs() < EPS, "batch dur {dur} vs {expect}");
+    assert!(dur < 4.0 * infer, "batching must beat sequential service");
+}
+
+/// An idle GPU waits up to `batch_wait` for batch-mates before pulling a
+/// non-full lane.
+#[test]
+fn idle_gpu_waits_batch_wait_for_batchmates() {
+    let mut c = quiet_cluster(4, 0.05, 10.0);
+    let a = c.inject_request(0, 0.0);
+    let b = c.inject_request(0, 0.02);
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 5.0).unwrap();
+
+    assert_eq!(c.served.len(), 2);
+    let (sa, sb) = (by_id(&c.served, a), by_id(&c.served, b));
+    // both pulled together when A's max-wait expired at t=0.05
+    assert_eq!(sa.batch_id, sb.batch_id);
+    assert_eq!(sa.batch_size, 2);
+    assert!((sa.service_start - 0.05).abs() < EPS);
+}
+
+/// Satellite regression: a request whose service *completes* past the drop
+/// deadline is a drop and earns zero accuracy (the paper's reward
+/// definition) — pre-fix it recorded the profile-table accuracy.
+#[test]
+fn late_finish_drop_records_zero_accuracy() {
+    let mut c = quiet_cluster(1, 0.0, 0.1);
+    let id = c.inject_request(0, 0.0);
+    let mut hook = ProfileCompute::new(Profiles::default());
+    // model 3 @ 1080P takes 0.171 s > 0.1 s deadline
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 5.0).unwrap();
+
+    let s = by_id(&c.served, id);
+    assert!(s.dropped);
+    assert_eq!(s.accuracy, 0.0, "dropped request must not earn accuracy");
+    assert_eq!(s.batch_size, 1, "it did occupy the GPU");
+}
+
+/// A request whose queueing wait alone blows the deadline is dropped at
+/// pull time without ever occupying the GPU.
+#[test]
+fn expired_request_dropped_without_service() {
+    let mut c = quiet_cluster(1, 0.0, 0.15);
+    let infer = Profiles::default().infer_delay[0][0]; // 0.087 s
+    let a = c.inject_request(0, 0.0);
+    let b = c.inject_request(0, 0.0);
+    let d = c.inject_request(0, 0.0);
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 0, 0)), &mut hook, 5.0).unwrap();
+
+    assert_eq!(c.served.len(), 3);
+    let (sa, sb, sd) =
+        (by_id(&c.served, a), by_id(&c.served, b), by_id(&c.served, d));
+    // A completes within deadline
+    assert!(!sa.dropped);
+    assert!((sa.finish - infer).abs() < EPS);
+    assert_eq!(sa.accuracy, Profiles::default().accuracy[0][0]);
+    // B is serviced but finishes at 2*0.087 = 0.174 > 0.15: late drop
+    assert!(sb.dropped);
+    assert_eq!(sb.batch_size, 1);
+    assert_eq!(sb.accuracy, 0.0);
+    // C has waited 0.174 > 0.15 when pulled: dropped without service
+    assert!(sd.dropped);
+    assert_eq!(sd.batch_size, 0);
+    assert_eq!(sd.accuracy, 0.0);
+    assert!((sd.finish - 2.0 * infer).abs() < EPS);
+    assert!((sd.service_start - sd.finish).abs() < EPS);
+}
+
+/// Requests still in flight when the horizon cuts the run are residual,
+/// not silently vanished: emitted == served + residual.
+#[test]
+fn horizon_cut_reports_residual() {
+    let mut c = quiet_cluster(1, 0.0, 10.0);
+    c.inject_request(0, 0.0); // served [0, 0.171)
+    c.inject_request(0, 0.0); // still queued at horizon 0.1
+    c.inject_request(0, 0.5); // arrival after horizon
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 0.1).unwrap();
+
+    assert_eq!(c.emitted, 3);
+    assert_eq!(c.served.len(), 1);
+    assert_eq!(c.residual, 2);
+}
+
+/// Profile-table batch scaling is sublinear with the documented marginal.
+#[test]
+fn profile_compute_batch_scaling() {
+    let mut hook = ProfileCompute::new(Profiles::default());
+    let d = Profiles::default().infer_delay[2][1];
+    let one = hook.detect_batch(0, 2, 1, 1).unwrap();
+    let four = hook.detect_batch(0, 2, 1, 4).unwrap();
+    assert!((one - d).abs() < EPS);
+    assert!((four - d * (1.0 + PROFILE_BATCH_MARGINAL * 3.0)).abs() < EPS);
+    assert!(four < 4.0 * one);
+}
+
+/// Remote dispatch still flows through transfer -> batcher -> GPU, with
+/// conservation intact.
+#[test]
+fn dispatched_requests_are_conserved() {
+    let mut c = quiet_cluster(8, 0.0, 10.0);
+    // node 1 origin, inference on node 0: transfer then remote service
+    let id = c.inject_request(1, 0.0);
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 1, 2)), &mut hook, 10.0).unwrap();
+
+    assert_eq!(c.served.len(), 1);
+    assert_eq!(c.residual, 0);
+    let s = by_id(&c.served, id);
+    assert_eq!(s.origin, 1);
+    assert_eq!(s.target, 0);
+    assert!(!s.dropped);
+    assert!(s.service_start > 0.0, "transfer must delay service start");
+}
