@@ -26,13 +26,7 @@ fn main() -> Result<()> {
         "method", "omega", "reward", "acc", "delay", "disp%", "drop%"
     );
     for &omega in &OMEGAS {
-        for h in [
-            "predictive",
-            "shortest_queue_min",
-            "shortest_queue_max",
-            "random_min",
-            "random_max",
-        ] {
+        for h in edgevision::baselines::HEURISTICS {
             let res = ctx.eval_heuristic(h, omega)?;
             let row = method_row(h, omega, &res.metrics, res.mean_episode_reward());
             println!(

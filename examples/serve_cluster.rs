@@ -3,11 +3,15 @@
 //! separable-bilinear resize artifact, routed by the (trained, if a
 //! checkpoint exists) actor artifact, and inferred by the detector-zoo
 //! conv artifacts, all through PJRT from Rust, over the virtual-time
-//! multi-edge cluster with Oboe-like bandwidth and Wikipedia-like
-//! arrivals. Reports latency percentiles and throughput.
+//! multi-edge cluster. The run is parameterized by a named [`Scenario`]
+//! from the unified control plane's registry (`--scenario hotspot`,
+//! `--list-scenarios` to enumerate). Reports latency percentiles and
+//! throughput.
 //!
 //! ```sh
-//! cargo run --release --example serve_cluster -- [--duration 30] [--policy results/checkpoints/ours_omega5.bin]
+//! cargo run --release --example serve_cluster -- [--duration 30] \
+//!     [--scenario flash-crowd] [--max-batch 8] [--batch-wait 0.004] \
+//!     [--policy results/checkpoints/ours_omega5.bin]
 //! ```
 
 use anyhow::Result;
@@ -15,11 +19,18 @@ use anyhow::Result;
 use edgevision::config::Config;
 use edgevision::rl::params::ParamStore;
 use edgevision::runtime::{Manifest, Runtime};
+use edgevision::scenario::Scenario;
 use edgevision::serving::{run_serving, ServingOptions};
 use edgevision::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    if args.bool("list-scenarios") {
+        for name in Scenario::names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
     let cfg = Config::default();
     let manifest = Manifest::load(&cfg.paths.artifacts)?;
     let rt = Runtime::new(cfg.paths.artifacts.clone())?;
@@ -36,18 +47,23 @@ fn main() -> Result<()> {
         None
     };
 
+    let mut scenario = match args.get("scenario") {
+        Some(name) => Scenario::by_name(name)?,
+        None => Scenario::from_env(&cfg.env),
+    };
+    // batching ablation knobs stay addressable from the CLI
+    scenario.max_batch =
+        args.u64_or("max-batch", scenario.max_batch as u64)? as usize;
+    scenario.batch_wait = args.f64_or("batch-wait", scenario.batch_wait)?;
     let opts = ServingOptions {
-        n_nodes: cfg.env.n_nodes,
+        scenario,
         duration_virtual_secs: args.f64_or("duration", 30.0)?,
-        drop_deadline: cfg.env.drop_threshold,
         seed: args.u64_or("seed", 0)?,
         greedy: true,
-        max_batch: args.u64_or("max-batch", 8)? as usize,
-        batch_wait: args.f64_or("batch-wait", 0.004)?,
     };
     println!(
-        "serving {}s of virtual time on {} edge nodes with REAL PJRT inference...",
-        opts.duration_virtual_secs, opts.n_nodes
+        "serving {}s of virtual time on {} edge nodes (scenario: {}) with REAL PJRT inference...",
+        opts.duration_virtual_secs, opts.scenario.n_nodes, opts.scenario.name
     );
     let report = run_serving(&rt, &manifest, blob.as_deref(), &opts)?;
     report.print();

@@ -10,6 +10,7 @@
 use edgevision::config::EnvConfig;
 use edgevision::coordinator::{Batcher, Router, TransferScheduler};
 use edgevision::env::{Action, SimConfig, Simulator, StepOutcome, VecEnv};
+use edgevision::scenario::Scenario;
 use edgevision::util::bench::BenchReport;
 
 fn main() {
@@ -21,6 +22,15 @@ fn main() {
     let actions: Vec<Action> = (0..4).map(|i| Action::new((i + 1) % 4, 1, 2)).collect();
     report.bench("simulator::step (4 nodes)", 200, 5_000, || {
         sim.step_into(&actions, &mut out);
+    });
+
+    // scenario-parameterized construction path: the hotspot regime pushes
+    // the heaviest per-slot arrival loops through the same zero-alloc core
+    let hotspot = Scenario::by_name("hotspot").expect("registered scenario");
+    let mut hot_sim = Simulator::from_scenario(&hotspot, 0);
+    let mut hot_out = StepOutcome::new(hotspot.n_nodes);
+    report.bench("simulator::step (scenario=hotspot)", 200, 5_000, || {
+        hot_sim.step_into(&actions, &mut hot_out);
     });
 
     let mut sim_alloc = Simulator::new(cfg.clone(), 0);

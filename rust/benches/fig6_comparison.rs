@@ -18,13 +18,7 @@ fn main() -> anyhow::Result<()> {
     println!("{:<22} {:>6} {:>10} {:>7}", "method", "omega", "reward", "drop%");
     for &omega in &OMEGAS {
         let mut rows = Vec::new();
-        for h in [
-            "predictive",
-            "shortest_queue_min",
-            "shortest_queue_max",
-            "random_min",
-            "random_max",
-        ] {
+        for h in edgevision::baselines::HEURISTICS {
             let res = ctx.eval_heuristic(h, omega)?;
             rows.push(method_row(h, omega, &res.metrics, res.mean_episode_reward()));
         }

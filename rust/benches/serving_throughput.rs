@@ -1,37 +1,72 @@
-//! Serving-path bench: the virtual-time serving engine end to end.
+//! Serving-path bench: the virtual-time serving engine end to end,
+//! scenario-parameterized through the unified `Policy`/`Scenario` API.
 //!
-//! Always benches the dep-free engine (shortest-queue policy over the
-//! profile tables — the event loop, batcher and GPU service model are the
-//! code under test) and emits `BENCH_serving.json` with the same prev-run
-//! speedup provenance as `BENCH_env_step.json`. With the `pjrt` feature
-//! and built artifacts it additionally runs real PJRT inference (Pallas
-//! preprocess + detector zoo) and reports the wall-clock cost per request.
+//! Always benches the dep-free engine (the shared shortest-queue baseline
+//! over the profile tables — the event loop, batcher and GPU service
+//! model are the code under test) across every registered scenario, and
+//! emits `BENCH_serving.json` keyed per scenario: each target is named
+//! `serving_engine::scenario=<name>`, so the prev-run `speedup_vs_prev`
+//! deltas are preserved independently per scenario. With the `pjrt`
+//! feature and built artifacts it additionally runs real PJRT inference
+//! (Pallas preprocess + detector zoo) and reports the wall-clock cost per
+//! request.
+//!
+//! `--list-scenarios` prints the registry and exits (the dep-free CLI
+//! path CI exercises).
 
+use edgevision::scenario::Scenario;
 use edgevision::serving::{run_profile_serving, ServingOptions};
 use edgevision::util::bench::BenchReport;
+use edgevision::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let mut rep = BenchReport::new("serving");
+    if std::env::args().any(|a| a == "--list-scenarios") {
+        for name in Scenario::names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
 
+    let mut rep = BenchReport::new("serving");
+    rep.meta(
+        "scenarios",
+        Json::Arr(Scenario::names().iter().map(|n| Json::str(*n)).collect()),
+    );
+
+    // headline report from one paper-scenario run (batch formation,
+    // conservation, drops)
     let opts = ServingOptions {
-        n_nodes: 4,
         duration_virtual_secs: 20.0,
-        drop_deadline: 1.5,
-        seed: 0,
         ..Default::default()
     };
-
-    // headline report from one run (batch formation, conservation, drops)
     let report = run_profile_serving(&opts)?;
     report.print();
     anyhow::ensure!(report.conserved(), "request accounting leaked");
 
-    // engine throughput: virtual-time serving with profile-table compute
-    rep.bench("serving_engine::profile (4 nodes, 20s virtual)", 2, 30, || {
-        run_profile_serving(&opts).unwrap();
-    });
-    let unbatched = ServingOptions { max_batch: 1, ..opts.clone() };
-    rep.bench("serving_engine::profile (max_batch=1)", 2, 30, || {
+    // engine throughput per registered scenario: virtual-time serving
+    // with profile-table compute, shortest-queue policy via the unified
+    // control plane
+    for name in Scenario::names() {
+        let opts = ServingOptions {
+            scenario: Scenario::by_name(name)?,
+            duration_virtual_secs: 20.0,
+            seed: 0,
+            greedy: true,
+        };
+        let scenario_report = run_profile_serving(&opts)?;
+        anyhow::ensure!(
+            scenario_report.conserved(),
+            "scenario {name} leaked requests"
+        );
+        rep.bench(&format!("serving_engine::scenario={name}"), 1, 20, || {
+            run_profile_serving(&opts).unwrap();
+        });
+    }
+
+    // batching ablation on the paper scenario
+    let mut unbatched = opts.clone();
+    unbatched.scenario.max_batch = 1;
+    rep.bench("serving_engine::paper (max_batch=1)", 2, 30, || {
         run_profile_serving(&unbatched).unwrap();
     });
 

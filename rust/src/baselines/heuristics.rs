@@ -1,15 +1,20 @@
 //! Heuristic baselines (paper Section VI-A, methods 4–5).
 //!
-//! * Shortest-Queue: requests go to the node with the shortest waiting
-//!   queue; model/resolution fixed to Min (cheapest model, lowest
-//!   resolution) or Max (largest model, highest resolution).
+//! * Shortest-Queue: requests go to the node with the smallest estimated
+//!   queuing delay (Eq. 1); model/resolution fixed to Min (cheapest
+//!   model, lowest resolution) or Max (largest model, highest
+//!   resolution).
 //! * Random: requests go to a uniformly random node; same Min/Max split.
+//!
+//! Both implement the unified [`Policy`] trait, so one implementation
+//! serves the slot simulator and the event-driven serving engine — the
+//! engine's former private `ShortestQueuePolicy` duplicate is retired.
 
 use anyhow::Result;
 
 use crate::env::profiles::{N_MODELS, N_RES};
-use crate::env::{Action, Simulator};
-use crate::rl::eval::Controller;
+use crate::env::Action;
+use crate::policy::{Policy, PolicyView};
 use crate::util::rng::Rng;
 
 /// Min = smallest model + lowest resolution; Max = largest + highest.
@@ -57,26 +62,32 @@ impl ShortestQueueController {
     }
 }
 
-impl Controller for ShortestQueueController {
+impl Policy for ShortestQueueController {
     fn name(&self) -> &str {
         &self.name
     }
 
-    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
-        let n = sim.cfg.n_nodes;
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        out.clear();
+        let n = view.n_nodes();
         // the node with the least pending inference work (Eq. 1 estimate)
         let mut best = 0;
         let mut best_q = f64::INFINITY;
         for j in 0..n {
-            let q = sim.queue_delay_estimate(j);
+            let q = view.queue_delay_estimate(j);
             if q < best_q {
                 best_q = q;
                 best = j;
             }
         }
-        Ok((0..n)
-            .map(|_| Action::new(best, self.sel.model(), self.sel.res()))
-            .collect())
+        for _ in 0..n {
+            out.push(Action::new(best, self.sel.model(), self.sel.res()));
+        }
+        Ok(())
     }
 }
 
@@ -98,22 +109,35 @@ impl RandomController {
     }
 }
 
-impl Controller for RandomController {
+impl Policy for RandomController {
     fn name(&self) -> &str {
         &self.name
     }
 
     fn reset(&mut self, episode_seed: u64) {
-        self.rng = Rng::new(self.seed ^ episode_seed);
+        // mix multiplicatively: a caller that passes the same value as
+        // both construction seed and episode seed must still get a
+        // seed-dependent stream (a bare XOR would cancel to a constant)
+        self.rng = Rng::new(
+            self.seed ^ episode_seed.wrapping_mul(0x9E3779B97F4A7C15),
+        );
     }
 
-    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
-        let n = sim.cfg.n_nodes;
-        Ok((0..n)
-            .map(|_| {
-                Action::new(self.rng.below(n), self.sel.model(), self.sel.res())
-            })
-            .collect())
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        out.clear();
+        let n = view.n_nodes();
+        for _ in 0..n {
+            out.push(Action::new(
+                self.rng.below(n),
+                self.sel.model(),
+                self.sel.res(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -121,7 +145,13 @@ impl Controller for RandomController {
 mod tests {
     use super::*;
     use crate::config::EnvConfig;
-    use crate::env::SimConfig;
+    use crate::env::{SimConfig, Simulator};
+
+    fn decide(policy: &mut dyn Policy, view: &dyn PolicyView) -> Vec<Action> {
+        let mut out = Vec::new();
+        policy.decide_into(view, &mut out).unwrap();
+        out
+    }
 
     #[test]
     fn selection_indices() {
@@ -141,7 +171,7 @@ mod tests {
             sim.step(&all_to_0);
         }
         let mut ctrl = ShortestQueueController::new(Selection::Min);
-        let acts = ctrl.act(&sim).unwrap();
+        let acts = decide(&mut ctrl, &sim);
         assert!(acts.iter().all(|a| a.edge != 0));
         assert!(acts.iter().all(|a| a.model == 0 && a.res == N_RES - 1));
     }
@@ -153,7 +183,7 @@ mod tests {
         let mut ctrl = RandomController::new(Selection::Max, 1);
         let mut seen = [false; 4];
         for _ in 0..100 {
-            for a in ctrl.act(&sim).unwrap() {
+            for a in decide(&mut ctrl, &sim) {
                 seen[a.edge] = true;
             }
         }

@@ -2,9 +2,60 @@
 //! Shortest-Queue-{Min,Max}, Random-{Min,Max} and the Predictive
 //! controller. (IPPO and Local-PPO are trained through the same
 //! [`crate::rl::Trainer`] with `--ippo` / `--local-only`.)
+//!
+//! Every baseline implements the unified [`crate::policy::Policy`] trait,
+//! so the same instance drives the slot simulator (`rl::eval::evaluate`)
+//! and the event-driven serving engine (`serving::engine`).
+
+use anyhow::{bail, Result};
+
+use crate::policy::Policy;
 
 pub mod heuristics;
 pub mod predictive;
 
 pub use heuristics::{RandomController, ShortestQueueController, Selection};
 pub use predictive::PredictiveController;
+
+/// Names of the heuristic baselines, in the paper's reporting order.
+pub const HEURISTICS: [&str; 5] = [
+    "predictive",
+    "shortest_queue_min",
+    "shortest_queue_max",
+    "random_min",
+    "random_max",
+];
+
+/// Instantiate a heuristic baseline by its reporting name — the one
+/// factory behind the experiments harness, benches and CLI paths.
+pub fn by_name(name: &str, n_nodes: usize, seed: u64) -> Result<Box<dyn Policy>> {
+    Ok(match name {
+        "shortest_queue_min" => {
+            Box::new(ShortestQueueController::new(Selection::Min))
+        }
+        "shortest_queue_max" => {
+            Box::new(ShortestQueueController::new(Selection::Max))
+        }
+        "random_min" => Box::new(RandomController::new(Selection::Min, seed)),
+        "random_max" => Box::new(RandomController::new(Selection::Max, seed)),
+        "predictive" => Box::new(PredictiveController::new(n_nodes)),
+        other => bail!(
+            "unknown heuristic {other:?} (known: {})",
+            HEURISTICS.join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_every_listed_heuristic() {
+        for name in HEURISTICS {
+            let p = by_name(name, 4, 1).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(by_name("nope", 4, 0).is_err());
+    }
+}

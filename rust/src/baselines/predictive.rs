@@ -3,12 +3,23 @@
 //! greedily picks, per node, the (e, m, v) minimizing the predicted system
 //! cost for that slot — the one-step model-predictive controller the paper
 //! compares against.
+//!
+//! Implements the unified [`Policy`] trait over [`PolicyView`], so the
+//! same controller drives the slot simulator and the event-driven serving
+//! engine (including heterogeneous-GPU scenarios: predicted service times
+//! scale with the target node's speed).
 
 use anyhow::Result;
 
 use crate::env::profiles::{N_MODELS, N_RES};
-use crate::env::{Action, Simulator};
-use crate::rl::eval::Controller;
+use crate::env::Action;
+use crate::policy::{Policy, PolicyView};
+
+/// Upper bound on retroactive EWMA folds after a decision-free gap: at
+/// alpha 0.4 the hist_len-entry fold contracts the prediction toward the
+/// window fixpoint by >0.97 per fold, so 32 folds are numerically
+/// indistinguishable from convergence.
+const MAX_CATCHUP_FOLDS: usize = 32;
 
 pub struct PredictiveController {
     name: String,
@@ -16,6 +27,18 @@ pub struct PredictiveController {
     alpha: f64,
     /// Predicted arrival rate per node.
     predicted: Vec<f64>,
+    /// The [`PolicyView::slot`] the EWMA last folded at. The rate history
+    /// advances once per slot, while the serving engine may ask for
+    /// decisions at every arrival instant (or skip slots with no
+    /// arrivals) — the fold count is keyed to elapsed slots, so the
+    /// prediction is independent of decision frequency and matches the
+    /// slot simulator's once-per-slot fold count (slots the engine
+    /// skipped are folded retroactively over the current window, capped
+    /// at [`MAX_CATCHUP_FOLDS`] where the EWMA has long converged).
+    last_slot: Option<u64>,
+    /// Per-target queue-delay estimates, hoisted once per decision
+    /// (reusable buffer: zero steady-state allocations).
+    queue_delay_scratch: Vec<f64>,
 }
 
 impl PredictiveController {
@@ -24,67 +47,154 @@ impl PredictiveController {
             name: "predictive".into(),
             alpha: 0.4,
             predicted: vec![0.0; n_nodes],
+            last_slot: None,
+            queue_delay_scratch: Vec::with_capacity(n_nodes),
         }
     }
 
     /// Expected performance (Eq. 5) of serving one request from node i at
     /// node e with (m, v), given current queues, bandwidth, and the
-    /// predicted extra work landing on e this slot.
+    /// predicted extra work landing on e this slot. `queue_delay_e`,
+    /// `bw` and `link_backlog` are the (i, e)-only terms, hoisted by the
+    /// decision loop out of the (m, v) sweep (`bw` is unused when
+    /// `e == i`).
+    #[allow(clippy::too_many_arguments)]
+    fn expected_perf_given(
+        &self,
+        view: &dyn PolicyView,
+        i: usize,
+        e: usize,
+        m: usize,
+        v: usize,
+        queue_delay_e: f64,
+        bw: f64,
+        link_backlog: f64,
+    ) -> f64 {
+        let p = view.profiles();
+        let speed = view.gpu_speed(e);
+        let infer = p.infer_delay[m][v] / speed;
+        let mut d = p.preproc_delay[v] / view.gpu_speed(i) + infer;
+        // queue already at the target (Eq. 1) + predicted incoming work
+        d += queue_delay_e;
+        d += self.predicted[e] * infer;
+        if e != i {
+            // transmission behind the dispatch queue (Eq. 3-4)
+            let queued: f64 = link_backlog * p.frame_mbits[v];
+            d += (queued + p.frame_mbits[v]) / bw;
+        }
+        if d > view.drop_threshold() {
+            -view.omega() * view.drop_penalty()
+        } else {
+            p.accuracy[m][v] - view.omega() * d
+        }
+    }
+
+    /// [`Self::expected_perf_given`] with the (i, e) terms fetched fresh
+    /// (tests and one-off queries).
+    #[cfg(test)]
     fn expected_perf(
         &self,
-        sim: &Simulator,
+        view: &dyn PolicyView,
         i: usize,
         e: usize,
         m: usize,
         v: usize,
     ) -> f64 {
-        let p = &sim.cfg.profiles;
-        let mut d = p.preproc_delay[v] + p.infer_delay[m][v];
-        // queue already at the target (Eq. 1) + predicted incoming work
-        d += sim.queue_delay_estimate(e);
-        d += self.predicted[e] * p.infer_delay[m][v];
-        if e != i {
-            // transmission behind the dispatch queue (Eq. 3-4)
-            let bw = sim.bandwidth_mbps(i, e).max(1e-6);
-            let queued: f64 =
-                sim.dispatch_queue_len(i, e) as f64 * p.frame_mbits[v];
-            d += (queued + p.frame_mbits[v]) / bw;
-        }
-        if d > sim.cfg.drop_threshold {
-            -sim.cfg.omega * sim.cfg.drop_penalty
+        let (bw, link_backlog) = if e != i {
+            (
+                view.bandwidth_mbps(i, e).max(1e-6),
+                view.link_backlog(i, e) as f64,
+            )
         } else {
-            p.accuracy[m][v] - sim.cfg.omega * d
-        }
+            (f64::INFINITY, 0.0)
+        };
+        self.expected_perf_given(
+            view,
+            i,
+            e,
+            m,
+            v,
+            view.queue_delay_estimate(e),
+            bw,
+            link_backlog,
+        )
     }
 }
 
-impl Controller for PredictiveController {
+impl Policy for PredictiveController {
     fn name(&self) -> &str {
         &self.name
     }
 
     fn reset(&mut self, _seed: u64) {
         self.predicted.iter_mut().for_each(|p| *p = 0.0);
+        self.last_slot = None;
     }
 
-    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
-        let n = sim.cfg.n_nodes;
-        // EWMA workload prediction from the observable rate history
-        for i in 0..n {
-            let mut pred = self.predicted[i];
-            for r in sim.rate_history(i) {
-                pred = self.alpha * r + (1.0 - self.alpha) * pred;
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        out.clear();
+        let n = view.n_nodes();
+        anyhow::ensure!(
+            self.predicted.len() == n,
+            "predictive controller built for {} nodes, view has {n}",
+            self.predicted.len()
+        );
+        // EWMA workload prediction from the observable rate history,
+        // folded once per elapsed slot (not once per decision instant)
+        let slot = view.slot();
+        let folds = match self.last_slot {
+            Some(prev) if slot == prev => 0,
+            Some(prev) if slot > prev => {
+                ((slot - prev) as usize).min(MAX_CATCHUP_FOLDS)
             }
-            self.predicted[i] = pred;
+            // first decision, or a fresh view without reset
+            _ => 1,
+        };
+        for _ in 0..folds {
+            for i in 0..n {
+                let mut pred = self.predicted[i];
+                view.for_each_rate(i, &mut |r| {
+                    pred = self.alpha * r + (1.0 - self.alpha) * pred;
+                });
+                self.predicted[i] = pred;
+            }
         }
-        let mut actions = Vec::with_capacity(n);
+        self.last_slot = Some(slot);
+        // hoist the per-target queue estimate (O(lanes) on the serving
+        // engine) out of the n * N_MODELS * N_RES sweep
+        self.queue_delay_scratch.clear();
+        for e in 0..n {
+            self.queue_delay_scratch.push(view.queue_delay_estimate(e));
+        }
         for i in 0..n {
             let mut best = Action::new(i, 0, N_RES - 1);
             let mut best_perf = f64::NEG_INFINITY;
             for e in 0..n {
+                let (bw, link_backlog) = if e != i {
+                    (
+                        view.bandwidth_mbps(i, e).max(1e-6),
+                        view.link_backlog(i, e) as f64,
+                    )
+                } else {
+                    (f64::INFINITY, 0.0)
+                };
+                let queue_delay_e = self.queue_delay_scratch[e];
                 for m in 0..N_MODELS {
                     for v in 0..N_RES {
-                        let perf = self.expected_perf(sim, i, e, m, v);
+                        let perf = self.expected_perf_given(
+                            view,
+                            i,
+                            e,
+                            m,
+                            v,
+                            queue_delay_e,
+                            bw,
+                            link_backlog,
+                        );
                         if perf > best_perf {
                             best_perf = perf;
                             best = Action::new(e, m, v);
@@ -92,9 +202,9 @@ impl Controller for PredictiveController {
                     }
                 }
             }
-            actions.push(best);
+            out.push(best);
         }
-        Ok(actions)
+        Ok(())
     }
 }
 
@@ -102,14 +212,20 @@ impl Controller for PredictiveController {
 mod tests {
     use super::*;
     use crate::config::EnvConfig;
-    use crate::env::SimConfig;
+    use crate::env::{SimConfig, Simulator};
+
+    fn decide(policy: &mut dyn Policy, view: &dyn PolicyView) -> Vec<Action> {
+        let mut out = Vec::new();
+        policy.decide_into(view, &mut out).unwrap();
+        out
+    }
 
     #[test]
     fn produces_valid_actions() {
         let cfg = SimConfig::from_env(&EnvConfig::default());
         let sim = Simulator::new(cfg, 0);
         let mut ctrl = PredictiveController::new(4);
-        let acts = ctrl.act(&sim).unwrap();
+        let acts = decide(&mut ctrl, &sim);
         assert_eq!(acts.len(), 4);
         for a in acts {
             assert!(a.edge < 4 && a.model < N_MODELS && a.res < N_RES);
@@ -126,7 +242,7 @@ mod tests {
             sim.step(&all_to_2);
         }
         let mut ctrl = PredictiveController::new(4);
-        let acts = ctrl.act(&sim).unwrap();
+        let acts = decide(&mut ctrl, &sim);
         // with node 2's queue saturated the greedy cost should route away
         assert!(acts.iter().filter(|a| a.edge == 2).count() <= 1);
     }
@@ -139,5 +255,20 @@ mod tests {
         let ctrl = PredictiveController::new(4);
         let cheap = ctrl.expected_perf(&sim, 0, 0, 0, N_RES - 1);
         assert!(cheap > -sim.cfg.omega * sim.cfg.drop_penalty);
+    }
+
+    #[test]
+    fn hetero_speed_steers_toward_fast_node() {
+        use crate::policy::FrozenView;
+        // two idle nodes, node 0 fast / node 1 slow, generous bandwidth:
+        // requests arriving at 1 should prefer serving at 0 when speed
+        // dominates the transfer cost
+        let mut view = FrozenView::quiet(2);
+        view.gpu_speed = vec![4.0, 0.25];
+        view.bandwidths = vec![1000.0; 4];
+        view.rate_hists = vec![vec![1.0; 5]; 2];
+        let mut ctrl = PredictiveController::new(2);
+        let acts = decide(&mut ctrl, &view);
+        assert_eq!(acts[1].edge, 0, "slow node should offload to fast node");
     }
 }

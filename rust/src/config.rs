@@ -61,7 +61,7 @@ impl Default for EnvConfig {
 
 impl EnvConfig {
     pub fn obs_dim(&self) -> usize {
-        self.hist_len + 1 + 2 * (self.n_nodes - 1)
+        crate::policy::obs_dim(self.hist_len, self.n_nodes)
     }
 }
 

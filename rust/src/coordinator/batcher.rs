@@ -96,6 +96,18 @@ impl Batcher {
         self.lanes.iter().map(|l| l.items.len()).sum()
     }
 
+    /// Sum of `weight(model, res)` over every pending item — with the
+    /// per-(m, v) inference delay as the weight this is the lane-resident
+    /// half of the serving engine's Eq. 1 queue-delay estimate.
+    /// O(lanes), allocation-free.
+    pub fn pending_weighted(&self, weight: impl Fn(usize, usize) -> f64) -> f64 {
+        self.lanes
+            .iter()
+            .filter(|l| !l.items.is_empty())
+            .map(|l| l.items.len() as f64 * weight(l.model, l.res))
+            .sum()
+    }
+
     /// Earliest pull deadline across lanes (`oldest + max_wait`; None when
     /// empty) — lets the event loop schedule the next timeout poll
     /// precisely.

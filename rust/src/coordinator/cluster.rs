@@ -6,6 +6,15 @@
 //! executions** of the detector-zoo artifacts (real tensor compute on the
 //! request path).
 //!
+//! Control plane: the cluster is driven by the unified
+//! [`crate::policy::Policy`] trait — the same implementations that drive
+//! the slot simulator. Per-arrival decisions go through a
+//! [`DecisionCache`], so every arrival at one decision instant shares a
+//! single `decide_into` call (and the trained actor one forward pass).
+//! Construction is scenario-first: [`EdgeCluster::new`] consumes a
+//! [`Scenario`] descriptor (workload, bandwidth, profiles, per-node GPU
+//! speed, deadline, batching knobs).
+//!
 //! GPU service model: each node's GPU is a serial resource. Frames that
 //! finish preprocessing (or arrive over a link) are *offered* to the node's
 //! per-(model, res) [`Batcher`]; the GPU pulls a ready batch whenever it is
@@ -26,10 +35,12 @@ use anyhow::Result;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::dispatcher::TransferScheduler;
 use crate::coordinator::router::Router;
-use crate::env::bandwidth::{Bandwidth, BandwidthConfig};
+use crate::env::bandwidth::Bandwidth;
 use crate::env::profiles::{Profiles, N_MODELS, N_RES};
-use crate::env::workload::{Workload, WorkloadConfig};
+use crate::env::workload::Workload;
 use crate::env::Action;
+use crate::policy::{DecisionCache, Policy, PolicyView};
+use crate::scenario::Scenario;
 
 /// Marginal cost of each additional frame in a profile-table batch,
 /// relative to the single-frame inference delay: a batch of `k` takes
@@ -38,6 +49,8 @@ use crate::env::Action;
 pub const PROFILE_BATCH_MARGINAL: f64 = 0.7;
 
 /// Supplies compute durations (and optionally runs the real kernels).
+/// Durations are for the profile-table baseline GPU; the cluster scales
+/// them by the serving node's [`Scenario::gpu_speed`] factor.
 pub trait ComputeHook {
     /// Pallas-resize preprocessing; returns elapsed virtual seconds.
     fn preprocess(&mut self, node: usize, res: usize) -> Result<f64>;
@@ -95,11 +108,6 @@ impl ComputeHook for ProfileCompute {
         let d = self.profiles.infer_delay[model][res];
         Ok(d * (1.0 + self.batch_marginal * (k.max(1) - 1) as f64))
     }
-}
-
-/// Decides the (e, m, v) for a request arriving at `node`.
-pub trait ServingPolicy {
-    fn decide(&mut self, cluster: &EdgeCluster, node: usize) -> Result<Action>;
 }
 
 /// Record of one served (or dropped) request.
@@ -191,12 +199,19 @@ pub struct EdgeCluster {
     pub n_nodes: usize,
     pub profiles: Profiles,
     pub drop_deadline: f64,
+    omega: f64,
+    drop_penalty: f64,
+    /// Relative per-node GPU speed: compute durations at node i are
+    /// scaled by `1 / gpu_speed[i]` (heterogeneous-node scenarios).
+    gpu_speed: Vec<f64>,
     workload: Workload,
     bandwidth: Bandwidth,
     transfers: TransferScheduler,
     pub router: Router,
     slot_secs: f64,
     now: f64,
+    /// Workload slots elapsed (advances with the rate history).
+    slot: u64,
     seq: u64,
     next_id: u64,
     next_batch_id: u64,
@@ -206,16 +221,25 @@ pub struct EdgeCluster {
     /// GPU pulls a per-(model, res) batch.
     batchers: Vec<Batcher>,
     gpu_busy: Vec<bool>,
+    /// Absolute time each node's in-flight batch completes (only
+    /// meaningful while `gpu_busy`); feeds the Eq. 1 queue-delay estimate.
+    gpu_busy_until: Vec<f64>,
     /// Earliest armed BatchDeadline per node (f64::INFINITY = none armed)
     /// — dedupes poll events so each idle wait schedules one wakeup.
     next_poll: Vec<f64>,
     rate_hist: Vec<VecDeque<f64>>,
     hist_len: usize,
+    /// Observation normalizers (same roles as the simulator's).
+    rate_norm: f64,
+    queue_norm: f64,
+    bw_norm: f64,
+    /// Per-instant decision cache over the unified [`Policy`] trait.
+    decisions: DecisionCache,
     pub served: Vec<ServedRequest>,
     /// Requests emitted into the cluster (slot arrivals + injected).
     pub emitted: u64,
     /// Requests still in flight (queued, batching or on a link) when the
-    /// horizon ended the run; set by [`EdgeCluster::run`].
+    /// horizon ended the run; set by [`EdgeCluster::finish`].
     pub residual: u64,
     /// Reusable per-slot workload buffers (serving hot path: no fresh
     /// Vecs per slot — same `*_into` idiom as the simulator core).
@@ -227,45 +251,56 @@ pub struct EdgeCluster {
 }
 
 impl EdgeCluster {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        n_nodes: usize,
-        workload_cfg: WorkloadConfig,
-        bandwidth_cfg: BandwidthConfig,
-        profiles: Profiles,
-        slot_secs: f64,
-        drop_deadline: f64,
-        hist_len: usize,
-        max_batch: usize,
-        batch_wait: f64,
-        seed: u64,
-    ) -> Self {
+    /// Build a cluster from a [`Scenario`] descriptor — the same
+    /// descriptor that parameterizes the slot simulator.
+    pub fn new(scenario: &Scenario, seed: u64) -> Self {
+        scenario.validate();
+        let n = scenario.n_nodes;
         let mut heap = BinaryHeap::new();
         heap.push(Timed { at: 0.0, seq: 0, ev: Event::SlotBoundary });
         EdgeCluster {
-            n_nodes,
-            profiles,
-            drop_deadline,
-            workload: Workload::new(workload_cfg, seed),
-            bandwidth: Bandwidth::new(bandwidth_cfg, seed.wrapping_add(1)),
-            transfers: TransferScheduler::new(n_nodes),
-            router: Router::new(n_nodes, false, Some(drop_deadline)),
-            slot_secs,
+            n_nodes: n,
+            profiles: scenario.profiles.clone(),
+            drop_deadline: scenario.drop_threshold,
+            omega: scenario.omega,
+            drop_penalty: scenario.drop_penalty,
+            gpu_speed: scenario.gpu_speed.clone(),
+            workload: Workload::new(scenario.workload.clone(), seed),
+            bandwidth: Bandwidth::new(
+                scenario.bandwidth.clone(),
+                seed.wrapping_add(1),
+            ),
+            transfers: TransferScheduler::new(n),
+            router: Router::new(n, false, Some(scenario.drop_threshold)),
+            slot_secs: scenario.slot_secs,
             now: 0.0,
+            slot: 0,
             seq: 1,
             next_id: 0,
             next_batch_id: 0,
             heap,
             reqs: HashMap::new(),
-            batchers: (0..n_nodes)
-                .map(|_| Batcher::new(N_MODELS, N_RES, max_batch, batch_wait))
+            batchers: (0..n)
+                .map(|_| {
+                    Batcher::new(
+                        N_MODELS,
+                        N_RES,
+                        scenario.max_batch,
+                        scenario.batch_wait,
+                    )
+                })
                 .collect(),
-            gpu_busy: vec![false; n_nodes],
-            next_poll: vec![f64::INFINITY; n_nodes],
-            rate_hist: (0..n_nodes)
-                .map(|_| VecDeque::from(vec![0.0; hist_len]))
+            gpu_busy: vec![false; n],
+            gpu_busy_until: vec![0.0; n],
+            next_poll: vec![f64::INFINITY; n],
+            rate_hist: (0..n)
+                .map(|_| VecDeque::from(vec![0.0; scenario.hist_len]))
                 .collect(),
-            hist_len,
+            hist_len: scenario.hist_len,
+            rate_norm: scenario.rate_norm,
+            queue_norm: scenario.queue_norm,
+            bw_norm: scenario.bw_norm,
+            decisions: DecisionCache::new(),
             served: Vec::new(),
             emitted: 0,
             residual: 0,
@@ -285,6 +320,20 @@ impl EdgeCluster {
         self.batchers[node].pending()
     }
 
+    /// Estimated queuing delay at `node` (Eq. 1, serving-engine form):
+    /// residual time of the in-flight batch plus the inference seconds of
+    /// every lane-resident frame, scaled by the node's GPU speed.
+    pub fn queue_delay_estimate(&self, node: usize) -> f64 {
+        let gpu_backlog = if self.gpu_busy[node] {
+            (self.gpu_busy_until[node] - self.now).max(0.0)
+        } else {
+            0.0
+        };
+        let lane_secs = self.batchers[node]
+            .pending_weighted(|m, v| self.profiles.infer_delay[m][v]);
+        gpu_backlog + lane_secs / self.gpu_speed[node]
+    }
+
     pub fn gpu_busy(&self, node: usize) -> bool {
         self.gpu_busy[node]
     }
@@ -301,24 +350,11 @@ impl EdgeCluster {
         self.rate_hist[node].iter().copied()
     }
 
-    /// Append node `node`'s normalized policy observation to `f` — same
-    /// layout as the slot simulator's `observation_into`, reusable-buffer
-    /// variant for the serving hot path.
+    /// Append node `node`'s normalized policy observation to `f` — the
+    /// shared [`PolicyView`] encoder (identical layout to the slot
+    /// simulator's), reusable-buffer variant for the serving hot path.
     pub fn observation_into(&self, node: usize, f: &mut Vec<f32>) {
-        for r in &self.rate_hist[node] {
-            f.push((r / 2.0) as f32);
-        }
-        f.push(self.queue_len(node) as f32 / 25.0);
-        for j in 0..self.n_nodes {
-            if j != node {
-                f.push(self.transfers.in_flight(node, j) as f32 / 25.0);
-            }
-        }
-        for j in 0..self.n_nodes {
-            if j != node {
-                f.push((self.bandwidth.get(node, j) / 40.0) as f32);
-            }
-        }
+        PolicyView::observation_into(self, node, f)
     }
 
     /// Normalized policy observation, same layout as the slot simulator.
@@ -357,7 +393,7 @@ impl EdgeCluster {
     }
 
     /// Inject one request arriving at `node` at virtual time `at` —
-    /// deterministic test hook (pairs with a zero-rate [`WorkloadConfig`]
+    /// deterministic test hook (pairs with a zero-rate workload scenario
     /// to script exact arrival patterns). Returns the request id.
     pub fn inject_request(&mut self, node: usize, at: f64) -> u64 {
         self.emit_request(node, at)
@@ -365,20 +401,39 @@ impl EdgeCluster {
 
     /// Run the serving loop for `duration` virtual seconds, then account
     /// every request still in flight as residual (`emitted ==
-    /// completed + dropped + residual` afterwards).
+    /// completed + dropped + residual` afterwards). Equivalent to
+    /// [`EdgeCluster::step_until`] + [`EdgeCluster::finish`].
     pub fn run(
         &mut self,
-        policy: &mut dyn ServingPolicy,
+        policy: &mut dyn Policy,
         compute: &mut dyn ComputeHook,
         duration: f64,
     ) -> Result<()> {
-        while let Some(Timed { at, ev, .. }) = self.heap.pop() {
-            if at > duration {
-                break;
-            }
+        self.step_until(policy, compute, duration)?;
+        self.finish(duration);
+        Ok(())
+    }
+
+    /// Process every event up to virtual time `until` and stop, leaving
+    /// later events queued — the incremental driving surface (alloc
+    /// probes, future online serving loops). Call [`EdgeCluster::finish`]
+    /// to close the run and account residual requests.
+    ///
+    /// Hot-path contract: in steady state (event population, request
+    /// high-water marks and `served` capacity reached) a `step_until`
+    /// window performs zero heap allocations with a dep-free policy and
+    /// compute hook — enforced by `tests/alloc_probe.rs`.
+    pub fn step_until(
+        &mut self,
+        policy: &mut dyn Policy,
+        compute: &mut dyn ComputeHook,
+        until: f64,
+    ) -> Result<()> {
+        while self.heap.peek().is_some_and(|t| t.at <= until) {
+            let Timed { at, ev, .. } = self.heap.pop().unwrap();
             self.now = at;
             match ev {
-                Event::SlotBoundary => self.on_slot(duration)?,
+                Event::SlotBoundary => self.on_slot()?,
                 Event::Arrival { node, req } => {
                     self.on_arrival(node, req, policy, compute)?
                 }
@@ -396,37 +451,44 @@ impl EdgeCluster {
                 }
             }
         }
-        self.now = duration;
-        // End-of-horizon drain: whatever is still pending (queued in a
-        // batcher, on a link, or created but not yet arrived) is residual.
+        Ok(())
+    }
+
+    /// End the run at `horizon`: whatever is still pending (queued in a
+    /// batcher, on a link, or created but not yet arrived) becomes
+    /// residual, completing the conservation accounting.
+    pub fn finish(&mut self, horizon: f64) {
+        self.now = horizon;
         self.residual = self.reqs.len() as u64;
         self.reqs.clear();
         for b in &mut self.batchers {
             b.clear();
         }
-        Ok(())
     }
 
-    fn on_slot(&mut self, horizon: f64) -> Result<()> {
+    fn on_slot(&mut self) -> Result<()> {
+        self.slot += 1;
         self.bandwidth.step();
-        self.workload
-            .step_into(&mut self.rates_scratch, &mut self.counts_scratch);
+        let mut rates = std::mem::take(&mut self.rates_scratch);
+        let mut counts = std::mem::take(&mut self.counts_scratch);
+        self.workload.step_into(&mut rates, &mut counts);
         for i in 0..self.n_nodes {
-            self.rate_hist[i].push_back(self.rates_scratch[i]);
+            self.rate_hist[i].push_back(rates[i]);
             if self.rate_hist[i].len() > self.hist_len {
                 self.rate_hist[i].pop_front();
             }
-            for k in 0..self.counts_scratch[i] {
+            for k in 0..counts[i] {
                 let at = self.now
-                    + self.slot_secs * (k as f64 + 0.5)
-                        / self.counts_scratch[i] as f64;
+                    + self.slot_secs * (k as f64 + 0.5) / counts[i] as f64;
                 self.emit_request(i, at);
             }
         }
+        self.rates_scratch = rates;
+        self.counts_scratch = counts;
+        // the chain is unconditional; step_until's bound decides whether
+        // the next boundary ever executes
         let next = self.now + self.slot_secs;
-        if next <= horizon {
-            self.push_event(next, Event::SlotBoundary);
-        }
+        self.push_event(next, Event::SlotBoundary);
         Ok(())
     }
 
@@ -434,21 +496,36 @@ impl EdgeCluster {
         &mut self,
         node: usize,
         req: u64,
-        policy: &mut dyn ServingPolicy,
+        policy: &mut dyn Policy,
         compute: &mut dyn ComputeHook,
     ) -> Result<()> {
-        let raw = policy.decide(self, node)?;
-        let infer = self.profiles.infer_delay[raw.model][raw.res];
+        // unified control plane: per-arrival queries share one batched
+        // decide_into per decision instant
+        let raw = {
+            let mut cache = std::mem::take(&mut self.decisions);
+            let decided = cache.action_for(policy, self, node);
+            self.decisions = cache;
+            decided?
+        };
+        // validate the whole action before the table lookups below; the
+        // router re-checks but would be reached only after the indexing
+        anyhow::ensure!(
+            raw.edge < self.n_nodes && raw.model < N_MODELS && raw.res < N_RES,
+            "action out of range: {raw:?}"
+        );
+        let infer = self.profiles.infer_delay[raw.model][raw.res]
+            / self.gpu_speed[raw.edge];
         let mbits = self.profiles.frame_mbits[raw.res];
         // snapshot the one link bandwidth the router's veto check needs
-        let bw_val = if raw.edge != node && raw.edge < self.n_nodes {
+        let bw_val = if raw.edge != node {
             self.bandwidth.get(node, raw.edge)
         } else {
             f64::INFINITY
         };
         let action = self.router.route(node, raw, |_, _| bw_val, mbits, infer)?;
         // preprocessing happens at the origin (Pallas resize / real exec)
-        let pre_secs = compute.preprocess(node, action.res)?;
+        let pre_secs =
+            compute.preprocess(node, action.res)? / self.gpu_speed[node];
         let ready = self.now + pre_secs;
         if action.edge == node {
             if let Some(r) = self.reqs.get_mut(&req) {
@@ -588,11 +665,13 @@ impl EdgeCluster {
         if survivors == 0 {
             return Ok(false);
         }
-        let secs = compute.detect_batch(node, model, res, survivors)?;
+        let secs = compute.detect_batch(node, model, res, survivors)?
+            / self.gpu_speed[node];
         let finish = self.now + secs;
         let batch_id = self.next_batch_id;
         self.next_batch_id += 1;
         self.gpu_busy[node] = true;
+        self.gpu_busy_until[node] = finish;
         for &id in items {
             let Some(r) = self.reqs.remove(&id) else { continue };
             // a completion past the deadline still counts as a drop —
@@ -622,30 +701,101 @@ impl EdgeCluster {
     }
 }
 
+/// The serving cluster as a [`PolicyView`]: the unified `Policy` trait
+/// decides from this view whether it is driving the slot simulator or the
+/// event-driven engine.
+impl PolicyView for EdgeCluster {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn slot(&self) -> u64 {
+        self.slot
+    }
+
+    fn queue_len(&self, node: usize) -> usize {
+        EdgeCluster::queue_len(self, node)
+    }
+
+    fn queue_delay_estimate(&self, node: usize) -> f64 {
+        EdgeCluster::queue_delay_estimate(self, node)
+    }
+
+    fn link_backlog(&self, from: usize, to: usize) -> usize {
+        self.transfers.in_flight(from, to)
+    }
+
+    fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
+        self.bandwidth.get(from, to)
+    }
+
+    fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64)) {
+        for &r in &self.rate_hist[node] {
+            f(r);
+        }
+    }
+
+    fn rate_norm(&self) -> f64 {
+        self.rate_norm
+    }
+
+    fn queue_norm(&self) -> f64 {
+        self.queue_norm
+    }
+
+    fn bw_norm(&self) -> f64 {
+        self.bw_norm
+    }
+
+    fn profiles(&self) -> &Profiles {
+        &self.profiles
+    }
+
+    fn gpu_speed(&self, node: usize) -> f64 {
+        self.gpu_speed[node]
+    }
+
+    fn omega(&self) -> f64 {
+        self.omega
+    }
+
+    fn drop_threshold(&self) -> f64 {
+        self.drop_deadline
+    }
+
+    fn drop_penalty(&self) -> f64 {
+        self.drop_penalty
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     struct LocalMin;
-    impl ServingPolicy for LocalMin {
-        fn decide(&mut self, _c: &EdgeCluster, node: usize) -> Result<Action> {
-            Ok(Action::new(node, 0, 4))
+    impl Policy for LocalMin {
+        fn name(&self) -> &str {
+            "local_min"
+        }
+        fn decide_into(
+            &mut self,
+            view: &dyn PolicyView,
+            out: &mut Vec<Action>,
+        ) -> Result<()> {
+            out.clear();
+            for i in 0..view.n_nodes() {
+                out.push(Action::new(i, 0, 4));
+            }
+            Ok(())
         }
     }
 
     fn cluster(seed: u64) -> EdgeCluster {
-        EdgeCluster::new(
-            4,
-            WorkloadConfig::default(),
-            BandwidthConfig::default(),
-            Profiles::default(),
-            0.2,
-            1.5,
-            5,
-            8,
-            0.004,
-            seed,
-        )
+        EdgeCluster::new(&Scenario::by_name("paper").unwrap(), seed)
     }
 
     #[test]
@@ -666,9 +816,20 @@ mod tests {
     #[test]
     fn dispatch_policy_reaches_remote_nodes() {
         struct AllToZero;
-        impl ServingPolicy for AllToZero {
-            fn decide(&mut self, _c: &EdgeCluster, _n: usize) -> Result<Action> {
-                Ok(Action::new(0, 0, 4))
+        impl Policy for AllToZero {
+            fn name(&self) -> &str {
+                "all_to_zero"
+            }
+            fn decide_into(
+                &mut self,
+                view: &dyn PolicyView,
+                out: &mut Vec<Action>,
+            ) -> Result<()> {
+                out.clear();
+                for _ in 0..view.n_nodes() {
+                    out.push(Action::new(0, 0, 4));
+                }
+                Ok(())
             }
         }
         let mut c = cluster(1);
@@ -700,5 +861,51 @@ mod tests {
         let mut hook = ProfileCompute::new(Profiles::default());
         c.run(&mut LocalMin, &mut hook, 12.0).unwrap();
         assert_eq!(c.emitted, c.served.len() as u64 + c.residual);
+    }
+
+    #[test]
+    fn step_until_then_finish_equals_run() {
+        let mut hook = ProfileCompute::new(Profiles::default());
+        let mut whole = cluster(5);
+        whole.run(&mut LocalMin, &mut hook, 12.0).unwrap();
+
+        let mut stepped = cluster(5);
+        let mut t = 0.0;
+        while t < 12.0 {
+            t = (t + 1.0).min(12.0);
+            stepped.step_until(&mut LocalMin, &mut hook, t).unwrap();
+        }
+        stepped.finish(12.0);
+
+        assert_eq!(whole.emitted, stepped.emitted);
+        assert_eq!(whole.residual, stepped.residual);
+        assert_eq!(whole.served.len(), stepped.served.len());
+        for (a, b) in whole.served.iter().zip(stepped.served.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn hetero_scenario_slows_slow_node() {
+        // the same injected frame takes 1/speed longer on a slow node
+        let scenario = |speed: Vec<f64>| {
+            Scenario::custom("speed-probe")
+                .nodes(2)
+                .arrival_means(vec![0.0, 0.0])
+                .gpu_speed(speed)
+                .build()
+        };
+        let serve = |sc: &Scenario| {
+            let mut c = EdgeCluster::new(sc, 0);
+            let id = c.inject_request(0, 0.0);
+            let mut hook = ProfileCompute::new(Profiles::default());
+            c.run(&mut LocalMin, &mut hook, 5.0).unwrap();
+            let s = c.served.iter().find(|s| s.id == id).unwrap().clone();
+            s.finish - s.service_start
+        };
+        let base = serve(&scenario(vec![1.0, 1.0]));
+        let slow = serve(&scenario(vec![0.5, 1.0]));
+        assert!((slow - 2.0 * base).abs() < 1e-9, "slow {slow} base {base}");
     }
 }

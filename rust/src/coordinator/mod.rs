@@ -1,7 +1,9 @@
 //! L3 coordination — the serving-shaped pieces that turn the paper's
 //! control policy into a request-path runtime: routing validation,
 //! dynamic batching, bandwidth-aware dispatch scheduling and the
-//! virtual-time edge cluster used by the online serving runtime.
+//! virtual-time edge cluster used by the online serving runtime. The
+//! cluster is driven through the unified [`crate::policy::Policy`] trait
+//! and built from [`crate::scenario::Scenario`] descriptors.
 
 pub mod batcher;
 pub mod cluster;
@@ -9,8 +11,6 @@ pub mod dispatcher;
 pub mod router;
 
 pub use batcher::Batcher;
-pub use cluster::{
-    ComputeHook, EdgeCluster, ProfileCompute, ServedRequest, ServingPolicy,
-};
+pub use cluster::{ComputeHook, EdgeCluster, ProfileCompute, ServedRequest};
 pub use dispatcher::TransferScheduler;
 pub use router::{Router, RoutingStats};

@@ -9,7 +9,7 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BandwidthConfig {
     pub n_nodes: usize,
     pub min_mbps: f64,

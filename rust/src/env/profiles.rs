@@ -48,7 +48,7 @@ pub const PREPROC_DELAY: [f64; N_RES] = [0.0, 0.008, 0.006, 0.005, 0.004];
 pub const FRAME_MBITS: [f64; N_RES] = [4.0, 2.0, 0.96, 0.64, 0.32];
 
 /// Profile bundle handed to the simulator (replaceable for what-if tests).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Profiles {
     pub accuracy: [[f64; N_RES]; N_MODELS],
     pub infer_delay: [[f64; N_RES]; N_MODELS],

@@ -29,8 +29,10 @@ use super::profiles::{Profiles, N_MODELS, N_RES};
 use super::request::{Action, Finished, Outcome, Request};
 use super::workload::{Workload, WorkloadConfig};
 use crate::config::EnvConfig;
+use crate::scenario::Scenario;
 
-/// Static simulator configuration, derived from [`EnvConfig`].
+/// Static simulator configuration, derived from a [`Scenario`] (or, for
+/// the paper-default setting, an [`EnvConfig`]).
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub n_nodes: usize,
@@ -45,41 +47,43 @@ pub struct SimConfig {
     pub workload: WorkloadConfig,
     pub bandwidth: BandwidthConfig,
     pub profiles: Profiles,
+    /// Relative per-node GPU speed: preprocessing and inference at node i
+    /// take `delay / gpu_speed[i]` seconds (1.0 = profile-table baseline;
+    /// heterogeneous scenarios spread this).
+    pub gpu_speed: Vec<f64>,
 }
 
 impl SimConfig {
+    /// Paper-default configuration under `env`'s overrides — delegates to
+    /// [`Scenario::from_env`] so env-driven and scenario-driven
+    /// construction can never drift apart.
     pub fn from_env(env: &EnvConfig) -> Self {
+        SimConfig::from_scenario(&Scenario::from_env(env))
+    }
+
+    /// The slot-simulator slice of a [`Scenario`] descriptor.
+    pub fn from_scenario(sc: &Scenario) -> Self {
+        sc.validate();
         SimConfig {
-            n_nodes: env.n_nodes,
-            slot_secs: env.slot_secs,
-            drop_threshold: env.drop_threshold,
-            drop_penalty: env.drop_penalty,
-            omega: env.omega,
-            hist_len: env.hist_len,
-            queue_norm: env.queue_norm,
-            rate_norm: 2.0,
-            bw_norm: env.bw_max_mbps,
-            workload: WorkloadConfig {
-                means: env.arrival_means.clone(),
-                ..WorkloadConfig::default()
-            },
-            bandwidth: BandwidthConfig {
-                n_nodes: env.n_nodes,
-                min_mbps: env.bw_min_mbps,
-                max_mbps: env.bw_max_mbps,
-                ..BandwidthConfig::default()
-            },
-            profiles: env_profiles(),
+            n_nodes: sc.n_nodes,
+            slot_secs: sc.slot_secs,
+            drop_threshold: sc.drop_threshold,
+            drop_penalty: sc.drop_penalty,
+            omega: sc.omega,
+            hist_len: sc.hist_len,
+            queue_norm: sc.queue_norm,
+            rate_norm: sc.rate_norm,
+            bw_norm: sc.bw_norm,
+            workload: sc.workload.clone(),
+            bandwidth: sc.bandwidth.clone(),
+            profiles: sc.profiles.clone(),
+            gpu_speed: sc.gpu_speed.clone(),
         }
     }
 
     pub fn obs_dim(&self) -> usize {
-        self.hist_len + 1 + 2 * (self.n_nodes - 1)
+        crate::policy::obs_dim(self.hist_len, self.n_nodes)
     }
-}
-
-fn env_profiles() -> Profiles {
-    Profiles::default()
 }
 
 /// Local observation of one node (Eq. 6), already normalized for the nets.
@@ -183,6 +187,11 @@ pub struct Simulator {
 
 impl Simulator {
     pub fn new(cfg: SimConfig, seed: u64) -> Self {
+        assert_eq!(
+            cfg.gpu_speed.len(),
+            cfg.n_nodes,
+            "one gpu_speed entry per node"
+        );
         let n = cfg.n_nodes;
         let mut sim = Simulator {
             workload: Workload::new(cfg.workload.clone(), seed),
@@ -204,6 +213,12 @@ impl Simulator {
             }
         }
         sim
+    }
+
+    /// Simulator under a named/built [`Scenario`] descriptor — the
+    /// unified-control-plane construction path.
+    pub fn from_scenario(sc: &Scenario, seed: u64) -> Self {
+        Simulator::new(SimConfig::from_scenario(sc), seed)
     }
 
     /// Reset to slot 0 with a fresh episode seed.
@@ -231,11 +246,12 @@ impl Simulator {
 
     /// Estimated queuing delay at node i given current queue contents
     /// (Eq. 1): residual GPU busy time plus the inference seconds of every
-    /// queued request. O(N_MODELS * N_RES) via the incremental tally — it
-    /// does not walk the queue.
+    /// queued request, scaled by the node's GPU speed. O(N_MODELS * N_RES)
+    /// via the incremental tally — it does not walk the queue.
     pub fn queue_delay_estimate(&self, i: usize) -> f64 {
         let gpu_backlog = (self.gpu_busy_until[i] - self.now).max(0.0);
-        gpu_backlog + self.backlog[i].secs(&self.cfg.profiles)
+        gpu_backlog
+            + self.backlog[i].secs(&self.cfg.profiles) / self.cfg.gpu_speed[i]
     }
 
     /// Queued inference seconds at node i from the incremental tally.
@@ -268,27 +284,12 @@ impl Simulator {
 
     /// Append node i's normalized local observation o_i(t) (Eq. 6) to `out`
     /// — exactly `obs_dim` features, no clearing, no allocation beyond
-    /// `out`'s own growth to its high-water mark.
+    /// `out`'s own growth to its high-water mark. The encoding is the
+    /// shared [`crate::policy::PolicyView`] encoder, so the simulator and
+    /// the serving cluster can never drift apart in feature layout.
     pub fn observation_into(&self, i: usize, out: &mut Vec<f32>) {
-        let n = self.cfg.n_nodes;
         let start = out.len();
-        for r in &self.rate_hist[i] {
-            out.push((r / self.cfg.rate_norm) as f32);
-        }
-        out.push((self.task_queues[i].len() as f64 / self.cfg.queue_norm) as f32);
-        for j in 0..n {
-            if j != i {
-                out.push(
-                    (self.dispatch_queue_len(i, j) as f64 / self.cfg.queue_norm)
-                        as f32,
-                );
-            }
-        }
-        for j in 0..n {
-            if j != i {
-                out.push((self.bandwidth.get(i, j) / self.cfg.bw_norm) as f32);
-            }
-        }
+        crate::policy::PolicyView::observation_into(self, i, out);
         debug_assert_eq!(out.len() - start, self.cfg.obs_dim());
     }
 
@@ -356,7 +357,10 @@ impl Simulator {
                 let arrival = t0
                     + self.cfg.slot_secs * (k as f64 + 0.5)
                         / count as f64;
-                let ready = arrival + self.cfg.profiles.preproc_delay[a.res];
+                // preprocessing runs at the origin node's GPU speed
+                let ready = arrival
+                    + self.cfg.profiles.preproc_delay[a.res]
+                        / self.cfg.gpu_speed[i];
                 let req = Request {
                     id: self.next_id,
                     origin: i,
@@ -429,8 +433,8 @@ impl Simulator {
                     out.finished.push(self.drop(&req, i, waited));
                     continue;
                 }
-                let infer =
-                    self.cfg.profiles.infer_delay_of(req.model, req.res);
+                let infer = self.cfg.profiles.infer_delay_of(req.model, req.res)
+                    / self.cfg.gpu_speed[i];
                 let complete = start + infer;
                 let delay = complete - req.arrival;
                 if delay > self.cfg.drop_threshold {
@@ -513,6 +517,77 @@ impl Simulator {
     pub fn in_flight(&self) -> usize {
         self.task_queues.iter().map(|q| q.len()).sum::<usize>()
             + self.dispatch_queues.iter().map(|q| q.len()).sum::<usize>()
+    }
+}
+
+/// The slot simulator as a [`crate::policy::PolicyView`]: the unified
+/// `Policy` trait decides from this view whether it is driving the
+/// simulator or the event-driven serving cluster.
+impl crate::policy::PolicyView for Simulator {
+    fn n_nodes(&self) -> usize {
+        self.cfg.n_nodes
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn slot(&self) -> u64 {
+        self.slot
+    }
+
+    fn queue_len(&self, node: usize) -> usize {
+        self.task_queues[node].len()
+    }
+
+    fn queue_delay_estimate(&self, node: usize) -> f64 {
+        Simulator::queue_delay_estimate(self, node)
+    }
+
+    fn link_backlog(&self, from: usize, to: usize) -> usize {
+        self.dispatch_queue_len(from, to)
+    }
+
+    fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
+        self.bandwidth.get(from, to)
+    }
+
+    fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64)) {
+        for &r in &self.rate_hist[node] {
+            f(r);
+        }
+    }
+
+    fn rate_norm(&self) -> f64 {
+        self.cfg.rate_norm
+    }
+
+    fn queue_norm(&self) -> f64 {
+        self.cfg.queue_norm
+    }
+
+    fn bw_norm(&self) -> f64 {
+        self.cfg.bw_norm
+    }
+
+    fn profiles(&self) -> &Profiles {
+        &self.cfg.profiles
+    }
+
+    fn gpu_speed(&self, node: usize) -> f64 {
+        self.cfg.gpu_speed[node]
+    }
+
+    fn omega(&self) -> f64 {
+        self.cfg.omega
+    }
+
+    fn drop_threshold(&self) -> f64 {
+        self.cfg.drop_threshold
+    }
+
+    fn drop_penalty(&self) -> f64 {
+        self.cfg.drop_penalty
     }
 }
 

@@ -8,7 +8,7 @@
 
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
     /// Mean arrivals per slot, per node (defines the light/heavy skew).
     pub means: Vec<f64>,
@@ -73,8 +73,11 @@ impl Workload {
         self.cfg.means.len()
     }
 
-    /// Advance one slot; returns (rates, arrival counts) per node.
-    pub fn step(&mut self) -> (Vec<f64>, Vec<usize>) {
+    /// Advance one slot; returns freshly allocated (rates, arrival counts)
+    /// per node. Reference/test variant only — both engines' hot loops use
+    /// [`Workload::step_into`] (the alloc probe enforces it), hence the
+    /// explicit `_alloc` suffix.
+    pub fn step_alloc(&mut self) -> (Vec<f64>, Vec<usize>) {
         let mut rates = Vec::with_capacity(self.n_nodes());
         let mut counts = Vec::with_capacity(self.n_nodes());
         self.step_into(&mut rates, &mut counts);
@@ -129,7 +132,7 @@ mod tests {
         let slots = 20_000;
         let mut sums = vec![0.0; n];
         for _ in 0..slots {
-            let (rates, _) = w.step();
+            let (rates, _) = w.step_alloc();
             for i in 0..n {
                 sums[i] += rates[i];
             }
@@ -151,7 +154,7 @@ mod tests {
         let mut w = Workload::new(WorkloadConfig::default(), 7);
         let mut sums = vec![0.0; 4];
         for _ in 0..5000 {
-            let (_, counts) = w.step();
+            let (_, counts) = w.step_alloc();
             for i in 0..4 {
                 sums[i] += counts[i] as f64;
             }
@@ -164,7 +167,7 @@ mod tests {
         let mut a = Workload::new(WorkloadConfig::default(), 3);
         let mut b = Workload::new(WorkloadConfig::default(), 3);
         for _ in 0..100 {
-            assert_eq!(a.step().1, b.step().1);
+            assert_eq!(a.step_alloc().1, b.step_alloc().1);
         }
     }
 
@@ -172,7 +175,7 @@ mod tests {
     fn rates_nonnegative() {
         let mut w = Workload::new(WorkloadConfig::default(), 11);
         for _ in 0..2000 {
-            let (rates, _) = w.step();
+            let (rates, _) = w.step_alloc();
             assert!(rates.iter().all(|r| *r >= 0.0));
         }
     }

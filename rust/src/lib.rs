@@ -15,6 +15,13 @@
 //! Python runs only at build time (`make artifacts`); the Rust binary is
 //! self-contained afterwards and executes everything through PJRT.
 //!
+//! Control plane: one [`policy::Policy`] trait drives both execution
+//! substrates (the slot [`env::Simulator`] and the event-driven
+//! [`coordinator::EdgeCluster`]), and one [`scenario::Scenario`]
+//! descriptor (named registry: `paper`, `steady`, `diurnal`,
+//! `flash-crowd`, `link-degraded`, `hetero-nodes`, `hotspot`)
+//! parameterizes every run — see ROADMAP.md §Unified control plane.
+//!
 //! The PJRT execution stack (runtime, trained policy, trainer, serving,
 //! experiments) requires the `pjrt` cargo feature, which pulls in the
 //! `xla` crate. The simulator, coordinator, baselines and bench substrate
@@ -40,9 +47,11 @@ pub mod coordinator;
 pub mod env;
 #[cfg(feature = "pjrt")]
 pub mod experiments;
+pub mod policy;
 pub mod rl;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod serving;
 pub mod telemetry;
 pub mod util;

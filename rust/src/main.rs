@@ -23,13 +23,14 @@ use edgevision::serving::{run_serving, ServingOptions};
 use edgevision::telemetry::report::method_row;
 use edgevision::util::cli::Args;
 
-const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|experiment> [flags]
+const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios|experiment> [flags]
   repro info
   repro train --omega 5 --episodes 600 [--variant full|noattn|local] [--ippo] [--local-only] [--save FILE]
   repro evaluate --params FILE [--omega 5] [--eval-episodes 30] [--greedy]
   repro baselines [--omega 5]
-  repro serve [--duration 30] [--policy FILE]
-  repro experiment <fig3|fig45|fig6|fig7|fig8|headline|all> [--episodes N]";
+  repro serve [--duration 30] [--policy FILE] [--scenario NAME] [--list-scenarios]
+  repro scenarios
+  repro experiment <fig3|fig45|fig6|fig7|fig8|serving|headline|all> [--episodes N]";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -37,6 +38,9 @@ fn main() -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    if cmd == "scenarios" || args.bool("list-scenarios") {
+        return list_scenarios();
+    }
     let mut cfg = Config::default();
     cfg.apply_args(&args)?;
 
@@ -52,6 +56,22 @@ fn main() -> Result<()> {
         "experiment" => experiment(&rt, &manifest, cfg, &args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+fn list_scenarios() -> Result<()> {
+    println!("registered scenarios:");
+    for name in edgevision::scenario::Scenario::names() {
+        let s = edgevision::scenario::Scenario::by_name(name)?;
+        println!(
+            "  {name:<14} {} nodes, means {:?}, bw {}-{} Mbps, gpu_speed {:?}",
+            s.n_nodes,
+            s.workload.means,
+            s.bandwidth.min_mbps,
+            s.bandwidth.max_mbps,
+            s.gpu_speed
+        );
+    }
+    Ok(())
 }
 
 fn info(manifest: &Manifest) -> Result<()> {
@@ -151,13 +171,7 @@ fn baselines_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, _args: &Args) -
     let ctx = ExpContext::new(rt, manifest, cfg.clone());
     println!("omega = {}", cfg.env.omega);
     println!("{:<22} {:>10} {:>8} {:>8} {:>7} {:>7}", "method", "reward", "acc", "delay", "disp%", "drop%");
-    for h in [
-        "predictive",
-        "shortest_queue_min",
-        "shortest_queue_max",
-        "random_min",
-        "random_max",
-    ] {
+    for h in edgevision::baselines::HEURISTICS {
         let res = ctx.eval_heuristic(h, cfg.env.omega)?;
         let row = method_row(h, cfg.env.omega, &res.metrics, res.mean_episode_reward());
         println!(
@@ -174,13 +188,28 @@ fn baselines_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, _args: &Args) -
 }
 
 fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
+    // --scenario picks a registry entry; the default is the paper setting
+    // under the active EnvConfig overrides. The scalar env flags
+    // (--nodes/--omega/--drop-threshold/--drop-penalty) apply in both
+    // paths — at their defaults this leaves a registry entry untouched —
+    // while the regime itself (arrival means, bandwidth, GPU speeds)
+    // stays the scenario's own.
+    let scenario = match args.get("scenario") {
+        Some(name) => {
+            let mut s = edgevision::scenario::Scenario::by_name(name)?
+                .with_nodes(cfg.env.n_nodes);
+            s.omega = cfg.env.omega;
+            s.drop_threshold = cfg.env.drop_threshold;
+            s.drop_penalty = cfg.env.drop_penalty;
+            s
+        }
+        None => edgevision::scenario::Scenario::from_env(&cfg.env),
+    };
     let opts = ServingOptions {
-        n_nodes: cfg.env.n_nodes,
+        scenario,
         duration_virtual_secs: args.f64_or("duration", 30.0)?,
-        drop_deadline: cfg.env.drop_threshold,
         seed: cfg.rl.seed,
         greedy: true,
-        ..Default::default()
     };
     let blob = match args.get("policy") {
         Some(path) => {
@@ -191,9 +220,10 @@ fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Res
         None => None,
     };
     println!(
-        "serving {} virtual seconds on {} nodes (policy: {})...",
+        "serving {} virtual seconds on {} nodes (scenario: {}, policy: {})...",
         opts.duration_virtual_secs,
-        opts.n_nodes,
+        opts.scenario.n_nodes,
+        opts.scenario.name,
         if blob.is_some() { "trained actor" } else { "shortest-queue" }
     );
     let report = run_serving(rt, manifest, blob.as_deref(), &opts)?;
@@ -206,7 +236,7 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|headline|all)")?;
+        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|serving|headline|all)")?;
     let ctx = ExpContext::new(rt, manifest, cfg);
     match which {
         "fig3" => ctx.fig3(),
@@ -214,6 +244,29 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
         "fig6" => ctx.fig6(),
         "fig7" => ctx.fig7(),
         "fig8" => ctx.fig8(),
+        "serving" => {
+            // RL vs every baseline on the event-driven serving core,
+            // one row per (scenario, method)
+            let rows = ctx.serving_comparison(
+                edgevision::scenario::Scenario::names(),
+                args.f64_or("duration", 30.0)?,
+            )?;
+            println!(
+                "{:<14} {:<20} {:>8} {:>8} {:>7} {:>10} {:>8}",
+                "scenario", "method", "emitted", "done", "drop%", "thruput", "acc"
+            );
+            for (scenario, method, r) in &rows {
+                println!(
+                    "{scenario:<14} {method:<20} {:>8} {:>8} {:>6.1}% {:>10.1} {:>8.4}",
+                    r.emitted,
+                    r.completed,
+                    100.0 * r.dropped as f64 / r.total.max(1) as f64,
+                    r.throughput_rps,
+                    r.mean_accuracy
+                );
+            }
+            Ok(())
+        }
         "headline" => ctx.headline(),
         "all" => ctx.all(),
         other => bail!("unknown experiment {other:?}"),

@@ -1,0 +1,409 @@
+//! Unified control plane — ONE policy abstraction for both execution
+//! substrates.
+//!
+//! Before this module the repo had two incompatible controller APIs:
+//! `rl::eval::Controller` (batch per-slot, drove the slot [`Simulator`])
+//! and `coordinator::cluster::ServingPolicy` (per-arrival, drove the
+//! event-driven `EdgeCluster`), so trained policies and baselines could
+//! not be benchmarked on the invariant-checked serving core. Both traits
+//! are retired; every controller — the trained MARL actor and every
+//! baseline — now implements [`Policy`] and runs unchanged against both
+//! layers:
+//!
+//! * [`PolicyView`] is the read-only cluster state a policy decides from.
+//!   The slot simulator and the event-driven serving cluster both
+//!   implement it, exposing the same signals (queue-delay estimates,
+//!   link backlogs, bandwidth, arrival-rate history, normalized
+//!   observations).
+//! * [`Policy::decide_into`] decides **all** nodes' `(e, m, v)` for one
+//!   control instant, writing into a caller-owned buffer — the zero-alloc
+//!   `*_into` idiom of the simulator hot path (PR 1 budget: 0 steady-state
+//!   allocations once buffers reach their high-water marks).
+//! * [`DecisionCache`] adapts the batch decision to the serving engine's
+//!   per-arrival queries: the first query of a decision instant runs
+//!   `decide_into` once; later queries at the same instant index the
+//!   cached vector. A policy therefore produces bit-identical decisions
+//!   whether invoked through the sim interface (one batch call per slot)
+//!   or the engine interface (per-node queries), pinned by
+//!   `prop_policy_adapter_bit_identical`.
+//!
+//! New behaviors land as [`crate::scenario`] registry entries + `Policy`
+//! implementations — not as new driver traits.
+
+use anyhow::Result;
+
+use crate::env::profiles::Profiles;
+use crate::env::Action;
+
+/// Width of the Eq. 6 observation the shared
+/// [`PolicyView::observation_into`] encoder emits per node: rate history,
+/// own queue, per-peer link backlog, per-peer bandwidth. The ONE place
+/// the formula lives — `EnvConfig`/`SimConfig`/`Scenario` `obs_dim()`
+/// all delegate here, so a layout change cannot desynchronize them.
+pub fn obs_dim(hist_len: usize, n_nodes: usize) -> usize {
+    hist_len + 1 + 2 * (n_nodes - 1)
+}
+
+/// Read-only view of cluster state that a [`Policy`] decides from.
+/// Implemented by the slot [`crate::env::Simulator`] and the event-driven
+/// [`crate::coordinator::EdgeCluster`]; tests use [`FrozenView`].
+pub trait PolicyView {
+    fn n_nodes(&self) -> usize;
+
+    /// Current virtual time (slot start for the simulator, event time for
+    /// the serving engine).
+    fn now(&self) -> f64;
+
+    /// Index of the current workload slot — the counter that advances
+    /// exactly when the observable rate history advances. Policies with
+    /// slot-paced internal state (e.g. the predictive EWMA) key updates
+    /// on this so their behavior is independent of how often decisions
+    /// are requested within a slot.
+    fn slot(&self) -> u64;
+
+    /// Requests pending GPU service at `node`.
+    fn queue_len(&self, node: usize) -> usize;
+
+    /// Estimated queuing delay at `node` (Eq. 1): residual GPU busy time
+    /// plus the inference seconds of every queued request, scaled by the
+    /// node's GPU speed.
+    fn queue_delay_estimate(&self, node: usize) -> f64;
+
+    /// Frames queued or in flight on directed link `from -> to`.
+    fn link_backlog(&self, from: usize, to: usize) -> usize;
+
+    /// Current bandwidth of directed link `from -> to` in Mbps.
+    fn bandwidth_mbps(&self, from: usize, to: usize) -> f64;
+
+    /// Visit `node`'s arrival-rate history, oldest first (callback form so
+    /// the trait stays object-safe and the hot path allocation-free).
+    fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64));
+
+    /// Observation normalizers — the trained network's input contract
+    /// (defaults are the paper values; override from scenario fields).
+    fn rate_norm(&self) -> f64 {
+        2.0
+    }
+    fn queue_norm(&self) -> f64 {
+        25.0
+    }
+    fn bw_norm(&self) -> f64 {
+        40.0
+    }
+
+    /// Append `node`'s normalized policy observation (Eq. 6 layout:
+    /// rate history, queue, per-peer link backlog, per-peer bandwidth).
+    /// Provided once here — the simulator, the serving cluster and the
+    /// test views all share this single encoder, so the feature layout
+    /// cannot drift between substrates.
+    fn observation_into(&self, node: usize, out: &mut Vec<f32>) {
+        self.for_each_rate(node, &mut |r| {
+            out.push((r / self.rate_norm()) as f32)
+        });
+        out.push((self.queue_len(node) as f64 / self.queue_norm()) as f32);
+        let n = self.n_nodes();
+        for j in 0..n {
+            if j != node {
+                out.push(
+                    (self.link_backlog(node, j) as f64 / self.queue_norm())
+                        as f32,
+                );
+            }
+        }
+        for j in 0..n {
+            if j != node {
+                out.push(
+                    (self.bandwidth_mbps(node, j) / self.bw_norm()) as f32,
+                );
+            }
+        }
+    }
+
+    /// Model/resolution accuracy + delay profiles in force.
+    fn profiles(&self) -> &Profiles;
+
+    /// Relative GPU speed of `node` (1.0 = the profile-table baseline;
+    /// heterogeneous scenarios scale service times by `1 / speed`).
+    fn gpu_speed(&self, node: usize) -> f64 {
+        let _ = node;
+        1.0
+    }
+
+    /// Delay penalty weight omega (Eq. 5).
+    fn omega(&self) -> f64;
+
+    /// Frame-drop threshold T in seconds (Eq. 5).
+    fn drop_threshold(&self) -> f64;
+
+    /// Drop penalty constant F (Eq. 5).
+    fn drop_penalty(&self) -> f64;
+}
+
+/// A control policy: one decision instant in, all nodes' `(e, m, v)` out.
+/// Implemented by the trained MARL actor and by every baseline; drives
+/// both the slot simulator (via `rl::eval::evaluate`) and the event-driven
+/// serving engine (via [`DecisionCache`] inside `EdgeCluster::run`).
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Called once at the start of each episode / serving run.
+    fn reset(&mut self, _episode_seed: u64) {}
+
+    /// Decide every node's action for the current instant. Implementations
+    /// must clear `out` and push exactly `view.n_nodes()` actions —
+    /// reusable-buffer contract: zero allocations once `out` holds its
+    /// high-water capacity.
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()>;
+}
+
+/// Adapts the batch [`Policy::decide_into`] to per-arrival queries: the
+/// serving engine asks for one node's action at a time, and all queries
+/// sharing a decision instant (`view.now()`) share one `decide_into`
+/// call. `Default`-constructed empty so `std::mem::take` works inside the
+/// engine's event loop without heap traffic.
+#[derive(Debug, Default)]
+pub struct DecisionCache {
+    at: Option<f64>,
+    actions: Vec<Action>,
+}
+
+impl DecisionCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop the cached instant (e.g. on episode reset).
+    pub fn invalidate(&mut self) {
+        self.at = None;
+        self.actions.clear();
+    }
+
+    /// The action `policy` assigns to `node` at the view's current
+    /// instant, running at most one `decide_into` per instant.
+    pub fn action_for(
+        &mut self,
+        policy: &mut dyn Policy,
+        view: &dyn PolicyView,
+        node: usize,
+    ) -> Result<Action> {
+        let now = view.now();
+        if self.at != Some(now) {
+            policy.decide_into(view, &mut self.actions)?;
+            anyhow::ensure!(
+                self.actions.len() == view.n_nodes(),
+                "policy {:?} decided {} actions for {} nodes",
+                policy.name(),
+                self.actions.len(),
+                view.n_nodes()
+            );
+            self.at = Some(now);
+        }
+        Ok(self.actions[node])
+    }
+}
+
+/// A frozen synthetic snapshot implementing [`PolicyView`] — test/tooling
+/// substrate for exercising policies on hand-built cluster states without
+/// either execution engine (the adapter-equivalence proptest drives
+/// policies through both invocation shapes on one of these).
+#[derive(Debug, Clone)]
+pub struct FrozenView {
+    pub n_nodes: usize,
+    pub now: f64,
+    pub slot: u64,
+    pub queue_lens: Vec<usize>,
+    pub queue_delays: Vec<f64>,
+    /// Row-major `[n * n]` link backlogs / bandwidths.
+    pub link_backlogs: Vec<usize>,
+    pub bandwidths: Vec<f64>,
+    /// Per-node arrival-rate history, oldest first.
+    pub rate_hists: Vec<Vec<f64>>,
+    pub profiles: Profiles,
+    pub gpu_speed: Vec<f64>,
+    pub omega: f64,
+    pub drop_threshold: f64,
+    pub drop_penalty: f64,
+    /// Observation normalizers — keep in lockstep with the scenario the
+    /// snapshot stands in for (defaults are the paper values).
+    pub rate_norm: f64,
+    pub queue_norm: f64,
+    pub bw_norm: f64,
+}
+
+impl FrozenView {
+    /// A quiet `n`-node view with defaults (zero queues, uniform 10 Mbps
+    /// links, flat rate history) — mutate fields to build a case.
+    pub fn quiet(n: usize) -> Self {
+        FrozenView {
+            n_nodes: n,
+            now: 0.0,
+            slot: 0,
+            queue_lens: vec![0; n],
+            queue_delays: vec![0.0; n],
+            link_backlogs: vec![0; n * n],
+            bandwidths: vec![10.0; n * n],
+            rate_hists: vec![vec![0.0; 5]; n],
+            profiles: Profiles::default(),
+            gpu_speed: vec![1.0; n],
+            omega: 5.0,
+            drop_threshold: 1.5,
+            drop_penalty: 1.0,
+            rate_norm: 2.0,
+            queue_norm: 25.0,
+            bw_norm: 40.0,
+        }
+    }
+}
+
+impl PolicyView for FrozenView {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn slot(&self) -> u64 {
+        self.slot
+    }
+
+    fn queue_len(&self, node: usize) -> usize {
+        self.queue_lens[node]
+    }
+
+    fn queue_delay_estimate(&self, node: usize) -> f64 {
+        self.queue_delays[node]
+    }
+
+    fn link_backlog(&self, from: usize, to: usize) -> usize {
+        self.link_backlogs[from * self.n_nodes + to]
+    }
+
+    fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
+        self.bandwidths[from * self.n_nodes + to]
+    }
+
+    fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64)) {
+        for &r in &self.rate_hists[node] {
+            f(r);
+        }
+    }
+
+    fn rate_norm(&self) -> f64 {
+        self.rate_norm
+    }
+
+    fn queue_norm(&self) -> f64 {
+        self.queue_norm
+    }
+
+    fn bw_norm(&self) -> f64 {
+        self.bw_norm
+    }
+
+    fn profiles(&self) -> &Profiles {
+        &self.profiles
+    }
+
+    fn gpu_speed(&self, node: usize) -> f64 {
+        self.gpu_speed[node]
+    }
+
+    fn omega(&self) -> f64 {
+        self.omega
+    }
+
+    fn drop_threshold(&self) -> f64 {
+        self.drop_threshold
+    }
+
+    fn drop_penalty(&self) -> f64 {
+        self.drop_penalty
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-robin test policy: node i -> edge (i + shift) % n.
+    struct Shift {
+        shift: usize,
+        calls: usize,
+    }
+
+    impl Policy for Shift {
+        fn name(&self) -> &str {
+            "shift"
+        }
+
+        fn decide_into(
+            &mut self,
+            view: &dyn PolicyView,
+            out: &mut Vec<Action>,
+        ) -> Result<()> {
+            self.calls += 1;
+            out.clear();
+            let n = view.n_nodes();
+            for i in 0..n {
+                out.push(Action::new((i + self.shift) % n, 0, 4));
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn decision_cache_shares_one_decide_per_instant() {
+        let view = FrozenView::quiet(4);
+        let mut p = Shift { shift: 1, calls: 0 };
+        let mut cache = DecisionCache::new();
+        for node in 0..4 {
+            let a = cache.action_for(&mut p, &view, node).unwrap();
+            assert_eq!(a.edge, (node + 1) % 4);
+        }
+        assert_eq!(p.calls, 1, "all same-instant queries share one decide");
+
+        let mut later = view.clone();
+        later.now = 0.25;
+        cache.action_for(&mut p, &later, 0).unwrap();
+        assert_eq!(p.calls, 2, "a new instant re-decides");
+    }
+
+    #[test]
+    fn decision_cache_rejects_wrong_arity() {
+        struct Short;
+        impl Policy for Short {
+            fn name(&self) -> &str {
+                "short"
+            }
+            fn decide_into(
+                &mut self,
+                _view: &dyn PolicyView,
+                out: &mut Vec<Action>,
+            ) -> Result<()> {
+                out.clear();
+                out.push(Action::new(0, 0, 0));
+                Ok(())
+            }
+        }
+        let view = FrozenView::quiet(3);
+        let mut cache = DecisionCache::new();
+        assert!(cache.action_for(&mut Short, &view, 0).is_err());
+    }
+
+    #[test]
+    fn invalidate_forces_redecide() {
+        let view = FrozenView::quiet(2);
+        let mut p = Shift { shift: 0, calls: 0 };
+        let mut cache = DecisionCache::new();
+        cache.action_for(&mut p, &view, 0).unwrap();
+        cache.invalidate();
+        cache.action_for(&mut p, &view, 0).unwrap();
+        assert_eq!(p.calls, 2);
+    }
+}

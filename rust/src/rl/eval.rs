@@ -1,22 +1,16 @@
-//! Evaluation harness — runs any controller (trained policy or baseline)
-//! in the simulator and aggregates the metrics the paper's Figs. 4–8 plot.
+//! Evaluation harness — runs any unified [`Policy`] (trained actor or
+//! baseline) in the slot simulator and aggregates the metrics the paper's
+//! Figs. 4–8 plot. The `Controller` trait that used to live here is
+//! retired: policies implement [`crate::policy::Policy`] once and run
+//! against both the simulator (this harness) and the event-driven serving
+//! engine (`serving::engine`).
 
 use anyhow::Result;
 
 use crate::env::metrics::EpisodeMetrics;
-use crate::env::{Action, SimConfig, Simulator};
-
-/// A control policy: observes the simulator, emits one action per node per
-/// slot. Implemented by the trained MARL actor and by every baseline.
-pub trait Controller {
-    fn name(&self) -> &str;
-
-    /// Called once at the start of each episode.
-    fn reset(&mut self, _episode_seed: u64) {}
-
-    /// Decide all nodes' (e, m, v) for the upcoming slot.
-    fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>>;
-}
+use crate::env::{Action, SimConfig, Simulator, StepOutcome};
+use crate::policy::Policy;
+use crate::scenario::Scenario;
 
 /// Result of an evaluation run.
 #[derive(Debug, Clone)]
@@ -32,9 +26,11 @@ impl EvalResult {
     }
 }
 
-/// Run `episodes` episodes of `steps` slots each and aggregate.
+/// Run `episodes` episodes of `steps` slots each and aggregate. The slot
+/// loop is allocation-free in steady state: actions and step outcomes
+/// live in reusable buffers (`decide_into` / `step_into`).
 pub fn evaluate(
-    ctrl: &mut dyn Controller,
+    policy: &mut dyn Policy,
     sim_cfg: &SimConfig,
     episodes: usize,
     steps: usize,
@@ -43,14 +39,16 @@ pub fn evaluate(
     let mut sim = Simulator::new(sim_cfg.clone(), seed);
     let mut agg = EpisodeMetrics::new(sim_cfg.n_nodes);
     let mut episode_rewards = Vec::with_capacity(episodes);
+    let mut actions: Vec<Action> = Vec::with_capacity(sim_cfg.n_nodes);
+    let mut out = StepOutcome::new(sim_cfg.n_nodes);
     for ep in 0..episodes {
         let ep_seed = seed.wrapping_add(1000).wrapping_add(ep as u64);
         sim.reset(ep_seed);
-        ctrl.reset(ep_seed);
+        policy.reset(ep_seed);
         let mut ep_metrics = EpisodeMetrics::new(sim_cfg.n_nodes);
         for _ in 0..steps {
-            let actions = ctrl.act(&sim)?;
-            let out = sim.step(&actions);
+            policy.decide_into(&sim, &mut actions)?;
+            sim.step_into(&actions, &mut out);
             ep_metrics.absorb(&out);
         }
         episode_rewards.push(ep_metrics.total_reward);
@@ -59,26 +57,47 @@ pub fn evaluate(
     Ok(EvalResult { metrics: agg, episode_rewards })
 }
 
+/// [`evaluate`] under a named/built [`Scenario`] descriptor — the
+/// unified-control-plane evaluation path.
+pub fn evaluate_scenario(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    episodes: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<EvalResult> {
+    evaluate(policy, &SimConfig::from_scenario(scenario), episodes, steps, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::EnvConfig;
+    use crate::policy::PolicyView;
 
-    struct FixedController;
-    impl Controller for FixedController {
+    struct FixedPolicy;
+    impl Policy for FixedPolicy {
         fn name(&self) -> &str {
             "fixed"
         }
-        fn act(&mut self, sim: &Simulator) -> Result<Vec<Action>> {
-            Ok((0..sim.cfg.n_nodes).map(|i| Action::new(i, 0, 4)).collect())
+        fn decide_into(
+            &mut self,
+            view: &dyn PolicyView,
+            out: &mut Vec<Action>,
+        ) -> Result<()> {
+            out.clear();
+            for i in 0..view.n_nodes() {
+                out.push(Action::new(i, 0, 4));
+            }
+            Ok(())
         }
     }
 
     #[test]
     fn evaluate_aggregates() {
         let cfg = SimConfig::from_env(&EnvConfig::default());
-        let mut ctrl = FixedController;
-        let res = evaluate(&mut ctrl, &cfg, 3, 50, 0).unwrap();
+        let mut policy = FixedPolicy;
+        let res = evaluate(&mut policy, &cfg, 3, 50, 0).unwrap();
         assert_eq!(res.episode_rewards.len(), 3);
         assert!(res.metrics.completed > 0);
         assert_eq!(res.metrics.steps, 150);
@@ -87,8 +106,23 @@ mod tests {
     #[test]
     fn evaluation_deterministic() {
         let cfg = SimConfig::from_env(&EnvConfig::default());
-        let a = evaluate(&mut FixedController, &cfg, 2, 40, 7).unwrap();
-        let b = evaluate(&mut FixedController, &cfg, 2, 40, 7).unwrap();
+        let a = evaluate(&mut FixedPolicy, &cfg, 2, 40, 7).unwrap();
+        let b = evaluate(&mut FixedPolicy, &cfg, 2, 40, 7).unwrap();
+        assert_eq!(a.episode_rewards, b.episode_rewards);
+    }
+
+    #[test]
+    fn evaluate_scenario_matches_explicit_config() {
+        let sc = Scenario::by_name("hotspot").unwrap();
+        let a = evaluate_scenario(&mut FixedPolicy, &sc, 2, 30, 3).unwrap();
+        let b = evaluate(
+            &mut FixedPolicy,
+            &SimConfig::from_scenario(&sc),
+            2,
+            30,
+            3,
+        )
+        .unwrap();
         assert_eq!(a.episode_rewards, b.episode_rewards);
     }
 }

@@ -16,7 +16,7 @@ pub mod policy;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 
-pub use eval::{evaluate, Controller};
+pub use eval::{evaluate, evaluate_scenario, EvalResult};
 #[cfg(feature = "pjrt")]
 pub use params::ParamStore;
 #[cfg(feature = "pjrt")]

@@ -268,8 +268,12 @@ impl ActorPolicy {
     }
 }
 
-/// A trained policy as an evaluation [`Controller`]: greedy (argmax)
-/// decentralized execution, exactly what runs on each node post-training.
+/// A trained policy as a unified [`crate::policy::Policy`]: greedy
+/// (argmax) decentralized execution, exactly what runs on each node
+/// post-training. Because it decides from the [`PolicyView`] abstraction,
+/// one instance drives the slot simulator (`rl::eval::evaluate`) and the
+/// event-driven serving engine (where the engine's `DecisionCache` shares
+/// one forward pass across all arrivals of a decision instant).
 pub struct PolicyController {
     pub label: String,
     policy: ActorPolicy,
@@ -290,16 +294,31 @@ impl PolicyController {
     }
 }
 
-impl crate::rl::eval::Controller for PolicyController {
+impl crate::policy::Policy for PolicyController {
     fn name(&self) -> &str {
         &self.label
     }
 
-    fn act(&mut self, sim: &crate::env::Simulator) -> Result<Vec<Action>> {
-        sim.observations_into(&mut self.obs_scratch);
+    fn decide_into(
+        &mut self,
+        view: &dyn crate::policy::PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        let n = view.n_nodes();
+        anyhow::ensure!(
+            n == self.policy.n_agents,
+            "actor lowered for {} agents, view has {n} nodes",
+            self.policy.n_agents
+        );
+        self.obs_scratch.clear();
+        for i in 0..n {
+            view.observation_into(i, &mut self.obs_scratch);
+        }
         let (actions, _) =
             self.policy.act(&self.obs_scratch, &mut self.rng, self.greedy)?;
-        Ok(actions)
+        out.clear();
+        out.extend(actions);
+        Ok(())
     }
 }
 

@@ -1,49 +1,61 @@
-//! Dep-free serving engine — the options/report/policy layer of the online
+//! Dep-free serving engine — the options/report layer of the online
 //! serving loop, shared by the PJRT-backed server (`serving::server`) and
 //! the profile-table path (tests, the dep-free `serving_throughput` bench,
 //! capacity planning). Builds on the invariant-checked [`EdgeCluster`]:
 //! GPU mutual exclusion per node, request conservation
 //! (`emitted == completed + dropped + residual`), and per-(model, res)
 //! batched service.
+//!
+//! Unified control plane: runs are parameterized by a
+//! [`Scenario`] descriptor and driven by any [`Policy`] — the same trait
+//! the slot simulator's evaluation harness consumes, so an RL-vs-baseline
+//! comparison on the real serving core under any registered scenario is
+//! one [`serve_scenario`] call. The engine's former private
+//! `ShortestQueuePolicy` is retired: the shortest-queue baseline
+//! ([`crate::baselines::ShortestQueueController`]) is the one
+//! implementation serving both layers.
 
 use anyhow::Result;
 
-use crate::coordinator::cluster::{
-    ComputeHook, EdgeCluster, ProfileCompute, ServingPolicy,
-};
-use crate::env::bandwidth::BandwidthConfig;
-use crate::env::profiles::Profiles;
-use crate::env::workload::WorkloadConfig;
-use crate::env::Action;
+use crate::baselines::{Selection, ShortestQueueController};
+use crate::coordinator::cluster::{ComputeHook, EdgeCluster, ProfileCompute};
+use crate::policy::Policy;
+use crate::scenario::Scenario;
 use crate::util::stats::{mean, percentile};
 
-/// Serving-run options.
+/// Serving-run options: a [`Scenario`] descriptor (workload, bandwidth,
+/// heterogeneity, deadline, batching knobs) plus the run-level knobs that
+/// are not part of the regime itself.
 #[derive(Debug, Clone)]
 pub struct ServingOptions {
-    pub n_nodes: usize,
+    pub scenario: Scenario,
     pub duration_virtual_secs: f64,
-    pub drop_deadline: f64,
     pub seed: u64,
-    /// Use the trained policy (blob) or the shortest-queue fallback.
+    /// Greedy (argmax) vs sampled execution of a trained policy. Read
+    /// only by the PJRT `run_serving`, which constructs the actor itself;
+    /// the dep-free paths receive a pre-built policy, whose execution
+    /// mode was fixed at construction.
     pub greedy: bool,
-    /// Largest per-(model, res) GPU batch a node pulls at once.
-    pub max_batch: usize,
-    /// Longest a ready frame waits (virtual seconds) for batch-mates
-    /// before an idle GPU pulls its lane anyway.
-    pub batch_wait: f64,
 }
 
 impl Default for ServingOptions {
     fn default() -> Self {
         ServingOptions {
-            n_nodes: 4,
+            scenario: Scenario::default(),
             duration_virtual_secs: 30.0,
-            drop_deadline: 1.5,
             seed: 0,
             greedy: true,
-            max_batch: 8,
-            batch_wait: 0.004,
         }
+    }
+}
+
+impl ServingOptions {
+    /// Options for a registered scenario with the default run knobs.
+    pub fn for_scenario(name: &str) -> Result<Self> {
+        Ok(ServingOptions {
+            scenario: Scenario::by_name(name)?,
+            ..Default::default()
+        })
     }
 }
 
@@ -51,6 +63,8 @@ impl Default for ServingOptions {
 /// `emitted == completed + dropped + residual`.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
+    /// Scenario the run was parameterized by.
+    pub scenario: String,
     /// Requests emitted into the cluster over the horizon.
     pub emitted: usize,
     /// Requests resolved (completed or dropped) by end of run.
@@ -83,6 +97,7 @@ impl ServingReport {
     /// profile tables supplied the durations).
     pub fn from_cluster(
         cluster: &EdgeCluster,
+        scenario: &str,
         virtual_secs: f64,
         mean_preproc_ms: f64,
         mean_detect_ms: f64,
@@ -106,6 +121,7 @@ impl ServingReport {
             }
         }
         ServingReport {
+            scenario: scenario.to_string(),
             emitted: cluster.emitted as usize,
             total,
             completed: completed.len(),
@@ -142,7 +158,7 @@ impl ServingReport {
     }
 
     pub fn print(&self) {
-        println!("serving report:");
+        println!("serving report (scenario: {}):", self.scenario);
         println!("  emitted         {}", self.emitted);
         println!("  completed       {}", self.completed);
         println!(
@@ -172,60 +188,60 @@ impl ServingReport {
     }
 }
 
-/// Shortest-queue fallback policy (no trained blob supplied).
-pub struct ShortestQueuePolicy;
-
-impl ServingPolicy for ShortestQueuePolicy {
-    fn decide(&mut self, cluster: &EdgeCluster, _node: usize) -> Result<Action> {
-        let mut best = 0;
-        for j in 1..cluster.n_nodes {
-            if cluster.queue_len(j) < cluster.queue_len(best) {
-                best = j;
-            }
-        }
-        Ok(Action::new(best, 1, 2))
-    }
-}
-
-/// Build the serving cluster the engine runs over (default workload and
-/// bandwidth traces at `opts.n_nodes` scale).
-pub fn build_cluster(opts: &ServingOptions, hist_len: usize) -> EdgeCluster {
-    EdgeCluster::new(
-        opts.n_nodes,
-        WorkloadConfig::default(),
-        BandwidthConfig { n_nodes: opts.n_nodes, ..BandwidthConfig::default() },
-        Profiles::default(),
-        0.2,
-        opts.drop_deadline,
-        hist_len,
-        opts.max_batch,
-        opts.batch_wait,
-        opts.seed,
-    )
+/// Build the serving cluster the engine runs over, straight from the
+/// options' scenario descriptor.
+pub fn build_cluster(opts: &ServingOptions) -> EdgeCluster {
+    EdgeCluster::new(&opts.scenario, opts.seed)
 }
 
 /// Run the serving loop with the supplied policy/compute pair and report.
 pub fn run_with(
     opts: &ServingOptions,
-    hist_len: usize,
-    policy: &mut dyn ServingPolicy,
+    policy: &mut dyn Policy,
     compute: &mut dyn ComputeHook,
 ) -> Result<(EdgeCluster, ServingReport)> {
-    let mut cluster = build_cluster(opts, hist_len);
+    let mut cluster = build_cluster(opts);
+    policy.reset(opts.seed);
     cluster.run(policy, compute, opts.duration_virtual_secs)?;
-    let report =
-        ServingReport::from_cluster(&cluster, opts.duration_virtual_secs, 0.0, 0.0);
+    let report = ServingReport::from_cluster(
+        &cluster,
+        &opts.scenario.name,
+        opts.duration_virtual_secs,
+        0.0,
+        0.0,
+    );
     Ok((cluster, report))
 }
 
-/// Dep-free serving run: shortest-queue policy over profile-table compute.
-/// The engine bench and the offline tests drive this; the PJRT server
-/// (`serving::server::run_serving`) swaps in real compute and the trained
-/// actor.
+/// The fig6-style one-call API: run any unified `Policy` on the
+/// event-driven serving engine under a scenario descriptor with
+/// profile-table compute, and report with full request accounting.
+pub fn serve_scenario(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    duration_virtual_secs: f64,
+    seed: u64,
+) -> Result<ServingReport> {
+    let opts = ServingOptions {
+        scenario: scenario.clone(),
+        duration_virtual_secs,
+        seed,
+        ..Default::default()
+    };
+    let mut compute = ProfileCompute::new(scenario.profiles.clone());
+    let (_, report) = run_with(&opts, policy, &mut compute)?;
+    Ok(report)
+}
+
+/// Dep-free serving run: the shortest-queue baseline (the same
+/// implementation the simulator evaluation uses) over profile-table
+/// compute. The engine bench and the offline tests drive this; the PJRT
+/// server (`serving::server::run_serving`) swaps in real compute and the
+/// trained actor.
 pub fn run_profile_serving(opts: &ServingOptions) -> Result<ServingReport> {
-    let mut policy = ShortestQueuePolicy;
-    let mut compute = ProfileCompute::new(Profiles::default());
-    let (_, report) = run_with(opts, 5, &mut policy, &mut compute)?;
+    let mut policy = ShortestQueueController::new(Selection::Min);
+    let mut compute = ProfileCompute::new(opts.scenario.profiles.clone());
+    let (_, report) = run_with(opts, &mut policy, &mut compute)?;
     Ok(report)
 }
 
@@ -240,6 +256,7 @@ mod tests {
             ..Default::default()
         };
         let report = run_profile_serving(&opts).unwrap();
+        assert_eq!(report.scenario, "paper");
         assert!(report.emitted > 0);
         assert!(report.completed > 0);
         assert!(report.conserved(), "{report:?}");
@@ -249,14 +266,28 @@ mod tests {
 
     #[test]
     fn batch_stats_count_each_execution_once() {
-        let opts = ServingOptions {
+        let mut opts = ServingOptions {
             duration_virtual_secs: 15.0,
             seed: 3,
             ..Default::default()
         };
+        // concentrate load so multi-frame batches form
+        opts.scenario.workload.means = vec![4.0; opts.scenario.n_nodes];
         let report = run_profile_serving(&opts).unwrap();
         assert!(report.batches > 0);
         assert!(report.mean_batch_size >= 1.0);
-        assert!(report.max_batch_size <= opts.max_batch);
+        assert!(report.max_batch_size <= opts.scenario.max_batch);
+    }
+
+    #[test]
+    fn serve_scenario_runs_baselines_on_engine() {
+        // the acceptance shape: baseline policies produce conserved
+        // reports straight from a named scenario
+        let sc = Scenario::by_name("hotspot").unwrap();
+        let mut policy = ShortestQueueController::new(Selection::Max);
+        let report = serve_scenario(&mut policy, &sc, 8.0, 1).unwrap();
+        assert_eq!(report.scenario, "hotspot");
+        assert!(report.emitted > 0);
+        assert!(report.conserved());
     }
 }

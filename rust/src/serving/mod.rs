@@ -4,10 +4,11 @@
 //! cluster with per-(model, res) GPU batching, and latency/throughput
 //! reporting with exhaustive request accounting.
 //!
-//! The engine (options, report, shortest-queue policy, profile-table runs)
-//! is dep-free; the PJRT-backed server and detector zoo sit behind the
-//! `pjrt` cargo feature. The synthetic frame source is pure Rust and
-//! always available.
+//! The engine (options, report, profile-table runs) is dep-free and
+//! driven by the unified [`crate::policy::Policy`] trait under
+//! [`crate::scenario::Scenario`] descriptors; the PJRT-backed server and
+//! detector zoo sit behind the `pjrt` cargo feature. The synthetic frame
+//! source is pure Rust and always available.
 
 pub mod engine;
 pub mod frames;
@@ -17,7 +18,7 @@ pub mod server;
 pub mod zoo;
 
 pub use engine::{
-    run_profile_serving, ServingOptions, ServingReport, ShortestQueuePolicy,
+    run_profile_serving, serve_scenario, ServingOptions, ServingReport,
 };
 pub use frames::FrameSource;
 #[cfg(feature = "pjrt")]

@@ -4,44 +4,23 @@
 //! GPU run as one stacked zoo execution when the artifact accepts a leading
 //! batch dimension (sequential fallback otherwise). The options/report
 //! layer lives dep-free in [`crate::serving::engine`].
+//!
+//! The control plane is the unified [`Policy`] trait: the trained actor
+//! runs through [`PolicyController`] — the same adapter the simulator
+//! evaluation uses — and the fallback is the shared shortest-queue
+//! baseline. Per-instant decision caching (all arrivals of one event time
+//! share one actor forward pass) lives inside `EdgeCluster`.
 
 use anyhow::Result;
 
-use crate::coordinator::cluster::{ComputeHook, EdgeCluster, ServingPolicy};
-use crate::env::Action;
-use crate::rl::policy::ActorPolicy;
+use crate::baselines::{Selection, ShortestQueueController};
+use crate::coordinator::cluster::ComputeHook;
+use crate::policy::Policy;
+use crate::rl::policy::{ActorPolicy, PolicyController};
 use crate::runtime::{Manifest, Runtime};
-use crate::serving::engine::{ServingOptions, ServingReport, ShortestQueuePolicy};
+use crate::serving::engine::{ServingOptions, ServingReport};
 use crate::serving::frames::FrameSource;
 use crate::serving::zoo::ModelZoo;
-use crate::util::rng::Rng;
-
-/// Policy adapter: trained actor over cluster observations, with per-event
-/// caching so all nodes of one decision instant share one forward pass.
-struct ActorServingPolicy {
-    policy: ActorPolicy,
-    rng: Rng,
-    greedy: bool,
-    cache_t: f64,
-    cache: Vec<Action>,
-    obs_scratch: Vec<f32>,
-}
-
-impl ServingPolicy for ActorServingPolicy {
-    fn decide(&mut self, cluster: &EdgeCluster, node: usize) -> Result<Action> {
-        if cluster.now() != self.cache_t || self.cache.is_empty() {
-            self.obs_scratch.clear();
-            for i in 0..cluster.n_nodes {
-                cluster.observation_into(i, &mut self.obs_scratch);
-            }
-            let (actions, _) =
-                self.policy.act(&self.obs_scratch, &mut self.rng, self.greedy)?;
-            self.cache = actions;
-            self.cache_t = cluster.now();
-        }
-        Ok(self.cache[node])
-    }
-}
 
 /// Real-compute hook: every preprocess/detect call generates a frame and
 /// executes the actual HLO artifacts, feeding measured durations into the
@@ -129,22 +108,37 @@ pub fn run_serving(
     opts: &ServingOptions,
 ) -> Result<ServingReport> {
     let zoo = ModelZoo::load(rt, manifest)?;
-    let mut cluster =
-        crate::serving::engine::build_cluster(opts, manifest.net.hist_len);
+    // the actor's lowering fixes the observation history window
+    let mut opts = opts.clone();
+    opts.scenario.hist_len = manifest.net.hist_len;
+    let mut cluster = crate::serving::engine::build_cluster(&opts);
     let mut compute = RealCompute::new(&zoo, opts.seed);
 
-    let mut policy: Box<dyn ServingPolicy> = match policy_blob {
-        Some(blob) => Box::new(ActorServingPolicy {
-            policy: ActorPolicy::with_params(rt, manifest, blob, false)?,
-            rng: Rng::new(opts.seed ^ 0xACE),
-            greedy: opts.greedy,
-            cache_t: -1.0,
-            cache: Vec::new(),
-            obs_scratch: Vec::new(),
-        }),
-        None => Box::new(ShortestQueuePolicy),
+    let mut policy: Box<dyn Policy> = match policy_blob {
+        Some(blob) => {
+            // fail loudly on a node-count mismatch rather than silently
+            // re-deriving the scenario (which would drop caller tweaks);
+            // resolve the scenario at the artifact's node count upstream
+            // (Scenario::at_nodes / with_nodes) when scaling is wanted
+            anyhow::ensure!(
+                opts.scenario.n_nodes == manifest.net.n_agents,
+                "scenario {:?} has {} nodes but the actor artifacts are \
+                 lowered for {} agents",
+                opts.scenario.name,
+                opts.scenario.n_nodes,
+                manifest.net.n_agents
+            );
+            Box::new(PolicyController::new(
+                "actor",
+                ActorPolicy::with_params(rt, manifest, blob, false)?,
+                opts.seed ^ 0xACE,
+                opts.greedy,
+            ))
+        }
+        None => Box::new(ShortestQueueController::new(Selection::Min)),
     };
 
+    policy.reset(opts.seed);
     cluster.run(policy.as_mut(), &mut compute, opts.duration_virtual_secs)?;
 
     let mean_preproc_ms = if compute.preproc_calls == 0 {
@@ -159,6 +153,7 @@ pub fn run_serving(
     };
     Ok(ServingReport::from_cluster(
         &cluster,
+        &opts.scenario.name,
         opts.duration_virtual_secs,
         mean_preproc_ms,
         mean_detect_ms,

@@ -93,11 +93,18 @@ pub fn report_rate(name: &str, ops: f64, elapsed: Duration) {
 pub struct BenchReport {
     name: String,
     results: Vec<BenchResult>,
+    meta: Vec<(String, Json)>,
 }
 
 impl BenchReport {
     pub fn new(name: impl Into<String>) -> Self {
-        BenchReport { name: name.into(), results: Vec::new() }
+        BenchReport { name: name.into(), results: Vec::new(), meta: Vec::new() }
+    }
+
+    /// Attach a top-level key to the emitted JSON (e.g. the scenario
+    /// registry a serving bench iterated).
+    pub fn meta(&mut self, key: impl Into<String>, value: Json) {
+        self.meta.push((key.into(), value));
     }
 
     /// [`bench`] with `warmup`/`iters` scaled by `EDGEVISION_BENCH_SCALE`,
@@ -168,11 +175,15 @@ impl BenchReport {
                 Json::obj(pairs)
             })
             .collect();
-        let doc = Json::obj(vec![
+        let mut pairs = vec![
             ("bench", Json::str(self.name.clone())),
             ("scale", Json::num(iter_scale())),
-            ("targets", Json::Arr(targets)),
-        ]);
+        ];
+        for (k, v) in &self.meta {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        pairs.push(("targets", Json::Arr(targets)));
+        let doc = Json::obj(pairs);
         std::fs::write(&path, doc.to_string_pretty())?;
         println!("wrote {}", path.display());
         Ok(path)

@@ -1,17 +1,23 @@
-//! Steady-state allocation probe for the simulator hot path.
+//! Steady-state allocation probe for the simulator AND serving-engine hot
+//! paths.
 //!
 //! `Simulator::step_into` (and the `*_into` observation builders) must not
 //! touch the heap once queues and scratch buffers have grown to their
-//! high-water marks. This file is its own test binary so the counting
-//! global allocator only sees this probe's traffic; the measurement takes
-//! the minimum over several windows to shrug off any stray harness-thread
-//! allocation.
+//! high-water marks; the event-driven serving engine's `step_until` holds
+//! the same contract once its event/request populations reach steady state
+//! and the `served` log has reserved capacity. This file is its own test
+//! binary so the counting global allocator only sees this probe's traffic;
+//! the measurement takes the minimum over several windows to shrug off any
+//! stray harness-thread allocation.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use edgevision::baselines::{Selection, ShortestQueueController};
 use edgevision::config::EnvConfig;
-use edgevision::env::{Action, SimConfig, Simulator, StepOutcome, VecEnv};
+use edgevision::coordinator::{EdgeCluster, ProfileCompute};
+use edgevision::env::{Action, Profiles, SimConfig, Simulator, StepOutcome, VecEnv};
+use edgevision::scenario::Scenario;
 
 struct CountingAlloc;
 
@@ -109,4 +115,28 @@ fn steady_state_hot_path_allocates_nothing() {
         }
     });
     assert_eq!(best, 0, "steady-state VecEnv::step hit the allocator");
+
+    // --- serving-engine step path (unified Policy over EdgeCluster) -------
+    // The steady scenario has no bursts/diurnal swing, so event, request
+    // and lane populations reach stationary high-water marks; after that,
+    // a step_until window must only append to the pre-reserved served log.
+    let scenario = Scenario::by_name("steady").expect("registered scenario");
+    let mut cluster = EdgeCluster::new(&scenario, 5);
+    let mut policy = ShortestQueueController::new(Selection::Min);
+    let mut compute = ProfileCompute::new(Profiles::default());
+    let mut t = 0.0;
+    for _ in 0..60 {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    }
+    cluster.served.reserve(50_000);
+    let best = min_window_allocs(6, || {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    });
+    assert_eq!(
+        best, 0,
+        "steady-state EdgeCluster::step_until hit the allocator"
+    );
+    assert!(cluster.emitted > 0);
 }

@@ -63,7 +63,7 @@ impl RefSim {
         let t1 = t0 + self.cfg.slot_secs;
 
         self.bandwidth.step();
-        let (_rates, counts) = self.workload.step();
+        let (_rates, counts) = self.workload.step_alloc();
 
         // (node, perf) per finished request, in the optimized core's order
         let mut finished: Vec<(usize, f64)> = Vec::new();

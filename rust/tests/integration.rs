@@ -209,9 +209,7 @@ fn serving_end_to_end() {
     }
     let rt = Runtime::new("artifacts".to_string()).unwrap();
     let opts = ServingOptions {
-        n_nodes: 4,
         duration_virtual_secs: 5.0,
-        drop_deadline: 1.5,
         seed: 0,
         greedy: true,
         ..Default::default()
@@ -223,4 +221,31 @@ fn serving_end_to_end() {
     assert!(report.mean_latency > 0.0);
     assert!(report.p99_latency >= report.p50_latency);
     assert!(report.mean_detect_ms > 0.0, "no real compute measured");
+}
+
+#[test]
+fn trained_policy_serves_named_scenarios() {
+    // the pjrt half of the acceptance criterion: the trained actor (here
+    // params_init — training state is orthogonal to the control-plane
+    // contract) produces a conserved ServingReport from the event-driven
+    // engine under every registered scenario via the unified API
+    require_artifacts!();
+    let m = Manifest::load("artifacts").unwrap();
+    let rt = Runtime::new("artifacts".to_string()).unwrap();
+    let spec = m.variant("full").unwrap();
+    let blob = m.read_param_blob(&spec.params_init, spec.n_elems).unwrap();
+    for name in edgevision::scenario::Scenario::names() {
+        let mut scenario = edgevision::scenario::Scenario::by_name(name)
+            .unwrap()
+            .with_nodes(m.net.n_agents);
+        scenario.hist_len = m.net.hist_len;
+        let policy = ActorPolicy::with_params(&rt, &m, &blob, false).unwrap();
+        let mut ctrl = PolicyController::new("actor", policy, 9, true);
+        let report = edgevision::serving::serve_scenario(
+            &mut ctrl, &scenario, 6.0, 13,
+        )
+        .unwrap();
+        assert!(report.emitted > 0, "{name}: no load");
+        assert!(report.conserved(), "{name}: leaked requests: {report:?}");
+    }
 }

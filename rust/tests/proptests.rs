@@ -3,16 +3,18 @@
 //! coordinator/simulator invariants listed in DESIGN.md §6. On failure the
 //! seed is printed so the case can be replayed.
 
+use edgevision::baselines::{self, HEURISTICS};
 use edgevision::config::EnvConfig;
 use edgevision::coordinator::{
     Batcher, EdgeCluster, ProfileCompute, Router, ServedRequest,
-    ServingPolicy, TransferScheduler,
+    TransferScheduler,
 };
-use edgevision::env::bandwidth::BandwidthConfig;
 use edgevision::env::request::Outcome;
-use edgevision::env::workload::WorkloadConfig;
 use edgevision::env::{Action, Profiles, SimConfig, Simulator, VecEnv};
+use edgevision::policy::{DecisionCache, FrozenView, Policy, PolicyView};
 use edgevision::rl::gae::{gae, gae_reference, reward_to_go};
+use edgevision::scenario::Scenario;
+use edgevision::serving::serve_scenario;
 use edgevision::util::json::Json;
 use edgevision::util::rng::Rng;
 
@@ -246,39 +248,39 @@ struct RandServingPolicy {
     rng: Rng,
 }
 
-impl ServingPolicy for RandServingPolicy {
-    fn decide(
+impl Policy for RandServingPolicy {
+    fn name(&self) -> &str {
+        "rand_serving"
+    }
+
+    fn decide_into(
         &mut self,
-        c: &EdgeCluster,
-        _node: usize,
-    ) -> anyhow::Result<Action> {
-        Ok(Action::new(
-            self.rng.below(c.n_nodes),
-            self.rng.below(4),
-            self.rng.below(5),
-        ))
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        let n = view.n_nodes();
+        for _ in 0..n {
+            out.push(Action::new(
+                self.rng.below(n),
+                self.rng.below(4),
+                self.rng.below(5),
+            ));
+        }
+        Ok(())
     }
 }
 
 fn random_serving_run(rng: &mut Rng) -> EdgeCluster {
     let n = 2 + rng.below(3);
-    let max_batch = 1 + rng.below(8);
-    let batch_wait = [0.0, 0.002, 0.01, 0.05][rng.below(4)];
-    let mut cluster = EdgeCluster::new(
-        n,
-        WorkloadConfig {
-            means: (0..n).map(|i| 0.4 + 0.6 * i as f64).collect(),
-            ..WorkloadConfig::default()
-        },
-        BandwidthConfig { n_nodes: n, ..BandwidthConfig::default() },
-        Profiles::default(),
-        0.2,
-        0.3 + rng.range_f64(0.0, 1.5),
-        5,
-        max_batch,
-        batch_wait,
-        rng.next_u64(),
-    );
+    let scenario = Scenario::custom("prop-random")
+        .nodes(n)
+        .arrival_means((0..n).map(|i| 0.4 + 0.6 * i as f64).collect())
+        .drop_threshold(0.3 + rng.range_f64(0.0, 1.5))
+        .max_batch(1 + rng.below(8))
+        .batch_wait([0.0, 0.002, 0.01, 0.05][rng.below(4)])
+        .build();
+    let mut cluster = EdgeCluster::new(&scenario, rng.next_u64());
     let mut policy = RandServingPolicy { rng: Rng::new(rng.next_u64()) };
     let mut compute = ProfileCompute::new(Profiles::default());
     cluster
@@ -469,6 +471,86 @@ fn prop_vecenv_bit_identical_to_solo_sims() {
                 assert_eq!(outs[k].finished.len(), o.finished.len());
                 assert_eq!(outs[k].arrivals, o.arrivals);
             }
+        }
+    });
+}
+
+/// Random-but-valid [`FrozenView`] cluster snapshot.
+fn random_view(rng: &mut Rng) -> FrozenView {
+    let n = 2 + rng.below(4);
+    let mut v = FrozenView::quiet(n);
+    v.now = rng.range_f64(0.0, 50.0);
+    for i in 0..n {
+        v.queue_lens[i] = rng.below(30);
+        v.queue_delays[i] = rng.range_f64(0.0, 3.0);
+        v.gpu_speed[i] = rng.range_f64(0.3, 2.0);
+        v.rate_hists[i] =
+            (0..5).map(|_| rng.range_f64(0.0, 4.0)).collect();
+    }
+    for idx in 0..n * n {
+        v.link_backlogs[idx] = rng.below(20);
+        v.bandwidths[idx] = rng.range_f64(0.5, 40.0);
+    }
+    v.omega = [0.2, 1.0, 5.0, 15.0][rng.below(4)];
+    v.drop_threshold = rng.range_f64(0.2, 2.0);
+    v
+}
+
+#[test]
+fn prop_policy_adapter_bit_identical() {
+    // the unified-control-plane contract: a policy produces bit-identical
+    // decisions whether invoked through the sim interface (one batch
+    // decide_into per slot) or the engine interface (per-node queries
+    // through the DecisionCache adapter) on the same observation
+    forall(20, |rng| {
+        let view = random_view(rng);
+        let seed = rng.next_u64();
+        for name in HEURISTICS {
+            let mut sim_style = baselines::by_name(name, view.n_nodes, seed).unwrap();
+            let mut engine_style =
+                baselines::by_name(name, view.n_nodes, seed).unwrap();
+            sim_style.reset(seed);
+            engine_style.reset(seed);
+
+            let mut batch = Vec::new();
+            sim_style.decide_into(&view, &mut batch).unwrap();
+            assert_eq!(batch.len(), view.n_nodes, "{name}");
+
+            let mut cache = DecisionCache::new();
+            for node in 0..view.n_nodes {
+                let a = cache
+                    .action_for(engine_style.as_mut(), &view, node)
+                    .unwrap();
+                assert_eq!(
+                    a, batch[node],
+                    "{name}: node {node} diverges between interfaces"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scenario_serving_conservation() {
+    // conservation holds for every registered scenario: whatever the
+    // regime (bursts, dead links, hetero GPUs, hotspots), every emitted
+    // request is accounted as completed + dropped + residual
+    forall(4, |rng| {
+        for name in Scenario::names() {
+            let scenario = Scenario::by_name(name).unwrap();
+            let mut policy = RandServingPolicy { rng: Rng::new(rng.next_u64()) };
+            let report = serve_scenario(
+                &mut policy,
+                &scenario,
+                4.0 + rng.range_f64(0.0, 4.0),
+                rng.next_u64(),
+            )
+            .unwrap();
+            assert!(report.emitted > 0, "scenario {name} emitted nothing");
+            assert!(
+                report.conserved(),
+                "scenario {name} leaked requests: {report:?}"
+            );
         }
     });
 }

@@ -1,0 +1,129 @@
+//! Unified `Policy`/`Scenario` API surface tests (dep-free):
+//!
+//! * registry round-trip — every registered name resolves to a
+//!   deterministic descriptor whose derived sim/engine configurations
+//!   agree field for field;
+//! * the acceptance matrix — every heuristic baseline family produces a
+//!   conservation-checked [`ServingReport`] from the event-driven serving
+//!   engine under every registered scenario, through the same trait the
+//!   slot-simulator evaluation uses (the trained actor runs through the
+//!   identical path via `PolicyController`; its artifact-gated coverage
+//!   lives in `tests/integration.rs`);
+//! * cross-layer agreement — the same policy instance type drives
+//!   `evaluate` (simulator) and `serve_scenario` (engine) from one
+//!   scenario descriptor.
+
+use edgevision::baselines::{self, HEURISTICS};
+use edgevision::env::{SimConfig, Simulator};
+use edgevision::policy::PolicyView;
+use edgevision::rl::eval::evaluate_scenario;
+use edgevision::scenario::Scenario;
+use edgevision::serving::serve_scenario;
+
+#[test]
+fn registry_round_trip_is_deterministic() {
+    for name in Scenario::names() {
+        let a = Scenario::by_name(name).unwrap();
+        let b = Scenario::by_name(name).unwrap();
+        // name -> Scenario -> identical configs, both times
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{name}");
+
+        let cfg = SimConfig::from_scenario(&a);
+        assert_eq!(cfg.n_nodes, a.n_nodes);
+        assert_eq!(cfg.omega, a.omega);
+        assert_eq!(cfg.drop_threshold, a.drop_threshold);
+        assert_eq!(cfg.gpu_speed, a.gpu_speed);
+        assert_eq!(cfg.workload.means, a.workload.means);
+        assert_eq!(cfg.bandwidth.min_mbps, a.bandwidth.min_mbps);
+        assert_eq!(cfg.obs_dim(), a.obs_dim());
+    }
+}
+
+#[test]
+fn registry_covers_at_least_five_scenarios_plus_default() {
+    assert!(Scenario::names().len() >= 5);
+    assert!(Scenario::names().contains(&"paper"));
+    // the paper entry is the EnvConfig-default setting
+    let paper = Scenario::by_name("paper").unwrap();
+    let default = Scenario::default();
+    assert_eq!(format!("{paper:?}"), format!("{default:?}"));
+}
+
+/// The dep-free half of the PR's acceptance criterion: all three baseline
+/// families (shortest-queue, random, predictive) produce a conserved
+/// `ServingReport` from the event-driven engine under >= 5 named
+/// scenarios via the unified API.
+#[test]
+fn every_baseline_serves_every_scenario_conserved() {
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        for h in HEURISTICS {
+            let mut policy =
+                baselines::by_name(h, scenario.n_nodes, 7).unwrap();
+            let report =
+                serve_scenario(policy.as_mut(), &scenario, 8.0, 11).unwrap();
+            assert_eq!(report.scenario, *name);
+            assert!(report.emitted > 0, "{name}/{h}: no load generated");
+            assert!(
+                report.conserved(),
+                "{name}/{h}: emitted {} != {} + {} + {}",
+                report.emitted,
+                report.completed,
+                report.dropped,
+                report.residual
+            );
+            assert!(
+                report.completed > 0,
+                "{name}/{h}: nothing completed in 8 virtual secs"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_descriptor_drives_both_layers() {
+    let scenario = Scenario::by_name("hotspot").unwrap();
+    let mut policy = baselines::by_name("shortest_queue_min", 4, 3).unwrap();
+
+    // simulator layer
+    let eval = evaluate_scenario(policy.as_mut(), &scenario, 2, 40, 5).unwrap();
+    assert!(eval.metrics.completed > 0);
+
+    // serving-engine layer, same policy object, same descriptor
+    let report = serve_scenario(policy.as_mut(), &scenario, 8.0, 5).unwrap();
+    assert!(report.conserved());
+    assert!(report.completed > 0);
+}
+
+#[test]
+fn hetero_scenario_biases_shortest_queue_away_from_slow_node() {
+    // under hetero-nodes the slow node's queue-delay estimate inflates by
+    // 1/speed, so the shortest-queue policy should send load elsewhere
+    let scenario = Scenario::by_name("hetero-nodes").unwrap();
+    let slow = scenario
+        .gpu_speed
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let mut sim = Simulator::from_scenario(&scenario, 2);
+    // equal queue lengths everywhere at t=0 (all empty) except the GPU
+    // speeds; saturate every node with identical local work first
+    let all_local: Vec<_> = (0..scenario.n_nodes)
+        .map(|i| edgevision::env::Action::new(i, 2, 0))
+        .collect();
+    for _ in 0..25 {
+        sim.step(&all_local);
+    }
+    let d_slow = PolicyView::queue_delay_estimate(&sim, slow);
+    let others_max = (0..scenario.n_nodes)
+        .filter(|i| *i != slow)
+        .map(|i| PolicyView::queue_delay_estimate(&sim, i))
+        .fold(f64::MIN, f64::max);
+    assert!(
+        d_slow > others_max,
+        "slow node {slow} should have the largest delay estimate \
+         ({d_slow} vs {others_max})"
+    );
+}

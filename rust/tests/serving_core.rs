@@ -15,41 +15,44 @@ use anyhow::Result;
 
 use edgevision::coordinator::cluster::PROFILE_BATCH_MARGINAL;
 use edgevision::coordinator::{
-    ComputeHook, EdgeCluster, ProfileCompute, ServedRequest, ServingPolicy,
+    ComputeHook, EdgeCluster, ProfileCompute, ServedRequest,
 };
-use edgevision::env::bandwidth::BandwidthConfig;
-use edgevision::env::workload::WorkloadConfig;
 use edgevision::env::{Action, Profiles};
+use edgevision::policy::{Policy, PolicyView};
+use edgevision::scenario::Scenario;
 
 const EPS: f64 = 1e-9;
 
-/// Policy returning one fixed action for every arrival.
+/// Policy returning one fixed action for every node at every instant.
 struct Fixed(Action);
-impl ServingPolicy for Fixed {
-    fn decide(&mut self, _c: &EdgeCluster, _node: usize) -> Result<Action> {
-        Ok(self.0)
+impl Policy for Fixed {
+    fn name(&self) -> &str {
+        "fixed"
+    }
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        out.clear();
+        for _ in 0..view.n_nodes() {
+            out.push(self.0);
+        }
+        Ok(())
     }
 }
 
 /// Cluster with a silent workload (all arrivals are injected by the test)
 /// and a far-off drop deadline unless overridden.
 fn quiet_cluster(max_batch: usize, batch_wait: f64, deadline: f64) -> EdgeCluster {
-    EdgeCluster::new(
-        2,
-        WorkloadConfig {
-            means: vec![0.0; 2],
-            burst_prob: 0.0,
-            ..WorkloadConfig::default()
-        },
-        BandwidthConfig { n_nodes: 2, ..BandwidthConfig::default() },
-        Profiles::default(),
-        0.2,
-        deadline,
-        5,
-        max_batch,
-        batch_wait,
-        0,
-    )
+    let scenario = Scenario::custom("quiet")
+        .nodes(2)
+        .arrival_means(vec![0.0; 2])
+        .drop_threshold(deadline)
+        .max_batch(max_batch)
+        .batch_wait(batch_wait)
+        .build();
+    EdgeCluster::new(&scenario, 0)
 }
 
 fn by_id(served: &[ServedRequest], id: u64) -> &ServedRequest {
