@@ -2,6 +2,10 @@
 //! variants (full / W-O attention / W-O other's state) for a short run at
 //! omega = 5 and reports the end-of-run reward ordering plus per-variant
 //! training throughput. The full figure comes from `repro experiment fig8`.
+//!
+//! Regime selection goes through the scenario registry (`--scenario`,
+//! default `paper`) per the "new behaviors land as registry entries"
+//! contract — no ad-hoc env-field assembly at the bench site.
 
 use std::time::Instant;
 
@@ -9,14 +13,21 @@ use edgevision::config::Config;
 use edgevision::experiments::RlMethod;
 use edgevision::rl::trainer::Trainer;
 use edgevision::runtime::{Manifest, Runtime};
+use edgevision::scenario::Scenario;
+use edgevision::util::cli::Args;
 use edgevision::util::stats::mean;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts")?;
-    let rt = Runtime::new("artifacts".to_string())?;
+    let args = Args::from_env()?;
+    let scenario = Scenario::by_name(args.str_or("scenario", "paper"))?;
+
+    let base = Config::default();
+    let manifest = Manifest::load(&base.paths.artifacts)?;
+    let rt = Runtime::new(base.paths.artifacts.clone())?;
 
     for method in [RlMethod::Ours, RlMethod::NoAttention, RlMethod::NoOtherState] {
-        let mut cfg = Config::default();
+        let mut cfg = base.clone();
+        cfg.apply_scenario(&scenario);
         cfg.rl.episodes = 16;
         cfg.rl.update_every = 4;
         cfg.env.omega = 5.0;
@@ -26,11 +37,12 @@ fn main() -> anyhow::Result<()> {
         let outcome = trainer.train(|_, _| {})?;
         let eps = cfg.rl.episodes as f64 / t0.elapsed().as_secs_f64();
         println!(
-            "{:<16} last-8 reward {:>8.2}   {:>5.2} episodes/s  (variant={})",
+            "{:<16} last-8 reward {:>8.2}   {:>5.2} episodes/s  (variant={}, scenario={})",
             method.name(),
             mean(&outcome.episode_rewards[outcome.episode_rewards.len() - 8..]),
             eps,
             cfg.rl.variant,
+            scenario.name,
         );
     }
     Ok(())

@@ -1,0 +1,123 @@
+//! Fleet-path bench: the sharded conservative-time serving runtime end to
+//! end, dep-free (profile-table compute, the shared shortest-queue
+//! baseline built per shard through the one `baselines::by_name` factory).
+//!
+//! Each target is named `fleet::scenario=<name><nodes>::shards=<S>`, so
+//! `BENCH_fleet.json` tracks prev-run `speedup_vs_prev` deltas per
+//! (scenario, shards) point independently — the same provenance contract
+//! as `BENCH_env_step.json` / `BENCH_serving.json`. On the >= 64-node
+//! scenarios the multi-shard targets are the headline: their wall-clock
+//! against the shards=1 target of the same scenario is the fleet's
+//! parallel speedup, also emitted under the `speedup_vs_1shard` meta key.
+//!
+//! CLI: `--list-scenarios` prints the registry with each scenario's
+//! default shard plan and exits (the dep-free path CI exercises);
+//! `--shards 1,2` overrides the shard counts (CI smoke uses {1, 2}).
+
+use std::collections::BTreeMap;
+
+use edgevision::fleet::{heuristic_factory, Fleet, ShardPlan};
+use edgevision::scenario::Scenario;
+use edgevision::util::bench::{bench, scaled, BenchReport};
+use edgevision::util::cli::Args;
+use edgevision::util::json::Json;
+
+/// (scenario, node count) grid: the paper's native 4 nodes plus the
+/// production-scale clusters the fleet exists for.
+const GRID: [(&str, usize); 3] = [("paper", 4), ("steady", 64), ("hotspot", 64)];
+
+const DURATION_VIRTUAL_SECS: f64 = 10.0;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    if args.bool("list-scenarios") {
+        for name in Scenario::names() {
+            let sc = Scenario::by_name(name)?;
+            let plan = ShardPlan::new(&sc, sc.n_nodes.min(2))?;
+            println!(
+                "{name}: {} nodes, epoch {:.3}s (max safe {:.3}s), cross-shard {} Mbps",
+                sc.n_nodes,
+                plan.epoch,
+                plan.max_epoch(),
+                sc.cross_mbps
+            );
+        }
+        return Ok(());
+    }
+    let shard_counts = args.usize_list_or("shards", &[1, 2, 4])?;
+
+    let mut rep = BenchReport::new("fleet");
+    rep.meta(
+        "scenarios",
+        Json::Arr(
+            GRID.iter()
+                .map(|(n, k)| Json::str(format!("{n}{k}")))
+                .collect(),
+        ),
+    );
+    rep.meta(
+        "shards",
+        Json::Arr(shard_counts.iter().map(|s| Json::num(*s as f64)).collect()),
+    );
+
+    let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    for (name, nodes) in GRID {
+        let scenario = Scenario::at_nodes(name, nodes)?;
+        let mut base_mean: Option<f64> = None;
+        for &shards in &shard_counts {
+            if shards > scenario.n_nodes {
+                continue;
+            }
+            // correctness gate before timing: the merged report must
+            // conserve every request, including cross-shard in-flight
+            let report = Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                DURATION_VIRTUAL_SECS,
+                0,
+                shards,
+            )?;
+            anyhow::ensure!(
+                report.conserved(),
+                "{name}{nodes} x {shards} shards leaked requests"
+            );
+            if shards == 1 {
+                println!(
+                    "{name}{nodes}: {} emitted, {} completed in {DURATION_VIRTUAL_SECS}s virtual",
+                    report.emitted, report.completed
+                );
+            }
+            let target = format!("fleet::scenario={name}{nodes}::shards={shards}");
+            let iters = if nodes >= 64 { 6 } else { 12 };
+            let r = bench(&target, scaled(1), scaled(iters), || {
+                Fleet::serve(
+                    heuristic_factory("shortest_queue_min"),
+                    &scenario,
+                    DURATION_VIRTUAL_SECS,
+                    0,
+                    shards,
+                )
+                .unwrap();
+            });
+            let mean = r.mean.as_secs_f64();
+            rep.record(r);
+            match (shards, base_mean) {
+                (1, _) => base_mean = Some(mean),
+                (_, Some(base)) if mean > 0.0 => {
+                    let s = base / mean;
+                    println!(
+                        "  {name}{nodes} shards={shards}: {s:.2}x vs shards=1"
+                    );
+                    speedups.insert(
+                        format!("{name}{nodes}::shards={shards}"),
+                        Json::num(s),
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+    rep.meta("speedup_vs_1shard", Json::Obj(speedups));
+    rep.write_json()?;
+    Ok(())
+}

@@ -1,22 +1,38 @@
 //! PJRT execution latency for every artifact class on the hot path:
 //! actor forward (request path), critic forward + fused train step
 //! (training path), Pallas preprocess + detector zoo (serving path).
+//!
+//! The synthetic observation sizing is pinned to the scenario registry
+//! (`--scenario`, default `paper`, scaled to the manifest's agent count):
+//! if the artifacts' feature layout ever drifts from the registry's
+//! `obs_dim`, this bench fails loudly instead of measuring garbage.
 
 use edgevision::config::Config;
 use edgevision::rl::params::ParamStore;
 use edgevision::rl::policy::ActorPolicy;
 use edgevision::runtime::{lit_f32, lit_i32, lit_scalar_f32, Manifest, Runtime};
+use edgevision::scenario::Scenario;
 use edgevision::serving::{FrameSource, ModelZoo};
 use edgevision::util::bench::bench;
+use edgevision::util::cli::Args;
 use edgevision::util::rng::Rng;
 use xla::Literal;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
     let cfg = Config::default();
     let manifest = Manifest::load(&cfg.paths.artifacts)?;
     let rt = Runtime::new(cfg.paths.artifacts.clone())?;
     let n = manifest.net.n_agents;
     let d = manifest.net.obs_dim;
+    let scenario = Scenario::at_nodes(args.str_or("scenario", "paper"), n)?;
+    anyhow::ensure!(
+        scenario.obs_dim() == d,
+        "artifact obs_dim {d} != scenario {} obs_dim {} at {n} nodes — \
+         the trained network's input contract drifted from the registry",
+        scenario.name,
+        scenario.obs_dim()
+    );
 
     // actor forward (the decentralized-execution request path)
     let spec = manifest.variant("full")?;

@@ -1,0 +1,246 @@
+//! Cross-shard boundary surface of the serving cluster — the small
+//! [`EdgeCluster`](crate::coordinator::EdgeCluster) API the sharded fleet
+//! runtime (`crate::fleet`) builds on.
+//!
+//! A fleet partitions a [`crate::scenario::Scenario`] into contiguous node
+//! shards, runs one `EdgeCluster` per shard, and synchronizes them with
+//! conservative epoch barriers. Everything that crosses a shard boundary
+//! goes through the types here:
+//!
+//! * [`Exterior`] — attached to a shard's cluster, it widens the cluster's
+//!   [`crate::policy::PolicyView`] to the *global* node set: local nodes
+//!   answer live, remote nodes answer from the last barrier's
+//!   [`RemoteSnapshot`]. Policy actions that pick a remote edge become
+//!   [`BoundaryDispatch`]es in the exterior's outbox instead of local
+//!   transfers.
+//! * [`BoundaryDispatch`] — one request leaving its origin shard: the
+//!   decided `(model, res)`, the original arrival time (drop deadlines
+//!   follow the request across shards) and the causally-safe delivery
+//!   time `deliver_at = ready + frame_mbits / cross_mbps`. Because the
+//!   fleet's epoch Δ never exceeds the minimum cross-shard transfer
+//!   delay, `deliver_at` always lands strictly after the epoch in which
+//!   the dispatch was produced — injecting it at the next barrier can
+//!   never rewind a shard's clock.
+//! * [`ShardSummary`] — the per-barrier state publication (queue lengths,
+//!   Eq. 1 delay estimates, arrival-rate histories) the fleet assembles
+//!   into every other shard's `RemoteSnapshot`.
+//!
+//! Determinism: dispatches carry the origin cluster's event sequence
+//! number; the fleet merges outboxes in (shard id, seq) order, so the
+//! injected event order — and with it every downstream tie-break — is
+//! independent of thread interleaving.
+
+/// `ServedRequest::origin` marker for requests that entered a shard over a
+/// cross-shard boundary (their true origin lives in another shard's node
+/// index space).
+pub const EXTERNAL_ORIGIN: usize = usize::MAX;
+
+/// One request crossing a shard boundary. All node indices are *global*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundaryDispatch {
+    /// Global origin node (where the frame arrived and was preprocessed).
+    pub origin: usize,
+    /// Global target node (where the policy routed it for inference).
+    pub target: usize,
+    pub model: usize,
+    pub res: usize,
+    /// Original arrival time — the drop deadline is measured from here,
+    /// exactly as for an in-shard transfer.
+    pub arrival: f64,
+    /// Transfer completion time on the cross-shard link; the target shard
+    /// injects the frame as ready at this instant.
+    pub deliver_at: f64,
+    /// Origin cluster's event sequence at export — the deterministic
+    /// merge key (shard id first, then seq).
+    pub seq: u64,
+}
+
+/// Epoch-stale view of every *remote* node, exchanged at barriers. Sized
+/// for the global node set; the entries covering a shard's own nodes are
+/// ignored (local state answers live).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteSnapshot {
+    pub hist_len: usize,
+    /// Per global node: frames pending GPU service.
+    pub queue_len: Vec<usize>,
+    /// Per global node: Eq. 1 queue-delay estimate in seconds.
+    pub queue_delay: Vec<f64>,
+    /// Per global node, oldest first: `hist_len` arrival-rate samples
+    /// (row-major `[n_global * hist_len]`).
+    pub rates: Vec<f64>,
+}
+
+impl RemoteSnapshot {
+    /// An all-idle snapshot (the fleet's state before the first barrier).
+    pub fn zeros(n_global: usize, hist_len: usize) -> Self {
+        RemoteSnapshot {
+            hist_len,
+            queue_len: vec![0; n_global],
+            queue_delay: vec![0.0; n_global],
+            rates: vec![0.0; n_global * hist_len],
+        }
+    }
+
+    /// Overwrite the entries for global nodes `[offset, offset + k)` from
+    /// a shard's summary. Reuses the existing buffers (no allocation).
+    pub fn absorb(&mut self, offset: usize, summary: &ShardSummary) {
+        let k = summary.queue_len.len();
+        self.queue_len[offset..offset + k].copy_from_slice(&summary.queue_len);
+        self.queue_delay[offset..offset + k]
+            .copy_from_slice(&summary.queue_delay);
+        let h = self.hist_len;
+        self.rates[offset * h..(offset + k) * h]
+            .copy_from_slice(&summary.rates);
+    }
+}
+
+/// One shard's per-barrier state publication (local node indices).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardSummary {
+    pub queue_len: Vec<usize>,
+    pub queue_delay: Vec<f64>,
+    /// Row-major `[n_local * hist_len]`, oldest first per node.
+    pub rates: Vec<f64>,
+    pub hist_len: usize,
+}
+
+impl ShardSummary {
+    pub fn new(n_local: usize, hist_len: usize) -> Self {
+        ShardSummary {
+            queue_len: vec![0; n_local],
+            queue_delay: vec![0.0; n_local],
+            rates: vec![0.0; n_local * hist_len],
+            hist_len,
+        }
+    }
+}
+
+/// Attached to a shard's `EdgeCluster`, this widens its policy view to
+/// the global node set and collects outbound cross-shard dispatches.
+#[derive(Debug, Clone)]
+pub struct Exterior {
+    /// Total nodes across the fleet.
+    pub n_global: usize,
+    /// Global index of this shard's local node 0 (shards are contiguous).
+    pub offset: usize,
+    /// Cross-shard backhaul bandwidth in Mbps (the scenario's
+    /// conservative floor unless overridden) — fixed, so the minimum
+    /// cross-shard transfer delay is static and the fleet can validate
+    /// its epoch length against it.
+    pub cross_mbps: f64,
+    /// Static per-node GPU speeds for the whole fleet (remote service
+    /// times in the Eq. 1-style estimates policies compute).
+    pub gpu_speed: Vec<f64>,
+    /// Last barrier's view of every remote node.
+    pub snapshot: RemoteSnapshot,
+    /// Outbound dispatches since the last [`drain`](Exterior::drain).
+    pub(crate) outbox: Vec<BoundaryDispatch>,
+    /// In-flight count per global target node (feeds `link_backlog`):
+    /// incremented at export, decremented once the dispatch's delivery
+    /// instant has passed — NOT at drain, so congestion on the backhaul
+    /// stays visible to policies exactly like `transfers.in_flight` does
+    /// for in-shard links (one-barrier granularity).
+    pub(crate) out_backlog: Vec<usize>,
+    /// `(deliver_at, target)` of every undelivered dispatch.
+    pub(crate) in_flight: Vec<(f64, usize)>,
+}
+
+impl Exterior {
+    pub fn new(
+        n_global: usize,
+        offset: usize,
+        cross_mbps: f64,
+        gpu_speed: Vec<f64>,
+        hist_len: usize,
+    ) -> Self {
+        assert!(cross_mbps > 0.0, "cross-shard bandwidth must be positive");
+        assert_eq!(
+            gpu_speed.len(),
+            n_global,
+            "exterior needs one gpu_speed per global node"
+        );
+        Exterior {
+            n_global,
+            offset,
+            cross_mbps,
+            gpu_speed,
+            snapshot: RemoteSnapshot::zeros(n_global, hist_len),
+            outbox: Vec::new(),
+            out_backlog: vec![0; n_global],
+            in_flight: Vec::new(),
+        }
+    }
+
+    /// Dispatches queued since the last drain.
+    pub fn outbox_len(&self) -> usize {
+        self.outbox.len()
+    }
+
+    /// Move the outbox into `out` (cleared first) and retire the
+    /// in-flight counters of every dispatch whose delivery instant has
+    /// passed by `now` — drained-but-undelivered dispatches keep
+    /// counting as link backlog until then. Reusable-buffer idiom: zero
+    /// allocations once the vectors reach their high-water marks
+    /// (`retain` works in place).
+    pub fn drain(&mut self, out: &mut Vec<BoundaryDispatch>, now: f64) {
+        out.clear();
+        out.append(&mut self.outbox);
+        let backlog = &mut self.out_backlog;
+        self.in_flight.retain(|&(deliver_at, target)| {
+            if deliver_at <= now {
+                backlog[target] -= 1;
+                false
+            } else {
+                true
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_absorb_places_shard_block() {
+        let mut snap = RemoteSnapshot::zeros(4, 2);
+        let mut s = ShardSummary::new(2, 2);
+        s.queue_len = vec![3, 5];
+        s.queue_delay = vec![0.1, 0.2];
+        s.rates = vec![1.0, 2.0, 3.0, 4.0];
+        snap.absorb(2, &s);
+        assert_eq!(snap.queue_len, vec![0, 0, 3, 5]);
+        assert_eq!(snap.queue_delay, vec![0.0, 0.0, 0.1, 0.2]);
+        assert_eq!(
+            snap.rates,
+            vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0]
+        );
+    }
+
+    #[test]
+    fn drain_keeps_backlog_until_delivery_instant() {
+        let mut ext = Exterior::new(4, 0, 1.0, vec![1.0; 4], 2);
+        ext.outbox.push(BoundaryDispatch {
+            origin: 0,
+            target: 3,
+            model: 0,
+            res: 4,
+            arrival: 0.0,
+            deliver_at: 0.5,
+            seq: 1,
+        });
+        ext.out_backlog[3] = 1;
+        ext.in_flight.push((0.5, 3));
+        let mut out = Vec::new();
+        // drained at t=0.2 but delivered only at 0.5: still on the link
+        ext.drain(&mut out, 0.2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(ext.outbox_len(), 0);
+        assert_eq!(ext.out_backlog[3], 1);
+        // past the delivery instant the backlog retires
+        ext.drain(&mut out, 0.6);
+        assert!(out.is_empty());
+        assert_eq!(ext.out_backlog[3], 0);
+        assert!(ext.in_flight.is_empty());
+    }
+}

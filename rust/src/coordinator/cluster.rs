@@ -26,6 +26,18 @@
 //! `emitted == completed + dropped + residual` (pinned by
 //! `prop_serving_conservation`), where residual counts requests still in
 //! flight when the horizon cuts the run.
+//!
+//! Fleet boundary: with an [`Exterior`] attached
+//! ([`EdgeCluster::attach_exterior`]) the cluster becomes one shard of a
+//! sharded fleet. Its [`PolicyView`] widens to the *global* node set
+//! (local nodes live, remote nodes from the exterior's epoch snapshot),
+//! policy actions that pick a remote edge leave through the exterior's
+//! outbox as [`BoundaryDispatch`]es (`exported`), and frames arriving
+//! from other shards enter through [`EdgeCluster::inject_boundary`]
+//! (`imported`). Shard-local conservation then reads
+//! `emitted + imported == completed + dropped + residual + exported`.
+//! Without an exterior nothing changes — an unsharded cluster is
+//! bit-identical to the pre-fleet behavior.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -33,6 +45,9 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::boundary::{
+    BoundaryDispatch, Exterior, ShardSummary, EXTERNAL_ORIGIN,
+};
 use crate::coordinator::dispatcher::TransferScheduler;
 use crate::coordinator::router::Router;
 use crate::env::bandwidth::Bandwidth;
@@ -224,6 +239,8 @@ pub struct EdgeCluster {
     /// Absolute time each node's in-flight batch completes (only
     /// meaningful while `gpu_busy`); feeds the Eq. 1 queue-delay estimate.
     gpu_busy_until: Vec<f64>,
+    /// Accumulated GPU service seconds per node (utilization telemetry).
+    busy_secs: Vec<f64>,
     /// Earliest armed BatchDeadline per node (f64::INFINITY = none armed)
     /// — dedupes poll events so each idle wait schedules one wakeup.
     next_poll: Vec<f64>,
@@ -241,6 +258,15 @@ pub struct EdgeCluster {
     /// Requests still in flight (queued, batching or on a link) when the
     /// horizon ended the run; set by [`EdgeCluster::finish`].
     pub residual: u64,
+    /// Requests that entered over a cross-shard boundary
+    /// ([`EdgeCluster::inject_boundary`]).
+    pub imported: u64,
+    /// Requests that left over a cross-shard boundary (policy routed them
+    /// to a remote shard's node).
+    pub exported: u64,
+    /// Cross-shard widening of the policy view + outbound dispatch
+    /// collection; `None` for an unsharded cluster.
+    exterior: Option<Exterior>,
     /// Reusable per-slot workload buffers (serving hot path: no fresh
     /// Vecs per slot — same `*_into` idiom as the simulator core).
     rates_scratch: Vec<f64>,
@@ -292,6 +318,7 @@ impl EdgeCluster {
                 .collect(),
             gpu_busy: vec![false; n],
             gpu_busy_until: vec![0.0; n],
+            busy_secs: vec![0.0; n],
             next_poll: vec![f64::INFINITY; n],
             rate_hist: (0..n)
                 .map(|_| VecDeque::from(vec![0.0; scenario.hist_len]))
@@ -304,6 +331,9 @@ impl EdgeCluster {
             served: Vec::new(),
             emitted: 0,
             residual: 0,
+            imported: 0,
+            exported: 0,
+            exterior: None,
             rates_scratch: Vec::new(),
             counts_scratch: Vec::new(),
             batch_scratch: Vec::new(),
@@ -318,6 +348,132 @@ impl EdgeCluster {
     /// Frames waiting for GPU service at `node` (batcher backlog).
     pub fn queue_len(&self, node: usize) -> usize {
         self.batchers[node].pending()
+    }
+
+    // ---- fleet boundary (cross-shard serving) -----------------------------
+
+    /// Attach a cross-shard [`Exterior`]: from here on the policy view
+    /// spans the fleet's global node set and remote-edge actions become
+    /// boundary dispatches. The router is rebuilt over the global index
+    /// space (same deadline-veto behavior, cross-shard links at the
+    /// exterior's fixed backhaul bandwidth).
+    pub fn attach_exterior(&mut self, ext: Exterior) {
+        assert!(
+            ext.offset + self.n_nodes <= ext.n_global,
+            "shard [{}, {}) exceeds the global node set of {}",
+            ext.offset,
+            ext.offset + self.n_nodes,
+            ext.n_global
+        );
+        assert_eq!(ext.snapshot.hist_len, self.hist_len);
+        self.router =
+            Router::new(ext.n_global, false, Some(self.drop_deadline));
+        self.exterior = Some(ext);
+    }
+
+    pub fn exterior(&self) -> Option<&Exterior> {
+        self.exterior.as_ref()
+    }
+
+    pub fn exterior_mut(&mut self) -> Option<&mut Exterior> {
+        self.exterior.as_mut()
+    }
+
+    /// Move the exterior's outbox into `out` (cleared first) — the fleet
+    /// calls this at every epoch barrier, with `now` the barrier time so
+    /// delivered dispatches stop counting as cross-link backlog. No-op
+    /// without an exterior.
+    pub fn drain_outbox_into(
+        &mut self,
+        out: &mut Vec<BoundaryDispatch>,
+        now: f64,
+    ) {
+        out.clear();
+        if let Some(ext) = self.exterior.as_mut() {
+            ext.drain(out, now);
+        }
+    }
+
+    /// Inject a frame that crossed the shard boundary: it joins the
+    /// target node's batcher when its transfer completes (`deliver_at`),
+    /// with the *original* arrival time driving the drop deadline.
+    /// Requires an attached exterior whose range covers `d.target`.
+    pub fn inject_boundary(&mut self, d: &BoundaryDispatch) {
+        let offset = self
+            .exterior
+            .as_ref()
+            .expect("inject_boundary needs an attached exterior")
+            .offset;
+        let local = d
+            .target
+            .checked_sub(offset)
+            .filter(|l| *l < self.n_nodes)
+            .expect("boundary dispatch routed to a node outside this shard");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.imported += 1;
+        self.reqs.insert(
+            id,
+            PendingReq {
+                id,
+                origin: EXTERNAL_ORIGIN,
+                action: Action::new(local, d.model, d.res),
+                arrival: d.arrival,
+                in_transfer: false,
+            },
+        );
+        self.push_event(
+            d.deliver_at.max(self.now),
+            Event::FrameReady { node: local, req: id },
+        );
+    }
+
+    /// Publish this shard's per-node state for the next epoch's remote
+    /// snapshots. Reusable-buffer idiom: `out` must be sized
+    /// `(self.n_nodes, self.hist_len)`.
+    pub fn summary_into(&self, out: &mut ShardSummary) {
+        assert_eq!(out.queue_len.len(), self.n_nodes);
+        assert_eq!(out.hist_len, self.hist_len);
+        for i in 0..self.n_nodes {
+            out.queue_len[i] = self.queue_len(i);
+            out.queue_delay[i] = self.queue_delay_estimate(i);
+            for (k, r) in self.rate_hist[i].iter().enumerate() {
+                out.rates[i * self.hist_len + k] = *r;
+            }
+        }
+    }
+
+    /// Accumulated GPU service seconds per node (utilization telemetry).
+    pub fn gpu_busy_secs(&self) -> &[f64] {
+        &self.busy_secs
+    }
+
+    /// Width of the policy view: the fleet's global node count when an
+    /// exterior is attached, the local node count otherwise.
+    fn view_nodes(&self) -> usize {
+        self.exterior.as_ref().map_or(self.n_nodes, |e| e.n_global)
+    }
+
+    /// Local node index -> policy-view (global) index.
+    fn view_origin(&self, local: usize) -> usize {
+        self.exterior.as_ref().map_or(local, |e| e.offset + local)
+    }
+
+    /// Policy-view index -> local index, if the node lives in this shard.
+    fn view_to_local(&self, view_node: usize) -> Option<usize> {
+        let offset = self.exterior.as_ref().map_or(0, |e| e.offset);
+        view_node
+            .checked_sub(offset)
+            .filter(|l| *l < self.n_nodes)
+    }
+
+    /// GPU speed of a policy-view node (remote speeds are static fleet
+    /// metadata carried by the exterior).
+    fn view_speed(&self, view_node: usize) -> f64 {
+        match self.view_to_local(view_node) {
+            Some(l) => self.gpu_speed[l],
+            None => self.exterior.as_ref().unwrap().gpu_speed[view_node],
+        }
     }
 
     /// Estimated queuing delay at `node` (Eq. 1, serving-engine form):
@@ -357,9 +513,11 @@ impl EdgeCluster {
         PolicyView::observation_into(self, node, f)
     }
 
-    /// Normalized policy observation, same layout as the slot simulator.
+    /// Normalized policy observation, same layout as the slot simulator
+    /// (spanning the fleet's global node set when an exterior is attached).
     pub fn observation(&self, node: usize) -> Vec<f32> {
-        let mut f = Vec::with_capacity(self.hist_len + 1 + 2 * (self.n_nodes - 1));
+        let n = self.view_nodes();
+        let mut f = Vec::with_capacity(self.hist_len + 1 + 2 * (n - 1));
         self.observation_into(node, &mut f);
         f
     }
@@ -456,13 +614,22 @@ impl EdgeCluster {
 
     /// End the run at `horizon`: whatever is still pending (queued in a
     /// batcher, on a link, or created but not yet arrived) becomes
-    /// residual, completing the conservation accounting.
+    /// residual, completing the conservation accounting. GPU-busy
+    /// telemetry is clipped to the horizon so utilization fractions can
+    /// never exceed 1.0 (a batch dispatched near the horizon was credited
+    /// its full service time up front).
     pub fn finish(&mut self, horizon: f64) {
         self.now = horizon;
         self.residual = self.reqs.len() as u64;
         self.reqs.clear();
         for b in &mut self.batchers {
             b.clear();
+        }
+        for i in 0..self.n_nodes {
+            if self.gpu_busy[i] {
+                self.busy_secs[i] -=
+                    (self.gpu_busy_until[i] - horizon).max(0.0);
+            }
         }
     }
 
@@ -500,55 +667,89 @@ impl EdgeCluster {
         compute: &mut dyn ComputeHook,
     ) -> Result<()> {
         // unified control plane: per-arrival queries share one batched
-        // decide_into per decision instant
+        // decide_into per decision instant. Node indices below are in the
+        // policy-view space (global when an exterior is attached).
+        let origin_v = self.view_origin(node);
         let raw = {
             let mut cache = std::mem::take(&mut self.decisions);
-            let decided = cache.action_for(policy, self, node);
+            let decided = cache.action_for(policy, self, origin_v);
             self.decisions = cache;
             decided?
         };
         // validate the whole action before the table lookups below; the
         // router re-checks but would be reached only after the indexing
         anyhow::ensure!(
-            raw.edge < self.n_nodes && raw.model < N_MODELS && raw.res < N_RES,
+            raw.edge < self.view_nodes()
+                && raw.model < N_MODELS
+                && raw.res < N_RES,
             "action out of range: {raw:?}"
         );
         let infer = self.profiles.infer_delay[raw.model][raw.res]
-            / self.gpu_speed[raw.edge];
+            / self.view_speed(raw.edge);
         let mbits = self.profiles.frame_mbits[raw.res];
-        // snapshot the one link bandwidth the router's veto check needs
-        let bw_val = if raw.edge != node {
-            self.bandwidth.get(node, raw.edge)
-        } else {
+        // snapshot the one link bandwidth the router's veto check needs:
+        // the live trace for an in-shard link, the fixed backhaul floor
+        // for a cross-shard one
+        let bw_val = if raw.edge == origin_v {
             f64::INFINITY
+        } else {
+            match self.view_to_local(raw.edge) {
+                Some(l) => self.bandwidth.get(node, l),
+                None => self.exterior.as_ref().unwrap().cross_mbps,
+            }
         };
-        let action = self.router.route(node, raw, |_, _| bw_val, mbits, infer)?;
+        let action =
+            self.router.route(origin_v, raw, |_, _| bw_val, mbits, infer)?;
         // preprocessing happens at the origin (Pallas resize / real exec)
         let pre_secs =
             compute.preprocess(node, action.res)? / self.gpu_speed[node];
         let ready = self.now + pre_secs;
-        if action.edge == node {
+        if action.edge == origin_v {
             if let Some(r) = self.reqs.get_mut(&req) {
-                r.action = action;
+                r.action = Action::new(node, action.model, action.res);
             }
             self.push_event(
                 ready.max(self.now),
                 Event::FrameReady { node, req },
             );
-        } else {
+        } else if let Some(target) = self.view_to_local(action.edge) {
             let finish = self.transfers.schedule(
                 node,
-                action.edge,
+                target,
                 req,
                 self.profiles.frame_mbits[action.res],
-                self.bandwidth.get(node, action.edge),
+                self.bandwidth.get(node, target),
                 ready,
             );
             if let Some(r) = self.reqs.get_mut(&req) {
-                r.action = action;
+                r.action = Action::new(target, action.model, action.res);
                 r.in_transfer = true;
             }
             self.push_event(finish, Event::TransferDone { req });
+        } else {
+            // cross-shard dispatch: the frame leaves this shard over the
+            // fixed backhaul link and re-enters the target shard at the
+            // next epoch barrier. Δ <= mbits / cross_mbps makes the
+            // delivery time land strictly after the current epoch.
+            let Some(r) = self.reqs.remove(&req) else {
+                return Ok(());
+            };
+            self.exported += 1;
+            let seq = self.seq;
+            self.seq += 1;
+            let ext = self.exterior.as_mut().unwrap();
+            let finish = ready + mbits / ext.cross_mbps;
+            ext.out_backlog[action.edge] += 1;
+            ext.in_flight.push((finish, action.edge));
+            ext.outbox.push(BoundaryDispatch {
+                origin: origin_v,
+                target: action.edge,
+                model: action.model,
+                res: action.res,
+                arrival: r.arrival,
+                deliver_at: finish,
+                seq,
+            });
         }
         Ok(())
     }
@@ -672,6 +873,7 @@ impl EdgeCluster {
         self.next_batch_id += 1;
         self.gpu_busy[node] = true;
         self.gpu_busy_until[node] = finish;
+        self.busy_secs[node] += secs;
         for &id in items {
             let Some(r) = self.reqs.remove(&id) else { continue };
             // a completion past the deadline still counts as a drop —
@@ -703,10 +905,13 @@ impl EdgeCluster {
 
 /// The serving cluster as a [`PolicyView`]: the unified `Policy` trait
 /// decides from this view whether it is driving the slot simulator or the
-/// event-driven engine.
+/// event-driven engine. With an attached [`Exterior`] the view spans the
+/// fleet's global node set: this shard's nodes answer live, remote nodes
+/// answer from the last epoch barrier's snapshot (conservative-time
+/// semantics — remote state is at most one epoch stale).
 impl PolicyView for EdgeCluster {
     fn n_nodes(&self) -> usize {
-        self.n_nodes
+        self.view_nodes()
     }
 
     fn now(&self) -> f64 {
@@ -718,24 +923,56 @@ impl PolicyView for EdgeCluster {
     }
 
     fn queue_len(&self, node: usize) -> usize {
-        EdgeCluster::queue_len(self, node)
+        match self.view_to_local(node) {
+            Some(l) => EdgeCluster::queue_len(self, l),
+            None => self.exterior.as_ref().unwrap().snapshot.queue_len[node],
+        }
     }
 
     fn queue_delay_estimate(&self, node: usize) -> f64 {
-        EdgeCluster::queue_delay_estimate(self, node)
+        match self.view_to_local(node) {
+            Some(l) => EdgeCluster::queue_delay_estimate(self, l),
+            None => self.exterior.as_ref().unwrap().snapshot.queue_delay[node],
+        }
     }
 
     fn link_backlog(&self, from: usize, to: usize) -> usize {
-        self.transfers.in_flight(from, to)
+        match (self.view_to_local(from), self.view_to_local(to)) {
+            (Some(f), Some(t)) => self.transfers.in_flight(f, t),
+            // local -> remote: dispatches waiting in the exterior outbox
+            (Some(_), None) => {
+                self.exterior.as_ref().unwrap().out_backlog[to]
+            }
+            // remote-origin links are outside this shard's knowledge
+            (None, _) => 0,
+        }
     }
 
     fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
-        self.bandwidth.get(from, to)
+        if from == to {
+            return f64::INFINITY;
+        }
+        match (self.view_to_local(from), self.view_to_local(to)) {
+            (Some(f), Some(t)) => self.bandwidth.get(f, t),
+            // any cross-shard hop runs at the fixed backhaul floor
+            _ => self.exterior.as_ref().unwrap().cross_mbps,
+        }
     }
 
     fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64)) {
-        for &r in &self.rate_hist[node] {
-            f(r);
+        match self.view_to_local(node) {
+            Some(l) => {
+                for &r in &self.rate_hist[l] {
+                    f(r);
+                }
+            }
+            None => {
+                let snap = &self.exterior.as_ref().unwrap().snapshot;
+                let h = snap.hist_len;
+                for &r in &snap.rates[node * h..(node + 1) * h] {
+                    f(r);
+                }
+            }
         }
     }
 
@@ -756,7 +993,7 @@ impl PolicyView for EdgeCluster {
     }
 
     fn gpu_speed(&self, node: usize) -> f64 {
-        self.gpu_speed[node]
+        self.view_speed(node)
     }
 
     fn omega(&self) -> f64 {
@@ -884,6 +1121,88 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.finish.to_bits(), b.finish.to_bits());
         }
+    }
+
+    #[test]
+    fn exterior_export_and_inject_roundtrip() {
+        // a policy that always routes to global node 0
+        struct AllToGlobalZero;
+        impl Policy for AllToGlobalZero {
+            fn name(&self) -> &str {
+                "all_to_g0"
+            }
+            fn decide_into(
+                &mut self,
+                view: &dyn PolicyView,
+                out: &mut Vec<Action>,
+            ) -> Result<()> {
+                out.clear();
+                for _ in 0..view.n_nodes() {
+                    out.push(Action::new(0, 0, 4));
+                }
+                Ok(())
+            }
+        }
+        let mut hook = ProfileCompute::new(Profiles::default());
+
+        // shard covering global nodes [2, 4): everything exports
+        let sc = Scenario::custom("boundary-probe")
+            .nodes(2)
+            .arrival_means(vec![0.0, 0.0])
+            .build();
+        let mut c = EdgeCluster::new(&sc, 0);
+        c.attach_exterior(Exterior::new(4, 2, 1.0, vec![1.0; 4], sc.hist_len));
+        assert_eq!(PolicyView::n_nodes(&c), 4);
+        assert_eq!(c.observation(2).len(), 5 + 1 + 3 + 3);
+        c.inject_request(0, 0.1); // local node 0 == global node 2
+        c.step_until(&mut AllToGlobalZero, &mut hook, 1.0).unwrap();
+        assert_eq!(c.exported, 1);
+        assert_eq!(PolicyView::link_backlog(&c, 2, 0), 1);
+        let mut out = Vec::new();
+        // drained before delivery: the dispatch still occupies the link
+        c.drain_outbox_into(&mut out, 0.2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(PolicyView::link_backlog(&c, 2, 0), 1);
+        // a later barrier past deliver_at retires the backlog
+        let mut empty = Vec::new();
+        c.drain_outbox_into(&mut empty, 1.0);
+        assert!(empty.is_empty());
+        assert_eq!(PolicyView::link_backlog(&c, 2, 0), 0);
+        let d = &out[0];
+        assert_eq!((d.origin, d.target), (2, 0));
+        // smallest frame (0.32 Mbit) over the 1 Mbps backhaul, after
+        // preprocessing: ≥ 0.32 s past the decision instant
+        assert!(d.deliver_at >= 0.1 + 0.32, "deliver_at {}", d.deliver_at);
+        c.finish(1.0);
+        assert_eq!(c.emitted + c.imported, 1);
+        assert_eq!(c.residual + c.exported, 1);
+
+        // the owning shard (global nodes [0, 2)) serves the import with
+        // the original arrival time driving its deadline
+        let sc0 = Scenario::custom("boundary-probe-0")
+            .nodes(2)
+            .arrival_means(vec![0.0, 0.0])
+            .build();
+        let mut c0 = EdgeCluster::new(&sc0, 1);
+        c0.attach_exterior(Exterior::new(
+            4,
+            0,
+            1.0,
+            vec![1.0; 4],
+            sc0.hist_len,
+        ));
+        c0.inject_boundary(d);
+        c0.step_until(&mut AllToGlobalZero, &mut hook, d.deliver_at + 1.0)
+            .unwrap();
+        c0.finish(d.deliver_at + 1.0);
+        assert_eq!(c0.imported, 1);
+        assert_eq!(c0.served.len(), 1);
+        let s = &c0.served[0];
+        assert_eq!(s.origin, EXTERNAL_ORIGIN);
+        assert_eq!(s.target, 0);
+        assert!(!s.dropped, "{s:?}");
+        assert!((s.arrival - 0.1).abs() < 1e-12);
+        assert!(s.service_start >= d.deliver_at);
     }
 
     #[test]

@@ -6,11 +6,15 @@
 //! and built from [`crate::scenario::Scenario`] descriptors.
 
 pub mod batcher;
+pub mod boundary;
 pub mod cluster;
 pub mod dispatcher;
 pub mod router;
 
 pub use batcher::Batcher;
+pub use boundary::{
+    BoundaryDispatch, Exterior, RemoteSnapshot, ShardSummary, EXTERNAL_ORIGIN,
+};
 pub use cluster::{ComputeHook, EdgeCluster, ProfileCompute, ServedRequest};
 pub use dispatcher::TransferScheduler;
 pub use router::{Router, RoutingStats};

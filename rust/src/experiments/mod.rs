@@ -414,6 +414,48 @@ impl<'rt> ExpContext<'rt> {
         Ok(rows)
     }
 
+    /// Fleet-scaling sweep on the sharded runtime (`repro experiment
+    /// fleet`): every named scenario at `n_nodes`, served at each shard
+    /// count by the shortest-queue baseline through the fleet's
+    /// conservative-time engine, one conservation-checked row per
+    /// (scenario, shards) in `results/fleet_scaling.csv` — including the
+    /// per-shard utilization/drop balance columns. Dep-free core
+    /// (`crate::fleet::sweep_to_csv`); lives here so the sweep rides the
+    /// same results-directory plumbing as the figure experiments.
+    pub fn fleet(
+        &self,
+        scenario_names: &[&str],
+        shard_counts: &[usize],
+        n_nodes: usize,
+        duration_virtual_secs: f64,
+    ) -> Result<()> {
+        let path = self.results.join("fleet_scaling.csv");
+        let seed = self.base.rl.seed ^ 0xF1EE7;
+        let reports = crate::fleet::sweep_to_csv(
+            scenario_names,
+            shard_counts,
+            n_nodes,
+            duration_virtual_secs,
+            seed,
+            "shortest_queue_min",
+            &path,
+        )?;
+        for r in &reports {
+            let (_, util, _) = r.utilization();
+            eprintln!(
+                "[exp] fleet {} x{}: {} completed, {} cross-shard, util {:.1}%, {:.2}s wall",
+                r.scenario,
+                r.shards,
+                r.completed,
+                r.cross_dispatches,
+                100.0 * util,
+                r.wall_secs
+            );
+        }
+        eprintln!("[exp] wrote {}", path.display());
+        Ok(())
+    }
+
     /// Headline numbers: improvement of ours over each baseline (reward)
     /// and the drop-rate reduction, at the default omega.
     pub fn headline(&self) -> Result<()> {
@@ -471,6 +513,7 @@ impl<'rt> ExpContext<'rt> {
         self.fig7()?;
         self.fig8()?;
         self.serving_comparison(Scenario::names(), 30.0)?;
+        self.fleet(Scenario::names(), &[1, 2, 4], 16, 20.0)?;
         self.headline()
     }
 }

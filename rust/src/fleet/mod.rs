@@ -1,0 +1,184 @@
+//! Sharded fleet runtime — parallel conservative-time serving of large
+//! edge clusters.
+//!
+//! The event-driven [`crate::coordinator::EdgeCluster`] is exact but
+//! single-threaded, so a 256-node `Scenario::at_nodes` run is capped by
+//! one core. This subsystem partitions a scenario into `S` contiguous
+//! node shards ([`ShardPlan`]), runs one invariant-checked cluster per
+//! shard on its own `std::thread`, and synchronizes them with
+//! **conservative epoch barriers** ([`Fleet`]): each shard advances via
+//! the existing `step_until(t + Δ)`, then cross-shard dispatches are
+//! exchanged at the barrier over bounded channels. Because
+//! Δ ≤ the minimum cross-shard link delay, delivery at the next epoch is
+//! causally safe, and the (shard id, seq) merge order keeps every run
+//! seed-deterministic regardless of thread interleaving.
+//!
+//! Contracts (pinned by `tests/fleet_runtime.rs`):
+//!
+//! * **`shards = 1` is bit-identical to `serving::serve_scenario`** on
+//!   the same `(policy, scenario, duration, seed)`.
+//! * Multi-shard runs are seed-deterministic across repeated executions.
+//! * [`FleetReport`] conservation holds globally:
+//!   `emitted == completed + dropped + residual`, counting cross-shard
+//!   requests still on the backhaul at the horizon.
+//! * Per-shard steady-state stepping stays zero-alloc
+//!   (`tests/alloc_probe.rs`).
+//!
+//! The whole control plane carries over: per-shard [`crate::policy::Policy`]
+//! instances come from the one factory surface
+//! ([`PolicyFactory`] / [`heuristic_factory`] over
+//! [`crate::baselines::by_name`]), and each policy sees the *global*
+//! fleet through its shard's widened `PolicyView` (local nodes live,
+//! remote nodes one epoch stale). Dep-free, std threads only.
+
+pub mod plan;
+pub mod report;
+pub mod runtime;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use plan::ShardPlan;
+pub use report::FleetReport;
+pub use runtime::{heuristic_factory, Fleet, PolicyFactory};
+
+use crate::scenario::Scenario;
+use crate::telemetry::fleet::utilization_spread;
+use crate::util::csv::CsvWriter;
+
+/// `repro experiment fleet` backend (dep-free): sweep shards × scenarios
+/// with one heuristic baseline, writing one row per (scenario, shards)
+/// into `path` (canonically `results/fleet_scaling.csv`) with per-shard
+/// balance columns. Shard counts exceeding a scenario's node count are
+/// skipped. Returns every report, in row order.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_to_csv(
+    scenario_names: &[&str],
+    shard_counts: &[usize],
+    n_nodes: usize,
+    duration: f64,
+    seed: u64,
+    policy: &str,
+    path: impl AsRef<Path>,
+) -> Result<Vec<FleetReport>> {
+    let mut w = CsvWriter::create(
+        path.as_ref(),
+        &[
+            "scenario",
+            "shards",
+            "epoch",
+            "policy",
+            "emitted",
+            "completed",
+            "dropped",
+            "residual",
+            "cross_shard",
+            "cross_in_flight",
+            "throughput_rps",
+            "mean_latency",
+            "p95_latency",
+            "mean_accuracy",
+            "util_min",
+            "util_mean",
+            "util_max",
+            "shard_emitted_min",
+            "shard_emitted_max",
+            "shard_drop_rate_max",
+            "wall_secs",
+        ],
+    )?;
+    let mut reports = Vec::new();
+    for name in scenario_names {
+        let scenario = Scenario::at_nodes(name, n_nodes)?;
+        for &shards in shard_counts {
+            if shards > scenario.n_nodes {
+                continue;
+            }
+            let report = Fleet::serve(
+                heuristic_factory(policy),
+                &scenario,
+                duration,
+                seed,
+                shards,
+            )?;
+            anyhow::ensure!(
+                report.conserved(),
+                "{name} x {shards} shards leaked requests"
+            );
+            let (u_min, u_mean, u_max) =
+                utilization_spread(&report.shard_stats);
+            let em_min = report
+                .shard_stats
+                .iter()
+                .map(|s| s.emitted)
+                .min()
+                .unwrap_or(0);
+            let em_max = report
+                .shard_stats
+                .iter()
+                .map(|s| s.emitted)
+                .max()
+                .unwrap_or(0);
+            let drop_max = report
+                .shard_stats
+                .iter()
+                .map(|s| s.drop_rate)
+                .fold(0.0, f64::max);
+            w.row(&[
+                name.to_string(),
+                shards.to_string(),
+                format!("{:.6}", report.epoch),
+                report.policy.clone(),
+                report.emitted.to_string(),
+                report.completed.to_string(),
+                report.dropped.to_string(),
+                report.residual.to_string(),
+                report.cross_dispatches.to_string(),
+                report.cross_in_flight.to_string(),
+                format!("{:.3}", report.throughput_rps),
+                format!("{:.4}", report.mean_latency),
+                format!("{:.4}", report.p95_latency),
+                format!("{:.4}", report.mean_accuracy),
+                format!("{u_min:.4}"),
+                format!("{u_mean:.4}"),
+                format!("{u_max:.4}"),
+                em_min.to_string(),
+                em_max.to_string(),
+                format!("{drop_max:.4}"),
+                format!("{:.3}", report.wall_secs),
+            ])?;
+            reports.push(report);
+        }
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_writes_balance_columns() {
+        let dir = std::env::temp_dir().join("ev_fleet_sweep_test");
+        let path = dir.join("fleet_scaling.csv");
+        let reports = sweep_to_csv(
+            &["steady"],
+            &[1, 2, 16],
+            8,
+            4.0,
+            3,
+            "shortest_queue_min",
+            &path,
+        )
+        .unwrap();
+        // 16 shards > 8 nodes is skipped
+        assert_eq!(reports.len(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("util_mean"));
+        assert!(header.contains("cross_shard"));
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,243 @@
+//! Shard planning: partition a [`Scenario`] into contiguous node shards
+//! and fix the conservative epoch length.
+//!
+//! The plan is the fleet's analogue of `Scenario::validate`: it is the
+//! one place the sharding invariants live — contiguous ranges covering
+//! every node exactly once, a positive fixed cross-shard backhaul, and
+//! the causal-safety bound **Δ ≤ min cross-shard link delay** (smallest
+//! frame over the backhaul), which guarantees a dispatch produced during
+//! one epoch is always delivered at a virtual time past the epoch's end.
+
+use anyhow::{ensure, Result};
+
+use crate::scenario::Scenario;
+use crate::util::rng::splitmix64;
+
+/// Deterministic partition of a scenario into `shards` contiguous node
+/// ranges plus the epoch-barrier synchronization parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    /// The global scenario being partitioned.
+    pub scenario: Scenario,
+    pub shards: usize,
+    /// Per shard: global node range `[lo, hi)`, contiguous and covering
+    /// `0..scenario.n_nodes` in order.
+    pub ranges: Vec<(usize, usize)>,
+    /// Epoch barrier interval Δ in virtual seconds.
+    pub epoch: f64,
+    /// Fixed cross-shard backhaul bandwidth (Mbps), from
+    /// [`Scenario::cross_mbps`].
+    pub cross_mbps: f64,
+}
+
+impl ShardPlan {
+    /// Plan `shards` near-equal contiguous shards over `scenario` with
+    /// the default epoch `min(slot_secs, max_epoch)`.
+    pub fn new(scenario: &Scenario, shards: usize) -> Result<ShardPlan> {
+        scenario.validate();
+        ensure!(shards >= 1, "a fleet needs at least one shard");
+        ensure!(
+            shards <= scenario.n_nodes,
+            "cannot split {} nodes into {} shards",
+            scenario.n_nodes,
+            shards
+        );
+        let n = scenario.n_nodes;
+        let base = n / shards;
+        let rem = n % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut lo = 0;
+        for s in 0..shards {
+            let size = base + usize::from(s < rem);
+            ranges.push((lo, lo + size));
+            lo += size;
+        }
+        let mut plan = ShardPlan {
+            scenario: scenario.clone(),
+            shards,
+            ranges,
+            epoch: 0.0,
+            cross_mbps: scenario.cross_mbps,
+        };
+        plan.epoch = plan.max_epoch().min(scenario.slot_secs);
+        plan.validate();
+        Ok(plan)
+    }
+
+    /// Largest causally-safe epoch: the minimum cross-shard transfer
+    /// delay, i.e. the smallest frame size over the fixed backhaul. Any
+    /// dispatch decided at virtual time `t` is delivered no earlier than
+    /// `t + max_epoch()`, so barriers at most this far apart can never
+    /// deliver into a shard's past.
+    pub fn max_epoch(&self) -> f64 {
+        let min_mbits = self
+            .scenario
+            .profiles
+            .frame_mbits
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        min_mbits / self.cross_mbps
+    }
+
+    /// Override the epoch length (CLI `--epoch`). Errors when the bound
+    /// Δ ≤ min cross-shard link delay would be violated.
+    pub fn with_epoch(mut self, epoch: f64) -> Result<ShardPlan> {
+        ensure!(
+            epoch > 0.0 && epoch.is_finite(),
+            "epoch must be a positive duration, got {epoch}"
+        );
+        ensure!(
+            epoch <= self.max_epoch() + 1e-12,
+            "epoch {epoch}s violates the conservative bound: \
+             Δ ≤ min cross-shard link delay = {}s ({} Mbit over {} Mbps)",
+            self.max_epoch(),
+            self.scenario
+                .profiles
+                .frame_mbits
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min),
+            self.cross_mbps
+        );
+        self.epoch = epoch;
+        self.validate();
+        Ok(self)
+    }
+
+    /// Panic unless internally consistent — the plan-level counterpart of
+    /// [`Scenario::validate`], called by the fleet before every run.
+    pub fn validate(&self) {
+        self.scenario.validate();
+        assert_eq!(self.shards, self.ranges.len(), "one range per shard");
+        assert!(self.shards >= 1, "a fleet needs at least one shard");
+        let mut expect = 0;
+        for (s, &(lo, hi)) in self.ranges.iter().enumerate() {
+            assert_eq!(lo, expect, "shard {s} range must start at {expect}");
+            assert!(hi > lo, "shard {s} must hold at least one node");
+            expect = hi;
+        }
+        assert_eq!(
+            expect, self.scenario.n_nodes,
+            "shard ranges must cover every node exactly once"
+        );
+        assert!(
+            self.cross_mbps > 0.0 && self.cross_mbps.is_finite(),
+            "cross-shard bandwidth must be positive"
+        );
+        assert!(
+            self.epoch > 0.0 && self.epoch <= self.max_epoch() + 1e-12,
+            "epoch {} outside (0, {}] — the conservative Δ bound",
+            self.epoch,
+            self.max_epoch()
+        );
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.scenario.n_nodes
+    }
+
+    /// Nodes in shard `s`.
+    pub fn size(&self, s: usize) -> usize {
+        let (lo, hi) = self.ranges[s];
+        hi - lo
+    }
+
+    /// Which shard owns global node `g`.
+    pub fn shard_of(&self, g: usize) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(lo, hi)| g >= lo && g < hi)
+            .expect("global node outside every shard range")
+    }
+
+    /// The shard-local [`Scenario`] for shard `s`: the global regime with
+    /// per-node fields sliced to the shard's range. For a single-shard
+    /// plan this is the global scenario, unchanged — the keystone of the
+    /// `shards=1 == serve_scenario` bit-identity contract.
+    pub fn sub_scenario(&self, s: usize) -> Scenario {
+        if self.shards == 1 {
+            return self.scenario.clone();
+        }
+        let (lo, hi) = self.ranges[s];
+        let mut sub = self.scenario.clone();
+        sub.name =
+            format!("{}#shard{}of{}", self.scenario.name, s, self.shards);
+        sub.n_nodes = hi - lo;
+        sub.workload.means = self.scenario.workload.means[lo..hi].to_vec();
+        sub.gpu_speed = self.scenario.gpu_speed[lo..hi].to_vec();
+        sub.bandwidth.n_nodes = hi - lo;
+        sub.validate();
+        sub
+    }
+
+    /// Per-shard base seed. A single-shard plan uses the caller's seed
+    /// verbatim (bit-identity with `serve_scenario`); multi-shard plans
+    /// decorrelate shards with the shared [`splitmix64`] mix.
+    pub fn shard_seed(&self, seed: u64, s: usize) -> u64 {
+        if self.shards == 1 {
+            return seed;
+        }
+        splitmix64(
+            seed ^ (s as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_contiguously() {
+        let sc = Scenario::by_name("paper").unwrap().with_nodes(10);
+        let plan = ShardPlan::new(&sc, 3).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(plan.shard_of(0), 0);
+        assert_eq!(plan.shard_of(6), 1);
+        assert_eq!(plan.shard_of(9), 2);
+        for s in 0..3 {
+            let sub = plan.sub_scenario(s);
+            assert_eq!(sub.n_nodes, plan.size(s));
+            assert_eq!(sub.workload.means.len(), plan.size(s));
+        }
+    }
+
+    #[test]
+    fn epoch_respects_conservative_bound() {
+        let sc = Scenario::by_name("paper").unwrap();
+        let plan = ShardPlan::new(&sc, 2).unwrap();
+        // smallest frame 0.32 Mbit over the 1 Mbps floor = 0.32 s; the
+        // default epoch also caps at slot_secs (0.2 s)
+        assert!((plan.max_epoch() - 0.32).abs() < 1e-12);
+        assert!((plan.epoch - 0.2).abs() < 1e-12);
+        assert!(plan.clone().with_epoch(0.32).is_ok());
+        assert!(plan.clone().with_epoch(0.5).is_err());
+        assert!(plan.with_epoch(0.0).is_err());
+    }
+
+    #[test]
+    fn single_shard_plan_is_the_scenario_itself() {
+        let sc = Scenario::by_name("hotspot").unwrap();
+        let plan = ShardPlan::new(&sc, 1).unwrap();
+        assert_eq!(plan.sub_scenario(0), sc);
+        assert_eq!(plan.shard_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn multi_shard_seeds_decorrelate() {
+        let sc = Scenario::by_name("paper").unwrap();
+        let plan = ShardPlan::new(&sc, 2).unwrap();
+        assert_ne!(plan.shard_seed(7, 0), plan.shard_seed(7, 1));
+        assert_ne!(plan.shard_seed(7, 0), 7);
+        // deterministic
+        assert_eq!(plan.shard_seed(7, 1), plan.shard_seed(7, 1));
+    }
+
+    #[test]
+    fn too_many_shards_errors() {
+        let sc = Scenario::by_name("paper").unwrap();
+        assert!(ShardPlan::new(&sc, 5).is_err());
+        assert!(ShardPlan::new(&sc, 0).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Merged, conservation-checked end-of-run report of a fleet serve.
+
+use crate::serving::engine::ServingReport;
+use crate::telemetry::fleet::{utilization_spread, ShardStats};
+use crate::util::stats::{mean, percentile};
+
+/// Aggregate of every shard's [`ServingReport`] plus the cross-shard
+/// accounting. Global conservation:
+/// `emitted == completed + dropped + residual`, where `residual` counts
+/// in-shard in-flight requests **and** cross-shard dispatches still in
+/// the fleet mailbox at the horizon.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub scenario: String,
+    pub policy: String,
+    pub shards: usize,
+    /// Epoch barrier interval Δ the run used.
+    pub epoch: f64,
+    /// Requests emitted by cameras across the whole fleet.
+    pub emitted: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    /// In flight at the horizon: queued / batching / on-link inside
+    /// shards plus `cross_in_flight`.
+    pub residual: usize,
+    /// Requests that crossed a shard boundary (sum of shard exports).
+    pub cross_dispatches: usize,
+    /// Cross-shard dispatches still undelivered at the horizon.
+    pub cross_in_flight: usize,
+    pub virtual_secs: f64,
+    /// Wall-clock of the whole fleet run (the bench's speedup metric).
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    /// Completed-request mean accuracy across the fleet.
+    pub mean_accuracy: f64,
+    pub per_shard: Vec<ServingReport>,
+    pub shard_stats: Vec<ShardStats>,
+}
+
+impl FleetReport {
+    /// Assemble from per-shard outcomes. `latencies` holds every shard's
+    /// completed-request latencies (order irrelevant; percentiles sort).
+    pub(crate) fn assemble(
+        scenario: String,
+        policy: String,
+        epoch: f64,
+        virtual_secs: f64,
+        wall_secs: f64,
+        cross_in_flight: usize,
+        per_shard: Vec<ServingReport>,
+        shard_stats: Vec<ShardStats>,
+        latencies: Vec<f64>,
+    ) -> FleetReport {
+        let emitted: usize = per_shard.iter().map(|r| r.emitted).sum();
+        let completed: usize = per_shard.iter().map(|r| r.completed).sum();
+        let dropped: usize = per_shard.iter().map(|r| r.dropped).sum();
+        let shard_residual: usize = per_shard.iter().map(|r| r.residual).sum();
+        let cross_dispatches: usize =
+            per_shard.iter().map(|r| r.exported).sum();
+        let acc_weighted: f64 = per_shard
+            .iter()
+            .map(|r| r.mean_accuracy * r.completed as f64)
+            .sum();
+        FleetReport {
+            scenario,
+            policy,
+            shards: per_shard.len(),
+            epoch,
+            emitted,
+            completed,
+            dropped,
+            residual: shard_residual + cross_in_flight,
+            cross_dispatches,
+            cross_in_flight,
+            virtual_secs,
+            wall_secs,
+            throughput_rps: completed as f64 / virtual_secs,
+            mean_latency: mean(&latencies),
+            p50_latency: percentile(&latencies, 50.0),
+            p95_latency: percentile(&latencies, 95.0),
+            p99_latency: percentile(&latencies, 99.0),
+            mean_accuracy: if completed > 0 {
+                acc_weighted / completed as f64
+            } else {
+                0.0
+            },
+            per_shard,
+            shard_stats,
+        }
+    }
+
+    /// Global request conservation, including cross-shard traffic: every
+    /// camera-emitted request is completed, dropped, or in flight
+    /// somewhere (in a shard or on the cross-shard backhaul) — and every
+    /// shard's own boundary-aware accounting balances too.
+    pub fn conserved(&self) -> bool {
+        self.emitted == self.completed + self.dropped + self.residual
+            && self.per_shard.iter().all(|r| r.conserved())
+    }
+
+    /// `(min, mean, max)` GPU utilization across shards.
+    pub fn utilization(&self) -> (f64, f64, f64) {
+        utilization_spread(&self.shard_stats)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "fleet report (scenario: {}, policy: {}, {} shard(s), epoch {:.3}s):",
+            self.scenario, self.policy, self.shards, self.epoch
+        );
+        println!("  emitted         {}", self.emitted);
+        println!("  completed       {}", self.completed);
+        println!(
+            "  dropped         {} ({:.1}%)",
+            self.dropped,
+            100.0 * self.dropped as f64
+                / (self.completed + self.dropped).max(1) as f64
+        );
+        println!(
+            "  residual        {} ({} on the cross-shard backhaul)",
+            self.residual, self.cross_in_flight
+        );
+        println!("  cross-shard     {} dispatches", self.cross_dispatches);
+        println!(
+            "  throughput      {:.1} req/s over {:.0}s virtual ({:.2}s wall)",
+            self.throughput_rps, self.virtual_secs, self.wall_secs
+        );
+        println!(
+            "  latency         mean {:.0} ms, p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms",
+            self.mean_latency * 1e3,
+            self.p50_latency * 1e3,
+            self.p95_latency * 1e3,
+            self.p99_latency * 1e3
+        );
+        println!("  mean accuracy   {:.4}", self.mean_accuracy);
+        let (lo, mid, hi) = self.utilization();
+        println!(
+            "  shard util      min {:.1}% / mean {:.1}% / max {:.1}%",
+            100.0 * lo,
+            100.0 * mid,
+            100.0 * hi
+        );
+        for s in &self.shard_stats {
+            println!(
+                "    shard {:<3} {} nodes  emitted {:>6}  in/out {:>5}/{:<5} util {:>5.1}%  drop {:>5.1}%",
+                s.shard,
+                s.nodes,
+                s.emitted,
+                s.imported,
+                s.exported,
+                100.0 * s.utilization,
+                100.0 * s.drop_rate
+            );
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! The conservative-time parallel fleet engine.
+//!
+//! One [`EdgeCluster`] per shard, each on its own `std::thread`, advanced
+//! in lock-step epochs over bounded (`sync_channel`) message channels:
+//!
+//! 1. the coordinator sends every shard `Step { until = t + Δ }` with the
+//!    dispatches other shards produced last epoch and a fresh
+//!    [`RemoteSnapshot`];
+//! 2. each shard injects the imports, runs `step_until(until)` on the
+//!    invariant-checked serving core, and returns its outbox + a
+//!    [`ShardSummary`];
+//! 3. the coordinator merges outboxes **in (shard id, seq) order** into
+//!    per-target mailboxes for the next epoch and folds the summaries
+//!    into the global snapshot.
+//!
+//! Because Δ never exceeds the minimum cross-shard transfer delay
+//! ([`ShardPlan::max_epoch`]), every dispatch produced during an epoch
+//! has a delivery time past the epoch's end — next-barrier delivery can
+//! never rewind a shard's clock, so the parallel run is causally exact
+//! and, with the deterministic merge order, bit-reproducible regardless
+//! of thread interleaving.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::boundary::{
+    BoundaryDispatch, Exterior, RemoteSnapshot, ShardSummary,
+};
+use crate::coordinator::cluster::{EdgeCluster, ProfileCompute};
+use crate::policy::Policy;
+use crate::scenario::Scenario;
+use crate::serving::engine::ServingReport;
+use crate::telemetry::fleet::ShardStats;
+
+use super::plan::ShardPlan;
+use super::report::FleetReport;
+
+/// Builds one policy per shard — the fleet's hook into the unified
+/// control plane. `n_nodes` is the width of the policy's view: the
+/// fleet's **global** node count (a shard's policy sees the whole fleet,
+/// remote nodes through epoch-stale snapshots). Implemented for any
+/// `Fn(shard, n_nodes, seed) -> Result<Box<dyn Policy>> + Sync` closure.
+pub trait PolicyFactory: Sync {
+    fn build(
+        &self,
+        shard: usize,
+        n_nodes: usize,
+        seed: u64,
+    ) -> Result<Box<dyn Policy>>;
+}
+
+impl<F> PolicyFactory for F
+where
+    F: Fn(usize, usize, u64) -> Result<Box<dyn Policy>> + Sync,
+{
+    fn build(
+        &self,
+        shard: usize,
+        n_nodes: usize,
+        seed: u64,
+    ) -> Result<Box<dyn Policy>> {
+        self(shard, n_nodes, seed)
+    }
+}
+
+/// A [`PolicyFactory`] over the one heuristic-baseline factory
+/// ([`crate::baselines::by_name`]) — the dep-free way to drive a fleet.
+pub fn heuristic_factory(name: impl Into<String>) -> impl PolicyFactory {
+    let name = name.into();
+    move |_shard: usize, n_nodes: usize, seed: u64| {
+        crate::baselines::by_name(&name, n_nodes, seed)
+    }
+}
+
+/// Coordinator -> shard worker messages. The `summary` / `exports`
+/// buffers are recycled: the coordinator ships them pre-sized, the worker
+/// fills them and sends them back in [`WorkerMsg::Step`], so the
+/// per-epoch barrier exchange allocates nothing once the export buffer
+/// reaches its high-water mark (the snapshot broadcast is the one
+/// deliberate per-epoch clone — it fans out to every shard).
+enum ToWorker {
+    Step {
+        until: f64,
+        imports: Vec<BoundaryDispatch>,
+        /// `None` for single-shard runs (no exterior attached).
+        snapshot: Option<RemoteSnapshot>,
+        summary: ShardSummary,
+        exports: Vec<BoundaryDispatch>,
+    },
+    Finish {
+        horizon: f64,
+    },
+}
+
+/// Shard worker -> coordinator messages.
+enum WorkerMsg {
+    Step { exports: Vec<BoundaryDispatch>, summary: ShardSummary },
+    Done(Box<ShardOutcome>),
+}
+
+struct ShardOutcome {
+    report: ServingReport,
+    stats: ShardStats,
+    /// Completed-request latencies (for true fleet-wide percentiles).
+    latencies: Vec<f64>,
+    policy_name: String,
+}
+
+/// The sharded fleet serving runtime.
+pub struct Fleet {
+    pub plan: ShardPlan,
+}
+
+impl Fleet {
+    pub fn new(scenario: &Scenario, shards: usize) -> Result<Fleet> {
+        Ok(Fleet { plan: ShardPlan::new(scenario, shards)? })
+    }
+
+    /// Override the epoch length (validated against the conservative
+    /// Δ ≤ min cross-shard link delay bound).
+    pub fn with_epoch(mut self, epoch: f64) -> Result<Fleet> {
+        self.plan = self.plan.with_epoch(epoch)?;
+        Ok(self)
+    }
+
+    /// One-call fleet serve: partition `scenario` into `shards`, build a
+    /// policy per shard through `factory`, run `duration` virtual seconds
+    /// and return the merged, conservation-checked report. `shards == 1`
+    /// is bit-identical to `serving::serve_scenario` on the same
+    /// `(policy, scenario, duration, seed)`.
+    pub fn serve(
+        factory: impl PolicyFactory,
+        scenario: &Scenario,
+        duration: f64,
+        seed: u64,
+        shards: usize,
+    ) -> Result<FleetReport> {
+        Fleet::new(scenario, shards)?.run(&factory, duration, seed)
+    }
+
+    /// Run the fleet over this plan.
+    pub fn run(
+        &self,
+        factory: &dyn PolicyFactory,
+        duration: f64,
+        seed: u64,
+    ) -> Result<FleetReport> {
+        let plan = &self.plan;
+        plan.validate();
+        anyhow::ensure!(
+            duration > 0.0 && duration.is_finite(),
+            "fleet serve needs a positive duration"
+        );
+        // guards the epoch loop against effectively-zero increments
+        anyhow::ensure!(
+            plan.epoch > duration * 1e-9,
+            "epoch {} is vanishingly small against duration {duration}",
+            plan.epoch
+        );
+        let s = plan.shards;
+        let n_global = plan.n_nodes();
+        let hist = plan.scenario.hist_len;
+        let t0 = Instant::now();
+
+        std::thread::scope(|scope| -> Result<FleetReport> {
+            let mut to_workers: Vec<SyncSender<ToWorker>> =
+                Vec::with_capacity(s);
+            let mut from_workers: Vec<Receiver<Result<WorkerMsg>>> =
+                Vec::with_capacity(s);
+            for k in 0..s {
+                let (to_tx, to_rx) = sync_channel::<ToWorker>(1);
+                let (from_tx, from_rx) = sync_channel::<Result<WorkerMsg>>(1);
+                to_workers.push(to_tx);
+                from_workers.push(from_rx);
+                let sub = plan.sub_scenario(k);
+                let wseed = plan.shard_seed(seed, k);
+                let exterior = (s > 1).then(|| {
+                    Exterior::new(
+                        n_global,
+                        plan.ranges[k].0,
+                        plan.cross_mbps,
+                        plan.scenario.gpu_speed.clone(),
+                        hist,
+                    )
+                });
+                scope.spawn(move || {
+                    let r = shard_worker(
+                        &to_rx, &from_tx, sub, wseed, factory, k, exterior,
+                    );
+                    if let Err(e) = r {
+                        // a failed send means the coordinator is gone —
+                        // nothing left to report to
+                        let _ = from_tx.send(Err(e));
+                    }
+                });
+            }
+
+            // ---- epoch loop ---------------------------------------------
+            let mut snapshot = RemoteSnapshot::zeros(n_global, hist);
+            let mut mailbox: Vec<Vec<BoundaryDispatch>> =
+                (0..s).map(|_| Vec::new()).collect();
+            // recycled barrier buffers (round-trip through the messages)
+            let mut summaries: Vec<ShardSummary> = (0..s)
+                .map(|k| ShardSummary::new(plan.size(k), hist))
+                .collect();
+            let mut export_bufs: Vec<Vec<BoundaryDispatch>> =
+                (0..s).map(|_| Vec::new()).collect();
+            let mut t = 0.0;
+            while t < duration {
+                let until = (t + plan.epoch).min(duration);
+                for (k, tx) in to_workers.iter().enumerate() {
+                    tx.send(ToWorker::Step {
+                        until,
+                        imports: std::mem::take(&mut mailbox[k]),
+                        snapshot: (s > 1).then(|| snapshot.clone()),
+                        summary: std::mem::take(&mut summaries[k]),
+                        exports: std::mem::take(&mut export_bufs[k]),
+                    })
+                    .map_err(|_| worker_gone(&from_workers[k], k))?;
+                }
+                for (k, rx) in from_workers.iter().enumerate() {
+                    let msg = rx
+                        .recv()
+                        .map_err(|_| anyhow!("shard {k} worker died"))??;
+                    let WorkerMsg::Step { mut exports, summary } = msg else {
+                        bail!("shard {k}: out-of-phase worker message");
+                    };
+                    if s > 1 {
+                        snapshot.absorb(plan.ranges[k].0, &summary);
+                    }
+                    summaries[k] = summary;
+                    // exports arrive seq-ascending per shard; visiting
+                    // shards in id order makes the merge (shard id, seq)
+                    // deterministic regardless of thread interleaving
+                    for d in exports.drain(..) {
+                        mailbox[plan.shard_of(d.target)].push(d);
+                    }
+                    export_bufs[k] = exports;
+                }
+                t = until;
+            }
+
+            // dispatches produced in the final epoch are still on the
+            // backhaul at the horizon — the cross-shard half of residual
+            let cross_in_flight: usize =
+                mailbox.iter().map(|m| m.len()).sum();
+
+            // ---- finish + merge -----------------------------------------
+            for (k, tx) in to_workers.iter().enumerate() {
+                tx.send(ToWorker::Finish { horizon: duration })
+                    .map_err(|_| worker_gone(&from_workers[k], k))?;
+            }
+            let mut per_shard = Vec::with_capacity(s);
+            let mut shard_stats = Vec::with_capacity(s);
+            let mut latencies = Vec::new();
+            let mut policy_name = String::new();
+            for (k, rx) in from_workers.iter().enumerate() {
+                let msg = rx
+                    .recv()
+                    .map_err(|_| anyhow!("shard {k} worker died"))??;
+                let WorkerMsg::Done(out) = msg else {
+                    bail!("shard {k}: out-of-phase worker message");
+                };
+                let outcome = *out;
+                if k == 0 {
+                    policy_name = outcome.policy_name;
+                }
+                per_shard.push(outcome.report);
+                shard_stats.push(outcome.stats);
+                latencies.extend(outcome.latencies);
+            }
+            let report = FleetReport::assemble(
+                plan.scenario.name.clone(),
+                policy_name,
+                plan.epoch,
+                duration,
+                t0.elapsed().as_secs_f64(),
+                cross_in_flight,
+                per_shard,
+                shard_stats,
+                latencies,
+            );
+            anyhow::ensure!(
+                report.conserved(),
+                "fleet leaked requests: global emitted {} vs {} + {} + {}; \
+                 per-shard boundary conservation: {:?}",
+                report.emitted,
+                report.completed,
+                report.dropped,
+                report.residual,
+                report
+                    .per_shard
+                    .iter()
+                    .map(|r| r.conserved())
+                    .collect::<Vec<_>>()
+            );
+            Ok(report)
+        })
+    }
+}
+
+/// A worker's inbound channel closed: surface the error it parked on its
+/// outbound channel if there is one, else a generic hang-up.
+fn worker_gone(
+    from: &Receiver<Result<WorkerMsg>>,
+    shard: usize,
+) -> anyhow::Error {
+    match from.try_recv() {
+        Ok(Err(e)) => e.context(format!("shard {shard} worker failed")),
+        _ => anyhow!("shard {shard} worker hung up"),
+    }
+}
+
+/// One shard's worker loop: owns the shard cluster, its policy and its
+/// compute hook; driven entirely by coordinator messages.
+fn shard_worker(
+    rx: &Receiver<ToWorker>,
+    tx: &SyncSender<Result<WorkerMsg>>,
+    sub: Scenario,
+    wseed: u64,
+    factory: &dyn PolicyFactory,
+    shard: usize,
+    exterior: Option<Exterior>,
+) -> Result<()> {
+    let mut cluster = EdgeCluster::new(&sub, wseed);
+    let n_view = match exterior {
+        Some(ext) => {
+            let n = ext.n_global;
+            cluster.attach_exterior(ext);
+            n
+        }
+        None => sub.n_nodes,
+    };
+    let mut policy = factory.build(shard, n_view, wseed)?;
+    policy.reset(wseed);
+    let mut compute = ProfileCompute::new(sub.profiles.clone());
+    loop {
+        // a closed channel means the coordinator bailed; just exit
+        let Ok(msg) = rx.recv() else { return Ok(()) };
+        match msg {
+            ToWorker::Step {
+                until,
+                imports,
+                snapshot,
+                mut summary,
+                mut exports,
+            } => {
+                if let (Some(snap), Some(ext)) =
+                    (snapshot, cluster.exterior_mut())
+                {
+                    ext.snapshot = snap;
+                }
+                for d in &imports {
+                    cluster.inject_boundary(d);
+                }
+                cluster.step_until(policy.as_mut(), &mut compute, until)?;
+                // barrier bookkeeping only exists for sharded runs; a
+                // 1-shard fleet (the bench's speedup denominator) skips
+                // it so its per-epoch cost is pure step_until
+                if cluster.exterior().is_some() {
+                    cluster.drain_outbox_into(&mut exports, until);
+                    cluster.summary_into(&mut summary);
+                }
+                if tx.send(Ok(WorkerMsg::Step { exports, summary })).is_err()
+                {
+                    return Ok(());
+                }
+            }
+            ToWorker::Finish { horizon } => {
+                cluster.finish(horizon);
+                let report = ServingReport::from_cluster(
+                    &cluster, &sub.name, horizon, 0.0, 0.0,
+                );
+                let latencies: Vec<f64> = cluster
+                    .served
+                    .iter()
+                    .filter(|r| !r.dropped)
+                    .map(|r| r.latency())
+                    .collect();
+                let stats =
+                    ShardStats::from_cluster(shard, &cluster, horizon);
+                let _ = tx.send(Ok(WorkerMsg::Done(Box::new(ShardOutcome {
+                    report,
+                    stats,
+                    latencies,
+                    policy_name: policy.name().to_string(),
+                }))));
+                return Ok(());
+            }
+        }
+    }
+}

@@ -22,6 +22,11 @@
 //! `flash-crowd`, `link-degraded`, `hetero-nodes`, `hotspot`)
 //! parameterizes every run — see ROADMAP.md §Unified control plane.
 //!
+//! Scale-out: the [`fleet`] module shards a scenario across
+//! `std::thread`-parallel serving clusters synchronized by conservative
+//! epoch barriers (`Fleet::serve`; `shards = 1` is bit-identical to
+//! `serving::serve_scenario`) — see ROADMAP.md §Fleet runtime.
+//!
 //! The PJRT execution stack (runtime, trained policy, trainer, serving,
 //! experiments) requires the `pjrt` cargo feature, which pulls in the
 //! `xla` crate. The simulator, coordinator, baselines and bench substrate
@@ -47,6 +52,7 @@ pub mod coordinator;
 pub mod env;
 #[cfg(feature = "pjrt")]
 pub mod experiments;
+pub mod fleet;
 pub mod policy;
 pub mod rl;
 #[cfg(feature = "pjrt")]

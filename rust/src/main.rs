@@ -6,7 +6,8 @@
 //!   evaluate --params FILE       evaluate a trained policy
 //!   baselines [--omega W]        evaluate the heuristic baselines
 //!   serve [--duration S]         online serving with real PJRT inference
-//!   experiment fig3|fig4|fig5|fig6|fig7|fig8|headline|all
+//!                                (--shards S > 1: sharded fleet runtime)
+//!   experiment fig3|fig4|fig5|fig6|fig7|fig8|serving|fleet|headline|all
 //!
 //! Common flags: --artifacts DIR --results DIR --episodes N --seed S
 //! --variant full|noattn|local --ippo --local-only --config FILE
@@ -29,8 +30,10 @@ const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios
   repro evaluate --params FILE [--omega 5] [--eval-episodes 30] [--greedy]
   repro baselines [--omega 5]
   repro serve [--duration 30] [--policy FILE] [--scenario NAME] [--list-scenarios]
+              [--shards S] [--epoch SECS] [--baseline NAME]   (shards > 1: sharded fleet runtime)
   repro scenarios
-  repro experiment <fig3|fig45|fig6|fig7|fig8|serving|headline|all> [--episodes N]";
+  repro experiment <fig3|fig45|fig6|fig7|fig8|serving|fleet|headline|all> [--episodes N]
+    fleet flags: [--shards 1,2,4] [--nodes 16] [--duration 20]";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -187,6 +190,36 @@ fn baselines_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, _args: &Args) -
     Ok(())
 }
 
+/// `serve --shards S` (S > 1): the sharded fleet runtime. Dep-free
+/// engine + heuristic policies (`--baseline`, one instance per shard via
+/// `baselines::by_name`); the trained actor is artifact-bound to a fixed
+/// node count and stays on the single-cluster path.
+fn serve_fleet(scenario: edgevision::scenario::Scenario, cfg: &Config, args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.get("policy").is_none(),
+        "--policy drives the single-cluster path; fleet serving (--shards > 1) uses --baseline NAME"
+    );
+    let shards = args.usize_or("shards", 1)?;
+    let baseline = args.str_or("baseline", "shortest_queue_min");
+    let duration = args.f64_or("duration", 30.0)?;
+    let mut fleet = edgevision::fleet::Fleet::new(&scenario, shards)?;
+    if let Some(e) = args.get("epoch") {
+        let epoch: f64 = e.parse().context("--epoch expects seconds")?;
+        fleet = fleet.with_epoch(epoch)?;
+    }
+    println!(
+        "fleet-serving {duration} virtual seconds on {} nodes ({} shards, epoch {:.3}s, policy: {baseline})...",
+        scenario.n_nodes, shards, fleet.plan.epoch
+    );
+    let report = fleet.run(
+        &edgevision::fleet::heuristic_factory(baseline),
+        duration,
+        cfg.rl.seed,
+    )?;
+    report.print();
+    Ok(())
+}
+
 fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
     // --scenario picks a registry entry; the default is the paper setting
     // under the active EnvConfig overrides. The scalar env flags
@@ -205,6 +238,9 @@ fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Res
         }
         None => edgevision::scenario::Scenario::from_env(&cfg.env),
     };
+    if args.usize_or("shards", 1)? > 1 {
+        return serve_fleet(scenario, &cfg, args);
+    }
     let opts = ServingOptions {
         scenario,
         duration_virtual_secs: args.f64_or("duration", 30.0)?,
@@ -236,7 +272,7 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|serving|headline|all)")?;
+        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|serving|fleet|headline|all)")?;
     let ctx = ExpContext::new(rt, manifest, cfg);
     match which {
         "fig3" => ctx.fig3(),
@@ -266,6 +302,17 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
                 );
             }
             Ok(())
+        }
+        "fleet" => {
+            // shards x scenarios on the sharded fleet runtime -> one
+            // balance-annotated row per combination
+            let shards = args.usize_list_or("shards", &[1, 2, 4])?;
+            ctx.fleet(
+                edgevision::scenario::Scenario::names(),
+                &shards,
+                args.usize_or("nodes", 16)?,
+                args.f64_or("duration", 20.0)?,
+            )
         }
         "headline" => ctx.headline(),
         "all" => ctx.all(),

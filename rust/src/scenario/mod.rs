@@ -70,6 +70,13 @@ pub struct Scenario {
     /// which models FIFO single-frame service).
     pub max_batch: usize,
     pub batch_wait: f64,
+    /// Cross-shard backhaul bandwidth (Mbps) when the scenario is served
+    /// by the sharded fleet runtime (`crate::fleet`). Defaults to the
+    /// regime's link floor (`bandwidth.min_mbps`) — inter-site backhaul
+    /// is modeled at the conservative end of the intra-site envelope —
+    /// and bounds the fleet's epoch length: Δ ≤ min frame size /
+    /// `cross_mbps`. Ignored by unsharded runs.
+    pub cross_mbps: f64,
 }
 
 impl Default for Scenario {
@@ -111,6 +118,7 @@ impl Scenario {
             gpu_speed: vec![1.0; n],
             max_batch: 8,
             batch_wait: 0.004,
+            cross_mbps: env.bw_min_mbps,
         }
     }
 
@@ -174,6 +182,8 @@ impl Scenario {
                 let mut s = base("link-degraded");
                 s.bandwidth.min_mbps = 0.5;
                 s.bandwidth.max_mbps = 4.0;
+                // cross-shard backhaul tracks the degraded link floor
+                s.cross_mbps = s.bandwidth.min_mbps;
                 // bw_norm stays at the paper value: normalizers are the
                 // trained network's input contract, not part of the
                 // regime — a 4 Mbps link must read as 0.1, not 1.0
@@ -203,7 +213,10 @@ impl Scenario {
     /// Start a builder from a registered scenario. Unknown names error,
     /// keeping the registry authoritative.
     pub fn builder(name: &str) -> Result<ScenarioBuilder> {
-        Ok(ScenarioBuilder { s: Scenario::by_name(name)? })
+        Ok(ScenarioBuilder {
+            s: Scenario::by_name(name)?,
+            cross_override: None,
+        })
     }
 
     /// Ad-hoc builder seeded from the paper defaults with a free-form
@@ -211,7 +224,7 @@ impl Scenario {
     pub fn custom(label: &str) -> ScenarioBuilder {
         let mut s = Scenario::from_env(&EnvConfig::default());
         s.name = label.to_string();
-        ScenarioBuilder { s }
+        ScenarioBuilder { s, cross_override: None }
     }
 
     /// Observation width per node under this scenario.
@@ -272,6 +285,11 @@ impl Scenario {
             "scenario {}: bandwidth matrix must cover every node",
             self.name
         );
+        assert!(
+            self.cross_mbps > 0.0 && self.cross_mbps.is_finite(),
+            "scenario {}: cross-shard bandwidth must be positive",
+            self.name
+        );
     }
 }
 
@@ -309,6 +327,10 @@ fn heterogeneous_speeds(n: usize) -> Vec<f64> {
 #[derive(Debug, Clone)]
 pub struct ScenarioBuilder {
     s: Scenario,
+    /// Explicit cross-shard backhaul override, resolved at
+    /// [`ScenarioBuilder::build`] so setter order cannot clobber it
+    /// (`bandwidth_mbps` re-derives the default floor).
+    cross_override: Option<f64>,
 }
 
 impl ScenarioBuilder {
@@ -346,10 +368,23 @@ impl ScenarioBuilder {
 
     /// Change the link envelope. Deliberately does NOT touch `bw_norm`:
     /// observation normalizers are the trained network's input contract
-    /// (set `s.bw_norm` directly when retraining at a new scale).
+    /// (set `s.bw_norm` directly when retraining at a new scale). The
+    /// cross-shard backhaul floor follows the new minimum unless an
+    /// explicit [`ScenarioBuilder::cross_shard_mbps`] override exists —
+    /// the override wins regardless of setter order.
     pub fn bandwidth_mbps(mut self, min: f64, max: f64) -> Self {
         self.s.bandwidth.min_mbps = min;
         self.s.bandwidth.max_mbps = max;
+        self.s.cross_mbps = min;
+        self
+    }
+
+    /// Cross-shard backhaul bandwidth for fleet runs (defaults to the
+    /// link-envelope floor). Applied at [`ScenarioBuilder::build`], so it
+    /// survives a later `bandwidth_mbps` call.
+    pub fn cross_shard_mbps(mut self, mbps: f64) -> Self {
+        assert!(mbps > 0.0, "cross-shard bandwidth must be positive");
+        self.cross_override = Some(mbps);
         self
     }
 
@@ -374,7 +409,10 @@ impl ScenarioBuilder {
         self
     }
 
-    pub fn build(self) -> Scenario {
+    pub fn build(mut self) -> Scenario {
+        if let Some(cross) = self.cross_override {
+            self.s.cross_mbps = cross;
+        }
         self.s.validate();
         self.s
     }
@@ -426,6 +464,20 @@ mod tests {
         assert_eq!(s.workload.means, vec![0.0, 0.0]);
         assert_eq!(s.drop_threshold, 0.3);
         assert_eq!(s.max_batch, 2);
+    }
+
+    #[test]
+    fn cross_shard_override_survives_setter_order() {
+        // explicit override wins even when bandwidth_mbps comes later
+        let s = Scenario::custom("bw-order")
+            .cross_shard_mbps(10.0)
+            .bandwidth_mbps(0.5, 4.0)
+            .build();
+        assert_eq!(s.cross_mbps, 10.0);
+        assert_eq!(s.bandwidth.min_mbps, 0.5);
+        // without an override the backhaul tracks the envelope floor
+        let s = Scenario::custom("bw-follow").bandwidth_mbps(0.5, 4.0).build();
+        assert_eq!(s.cross_mbps, 0.5);
     }
 
     #[test]

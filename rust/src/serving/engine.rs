@@ -60,13 +60,20 @@ impl ServingOptions {
 }
 
 /// End-of-run report. Request accounting is exhaustive:
-/// `emitted == completed + dropped + residual`.
+/// `emitted + imported == completed + dropped + residual + exported`
+/// (the boundary terms are zero outside the sharded fleet runtime, where
+/// the per-shard reports carry cross-shard traffic).
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     /// Scenario the run was parameterized by.
     pub scenario: String,
     /// Requests emitted into the cluster over the horizon.
     pub emitted: usize,
+    /// Requests that entered over a cross-shard boundary (fleet shards
+    /// only; 0 for unsharded runs).
+    pub imported: usize,
+    /// Requests that left over a cross-shard boundary (fleet shards only).
+    pub exported: usize,
     /// Requests resolved (completed or dropped) by end of run.
     pub total: usize,
     pub completed: usize,
@@ -123,6 +130,8 @@ impl ServingReport {
         ServingReport {
             scenario: scenario.to_string(),
             emitted: cluster.emitted as usize,
+            imported: cluster.imported as usize,
+            exported: cluster.exported as usize,
             total,
             completed: completed.len(),
             dropped,
@@ -152,9 +161,14 @@ impl ServingReport {
         }
     }
 
-    /// Request conservation: every emitted request is accounted for.
+    /// Request conservation: every request that entered (emitted locally
+    /// or imported over a shard boundary) is accounted for (served,
+    /// dropped, still in flight, or exported to another shard). For
+    /// unsharded runs the boundary terms are zero and this reduces to
+    /// `emitted == completed + dropped + residual`.
     pub fn conserved(&self) -> bool {
-        self.emitted == self.completed + self.dropped + self.residual
+        self.emitted + self.imported
+            == self.completed + self.dropped + self.residual + self.exported
     }
 
     pub fn print(&self) {
@@ -167,6 +181,12 @@ impl ServingReport {
             100.0 * self.dropped as f64 / self.total.max(1) as f64
         );
         println!("  residual        {} (in flight at horizon)", self.residual);
+        if self.imported + self.exported > 0 {
+            println!(
+                "  cross-shard     {} in / {} out",
+                self.imported, self.exported
+            );
+        }
         println!("  dispatched      {}", self.dispatched);
         println!(
             "  gpu batches     {} (mean size {:.2}, max {})",

@@ -1,0 +1,109 @@
+//! Per-shard telemetry for the fleet runtime: utilization / drop-rate
+//! summaries aggregated into
+//! [`FleetReport`](crate::fleet::FleetReport), exposing the paper's
+//! workload-imbalance story at cluster scale (`repro experiment fleet`
+//! writes these as per-shard balance columns in
+//! `results/fleet_scaling.csv`).
+
+use crate::coordinator::EdgeCluster;
+
+/// One shard's end-of-run balance summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Nodes in the shard.
+    pub nodes: usize,
+    /// Requests that arrived at the shard's own cameras.
+    pub emitted: usize,
+    /// Requests that entered / left over the cross-shard boundary.
+    pub imported: usize,
+    pub exported: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub residual: usize,
+    /// Mean GPU busy fraction across the shard's nodes over the horizon.
+    pub utilization: f64,
+    /// `dropped / (completed + dropped)` over resolved requests.
+    pub drop_rate: f64,
+}
+
+impl ShardStats {
+    /// Summarize a finished shard cluster over a `horizon`-second run.
+    pub fn from_cluster(
+        shard: usize,
+        cluster: &EdgeCluster,
+        horizon: f64,
+    ) -> Self {
+        let completed = cluster.served.iter().filter(|s| !s.dropped).count();
+        let dropped = cluster.served.len() - completed;
+        let busy: f64 = cluster.gpu_busy_secs().iter().sum();
+        let resolved = completed + dropped;
+        ShardStats {
+            shard,
+            nodes: cluster.n_nodes,
+            emitted: cluster.emitted as usize,
+            imported: cluster.imported as usize,
+            exported: cluster.exported as usize,
+            completed,
+            dropped,
+            residual: cluster.residual as usize,
+            utilization: if horizon > 0.0 {
+                busy / (cluster.n_nodes as f64 * horizon)
+            } else {
+                0.0
+            },
+            drop_rate: if resolved > 0 {
+                dropped as f64 / resolved as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// `(min, mean, max)` utilization across shards — the imbalance spread
+/// the fleet CSV reports per row.
+pub fn utilization_spread(stats: &[ShardStats]) -> (f64, f64, f64) {
+    if stats.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut sum = 0.0;
+    for s in stats {
+        min = min.min(s.utilization);
+        max = max.max(s.utilization);
+        sum += s.utilization;
+    }
+    (min, sum / stats.len() as f64, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(util: f64) -> ShardStats {
+        ShardStats {
+            shard: 0,
+            nodes: 2,
+            emitted: 10,
+            imported: 0,
+            exported: 0,
+            completed: 8,
+            dropped: 2,
+            residual: 0,
+            utilization: util,
+            drop_rate: 0.2,
+        }
+    }
+
+    #[test]
+    fn spread_tracks_min_mean_max() {
+        let xs = [stats(0.2), stats(0.4), stats(0.9)];
+        let (lo, mean, hi) = utilization_spread(&xs);
+        assert_eq!(lo, 0.2);
+        assert_eq!(hi, 0.9);
+        assert!((mean - 0.5).abs() < 1e-12);
+        assert_eq!(utilization_spread(&[]), (0.0, 0.0, 0.0));
+    }
+}

@@ -1,6 +1,8 @@
-//! Telemetry: result persistence (CSV + JSON) and the paper-vs-measured
-//! report generator.
+//! Telemetry: result persistence (CSV + JSON), the paper-vs-measured
+//! report generator, and per-shard fleet balance summaries.
 
+pub mod fleet;
 pub mod report;
 
+pub use fleet::{utilization_spread, ShardStats};
 pub use report::{method_row, write_method_csv, MethodSummary};

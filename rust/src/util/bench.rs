@@ -39,6 +39,19 @@ pub fn iter_scale() -> f64 {
         .unwrap_or(1.0)
 }
 
+/// Directory `BENCH_*.json` provenance is read from and written to:
+/// the `EDGEVISION_BENCH_DIR` env override, else the working directory.
+/// The override keeps CI artifacts and local runs from clobbering each
+/// other's prev-run baselines; every bench binary routes through it via
+/// [`BenchReport::write_json`].
+pub fn bench_dir() -> PathBuf {
+    std::env::var("EDGEVISION_BENCH_DIR")
+        .ok()
+        .filter(|d| !d.is_empty())
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
 /// Apply [`iter_scale`] to an iteration count. A nonzero count never
 /// scales below 1; zero stays zero (e.g. "no warmup" means no warmup).
 pub fn scaled(iters: usize) -> usize {
@@ -114,13 +127,25 @@ impl BenchReport {
         self.results.push(r);
     }
 
+    /// Record an externally-run [`BenchResult`] (for benches that need the
+    /// measured numbers themselves, e.g. to compute cross-target speedups).
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Mean seconds of the most recently recorded target.
+    pub fn last_mean_secs(&self) -> Option<f64> {
+        self.results.last().map(|r| r.mean.as_secs_f64())
+    }
+
     pub fn path(&self) -> PathBuf {
         PathBuf::from(format!("BENCH_{}.json", self.name))
     }
 
-    /// Write `BENCH_<name>.json` into the working directory.
+    /// Write `BENCH_<name>.json` into [`bench_dir`] (the working
+    /// directory unless `EDGEVISION_BENCH_DIR` overrides it).
     pub fn write_json(&self) -> std::io::Result<PathBuf> {
-        self.write_json_in(".")
+        self.write_json_in(bench_dir())
     }
 
     /// Write `BENCH_<name>.json` into `dir`, reading any previous report
@@ -129,6 +154,7 @@ impl BenchReport {
         &self,
         dir: impl AsRef<std::path::Path>,
     ) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
         let path = dir.as_ref().join(self.path());
         let prev = std::fs::read_to_string(&path)
             .ok()
@@ -194,13 +220,35 @@ impl BenchReport {
 mod tests {
     use super::*;
 
+    // One #[test] on purpose: process env is global and glibc setenv can
+    // race concurrent getenv from parallel test threads, and this module
+    // holds the only std::env readers in the crate — so every env-reading
+    // assertion (scaled/iter_scale included) runs sequentially in this one
+    // test body, before and after the set_var window.
     #[test]
+    fn bench_dir_env_override_routes_write_json() {
+        scaled_never_zero();
+        let dir = std::env::temp_dir().join("ev_bench_dir_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("EDGEVISION_BENCH_DIR", &dir);
+        assert_eq!(bench_dir(), dir);
+        let mut rep = BenchReport::new("dir_test");
+        rep.bench("noop", 0, 1, || {});
+        let path = rep.write_json().unwrap();
+        std::env::remove_var("EDGEVISION_BENCH_DIR");
+        assert!(path.starts_with(&dir), "{path:?} not under {dir:?}");
+        assert!(path.exists());
+        assert_eq!(bench_dir(), PathBuf::from("."));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        report_json_roundtrips_with_delta();
+    }
+
     fn scaled_never_zero() {
         assert!(scaled(1) >= 1);
         assert!(scaled(10_000) >= 1);
     }
 
-    #[test]
     fn report_json_roundtrips_with_delta() {
         let dir = std::env::temp_dir().join("ev_bench_report_test");
         let _ = std::fs::remove_dir_all(&dir);

@@ -76,6 +76,29 @@ impl Args {
         }
     }
 
+    /// Comma-separated integer list (`--shards 1,2,4`); `default` when
+    /// the flag is absent. The ONE parser behind every shard-list flag
+    /// (CLI and bench binaries), so the accepted syntax cannot drift.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<usize>().with_context(|| {
+                        format!(
+                            "--{key} expects a comma-separated integer list, got {v:?}"
+                        )
+                    })
+                })
+                .collect(),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -113,6 +136,15 @@ mod tests {
         let a = parse(&[]);
         assert_eq!(a.str_or("variant", "full"), "full");
         assert_eq!(a.usize_or("n", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn usize_list_parses_and_defaults() {
+        let a = parse(&["--shards", "1, 2,8"]);
+        assert_eq!(a.usize_list_or("shards", &[1]).unwrap(), vec![1, 2, 8]);
+        assert_eq!(a.usize_list_or("other", &[1, 2]).unwrap(), vec![1, 2]);
+        let bad = parse(&["--shards", "1,x"]);
+        assert!(bad.usize_list_or("shards", &[1]).is_err());
     }
 
     #[test]

@@ -3,6 +3,16 @@
 //! RL stack need. Every stochastic component takes an explicit seed so runs
 //! are exactly reproducible.
 
+/// splitmix64 step: one golden-ratio increment plus the three-round
+/// avalanche — the standard seed-decorrelation finalizer. The ONE copy of
+/// these constants (xoshiro seeding below, per-shard fleet seed streams).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ by Blackman & Vigna — fast, high-quality, tiny.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -12,13 +22,13 @@ pub struct Rng {
 impl Rng {
     pub fn new(seed: u64) -> Self {
         // splitmix64 seeding, as recommended by the xoshiro authors
+        // (bit-compatible with the original inlined form: each draw
+        // advances the state by the golden constant, then finalizes)
         let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
         let mut next = || {
+            let v = splitmix64(sm);
             sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            v
         };
         Rng { s: [next(), next(), next(), next()] }
     }

@@ -15,8 +15,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use edgevision::baselines::{Selection, ShortestQueueController};
 use edgevision::config::EnvConfig;
-use edgevision::coordinator::{EdgeCluster, ProfileCompute};
+use edgevision::coordinator::{EdgeCluster, Exterior, ProfileCompute};
 use edgevision::env::{Action, Profiles, SimConfig, Simulator, StepOutcome, VecEnv};
+use edgevision::fleet::ShardPlan;
 use edgevision::scenario::Scenario;
 
 struct CountingAlloc;
@@ -139,4 +140,45 @@ fn steady_state_hot_path_allocates_nothing() {
         "steady-state EdgeCluster::step_until hit the allocator"
     );
     assert!(cluster.emitted > 0);
+
+    // --- fleet shard stepping (exterior-attached cluster) ------------------
+    // One shard of a 2-shard steady@8 fleet, stepped in epochs exactly as
+    // the fleet worker does: global-view decisions, cross-shard exports
+    // into the exterior outbox, per-epoch drain. Once the outbox, request
+    // map and event heap reach their high-water marks, an epoch window
+    // performs zero allocations — the fleet's per-shard hot-path budget.
+    let scenario = Scenario::at_nodes("steady", 8).expect("registered scenario");
+    let plan = ShardPlan::new(&scenario, 2).expect("plan");
+    let sub = plan.sub_scenario(0);
+    let mut shard = EdgeCluster::new(&sub, 7);
+    shard.attach_exterior(Exterior::new(
+        8,
+        0,
+        plan.cross_mbps,
+        scenario.gpu_speed.clone(),
+        scenario.hist_len,
+    ));
+    let mut policy = ShortestQueueController::new(Selection::Min);
+    let mut compute = ProfileCompute::new(Profiles::default());
+    let mut exports = Vec::new();
+    let epoch = plan.epoch;
+    let mut t = 0.0;
+    for _ in 0..400 {
+        t += epoch;
+        shard.step_until(&mut policy, &mut compute, t).unwrap();
+        shard.drain_outbox_into(&mut exports, t);
+    }
+    shard.served.reserve(50_000);
+    let best = min_window_allocs(6, || {
+        for _ in 0..10 {
+            t += epoch;
+            shard.step_until(&mut policy, &mut compute, t).unwrap();
+            shard.drain_outbox_into(&mut exports, t);
+        }
+    });
+    assert_eq!(
+        best, 0,
+        "steady-state fleet shard stepping hit the allocator"
+    );
+    assert!(shard.exported > 0, "the cross-shard export path never ran");
 }

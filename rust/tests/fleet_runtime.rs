@@ -1,0 +1,255 @@
+//! Sharded fleet runtime contracts (dep-free):
+//!
+//! * **shards=1 bit-identity** — a single-shard `Fleet::serve` is
+//!   bit-identical to a plain `serve_scenario` run on the same
+//!   `(policy, scenario, duration, seed)`, across every registered
+//!   scenario and baseline family (the keystone correctness contract:
+//!   the parallel engine is the serving engine, not an approximation);
+//! * **multi-shard determinism** — repeated executions with the same
+//!   seed produce bit-identical merged reports regardless of thread
+//!   interleaving (conservative barriers + (shard id, seq) merge order);
+//! * **global conservation** — `emitted == completed + dropped +
+//!   residual` with residual counting cross-shard dispatches still on
+//!   the backhaul, for every registered scenario at shards in {1, 2, 4};
+//! * cross-shard traffic actually flows (and balances: imports ==
+//!   exports minus in-flight).
+
+use edgevision::baselines;
+use edgevision::fleet::{heuristic_factory, Fleet, ShardPlan};
+use edgevision::scenario::Scenario;
+use edgevision::serving::{serve_scenario, ServingReport};
+
+fn assert_reports_bit_identical(
+    ctx: &str,
+    a: &ServingReport,
+    b: &ServingReport,
+) {
+    assert_eq!(a.scenario, b.scenario, "{ctx}: scenario");
+    assert_eq!(a.emitted, b.emitted, "{ctx}: emitted");
+    assert_eq!(a.imported, b.imported, "{ctx}: imported");
+    assert_eq!(a.exported, b.exported, "{ctx}: exported");
+    assert_eq!(a.total, b.total, "{ctx}: total");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+    assert_eq!(a.residual, b.residual, "{ctx}: residual");
+    assert_eq!(a.dispatched, b.dispatched, "{ctx}: dispatched");
+    assert_eq!(a.batches, b.batches, "{ctx}: batches");
+    assert_eq!(a.max_batch_size, b.max_batch_size, "{ctx}: max_batch");
+    for (field, x, y) in [
+        ("mean_batch_size", a.mean_batch_size, b.mean_batch_size),
+        ("throughput_rps", a.throughput_rps, b.throughput_rps),
+        ("mean_latency", a.mean_latency, b.mean_latency),
+        ("p50_latency", a.p50_latency, b.p50_latency),
+        ("p95_latency", a.p95_latency, b.p95_latency),
+        ("p99_latency", a.p99_latency, b.p99_latency),
+        ("mean_accuracy", a.mean_accuracy, b.mean_accuracy),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {field} {x} vs {y}");
+    }
+}
+
+/// The keystone contract, proptest-style across the registry x baseline
+/// families x seeds: a 1-shard fleet run IS a serve_scenario run.
+#[test]
+fn prop_shards1_bit_identical_to_serve_scenario() {
+    let duration = 6.0;
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        for policy_name in ["shortest_queue_min", "random_max", "predictive"]
+        {
+            for seed in [0u64, 7, 1234] {
+                let mut policy =
+                    baselines::by_name(policy_name, scenario.n_nodes, seed)
+                        .unwrap();
+                let single =
+                    serve_scenario(policy.as_mut(), &scenario, duration, seed)
+                        .unwrap();
+                let fleet = Fleet::serve(
+                    heuristic_factory(policy_name),
+                    &scenario,
+                    duration,
+                    seed,
+                    1,
+                )
+                .unwrap();
+                let ctx = format!("{name}/{policy_name}/seed {seed}");
+                assert_eq!(fleet.shards, 1, "{ctx}");
+                assert_reports_bit_identical(
+                    &ctx,
+                    &single,
+                    &fleet.per_shard[0],
+                );
+                assert_eq!(fleet.emitted, single.emitted, "{ctx}");
+                assert_eq!(fleet.completed, single.completed, "{ctx}");
+                assert_eq!(fleet.dropped, single.dropped, "{ctx}");
+                assert_eq!(fleet.residual, single.residual, "{ctx}");
+                assert_eq!(fleet.cross_dispatches, 0, "{ctx}");
+                assert_eq!(
+                    fleet.mean_latency.to_bits(),
+                    single.mean_latency.to_bits(),
+                    "{ctx}"
+                );
+                assert!(fleet.conserved(), "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_shard_runs_are_seed_deterministic() {
+    let scenario = Scenario::by_name("hotspot").unwrap().with_nodes(8);
+    for shards in [2usize, 4] {
+        let run = || {
+            Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                8.0,
+                42,
+                shards,
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.emitted, b.emitted, "shards {shards}");
+        assert_eq!(a.completed, b.completed, "shards {shards}");
+        assert_eq!(a.dropped, b.dropped, "shards {shards}");
+        assert_eq!(a.residual, b.residual, "shards {shards}");
+        assert_eq!(a.cross_dispatches, b.cross_dispatches, "shards {shards}");
+        assert_eq!(a.cross_in_flight, b.cross_in_flight, "shards {shards}");
+        assert_eq!(
+            a.mean_latency.to_bits(),
+            b.mean_latency.to_bits(),
+            "shards {shards}"
+        );
+        for (x, y) in a.per_shard.iter().zip(b.per_shard.iter()) {
+            assert_reports_bit_identical(
+                &format!("hotspot8 x{shards} repeat"),
+                x,
+                y,
+            );
+        }
+        assert_eq!(a.shard_stats, b.shard_stats, "shards {shards}");
+    }
+}
+
+/// Acceptance matrix: conservation holds for every registered scenario at
+/// shards in {1, 2, 4} (4 == one node per shard at the paper's default
+/// cluster size), counting in-flight cross-shard requests at the horizon.
+#[test]
+fn prop_fleet_conservation_every_scenario() {
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        for shards in [1usize, 2, 4] {
+            let report = Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                6.0,
+                9,
+                shards,
+            )
+            .unwrap();
+            assert!(report.emitted > 0, "{name} x{shards}: nothing emitted");
+            assert!(
+                report.conserved(),
+                "{name} x{shards} leaked: emitted {} != {} + {} + {}",
+                report.emitted,
+                report.completed,
+                report.dropped,
+                report.residual
+            );
+            // per-shard boundary bookkeeping balances globally
+            let imported: usize =
+                report.per_shard.iter().map(|r| r.imported).sum();
+            assert_eq!(
+                imported,
+                report.cross_dispatches - report.cross_in_flight,
+                "{name} x{shards}: imports != delivered exports"
+            );
+            assert_eq!(report.per_shard.len(), shards);
+            assert_eq!(report.shard_stats.len(), shards);
+        }
+    }
+}
+
+#[test]
+fn cross_shard_traffic_flows_toward_idle_shards() {
+    // one hot node in shard 1; the shortest-queue policy sees shard 0's
+    // idle nodes through the epoch snapshot and dispatches across the
+    // boundary — and dispatched work is actually served over there
+    let scenario = Scenario::by_name("hotspot").unwrap().with_nodes(8);
+    let report = Fleet::serve(
+        heuristic_factory("shortest_queue_min"),
+        &scenario,
+        10.0,
+        3,
+        2,
+    )
+    .unwrap();
+    assert!(report.conserved());
+    assert!(
+        report.cross_dispatches > 0,
+        "hotspot never crossed the shard boundary: {report:?}"
+    );
+    let imported: usize = report.per_shard.iter().map(|r| r.imported).sum();
+    assert!(imported > 0, "no cross-shard dispatch was delivered");
+    // the hot shard exports more than it imports
+    let hot_shard = &report.per_shard[1];
+    assert!(
+        hot_shard.exported >= hot_shard.imported,
+        "hot shard should be a net exporter: {hot_shard:?}"
+    );
+}
+
+#[test]
+fn epoch_override_is_validated_against_min_cross_delay() {
+    let scenario = Scenario::by_name("paper").unwrap();
+    let plan = ShardPlan::new(&scenario, 2).unwrap();
+    // paper: smallest frame 0.32 Mbit over 1 Mbps backhaul => 0.32 s cap
+    assert!(Fleet::new(&scenario, 2).unwrap().with_epoch(0.25).is_ok());
+    assert!(Fleet::new(&scenario, 2).unwrap().with_epoch(0.4).is_err());
+    assert!(plan.epoch <= plan.max_epoch());
+    // smaller epochs change the barrier cadence but never the safety
+    let fine = Fleet::new(&scenario, 2)
+        .unwrap()
+        .with_epoch(0.05)
+        .unwrap()
+        .run(&heuristic_factory("shortest_queue_min"), 4.0, 5)
+        .unwrap();
+    assert!(fine.conserved());
+}
+
+#[test]
+fn fleet_scales_to_large_clusters() {
+    // a 64-node steady cluster over 4 shards: conserved, busy everywhere,
+    // and the per-shard balance telemetry is populated
+    let scenario = Scenario::at_nodes("steady", 64).unwrap();
+    let report = Fleet::serve(
+        heuristic_factory("shortest_queue_min"),
+        &scenario,
+        4.0,
+        11,
+        4,
+    )
+    .unwrap();
+    assert!(report.conserved());
+    assert_eq!(report.shard_stats.len(), 4);
+    assert!(report.emitted > 200, "64 nodes should emit plenty: {report:?}");
+    let (_, util_mean, _) = report.utilization();
+    assert!(util_mean > 0.0, "shards never touched their GPUs");
+    assert!(report.shard_stats.iter().all(|s| s.nodes == 16));
+}
+
+#[test]
+fn heuristic_factory_builds_per_shard_policies() {
+    let scenario = Scenario::by_name("steady").unwrap();
+    let report = Fleet::serve(
+        heuristic_factory("random_min"),
+        &scenario,
+        5.0,
+        2,
+        2,
+    )
+    .unwrap();
+    assert_eq!(report.policy, "random_min");
+    assert!(report.conserved());
+}

@@ -95,6 +95,61 @@ fn one_descriptor_drives_both_layers() {
     assert!(report.completed > 0);
 }
 
+/// Hand-rolled proptest (the repo's harness style): every registry
+/// regime survives scaling to production node counts — `validate()`
+/// passes and every per-node vector is sized exactly N — and customized
+/// descriptors cycle their per-node patterns exactly as `cycle_nodes`
+/// promises, for N in {1, 7, 64, 256}.
+#[test]
+fn prop_at_nodes_scales_and_cycles_at_large_n() {
+    const NS: [usize; 4] = [1, 7, 64, 256];
+    for name in Scenario::names() {
+        for n in NS {
+            let s = Scenario::at_nodes(name, n).unwrap();
+            s.validate();
+            assert_eq!(s.n_nodes, n, "{name} at {n}");
+            assert_eq!(s.workload.means.len(), n, "{name} at {n}");
+            assert_eq!(s.gpu_speed.len(), n, "{name} at {n}");
+            assert_eq!(s.bandwidth.n_nodes, n, "{name} at {n}");
+            assert!(s.gpu_speed.iter().all(|v| *v > 0.0), "{name} at {n}");
+            assert_eq!(
+                s.obs_dim(),
+                edgevision::policy::obs_dim(s.hist_len, n),
+                "{name} at {n}"
+            );
+        }
+    }
+    // the paper regime means "cycle": at_nodes repeats the 4-node skew
+    let paper = Scenario::by_name("paper").unwrap();
+    let paper7 = Scenario::at_nodes("paper", 7).unwrap();
+    for i in 0..7 {
+        assert_eq!(paper7.workload.means[i], paper.workload.means[i % 4]);
+    }
+    // customized descriptors must cycle (never silently re-derive): every
+    // per-node entry equals the base pattern at i mod base-len
+    for name in Scenario::names() {
+        let mut base = Scenario::by_name(name).unwrap();
+        base.omega = 42.0; // any field override marks it customized
+        for n in NS {
+            let scaled = base.clone().with_nodes(n);
+            scaled.validate();
+            assert_eq!(scaled.omega, 42.0, "{name} at {n}: override kept");
+            for i in 0..n {
+                assert_eq!(
+                    scaled.workload.means[i],
+                    base.workload.means[i % base.n_nodes],
+                    "{name} at {n}: means must cycle (i = {i})"
+                );
+                assert_eq!(
+                    scaled.gpu_speed[i],
+                    base.gpu_speed[i % base.n_nodes],
+                    "{name} at {n}: gpu_speed must cycle (i = {i})"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn hetero_scenario_biases_shortest_queue_away_from_slow_node() {
     // under hetero-nodes the slow node's queue-delay estimate inflates by
