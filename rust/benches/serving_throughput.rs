@@ -12,12 +12,20 @@
 //! request.
 //!
 //! `--list-scenarios` prints the registry and exits (the dep-free CLI
-//! path CI exercises).
+//! path CI exercises). `--comparison [NAMES]` runs the dep-free
+//! heuristic comparison sweep (default: the three chaos scenarios) into
+//! `results/serving_comparison.csv` and asserts the self-healing
+//! headline — the failover wrapper must complete strictly more requests
+//! than the failure-oblivious shortest-queue under `node-churn`.
 
 use edgevision::scenario::Scenario;
-use edgevision::serving::{run_profile_serving, ServingOptions};
+use edgevision::serving::{
+    comparison_to_csv, completed_of, run_profile_serving, ServingOptions,
+};
 use edgevision::util::bench::BenchReport;
 use edgevision::util::json::Json;
+
+const CHAOS_SCENARIOS: [&str; 3] = ["node-churn", "link-flap", "brownout"];
 
 fn main() -> anyhow::Result<()> {
     if std::env::args().any(|a| a == "--list-scenarios") {
@@ -25,6 +33,16 @@ fn main() -> anyhow::Result<()> {
             println!("{name}");
         }
         return Ok(());
+    }
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--comparison") {
+        let names: Vec<String> = match args.get(i + 1) {
+            Some(list) if !list.starts_with("--") => {
+                list.split(',').map(|s| s.trim().to_string()).collect()
+            }
+            _ => CHAOS_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+        };
+        return chaos_comparison(&names);
     }
 
     let mut rep = BenchReport::new("serving");
@@ -76,6 +94,45 @@ fn main() -> anyhow::Result<()> {
     println!("(pjrt feature off: skipping real-inference serving bench)");
 
     rep.write_json()?;
+    Ok(())
+}
+
+/// The dep-free chaos acceptance run: every heuristic baseline under the
+/// named scenarios, one conserved row each into
+/// `results/serving_comparison.csv`, with the failure-aware headline
+/// pinned whenever `node-churn` is in the sweep.
+fn chaos_comparison(names: &[String]) -> anyhow::Result<()> {
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let rows = comparison_to_csv(
+        &name_refs,
+        20.0,
+        0,
+        "results/serving_comparison.csv",
+    )?;
+    println!(
+        "{:<14} {:<28} {:>8} {:>8} {:>6} {:>6}",
+        "scenario", "method", "emitted", "done", "lost", "drop"
+    );
+    for (scenario, method, r) in &rows {
+        println!(
+            "{scenario:<14} {method:<28} {:>8} {:>8} {:>6} {:>6}",
+            r.emitted, r.completed, r.lost_to_failure, r.dropped
+        );
+    }
+    if names.iter().any(|n| n == "node-churn") {
+        let oblivious = completed_of(&rows, "node-churn", "shortest_queue_min");
+        let healed =
+            completed_of(&rows, "node-churn", "failover_shortest_queue_min");
+        anyhow::ensure!(
+            healed > oblivious,
+            "failover ({healed} completed) must strictly beat the \
+             failure-oblivious shortest-queue ({oblivious}) under node-churn"
+        );
+        println!(
+            "headline: failover {healed} completed vs oblivious {oblivious} under node-churn"
+        );
+    }
+    println!("wrote results/serving_comparison.csv");
     Ok(())
 }
 

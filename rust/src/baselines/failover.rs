@@ -1,0 +1,221 @@
+//! Self-healing failover layer — wraps any inner [`Policy`] and reroutes
+//! its dead-node routing decisions through the liveness surface of
+//! [`PolicyView`].
+//!
+//! The chaos scenarios deliberately leave a crashed node's *stale*
+//! telemetry visible (its drained queue reads as zero delay), so a
+//! failure-oblivious shortest-queue policy floods the dead node — its
+//! argmin sees the most attractive queue exactly where every frame will
+//! be lost. [`FailoverController`] is the minimal repair: after the inner
+//! policy decides, any action targeting a node with
+//! `is_alive(node) == false` is redirected to the best *alive* node by
+//! the same Eq. 1 delay estimate (scaled by `effective_gpu_speed`, so a
+//! browned-out GPU looks as slow as it really is). Redirects draw from a
+//! bounded per-episode budget — a crash storm cannot turn the failover
+//! layer into an unbounded retry loop; once the budget is spent the
+//! inner policy's decisions pass through untouched.
+//!
+//! Orphaned work (frames queued or mid-batch on the crashing node) is
+//! reclaimed by the substrate itself and accounted as `lost_to_failure`;
+//! the failover layer's job is to stop *new* work from following it into
+//! the hole.
+
+use anyhow::Result;
+
+use crate::env::Action;
+use crate::policy::{Policy, PolicyView};
+
+/// Redirects allowed per episode before the layer goes passive. One
+/// redirect per (decision instant, origin node) touching a dead target —
+/// generous against any realistic chaos schedule, but finite.
+pub const DEFAULT_REDIRECT_BUDGET: u64 = 1_000_000;
+
+pub struct FailoverController {
+    name: String,
+    inner: Box<dyn Policy>,
+    max_budget: u64,
+    budget: u64,
+    /// Redirects performed since the last reset (telemetry/tests).
+    redirects: u64,
+}
+
+impl FailoverController {
+    /// Wrap `inner` with the default redirect budget. The reported name
+    /// is `failover_<inner name>`.
+    pub fn new(inner: Box<dyn Policy>) -> Self {
+        Self::with_budget(inner, DEFAULT_REDIRECT_BUDGET)
+    }
+
+    pub fn with_budget(inner: Box<dyn Policy>, max_budget: u64) -> Self {
+        FailoverController {
+            name: format!("failover_{}", inner.name()),
+            inner,
+            max_budget,
+            budget: max_budget,
+            redirects: 0,
+        }
+    }
+
+    pub fn redirects(&self) -> u64 {
+        self.redirects
+    }
+
+    /// The best alive target by queue delay under the *effective* GPU
+    /// speed (a derated node's estimate already reflects the brownout;
+    /// dead nodes are excluded outright). `None` when every node is dead.
+    fn best_alive(view: &dyn PolicyView) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..view.n_nodes() {
+            if !view.is_alive(j) {
+                continue;
+            }
+            let q = view.queue_delay_estimate(j);
+            if best.map_or(true, |(_, bq)| q < bq) {
+                best = Some((j, q));
+            }
+        }
+        best.map(|(j, _)| j)
+    }
+}
+
+impl Policy for FailoverController {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn reset(&mut self, episode_seed: u64) {
+        self.inner.reset(episode_seed);
+        self.budget = self.max_budget;
+        self.redirects = 0;
+    }
+
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        self.inner.decide_into(view, out)?;
+        // cheap common case: nothing targets a dead node (always true on
+        // fault-free scenarios — the default `is_alive` is constant true)
+        if out.iter().all(|a| view.is_alive(a.edge)) {
+            return Ok(());
+        }
+        let Some(fallback) = Self::best_alive(view) else {
+            // total blackout: nowhere to redirect; pass through
+            return Ok(());
+        };
+        for a in out.iter_mut() {
+            if !view.is_alive(a.edge) && self.budget > 0 {
+                a.edge = fallback;
+                self.budget -= 1;
+                self.redirects += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Selection, ShortestQueueController};
+    use crate::env::profiles::Profiles;
+
+    /// Minimal hand-rolled view: node 0 dead with an empty (stale) queue,
+    /// node 1 alive but loaded, node 2 alive and lightly loaded.
+    struct ChaosView {
+        profiles: Profiles,
+    }
+
+    impl PolicyView for ChaosView {
+        fn n_nodes(&self) -> usize {
+            3
+        }
+        fn now(&self) -> f64 {
+            1.0
+        }
+        fn slot(&self) -> u64 {
+            0
+        }
+        fn queue_len(&self, node: usize) -> usize {
+            [0, 7, 1][node]
+        }
+        fn queue_delay_estimate(&self, node: usize) -> f64 {
+            [0.0, 0.7, 0.1][node]
+        }
+        fn link_backlog(&self, _: usize, _: usize) -> usize {
+            0
+        }
+        fn bandwidth_mbps(&self, _: usize, _: usize) -> f64 {
+            10.0
+        }
+        fn for_each_rate(&self, _: usize, _: &mut dyn FnMut(f64)) {}
+        fn rate_norm(&self) -> f64 {
+            1.0
+        }
+        fn queue_norm(&self) -> f64 {
+            1.0
+        }
+        fn bw_norm(&self) -> f64 {
+            1.0
+        }
+        fn profiles(&self) -> &Profiles {
+            &self.profiles
+        }
+        fn omega(&self) -> f64 {
+            1.0
+        }
+        fn drop_threshold(&self) -> f64 {
+            1.0
+        }
+        fn drop_penalty(&self) -> f64 {
+            1.0
+        }
+        fn is_alive(&self, node: usize) -> bool {
+            node != 0
+        }
+    }
+
+    #[test]
+    fn reroutes_dead_target_to_best_alive() {
+        let view = ChaosView { profiles: Profiles::default() };
+        // the oblivious inner policy argmins straight into dead node 0
+        // (stale zero-delay telemetry)
+        let mut oblivious = ShortestQueueController::new(Selection::Min);
+        let mut acts = Vec::new();
+        oblivious.decide_into(&view, &mut acts).unwrap();
+        assert!(acts.iter().all(|a| a.edge == 0), "{acts:?}");
+
+        let mut healed = FailoverController::new(Box::new(
+            ShortestQueueController::new(Selection::Min),
+        ));
+        assert_eq!(healed.name(), "failover_shortest_queue_min");
+        healed.decide_into(&view, &mut acts).unwrap();
+        // redirected to node 2: the alive argmin, not the loaded node 1
+        assert!(acts.iter().all(|a| a.edge == 2), "{acts:?}");
+        assert_eq!(healed.redirects(), 3);
+    }
+
+    #[test]
+    fn exhausted_budget_goes_passive() {
+        let view = ChaosView { profiles: Profiles::default() };
+        let mut healed = FailoverController::with_budget(
+            Box::new(ShortestQueueController::new(Selection::Min)),
+            2,
+        );
+        let mut acts = Vec::new();
+        healed.decide_into(&view, &mut acts).unwrap();
+        // 3 dead-target actions, budget 2: the last passes through
+        assert_eq!(
+            acts.iter().filter(|a| a.edge == 2).count(),
+            2,
+            "{acts:?}"
+        );
+        assert_eq!(acts.iter().filter(|a| a.edge == 0).count(), 1);
+        // reset replenishes the budget
+        healed.reset(0);
+        assert_eq!(healed.redirects(), 0);
+        healed.decide_into(&view, &mut acts).unwrap();
+        assert_eq!(healed.redirects(), 2);
+    }
+}

@@ -1,6 +1,7 @@
 //! Baseline methods from the paper's evaluation (Section VI-A):
 //! Shortest-Queue-{Min,Max}, Random-{Min,Max} and the Predictive
-//! controller. (IPPO and Local-PPO are trained through the same
+//! controller, plus the failure-aware [`FailoverController`] wrapper for
+//! the chaos scenarios. (IPPO and Local-PPO are trained through the same
 //! [`crate::rl::Trainer`] with `--ippo` / `--local-only`.)
 //!
 //! Every baseline implements the unified [`crate::policy::Policy`] trait,
@@ -11,19 +12,24 @@ use anyhow::{bail, Result};
 
 use crate::policy::Policy;
 
+pub mod failover;
 pub mod heuristics;
 pub mod predictive;
 
+pub use failover::FailoverController;
 pub use heuristics::{RandomController, ShortestQueueController, Selection};
 pub use predictive::PredictiveController;
 
-/// Names of the heuristic baselines, in the paper's reporting order.
-pub const HEURISTICS: [&str; 5] = [
+/// Names of the heuristic baselines, in the paper's reporting order
+/// (the failover wrapper last — it is the chaos-scenario contrast to the
+/// failure-oblivious shortest-queue).
+pub const HEURISTICS: [&str; 6] = [
     "predictive",
     "shortest_queue_min",
     "shortest_queue_max",
     "random_min",
     "random_max",
+    "failover_shortest_queue_min",
 ];
 
 /// Instantiate a heuristic baseline by its reporting name — the one
@@ -39,6 +45,9 @@ pub fn by_name(name: &str, n_nodes: usize, seed: u64) -> Result<Box<dyn Policy>>
         "random_min" => Box::new(RandomController::new(Selection::Min, seed)),
         "random_max" => Box::new(RandomController::new(Selection::Max, seed)),
         "predictive" => Box::new(PredictiveController::new(n_nodes)),
+        "failover_shortest_queue_min" => Box::new(FailoverController::new(
+            Box::new(ShortestQueueController::new(Selection::Min)),
+        )),
         other => bail!(
             "unknown heuristic {other:?} (known: {})",
             HEURISTICS.join(", ")

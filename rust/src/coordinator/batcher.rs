@@ -92,6 +92,15 @@ impl Batcher {
         }
     }
 
+    /// Drain every lane-resident item id into `out` (appended), emptying
+    /// the batcher — crash reclamation: the caller accounts each drained
+    /// item (e.g. as lost to failure).
+    pub fn drain_into(&mut self, out: &mut Vec<ItemId>) {
+        for lane in &mut self.lanes {
+            out.extend(lane.items.drain(..).map(|(id, _)| id));
+        }
+    }
+
     pub fn pending(&self) -> usize {
         self.lanes.iter().map(|l| l.items.len()).sum()
     }
@@ -115,6 +124,7 @@ impl Batcher {
         self.lanes
             .iter()
             .filter_map(|l| l.items.front().map(|&(_, t)| t + self.max_wait))
+            // invariant: arrival times are finite, so deadlines are too
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 }

@@ -30,6 +30,8 @@
 //! injected event order — and with it every downstream tie-break — is
 //! independent of thread interleaving.
 
+use crate::scenario::FaultSchedule;
+
 /// `ServedRequest::origin` marker for requests that entered a shard over a
 /// cross-shard boundary (their true origin lives in another shard's node
 /// index space).
@@ -131,6 +133,13 @@ pub struct Exterior {
     /// Static per-node GPU speeds for the whole fleet (remote service
     /// times in the Eq. 1-style estimates policies compute).
     pub gpu_speed: Vec<f64>,
+    /// The *global* fault timeline of the scenario being served. Faults
+    /// are static deterministic data, so remote liveness and GPU derate
+    /// queries (`PolicyView::is_alive` / `effective_gpu_speed`) answer
+    /// exactly from the schedule rather than from a barrier-stale
+    /// snapshot — a crashed remote node is invisible to routing for zero
+    /// epochs, not one.
+    pub faults: FaultSchedule,
     /// Last barrier's view of every remote node.
     pub snapshot: RemoteSnapshot,
     /// Outbound dispatches since the last [`drain`](Exterior::drain).
@@ -151,6 +160,7 @@ impl Exterior {
         offset: usize,
         cross_mbps: f64,
         gpu_speed: Vec<f64>,
+        faults: FaultSchedule,
         hist_len: usize,
     ) -> Self {
         assert!(cross_mbps > 0.0, "cross-shard bandwidth must be positive");
@@ -164,6 +174,7 @@ impl Exterior {
             offset,
             cross_mbps,
             gpu_speed,
+            faults,
             snapshot: RemoteSnapshot::zeros(n_global, hist_len),
             outbox: Vec::new(),
             out_backlog: vec![0; n_global],
@@ -219,7 +230,8 @@ mod tests {
 
     #[test]
     fn drain_keeps_backlog_until_delivery_instant() {
-        let mut ext = Exterior::new(4, 0, 1.0, vec![1.0; 4], 2);
+        let mut ext =
+            Exterior::new(4, 0, 1.0, vec![1.0; 4], FaultSchedule::default(), 2);
         ext.outbox.push(BoundaryDispatch {
             origin: 0,
             target: 3,

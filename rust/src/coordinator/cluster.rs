@@ -23,9 +23,25 @@
 //! and cleared **only** by the matching [`Event::GpuDone`] completion, so
 //! no two service intervals on one node can ever overlap (pinned by
 //! `prop_gpu_mutual_exclusion`). Every emitted request is accounted:
-//! `emitted == completed + dropped + residual` (pinned by
-//! `prop_serving_conservation`), where residual counts requests still in
-//! flight when the horizon cuts the run.
+//! `emitted == completed + dropped + lost_to_failure + residual` (pinned
+//! by `prop_serving_conservation` and `prop_chaos_conservation`), where
+//! residual counts requests still in flight when the horizon cuts the run
+//! and `lost_to_failure` counts work destroyed by injected faults.
+//!
+//! Fault model: a [`Scenario`]'s `FaultSchedule` is replayed through
+//! first-class heap events ([`Event::NodeDown`] / [`Event::NodeUp`] /
+//! [`Event::LinkChange`] / [`Event::GpuRate`]), pushed at construction
+//! with the lowest sequence numbers at their timestamp so a fault always
+//! applies before same-instant work. A crash reclaims the node's orphaned
+//! work — lane-resident frames and the in-flight batch (whose
+//! `ServedRequest` records, pushed optimistically at batch start, are
+//! retracted; the stale pending `GpuDone` is neutralized by a per-node
+//! generation counter so the serial-service invariant survives). A dead
+//! node's stale telemetry (empty queue, zero delay) stays visible through
+//! [`PolicyView`]; only `is_alive`/`effective_gpu_speed` reveal the fault,
+//! which is exactly what separates failure-aware policies from oblivious
+//! ones. An empty schedule leaves every path bit-identical to the
+//! fault-free engine.
 //!
 //! Fleet boundary: with an [`Exterior`] attached
 //! ([`EdgeCluster::attach_exterior`]) the cluster becomes one shard of a
@@ -55,7 +71,7 @@ use crate::env::profiles::{Profiles, N_MODELS, N_RES};
 use crate::env::workload::Workload;
 use crate::env::Action;
 use crate::policy::{DecisionCache, Policy, PolicyView};
-use crate::scenario::Scenario;
+use crate::scenario::{FaultKind, Scenario};
 
 /// Marginal cost of each additional frame in a profile-table batch,
 /// relative to the single-frame inference delay: a batch of `k` takes
@@ -163,10 +179,24 @@ enum Event {
     /// eligible for batching/service. Distinct from GPU completion: this
     /// never touches `gpu_busy`.
     FrameReady { node: usize, req: u64 },
-    /// True GPU completion — the only event that clears `gpu_busy`.
-    GpuDone { node: usize },
+    /// True GPU completion — the only event that clears `gpu_busy`. The
+    /// `epoch` stamp matches the node's crash-generation counter; a
+    /// completion whose batch was reclaimed by a crash arrives stale and
+    /// is ignored.
+    GpuDone { node: usize, epoch: u64 },
     /// Max-wait poll for a node whose batcher holds a non-full lane.
     BatchDeadline { node: usize },
+    /// Fault timeline: the node crashes and its orphaned work is
+    /// reclaimed as lost to failure.
+    NodeDown { node: usize },
+    /// Fault timeline: the crashed node rejoins with empty queues.
+    NodeUp { node: usize },
+    /// Fault timeline: links touching the node carry `factor` x their
+    /// traced bandwidth from here on (new transfers only).
+    LinkChange { node: usize, factor: f64 },
+    /// Fault timeline: the node's GPU serves at `factor` x nominal speed
+    /// from here on (in-flight batches keep their scheduled finish).
+    GpuRate { node: usize, factor: f64 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -190,6 +220,8 @@ impl PartialOrd for Timed {
 impl Ord for Timed {
     fn cmp(&self, other: &Self) -> Ordering {
         // min-heap by time, tie-broken by sequence for determinism
+        // (invariant: event times are finite sums of profile delays —
+        // partial_cmp cannot see NaN)
         other
             .at
             .partial_cmp(&self.at)
@@ -239,6 +271,19 @@ pub struct EdgeCluster {
     /// Absolute time each node's in-flight batch completes (only
     /// meaningful while `gpu_busy`); feeds the Eq. 1 queue-delay estimate.
     gpu_busy_until: Vec<f64>,
+    /// Per-node liveness under the fault timeline (all true fault-free).
+    alive: Vec<bool>,
+    /// Per-node link degrade factor: links `i -> j` carry
+    /// `bandwidth * link_factor[i] * link_factor[j]` (all 1.0 fault-free,
+    /// which is bit-identical to the undecorated trace).
+    link_factor: Vec<f64>,
+    /// Per-node GPU derate factor (brownout); service and preprocessing
+    /// run at `gpu_speed * gpu_factor` (all 1.0 fault-free).
+    gpu_factor: Vec<f64>,
+    /// Crash-generation counter per node: bumped when a crash reclaims an
+    /// in-flight batch, so the batch's already-scheduled `GpuDone`
+    /// arrives stale and cannot clear `gpu_busy` for a later batch.
+    gpu_epoch: Vec<u64>,
     /// Accumulated GPU service seconds per node (utilization telemetry).
     busy_secs: Vec<f64>,
     /// Earliest armed BatchDeadline per node (f64::INFINITY = none armed)
@@ -264,6 +309,10 @@ pub struct EdgeCluster {
     /// Requests that left over a cross-shard boundary (policy routed them
     /// to a remote shard's node).
     pub exported: u64,
+    /// Requests destroyed by injected faults (crashed-node queues,
+    /// in-flight batches reclaimed by a crash, frames arriving at a dead
+    /// node). Exactly 0 when the scenario's fault schedule is empty.
+    pub lost_to_failure: u64,
     /// Cross-shard widening of the policy view + outbound dispatch
     /// collection; `None` for an unsharded cluster.
     exterior: Option<Exterior>,
@@ -284,6 +333,24 @@ impl EdgeCluster {
         let n = scenario.n_nodes;
         let mut heap = BinaryHeap::new();
         heap.push(Timed { at: 0.0, seq: 0, ev: Event::SlotBoundary });
+        // replay the fault timeline as first-class events; construction
+        // seqs are the lowest at any timestamp, so a fault applies before
+        // same-instant work. Fault-free scenarios push nothing.
+        let mut seq = 1u64;
+        for e in scenario.faults.events() {
+            let ev = match e.kind {
+                FaultKind::NodeDown => Event::NodeDown { node: e.node },
+                FaultKind::NodeUp => Event::NodeUp { node: e.node },
+                FaultKind::GpuDerate(f) => {
+                    Event::GpuRate { node: e.node, factor: f }
+                }
+                FaultKind::LinkDegrade(f) => {
+                    Event::LinkChange { node: e.node, factor: f }
+                }
+            };
+            heap.push(Timed { at: e.at, seq, ev });
+            seq += 1;
+        }
         EdgeCluster {
             n_nodes: n,
             profiles: scenario.profiles.clone(),
@@ -301,7 +368,7 @@ impl EdgeCluster {
             slot_secs: scenario.slot_secs,
             now: 0.0,
             slot: 0,
-            seq: 1,
+            seq,
             next_id: 0,
             next_batch_id: 0,
             heap,
@@ -318,6 +385,10 @@ impl EdgeCluster {
                 .collect(),
             gpu_busy: vec![false; n],
             gpu_busy_until: vec![0.0; n],
+            alive: vec![true; n],
+            link_factor: vec![1.0; n],
+            gpu_factor: vec![1.0; n],
+            gpu_epoch: vec![0; n],
             busy_secs: vec![0.0; n],
             next_poll: vec![f64::INFINITY; n],
             rate_hist: (0..n)
@@ -333,6 +404,7 @@ impl EdgeCluster {
             residual: 0,
             imported: 0,
             exported: 0,
+            lost_to_failure: 0,
             exterior: None,
             rates_scratch: Vec::new(),
             counts_scratch: Vec::new(),
@@ -472,6 +544,8 @@ impl EdgeCluster {
     fn view_speed(&self, view_node: usize) -> f64 {
         match self.view_to_local(view_node) {
             Some(l) => self.gpu_speed[l],
+            // invariant: out-of-local view indices exist only with an
+            // attached exterior (see the PolicyView impl note below)
             None => self.exterior.as_ref().unwrap().gpu_speed[view_node],
         }
     }
@@ -487,7 +561,9 @@ impl EdgeCluster {
         };
         let lane_secs = self.batchers[node]
             .pending_weighted(|m, v| self.profiles.infer_delay[m][v]);
-        gpu_backlog + lane_secs / self.gpu_speed[node]
+        // lane work will run at the fault-derated speed (1.0 fault-free)
+        gpu_backlog
+            + lane_secs / (self.gpu_speed[node] * self.gpu_factor[node])
     }
 
     pub fn gpu_busy(&self, node: usize) -> bool {
@@ -495,7 +571,12 @@ impl EdgeCluster {
     }
 
     pub fn bandwidth_mbps(&self, i: usize, j: usize) -> f64 {
-        self.bandwidth.get(i, j)
+        self.link_bw(i, j)
+    }
+
+    /// Liveness of local `node` under the fault timeline.
+    pub fn node_alive(&self, node: usize) -> bool {
+        self.alive[node]
     }
 
     pub fn transfers_in_flight(&self, i: usize, j: usize) -> usize {
@@ -588,6 +669,7 @@ impl EdgeCluster {
         until: f64,
     ) -> Result<()> {
         while self.heap.peek().is_some_and(|t| t.at <= until) {
+            // invariant: peek() just returned Some
             let Timed { at, ev, .. } = self.heap.pop().unwrap();
             self.now = at;
             match ev {
@@ -599,17 +681,65 @@ impl EdgeCluster {
                 Event::FrameReady { node, req } => {
                     self.frame_ready(node, req, compute)?
                 }
-                Event::GpuDone { node } => {
-                    self.gpu_busy[node] = false;
-                    self.try_dispatch(node, compute)?;
+                Event::GpuDone { node, epoch } => {
+                    // a stale completion belongs to a batch a crash
+                    // already reclaimed — ignoring it is what keeps the
+                    // serial-service invariant across the crash
+                    if epoch == self.gpu_epoch[node] {
+                        self.gpu_busy[node] = false;
+                        self.try_dispatch(node, compute)?;
+                    }
                 }
                 Event::BatchDeadline { node } => {
                     self.next_poll[node] = f64::INFINITY;
                     self.try_dispatch(node, compute)?;
                 }
+                Event::NodeDown { node } => self.on_node_down(node),
+                Event::NodeUp { node } => {
+                    self.alive[node] = true;
+                    self.try_dispatch(node, compute)?;
+                }
+                Event::LinkChange { node, factor } => {
+                    self.link_factor[node] = factor;
+                }
+                Event::GpuRate { node, factor } => {
+                    self.gpu_factor[node] = factor;
+                }
             }
         }
         Ok(())
+    }
+
+    /// Crash `node`: reclaim its orphaned work as lost to failure — the
+    /// in-flight batch (records retracted, pending `GpuDone` neutralized
+    /// via the generation counter, unfinished service time refunded) and
+    /// every lane-resident frame. Frames still heading here (preprocessing
+    /// or on a link) are lost on arrival while the node stays down.
+    fn on_node_down(&mut self, node: usize) {
+        self.alive[node] = false;
+        if self.gpu_busy[node] && self.gpu_busy_until[node] > self.now {
+            // the batch records were pushed optimistically at batch start
+            // with a precomputed finish; only the still-executing batch
+            // can satisfy finish > now (service is serial per node)
+            let now = self.now;
+            let before = self.served.len();
+            self.served.retain(|s| !(s.target == node && s.finish > now));
+            self.lost_to_failure += (before - self.served.len()) as u64;
+            self.busy_secs[node] -= self.gpu_busy_until[node] - now;
+            self.gpu_epoch[node] += 1;
+            self.gpu_busy[node] = false;
+            self.gpu_busy_until[node] = now;
+        }
+        let mut scratch = std::mem::take(&mut self.batch_scratch);
+        scratch.clear();
+        self.batchers[node].drain_into(&mut scratch);
+        for &id in scratch.iter() {
+            if self.reqs.remove(&id).is_some() {
+                self.lost_to_failure += 1;
+            }
+        }
+        scratch.clear();
+        self.batch_scratch = scratch;
     }
 
     /// End the run at `horizon`: whatever is still pending (queued in a
@@ -666,6 +796,13 @@ impl EdgeCluster {
         policy: &mut dyn Policy,
         compute: &mut dyn ComputeHook,
     ) -> Result<()> {
+        if !self.alive[node] {
+            // the origin node is down: its frames are lost at the source
+            if self.reqs.remove(&req).is_some() {
+                self.lost_to_failure += 1;
+            }
+            return Ok(());
+        }
         // unified control plane: per-arrival queries share one batched
         // decide_into per decision instant. Node indices below are in the
         // policy-view space (global when an exterior is attached).
@@ -694,15 +831,17 @@ impl EdgeCluster {
             f64::INFINITY
         } else {
             match self.view_to_local(raw.edge) {
-                Some(l) => self.bandwidth.get(node, l),
+                Some(l) => self.link_bw(node, l),
+                // invariant: out-of-local edge implies exterior attached
                 None => self.exterior.as_ref().unwrap().cross_mbps,
             }
         };
         let action =
             self.router.route(origin_v, raw, |_, _| bw_val, mbits, infer)?;
-        // preprocessing happens at the origin (Pallas resize / real exec)
-        let pre_secs =
-            compute.preprocess(node, action.res)? / self.gpu_speed[node];
+        // preprocessing happens at the origin (Pallas resize / real exec),
+        // at the origin's fault-derated speed
+        let pre_secs = compute.preprocess(node, action.res)?
+            / (self.gpu_speed[node] * self.gpu_factor[node]);
         let ready = self.now + pre_secs;
         if action.edge == origin_v {
             if let Some(r) = self.reqs.get_mut(&req) {
@@ -718,7 +857,7 @@ impl EdgeCluster {
                 target,
                 req,
                 self.profiles.frame_mbits[action.res],
-                self.bandwidth.get(node, target),
+                self.link_bw(node, target),
                 ready,
             );
             if let Some(r) = self.reqs.get_mut(&req) {
@@ -737,6 +876,8 @@ impl EdgeCluster {
             self.exported += 1;
             let seq = self.seq;
             self.seq += 1;
+            // invariant: this branch is only reachable for a view index
+            // past the local range, which requires an attached exterior
             let ext = self.exterior.as_mut().unwrap();
             let finish = ready + mbits / ext.cross_mbps;
             ext.out_backlog[action.edge] += 1;
@@ -783,6 +924,13 @@ impl EdgeCluster {
         req: u64,
         compute: &mut dyn ComputeHook,
     ) -> Result<()> {
+        if !self.alive[node] {
+            // the frame reached a crashed node — lost with it
+            if self.reqs.remove(&req).is_some() {
+                self.lost_to_failure += 1;
+            }
+            return Ok(());
+        }
         let Some(r) = self.reqs.get(&req) else {
             return Ok(());
         };
@@ -799,6 +947,9 @@ impl EdgeCluster {
         node: usize,
         compute: &mut dyn ComputeHook,
     ) -> Result<()> {
+        if !self.alive[node] {
+            return Ok(());
+        }
         while !self.gpu_busy[node] {
             let mut scratch = std::mem::take(&mut self.batch_scratch);
             let pulled = self.batchers[node].pop_ready_into(self.now, &mut scratch);
@@ -844,6 +995,7 @@ impl EdgeCluster {
         for &id in items {
             let Some(r) = self.reqs.get(&id) else { continue };
             if self.now - r.arrival > self.drop_deadline {
+                // invariant: get(&id) just returned Some
                 let r = self.reqs.remove(&id).unwrap();
                 self.served.push(ServedRequest {
                     id: r.id,
@@ -867,7 +1019,7 @@ impl EdgeCluster {
             return Ok(false);
         }
         let secs = compute.detect_batch(node, model, res, survivors)?
-            / self.gpu_speed[node];
+            / (self.gpu_speed[node] * self.gpu_factor[node]);
         let finish = self.now + secs;
         let batch_id = self.next_batch_id;
         self.next_batch_id += 1;
@@ -898,8 +1050,20 @@ impl EdgeCluster {
                 batch_size: survivors,
             });
         }
-        self.push_event(finish, Event::GpuDone { node });
+        self.push_event(
+            finish,
+            Event::GpuDone { node, epoch: self.gpu_epoch[node] },
+        );
         Ok(true)
+    }
+
+    /// Effective bandwidth of local link `from -> to`: the live trace
+    /// scaled by both endpoints' fault degrade factors (1.0 fault-free,
+    /// which leaves the trace value bit-identical).
+    fn link_bw(&self, from: usize, to: usize) -> f64 {
+        self.bandwidth.get(from, to)
+            * self.link_factor[from]
+            * self.link_factor[to]
     }
 }
 
@@ -909,6 +1073,11 @@ impl EdgeCluster {
 /// fleet's global node set: this shard's nodes answer live, remote nodes
 /// answer from the last epoch barrier's snapshot (conservative-time
 /// semantics — remote state is at most one epoch stale).
+///
+/// The `exterior.as_ref().unwrap()` calls throughout this impl share one
+/// invariant: `view_to_local` returns `None` only for view indices past
+/// the local range, which exist only when an `Exterior` is attached
+/// (`view_nodes() > n_nodes` implies `exterior.is_some()`).
 impl PolicyView for EdgeCluster {
     fn n_nodes(&self) -> usize {
         self.view_nodes()
@@ -953,7 +1122,7 @@ impl PolicyView for EdgeCluster {
             return f64::INFINITY;
         }
         match (self.view_to_local(from), self.view_to_local(to)) {
-            (Some(f), Some(t)) => self.bandwidth.get(f, t),
+            (Some(f), Some(t)) => self.link_bw(f, t),
             // any cross-shard hop runs at the fixed backhaul floor
             _ => self.exterior.as_ref().unwrap().cross_mbps,
         }
@@ -996,6 +1165,28 @@ impl PolicyView for EdgeCluster {
         self.view_speed(node)
     }
 
+    fn is_alive(&self, node: usize) -> bool {
+        match self.view_to_local(node) {
+            Some(l) => self.alive[l],
+            // remote liveness is derived from the fleet's shared fault
+            // timeline (static deterministic data every shard carries),
+            // not the epoch snapshot — so it is exact, never stale
+            None => {
+                self.exterior.as_ref().unwrap().faults.alive_at(node, self.now)
+            }
+        }
+    }
+
+    fn effective_gpu_speed(&self, node: usize) -> f64 {
+        match self.view_to_local(node) {
+            Some(l) => self.gpu_speed[l] * self.gpu_factor[l],
+            None => {
+                let ext = self.exterior.as_ref().unwrap();
+                ext.gpu_speed[node] * ext.faults.gpu_factor_at(node, self.now)
+            }
+        }
+    }
+
     fn omega(&self) -> f64 {
         self.omega
     }
@@ -1012,6 +1203,7 @@ impl PolicyView for EdgeCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::FaultSchedule;
 
     struct LocalMin;
     impl Policy for LocalMin {
@@ -1151,7 +1343,14 @@ mod tests {
             .arrival_means(vec![0.0, 0.0])
             .build();
         let mut c = EdgeCluster::new(&sc, 0);
-        c.attach_exterior(Exterior::new(4, 2, 1.0, vec![1.0; 4], sc.hist_len));
+        c.attach_exterior(Exterior::new(
+            4,
+            2,
+            1.0,
+            vec![1.0; 4],
+            FaultSchedule::default(),
+            sc.hist_len,
+        ));
         assert_eq!(PolicyView::n_nodes(&c), 4);
         assert_eq!(c.observation(2).len(), 5 + 1 + 3 + 3);
         c.inject_request(0, 0.1); // local node 0 == global node 2
@@ -1189,6 +1388,7 @@ mod tests {
             0,
             1.0,
             vec![1.0; 4],
+            FaultSchedule::default(),
             sc0.hist_len,
         ));
         c0.inject_boundary(d);

@@ -67,6 +67,7 @@ impl TransferScheduler {
         for q in &mut self.queues {
             while let Some(head) = q.front() {
                 if head.finish <= now {
+                    // invariant: front() just returned Some
                     out.push(q.pop_front().unwrap().id);
                 } else {
                     break;
@@ -84,6 +85,7 @@ impl TransferScheduler {
         self.queues
             .iter()
             .filter_map(|q| q.front().map(|t| t.finish))
+            // invariant: finish times are finite profile sums, never NaN
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 }

@@ -29,7 +29,7 @@ use super::profiles::{Profiles, N_MODELS, N_RES};
 use super::request::{Action, Finished, Outcome, Request};
 use super::workload::{Workload, WorkloadConfig};
 use crate::config::EnvConfig;
-use crate::scenario::Scenario;
+use crate::scenario::{FaultKind, FaultSchedule, Scenario};
 
 /// Static simulator configuration, derived from a [`Scenario`] (or, for
 /// the paper-default setting, an [`EnvConfig`]).
@@ -51,6 +51,10 @@ pub struct SimConfig {
     /// take `delay / gpu_speed[i]` seconds (1.0 = profile-table baseline;
     /// heterogeneous scenarios spread this).
     pub gpu_speed: Vec<f64>,
+    /// Deterministic fault-injection timeline (chaos scenarios). Empty =
+    /// fault-free: every factor stays exactly 1.0 and no liveness branch
+    /// changes behavior, so pre-chaos runs are bit-identical.
+    pub faults: FaultSchedule,
 }
 
 impl SimConfig {
@@ -78,6 +82,7 @@ impl SimConfig {
             bandwidth: sc.bandwidth.clone(),
             profiles: sc.profiles.clone(),
             gpu_speed: sc.gpu_speed.clone(),
+            faults: sc.faults.clone(),
         }
     }
 
@@ -179,6 +184,17 @@ pub struct Simulator {
     gpu_busy_until: Vec<f64>,
     /// Arrival-rate history per node (most recent last).
     rate_hist: Vec<VecDeque<f64>>,
+    /// Liveness per node (false between `NodeDown` and `NodeUp` faults).
+    alive: Vec<bool>,
+    /// Multiplicative GPU overlay from `GpuDerate` faults (1.0 nominal).
+    gpu_factor: Vec<f64>,
+    /// Multiplicative per-node link overlay from `LinkDegrade` faults.
+    link_factor: Vec<f64>,
+    /// Index of the first fault event not yet applied.
+    fault_cursor: usize,
+    /// Requests destroyed by faults: queued work on a crashing node,
+    /// arrivals captured by a dead node, deliveries to a dead node.
+    lost_to_failure: u64,
     now: f64,
     slot: u64,
     next_id: u64,
@@ -201,6 +217,11 @@ impl Simulator {
             backlog: vec![BacklogTally::default(); n],
             gpu_busy_until: vec![0.0; n],
             rate_hist: (0..n).map(|_| VecDeque::new()).collect(),
+            alive: vec![true; n],
+            gpu_factor: vec![1.0; n],
+            link_factor: vec![1.0; n],
+            fault_cursor: 0,
+            lost_to_failure: 0,
             now: 0.0,
             slot: 0,
             next_id: 0,
@@ -244,6 +265,19 @@ impl Simulator {
         self.task_queues[i].len()
     }
 
+    /// Liveness of node i under the fault schedule (always true when the
+    /// scenario is fault-free).
+    pub fn node_alive(&self, i: usize) -> bool {
+        self.alive[i]
+    }
+
+    /// Requests destroyed by injected faults so far — the
+    /// `lost_to_failure` ledger column: conservation is
+    /// `arrived == finished + in_flight + lost_to_failure`.
+    pub fn lost_to_failure(&self) -> u64 {
+        self.lost_to_failure
+    }
+
     /// Estimated queuing delay at node i given current queue contents
     /// (Eq. 1): residual GPU busy time plus the inference seconds of every
     /// queued request, scaled by the node's GPU speed. O(N_MODELS * N_RES)
@@ -251,7 +285,8 @@ impl Simulator {
     pub fn queue_delay_estimate(&self, i: usize) -> f64 {
         let gpu_backlog = (self.gpu_busy_until[i] - self.now).max(0.0);
         gpu_backlog
-            + self.backlog[i].secs(&self.cfg.profiles) / self.cfg.gpu_speed[i]
+            + self.backlog[i].secs(&self.cfg.profiles)
+                / (self.cfg.gpu_speed[i] * self.gpu_factor[i])
     }
 
     /// Queued inference seconds at node i from the incremental tally.
@@ -274,8 +309,11 @@ impl Simulator {
         self.dispatch_queues[i * self.cfg.n_nodes + j].len()
     }
 
+    /// Effective link bandwidth: the traced `b_ij(t)` times the
+    /// `LinkDegrade` overlays of both endpoints (exactly `b_ij(t)` when
+    /// fault-free — `x * 1.0` is bitwise `x`).
     pub fn bandwidth_mbps(&self, i: usize, j: usize) -> f64 {
-        self.bandwidth.get(i, j)
+        self.bandwidth.get(i, j) * self.link_factor[i] * self.link_factor[j]
     }
 
     pub fn rate_history(&self, i: usize) -> impl Iterator<Item = f64> + '_ {
@@ -338,6 +376,12 @@ impl Simulator {
         out.finished.clear();
         out.dispatched = 0;
 
+        // 0. fault events due by this slot boundary take effect now (the
+        //    slot substrate quantizes the timeline to slot starts; the
+        //    event-driven substrate applies the same events at their
+        //    exact instants)
+        self.apply_faults_until(t0);
+
         self.bandwidth.step();
         self.workload.step_into(&mut out.rates, &mut out.arrivals);
         for i in 0..n {
@@ -352,15 +396,22 @@ impl Simulator {
             let a = actions[i];
             debug_assert!(a.edge < n);
             let count = out.arrivals[i];
+            if !self.alive[i] {
+                // a crashed node captures nothing: its arrivals are lost
+                // to failure (they still count as emitted work)
+                self.lost_to_failure += count as u64;
+                continue;
+            }
             for k in 0..count {
                 // spread arrivals uniformly inside the slot
                 let arrival = t0
                     + self.cfg.slot_secs * (k as f64 + 0.5)
                         / count as f64;
-                // preprocessing runs at the origin node's GPU speed
+                // preprocessing runs at the origin node's GPU speed,
+                // derated by any brownout in force
                 let ready = arrival
                     + self.cfg.profiles.preproc_delay[a.res]
-                        / self.cfg.gpu_speed[i];
+                        / (self.cfg.gpu_speed[i] * self.gpu_factor[i]);
                 let req = Request {
                     id: self.next_id,
                     origin: i,
@@ -391,7 +442,11 @@ impl Simulator {
                 if i == j {
                     continue;
                 }
-                let bw = self.bandwidth.get(i, j); // Mbps, constant in slot
+                // Mbps, constant in slot; both endpoints' flap overlays
+                // degrade the link
+                let bw = self.bandwidth.get(i, j)
+                    * self.link_factor[i]
+                    * self.link_factor[j];
                 let q = &mut self.dispatch_queues[i * n + j];
                 let mut cursor = t0; // link-time cursor within the slot
                 while let Some(head) = q.front_mut() {
@@ -403,12 +458,19 @@ impl Simulator {
                     let avail = (t1 - start) * bw; // Mbit transmittable
                     if head.mbits_left <= avail {
                         let finish = start + head.mbits_left / bw;
+                        // invariant: front_mut() just returned Some
                         let mut req = q.pop_front().unwrap();
                         req.mbits_left = 0.0;
                         req.ready = finish; // arrival instant at node j
                         cursor = finish;
-                        self.backlog[j].add(req.model, req.res);
-                        self.task_queues[j].push_back(req);
+                        if self.alive[j] {
+                            self.backlog[j].add(req.model, req.res);
+                            self.task_queues[j].push_back(req);
+                        } else {
+                            // delivered into a crashed node: the frame is
+                            // lost (the link time was still consumed)
+                            self.lost_to_failure += 1;
+                        }
                     } else {
                         head.mbits_left -= avail;
                         break;
@@ -417,14 +479,19 @@ impl Simulator {
             }
         }
 
-        // 3. serve each node's GPU for the slot duration (FIFO, Eq. 1-2)
+        // 3. serve each node's GPU for the slot duration (FIFO, Eq. 1-2);
+        //    a crashed node serves nothing (its queue was already lost)
         for i in 0..n {
+            if !self.alive[i] {
+                continue;
+            }
             let mut cursor = self.gpu_busy_until[i].max(t0);
             while let Some(head) = self.task_queues[i].front() {
                 let start = cursor.max(head.ready);
                 if start >= t1 {
                     break;
                 }
+                // invariant: front() just returned Some
                 let req = self.task_queues[i].pop_front().unwrap();
                 self.backlog[i].remove(req.model, req.res);
                 let waited = start - req.arrival;
@@ -434,7 +501,7 @@ impl Simulator {
                     continue;
                 }
                 let infer = self.cfg.profiles.infer_delay_of(req.model, req.res)
-                    / self.cfg.gpu_speed[i];
+                    / (self.cfg.gpu_speed[i] * self.gpu_factor[i]);
                 let complete = start + infer;
                 let delay = complete - req.arrival;
                 if delay > self.cfg.drop_threshold {
@@ -507,6 +574,35 @@ impl Simulator {
         self.slot += 1;
     }
 
+    /// Apply every fault event with `at <= t0` that has not been applied
+    /// yet. A crash destroys the node's queued work (lost to failure) and
+    /// forfeits its residual GPU busy time; completions already accounted
+    /// in earlier slots stand — the slot substrate's crash granularity.
+    fn apply_faults_until(&mut self, t0: f64) {
+        while let Some(&e) = self.cfg.faults.events().get(self.fault_cursor) {
+            if e.at > t0 {
+                break;
+            }
+            self.fault_cursor += 1;
+            match e.kind {
+                FaultKind::NodeDown => {
+                    self.alive[e.node] = false;
+                    while let Some(req) = self.task_queues[e.node].pop_front()
+                    {
+                        self.backlog[e.node].remove(req.model, req.res);
+                        self.lost_to_failure += 1;
+                    }
+                    if self.gpu_busy_until[e.node] > t0 {
+                        self.gpu_busy_until[e.node] = t0;
+                    }
+                }
+                FaultKind::NodeUp => self.alive[e.node] = true,
+                FaultKind::GpuDerate(f) => self.gpu_factor[e.node] = f,
+                FaultKind::LinkDegrade(f) => self.link_factor[e.node] = f,
+            }
+        }
+    }
+
     fn drop(&self, req: &Request, node: usize, delay: f64) -> Finished {
         // Eq. (5), d > T
         let perf = -self.cfg.omega * self.cfg.drop_penalty;
@@ -549,7 +645,15 @@ impl crate::policy::PolicyView for Simulator {
     }
 
     fn bandwidth_mbps(&self, from: usize, to: usize) -> f64 {
-        self.bandwidth.get(from, to)
+        Simulator::bandwidth_mbps(self, from, to)
+    }
+
+    fn is_alive(&self, node: usize) -> bool {
+        self.alive[node]
+    }
+
+    fn effective_gpu_speed(&self, node: usize) -> f64 {
+        self.cfg.gpu_speed[node] * self.gpu_factor[node]
     }
 
     fn for_each_rate(&self, node: usize, f: &mut dyn FnMut(f64)) {

@@ -265,8 +265,8 @@ impl<'rt> ExpContext<'rt> {
         }
         let p4 = self.results.join("fig4_distributions.csv");
         let p5 = self.results.join("fig5_metrics.csv");
-        write_method_csv(p4.to_str().unwrap(), &rows)?;
-        write_method_csv(p5.to_str().unwrap(), &rows)?;
+        write_method_csv(&p4, &rows)?;
+        write_method_csv(&p5, &rows)?;
         eprintln!("[exp] wrote {} and {}", p4.display(), p5.display());
         Ok(())
     }
@@ -283,7 +283,7 @@ impl<'rt> ExpContext<'rt> {
             }
         }
         let path = self.results.join("fig6_comparison.csv");
-        write_method_csv(path.to_str().unwrap(), &rows)?;
+        write_method_csv(&path, &rows)?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -299,7 +299,7 @@ impl<'rt> ExpContext<'rt> {
             rows.push(self.summary_heuristic(h, omega)?);
         }
         let path = self.results.join("fig7_breakdown.csv");
-        write_method_csv(path.to_str().unwrap(), &rows)?;
+        write_method_csv(&path, &rows)?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -317,7 +317,7 @@ impl<'rt> ExpContext<'rt> {
             }
         }
         let path = self.results.join("fig8_ablation.csv");
-        write_method_csv(path.to_str().unwrap(), &rows)?;
+        write_method_csv(&path, &rows)?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -390,6 +390,7 @@ impl<'rt> ExpContext<'rt> {
                 "completed",
                 "dropped",
                 "residual",
+                "lost_to_failure",
                 "dispatched",
                 "throughput_rps",
                 "p95_latency",
@@ -404,6 +405,7 @@ impl<'rt> ExpContext<'rt> {
                 r.completed.to_string(),
                 r.dropped.to_string(),
                 r.residual.to_string(),
+                r.lost_to_failure.to_string(),
                 r.dispatched.to_string(),
                 format!("{:.3}", r.throughput_rps),
                 format!("{:.4}", r.p95_latency),

@@ -19,8 +19,11 @@
 //!   the same `(policy, scenario, duration, seed)`.
 //! * Multi-shard runs are seed-deterministic across repeated executions.
 //! * [`FleetReport`] conservation holds globally:
-//!   `emitted == completed + dropped + residual`, counting cross-shard
-//!   requests still on the backhaul at the horizon.
+//!   `emitted == completed + dropped + lost_to_failure + residual`,
+//!   counting cross-shard requests still on the backhaul at the horizon
+//!   (`lost_to_failure` is zero unless the scenario injects faults; the
+//!   planner hands each shard its slice of the global fault timeline, so
+//!   chaos scenarios hold this at every shard count).
 //! * Per-shard steady-state stepping stays zero-alloc
 //!   (`tests/alloc_probe.rs`).
 //!
@@ -73,6 +76,7 @@ pub fn sweep_to_csv(
             "completed",
             "dropped",
             "residual",
+            "lost_to_failure",
             "cross_shard",
             "cross_in_flight",
             "throughput_rps",
@@ -85,6 +89,7 @@ pub fn sweep_to_csv(
             "shard_emitted_min",
             "shard_emitted_max",
             "shard_drop_rate_max",
+            "stall_frac",
             "wall_secs",
         ],
     )?;
@@ -125,6 +130,15 @@ pub fn sweep_to_csv(
                 .iter()
                 .map(|s| s.drop_rate)
                 .fold(0.0, f64::max);
+            // mean barrier-stall fraction across shards — how much of the
+            // wall-clock the lock-step epochs burned waiting (measured,
+            // so this column varies run to run)
+            let stall_mean = report
+                .shard_stats
+                .iter()
+                .map(|s| s.stall_frac)
+                .sum::<f64>()
+                / report.shard_stats.len().max(1) as f64;
             w.row(&[
                 name.to_string(),
                 shards.to_string(),
@@ -134,6 +148,7 @@ pub fn sweep_to_csv(
                 report.completed.to_string(),
                 report.dropped.to_string(),
                 report.residual.to_string(),
+                report.lost_to_failure.to_string(),
                 report.cross_dispatches.to_string(),
                 report.cross_in_flight.to_string(),
                 format!("{:.3}", report.throughput_rps),
@@ -146,6 +161,7 @@ pub fn sweep_to_csv(
                 em_min.to_string(),
                 em_max.to_string(),
                 format!("{drop_max:.4}"),
+                format!("{stall_mean:.4}"),
                 format!("{:.3}", report.wall_secs),
             ])?;
             reports.push(report);
@@ -178,6 +194,8 @@ mod tests {
         let header = text.lines().next().unwrap();
         assert!(header.contains("util_mean"));
         assert!(header.contains("cross_shard"));
+        assert!(header.contains("lost_to_failure"));
+        assert!(header.contains("stall_frac"));
         assert_eq!(text.lines().count(), 3);
         let _ = std::fs::remove_dir_all(&dir);
     }

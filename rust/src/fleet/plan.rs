@@ -167,6 +167,11 @@ impl ShardPlan {
         sub.workload.means = self.scenario.workload.means[lo..hi].to_vec();
         sub.gpu_speed = self.scenario.gpu_speed[lo..hi].to_vec();
         sub.bandwidth.n_nodes = hi - lo;
+        // each shard replays exactly its own slice of the global fault
+        // timeline, translated to shard-local node indices; the union of
+        // the restrictions is the whole schedule, so fleet-level
+        // `lost_to_failure` aggregates to the unsharded count
+        sub.faults = self.scenario.faults.restrict(lo, hi);
         sub.validate();
         sub
     }

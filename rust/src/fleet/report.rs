@@ -6,9 +6,10 @@ use crate::util::stats::{mean, percentile};
 
 /// Aggregate of every shard's [`ServingReport`] plus the cross-shard
 /// accounting. Global conservation:
-/// `emitted == completed + dropped + residual`, where `residual` counts
-/// in-shard in-flight requests **and** cross-shard dispatches still in
-/// the fleet mailbox at the horizon.
+/// `emitted == completed + dropped + lost_to_failure + residual`, where
+/// `residual` counts in-shard in-flight requests **and** cross-shard
+/// dispatches still in the fleet mailbox at the horizon, and
+/// `lost_to_failure` is zero unless the scenario injects faults.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub scenario: String,
@@ -23,6 +24,8 @@ pub struct FleetReport {
     /// In flight at the horizon: queued / batching / on-link inside
     /// shards plus `cross_in_flight`.
     pub residual: usize,
+    /// Requests destroyed by injected faults across every shard.
+    pub lost_to_failure: usize,
     /// Requests that crossed a shard boundary (sum of shard exports).
     pub cross_dispatches: usize,
     /// Cross-shard dispatches still undelivered at the horizon.
@@ -59,6 +62,8 @@ impl FleetReport {
         let completed: usize = per_shard.iter().map(|r| r.completed).sum();
         let dropped: usize = per_shard.iter().map(|r| r.dropped).sum();
         let shard_residual: usize = per_shard.iter().map(|r| r.residual).sum();
+        let lost_to_failure: usize =
+            per_shard.iter().map(|r| r.lost_to_failure).sum();
         let cross_dispatches: usize =
             per_shard.iter().map(|r| r.exported).sum();
         let acc_weighted: f64 = per_shard
@@ -74,6 +79,7 @@ impl FleetReport {
             completed,
             dropped,
             residual: shard_residual + cross_in_flight,
+            lost_to_failure,
             cross_dispatches,
             cross_in_flight,
             virtual_secs,
@@ -94,11 +100,16 @@ impl FleetReport {
     }
 
     /// Global request conservation, including cross-shard traffic: every
-    /// camera-emitted request is completed, dropped, or in flight
-    /// somewhere (in a shard or on the cross-shard backhaul) — and every
-    /// shard's own boundary-aware accounting balances too.
+    /// camera-emitted request is completed, dropped, destroyed by a
+    /// fault, or in flight somewhere (in a shard or on the cross-shard
+    /// backhaul) — and every shard's own boundary-aware accounting
+    /// balances too.
     pub fn conserved(&self) -> bool {
-        self.emitted == self.completed + self.dropped + self.residual
+        self.emitted
+            == self.completed
+                + self.dropped
+                + self.lost_to_failure
+                + self.residual
             && self.per_shard.iter().all(|r| r.conserved())
     }
 
@@ -124,6 +135,12 @@ impl FleetReport {
             "  residual        {} ({} on the cross-shard backhaul)",
             self.residual, self.cross_in_flight
         );
+        if self.lost_to_failure > 0 {
+            println!(
+                "  lost to failure {} (destroyed by injected faults)",
+                self.lost_to_failure
+            );
+        }
         println!("  cross-shard     {} dispatches", self.cross_dispatches);
         println!(
             "  throughput      {:.1} req/s over {:.0}s virtual ({:.2}s wall)",
@@ -146,14 +163,15 @@ impl FleetReport {
         );
         for s in &self.shard_stats {
             println!(
-                "    shard {:<3} {} nodes  emitted {:>6}  in/out {:>5}/{:<5} util {:>5.1}%  drop {:>5.1}%",
+                "    shard {:<3} {} nodes  emitted {:>6}  in/out {:>5}/{:<5} util {:>5.1}%  drop {:>5.1}%  stall {:>5.1}%",
                 s.shard,
                 s.nodes,
                 s.emitted,
                 s.imported,
                 s.exported,
                 100.0 * s.utilization,
-                100.0 * s.drop_rate
+                100.0 * s.drop_rate,
+                100.0 * s.stall_frac
             );
         }
     }

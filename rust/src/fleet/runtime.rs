@@ -21,7 +21,7 @@
 //! of thread interleaving.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -182,6 +182,9 @@ impl Fleet {
                         plan.ranges[k].0,
                         plan.cross_mbps,
                         plan.scenario.gpu_speed.clone(),
+                        // the GLOBAL fault timeline: remote liveness
+                        // queries answer exactly, never barrier-stale
+                        plan.scenario.faults.clone(),
                         hist,
                     )
                 });
@@ -284,11 +287,13 @@ impl Fleet {
             );
             anyhow::ensure!(
                 report.conserved(),
-                "fleet leaked requests: global emitted {} vs {} + {} + {}; \
+                "fleet leaked requests: global emitted {} vs completed {} \
+                 + dropped {} + lost_to_failure {} + residual {}; \
                  per-shard boundary conservation: {:?}",
                 report.emitted,
                 report.completed,
                 report.dropped,
+                report.lost_to_failure,
                 report.residual,
                 report
                     .per_shard
@@ -336,9 +341,15 @@ fn shard_worker(
     let mut policy = factory.build(shard, n_view, wseed)?;
     policy.reset(wseed);
     let mut compute = ProfileCompute::new(sub.profiles.clone());
+    // barrier-stall telemetry: wall-clock spent recv-blocked waiting for
+    // the coordinator (the lock-step tax a slow sibling shard imposes)
+    let wall_start = Instant::now();
+    let mut stalled = Duration::ZERO;
     loop {
         // a closed channel means the coordinator bailed; just exit
+        let wait_start = Instant::now();
         let Ok(msg) = rx.recv() else { return Ok(()) };
+        stalled += wait_start.elapsed();
         match msg {
             ToWorker::Step {
                 until,
@@ -379,8 +390,12 @@ fn shard_worker(
                     .filter(|r| !r.dropped)
                     .map(|r| r.latency())
                     .collect();
-                let stats =
+                let mut stats =
                     ShardStats::from_cluster(shard, &cluster, horizon);
+                stats.set_stall(
+                    stalled.as_secs_f64(),
+                    wall_start.elapsed().as_secs_f64(),
+                );
                 let _ = tx.send(Ok(WorkerMsg::Done(Box::new(ShardOutcome {
                     report,
                     stats,

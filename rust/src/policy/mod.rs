@@ -129,6 +129,24 @@ pub trait PolicyView {
         1.0
     }
 
+    /// Liveness of `node` under the scenario's fault schedule: `false`
+    /// while the node is crashed. This is the ONLY signal that reveals a
+    /// crash — a dead node's queue telemetry reads empty/zero, so
+    /// failure-oblivious policies keep routing into it and pay in
+    /// `lost_to_failure`. Defaults to always-alive, so fault-free views
+    /// need no implementation.
+    fn is_alive(&self, node: usize) -> bool {
+        let _ = node;
+        true
+    }
+
+    /// GPU speed of `node` after fault derating (brownout / thermal
+    /// throttle): `gpu_speed(node)` scaled by the derate factor in
+    /// force. Fault-free views fall through to the nominal speed.
+    fn effective_gpu_speed(&self, node: usize) -> f64 {
+        self.gpu_speed(node)
+    }
+
     /// Delay penalty weight omega (Eq. 5).
     fn omega(&self) -> f64;
 

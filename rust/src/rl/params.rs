@@ -130,6 +130,8 @@ impl ParamStore {
             outs.len(),
             3 * p + 2
         );
+        // invariant: the ensure! above guarantees 3p + 2 >= 2 outputs,
+        // so both pops succeed
         let metrics = to_vec_f32(&outs.pop().unwrap())?;
         self.step = outs.pop().unwrap();
         self.adam_v = outs.split_off(2 * p);
@@ -179,6 +181,7 @@ impl ParamStore {
         anyhow::ensure!(bytes.len() % 4 == 0, "checkpoint not f32-aligned");
         let blob: Vec<f32> = bytes
             .chunks_exact(4)
+            // invariant: chunks_exact(4) yields exactly-4-byte slices
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         Self::from_blob(leaves, &blob)

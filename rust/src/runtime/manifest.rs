@@ -229,6 +229,7 @@ impl Manifest {
         );
         let mut out = Vec::with_capacity(expect_elems);
         for chunk in bytes.chunks_exact(4) {
+            // invariant: chunks_exact(4) yields exactly-4-byte slices
             out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
         Ok(out)

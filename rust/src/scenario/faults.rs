@@ -1,0 +1,364 @@
+//! Fault-injection schedules — deterministic chaos as scenario data.
+//!
+//! A [`FaultSchedule`] is a sorted timeline of [`FaultEvent`]s (node
+//! crash/recover, GPU brownout/thermal-throttle, link flap/degrade) that
+//! rides on a [`crate::scenario::Scenario`] like any other regime field:
+//! plain comparable data, no RNG, so the same descriptor always injects
+//! the same faults and both execution substrates (the slot `Simulator`
+//! and the event-driven `EdgeCluster`) replay an identical timeline.
+//! An empty schedule is the fault-free default — every pre-existing
+//! scenario keeps its exact behavior, and the hot paths only consult the
+//! schedule when it is non-empty.
+//!
+//! Accounting contract: work destroyed by a fault is **lost to
+//! failure**, a first-class ledger column. The conservation form every
+//! report checks extends to
+//! `emitted == completed + dropped + lost_to_failure + residual`
+//! (plus the import/export terms at shard boundaries), and fault-free
+//! runs must keep `lost_to_failure == 0` exactly.
+
+/// What a single fault event does to its target node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The node crashes: everything queued or in service there is lost
+    /// to failure, and arrivals/dispatches touching it are lost until it
+    /// recovers. A crashed node's *stale telemetry* (empty queue, zero
+    /// delay estimate) stays visible through `PolicyView`, so
+    /// failure-oblivious policies keep routing into the hole — only the
+    /// `is_alive` surface reveals the crash.
+    NodeDown,
+    /// The crashed node rejoins with empty queues.
+    NodeUp,
+    /// GPU brownout / thermal throttle: the node serves at
+    /// `factor x` its nominal `gpu_speed` until restored. `1.0` restores
+    /// nominal; in-flight batches keep their already-scheduled finish.
+    GpuDerate(f64),
+    /// Link flap / degrade: every link touching the node carries
+    /// `factor x` its traced bandwidth (new transfers only). `1.0`
+    /// restores the trace.
+    LinkDegrade(f64),
+}
+
+/// One fault at an absolute virtual-time instant, targeting one node
+/// (indices are scenario-global; the fleet planner translates them to
+/// shard-local indices when partitioning).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute virtual time in seconds.
+    pub at: f64,
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault timeline, kept sorted by `(at, node)`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The timeline, sorted by `(at, node)`.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Add one event, keeping the timeline sorted (stable, so two events
+    /// on the same node at the same instant keep insertion order).
+    pub fn push(&mut self, at: f64, node: usize, kind: FaultKind) {
+        self.events.push(FaultEvent { at, node, kind });
+        self.events
+            .sort_by(|a, b| a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)));
+    }
+
+    /// Liveness of `node` at virtual time `now`: the last
+    /// `NodeDown`/`NodeUp` with `at <= now` wins (nodes start alive).
+    /// Matches the event-driven substrate exactly, which applies a fault
+    /// event before any same-instant work (fault events carry the lowest
+    /// sequence numbers at their timestamp).
+    pub fn alive_at(&self, node: usize, now: f64) -> bool {
+        let mut alive = true;
+        for e in &self.events {
+            if e.at > now {
+                break;
+            }
+            if e.node == node {
+                match e.kind {
+                    FaultKind::NodeDown => alive = false,
+                    FaultKind::NodeUp => alive = true,
+                    _ => {}
+                }
+            }
+        }
+        alive
+    }
+
+    /// GPU derate factor in force at `node` at time `now` (1.0 nominal).
+    pub fn gpu_factor_at(&self, node: usize, now: f64) -> f64 {
+        let mut factor = 1.0;
+        for e in &self.events {
+            if e.at > now {
+                break;
+            }
+            if e.node == node {
+                if let FaultKind::GpuDerate(f) = e.kind {
+                    factor = f;
+                }
+            }
+        }
+        factor
+    }
+
+    /// Link degrade factor in force at `node` at time `now` (1.0 nominal).
+    pub fn link_factor_at(&self, node: usize, now: f64) -> f64 {
+        let mut factor = 1.0;
+        for e in &self.events {
+            if e.at > now {
+                break;
+            }
+            if e.node == node {
+                if let FaultKind::LinkDegrade(f) = e.kind {
+                    factor = f;
+                }
+            }
+        }
+        factor
+    }
+
+    /// The sub-schedule touching nodes in `[lo, hi)`, with node indices
+    /// translated to be `lo`-relative — how the fleet planner hands each
+    /// shard exactly its own faults.
+    pub fn restrict(&self, lo: usize, hi: usize) -> FaultSchedule {
+        FaultSchedule {
+            events: self
+                .events
+                .iter()
+                .filter(|e| e.node >= lo && e.node < hi)
+                .map(|e| FaultEvent { node: e.node - lo, ..*e })
+                .collect(),
+        }
+    }
+
+    /// Re-target the timeline onto an `n`-node cluster by wrapping node
+    /// indices (`node % n`) — the fault half of `cycle_nodes`, so a
+    /// customized chaos descriptor survives rescaling like every other
+    /// per-node field.
+    pub fn cycled(mut self, n: usize) -> FaultSchedule {
+        for e in &mut self.events {
+            e.node %= n;
+        }
+        self.events
+            .sort_by(|a, b| a.at.total_cmp(&b.at).then(a.node.cmp(&b.node)));
+        self
+    }
+
+    /// Panic unless the timeline is well-formed for an `n_nodes` cluster:
+    /// sorted, finite non-negative times, in-range nodes, and positive
+    /// derate factors (a zero link factor would schedule an infinite
+    /// transfer; a crash is what `NodeDown` is for).
+    pub fn validate(&self, n_nodes: usize, scenario: &str) {
+        for w in self.events.windows(2) {
+            assert!(
+                w[0].at <= w[1].at,
+                "scenario {scenario}: fault schedule must be time-sorted"
+            );
+        }
+        for e in &self.events {
+            assert!(
+                e.at.is_finite() && e.at >= 0.0,
+                "scenario {scenario}: fault time {} invalid",
+                e.at
+            );
+            assert!(
+                e.node < n_nodes,
+                "scenario {scenario}: fault targets node {} of {n_nodes}",
+                e.node
+            );
+            match e.kind {
+                FaultKind::GpuDerate(f) | FaultKind::LinkDegrade(f) => {
+                    assert!(
+                        f > 0.0 && f.is_finite(),
+                        "scenario {scenario}: derate factor {f} must be \
+                         positive and finite (use NodeDown for a crash)"
+                    );
+                }
+                FaultKind::NodeDown | FaultKind::NodeUp => {}
+            }
+        }
+    }
+
+    /// Rotating crash/recover pattern: node `i % n_nodes` goes down at
+    /// `start + i * period` and recovers `downtime` later, for every
+    /// window starting before `horizon`. With `downtime < period` at
+    /// most one node is dead at a time.
+    pub fn rotating_churn(
+        n_nodes: usize,
+        start: f64,
+        period: f64,
+        downtime: f64,
+        horizon: f64,
+    ) -> FaultSchedule {
+        let mut s = FaultSchedule::new();
+        let mut i = 0usize;
+        loop {
+            let at = start + i as f64 * period;
+            if at >= horizon {
+                break;
+            }
+            s.push(at, i % n_nodes, FaultKind::NodeDown);
+            s.push(at + downtime, i % n_nodes, FaultKind::NodeUp);
+            i += 1;
+        }
+        s
+    }
+
+    /// Rotating link flap: the links touching node `i % n_nodes` drop to
+    /// `factor x` bandwidth at `start + i * period` and restore
+    /// `downtime` later.
+    pub fn rotating_link_flap(
+        n_nodes: usize,
+        start: f64,
+        period: f64,
+        downtime: f64,
+        factor: f64,
+        horizon: f64,
+    ) -> FaultSchedule {
+        let mut s = FaultSchedule::new();
+        let mut i = 0usize;
+        loop {
+            let at = start + i as f64 * period;
+            if at >= horizon {
+                break;
+            }
+            s.push(at, i % n_nodes, FaultKind::LinkDegrade(factor));
+            s.push(at + downtime, i % n_nodes, FaultKind::LinkDegrade(1.0));
+            i += 1;
+        }
+        s
+    }
+
+    /// Rotating GPU brownout: node `i % n_nodes` serves at `factor x`
+    /// nominal speed from `start + i * period` until `downtime` later.
+    pub fn rotating_brownout(
+        n_nodes: usize,
+        start: f64,
+        period: f64,
+        downtime: f64,
+        factor: f64,
+        horizon: f64,
+    ) -> FaultSchedule {
+        let mut s = FaultSchedule::new();
+        let mut i = 0usize;
+        loop {
+            let at = start + i as f64 * period;
+            if at >= horizon {
+                break;
+            }
+            s.push(at, i % n_nodes, FaultKind::GpuDerate(factor));
+            s.push(at + downtime, i % n_nodes, FaultKind::GpuDerate(1.0));
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn liveness_follows_the_timeline() {
+        let mut s = FaultSchedule::new();
+        s.push(1.0, 0, FaultKind::NodeDown);
+        s.push(2.5, 0, FaultKind::NodeUp);
+        assert!(s.alive_at(0, 0.0));
+        assert!(s.alive_at(0, 0.999));
+        assert!(!s.alive_at(0, 1.0), "fault applies at its instant");
+        assert!(!s.alive_at(0, 2.4));
+        assert!(s.alive_at(0, 2.5));
+        assert!(s.alive_at(1, 1.5), "other nodes unaffected");
+    }
+
+    #[test]
+    fn factors_follow_the_timeline() {
+        let mut s = FaultSchedule::new();
+        s.push(1.0, 1, FaultKind::GpuDerate(0.25));
+        s.push(3.0, 1, FaultKind::GpuDerate(1.0));
+        s.push(2.0, 0, FaultKind::LinkDegrade(0.05));
+        assert_eq!(s.gpu_factor_at(1, 0.5), 1.0);
+        assert_eq!(s.gpu_factor_at(1, 2.0), 0.25);
+        assert_eq!(s.gpu_factor_at(1, 3.0), 1.0);
+        assert_eq!(s.link_factor_at(0, 2.0), 0.05);
+        assert_eq!(s.link_factor_at(1, 2.0), 1.0);
+    }
+
+    #[test]
+    fn push_keeps_the_timeline_sorted() {
+        let mut s = FaultSchedule::new();
+        s.push(5.0, 0, FaultKind::NodeDown);
+        s.push(1.0, 2, FaultKind::NodeDown);
+        s.push(1.0, 1, FaultKind::NodeUp);
+        let times: Vec<(f64, usize)> =
+            s.events().iter().map(|e| (e.at, e.node)).collect();
+        assert_eq!(times, vec![(1.0, 1), (1.0, 2), (5.0, 0)]);
+        s.validate(3, "test");
+    }
+
+    #[test]
+    fn restrict_translates_to_local_indices() {
+        let mut s = FaultSchedule::new();
+        s.push(1.0, 0, FaultKind::NodeDown);
+        s.push(2.0, 5, FaultKind::GpuDerate(0.5));
+        s.push(3.0, 7, FaultKind::NodeUp);
+        let shard = s.restrict(4, 8);
+        assert_eq!(shard.len(), 2);
+        assert_eq!(shard.events()[0].node, 1);
+        assert_eq!(shard.events()[1].node, 3);
+        shard.validate(4, "test");
+        // the union of shard restrictions is the whole schedule
+        assert_eq!(s.restrict(0, 4).len() + shard.len(), s.len());
+    }
+
+    #[test]
+    fn cycled_wraps_node_indices() {
+        let mut s = FaultSchedule::new();
+        s.push(1.0, 6, FaultKind::NodeDown);
+        let c = s.clone().cycled(4);
+        assert_eq!(c.events()[0].node, 2);
+        c.validate(4, "test");
+        // growing the cluster keeps indices
+        assert_eq!(s.cycled(16).events()[0].node, 6);
+    }
+
+    #[test]
+    fn rotating_generators_are_deterministic_and_bounded() {
+        let a = FaultSchedule::rotating_churn(4, 1.0, 2.5, 1.25, 120.0);
+        let b = FaultSchedule::rotating_churn(4, 1.0, 2.5, 1.25, 120.0);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        a.validate(4, "test");
+        // exactly one node dead during a downtime window
+        let dead: Vec<usize> =
+            (0..4).filter(|n| !a.alive_at(*n, 1.5)).collect();
+        assert_eq!(dead, vec![0]);
+        assert!((0..4).all(|n| a.alive_at(n, 2.4)));
+        // single-node clusters are legal chaos targets
+        FaultSchedule::rotating_churn(1, 1.0, 2.5, 1.25, 60.0)
+            .validate(1, "test");
+        FaultSchedule::rotating_brownout(3, 1.0, 3.0, 2.0, 0.25, 60.0)
+            .validate(3, "test");
+        FaultSchedule::rotating_link_flap(3, 1.5, 3.0, 1.5, 0.05, 60.0)
+            .validate(3, "test");
+    }
+}

@@ -27,6 +27,15 @@
 //! | `link-degraded` | healthy arrivals over 0.5–4 Mbps links — dispatching is expensive |
 //! | `hetero-nodes`  | uniform arrivals, heterogeneous GPUs (1.6x / 1.0x / 1.0x / 0.45x) |
 //! | `hotspot`       | one node receives an order of magnitude more traffic than the rest (means 4.0 vs 0.35) |
+//! | `node-churn`    | steady load + rotating node crash/recover (one node dead ~half the time) |
+//! | `link-flap`     | paper load, but links touching a rotating node collapse to 5% bandwidth |
+//! | `brownout`      | uniform load + rotating GPU thermal throttle to 25% speed |
+//!
+//! The last three are the **chaos registry**: their [`FaultSchedule`] is
+//! deterministic scenario data (no RNG), both substrates replay it
+//! identically, and work destroyed by a fault lands in the
+//! `lost_to_failure` ledger column. Fault-free entries carry an empty
+//! schedule and must report `lost_to_failure == 0` exactly.
 
 use anyhow::{bail, Result};
 
@@ -34,6 +43,9 @@ use crate::config::EnvConfig;
 use crate::env::bandwidth::BandwidthConfig;
 use crate::env::profiles::Profiles;
 use crate::env::workload::WorkloadConfig;
+
+mod faults;
+pub use faults::{FaultEvent, FaultKind, FaultSchedule};
 
 /// Everything that parameterizes a simulator episode or a serving run.
 /// Build one from the registry ([`Scenario::by_name`]), from an
@@ -77,6 +89,10 @@ pub struct Scenario {
     /// and bounds the fleet's epoch length: Δ ≤ min frame size /
     /// `cross_mbps`. Ignored by unsharded runs.
     pub cross_mbps: f64,
+    /// Deterministic fault timeline (node crash/recover, GPU brownout,
+    /// link flap) applied by both substrates. Empty = fault-free, and
+    /// the hot paths never consult an empty schedule.
+    pub faults: FaultSchedule,
 }
 
 impl Default for Scenario {
@@ -119,6 +135,7 @@ impl Scenario {
             max_batch: 8,
             batch_wait: 0.004,
             cross_mbps: env.bw_min_mbps,
+            faults: FaultSchedule::default(),
         }
     }
 
@@ -132,6 +149,9 @@ impl Scenario {
             "link-degraded",
             "hetero-nodes",
             "hotspot",
+            "node-churn",
+            "link-flap",
+            "brownout",
         ]
     }
 
@@ -201,6 +221,55 @@ impl Scenario {
                 s.workload.means = (0..n)
                     .map(|i| if i == n - 1 { 4.0 } else { 0.35 })
                     .collect();
+                s
+            }
+            // --- chaos registry: deterministic fault timelines ---------
+            "node-churn" => {
+                // steady uniform load so the only disturbance is the
+                // churn itself; one rotating node dead half the time
+                let mut s = base("node-churn");
+                s.workload.means = vec![1.0; s.n_nodes];
+                s.workload.diurnal_amp = 0.0;
+                s.workload.burst_prob = 0.0;
+                s.workload.noise = 0.05;
+                s.faults = FaultSchedule::rotating_churn(
+                    s.n_nodes,
+                    1.0,
+                    2.5,
+                    1.25,
+                    120.0,
+                );
+                s
+            }
+            "link-flap" => {
+                // paper arrivals, but the links touching a rotating node
+                // collapse to 5% of their traced bandwidth
+                let mut s = base("link-flap");
+                s.faults = FaultSchedule::rotating_link_flap(
+                    s.n_nodes,
+                    1.5,
+                    3.0,
+                    1.5,
+                    0.05,
+                    120.0,
+                );
+                s
+            }
+            "brownout" => {
+                // uniform moderate load + rotating thermal throttle: the
+                // browned-out GPU serves at a quarter speed
+                let mut s = base("brownout");
+                s.workload.means = vec![1.3; s.n_nodes];
+                s.workload.diurnal_amp = 0.0;
+                s.workload.burst_prob = 0.0;
+                s.faults = FaultSchedule::rotating_brownout(
+                    s.n_nodes,
+                    1.0,
+                    3.0,
+                    2.0,
+                    0.25,
+                    120.0,
+                );
                 s
             }
             other => bail!(
@@ -290,6 +359,7 @@ impl Scenario {
             "scenario {}: cross-shard bandwidth must be positive",
             self.name
         );
+        self.faults.validate(self.n_nodes, &self.name);
     }
 }
 
@@ -303,6 +373,7 @@ fn cycle_nodes(mut s: Scenario, n: usize) -> Scenario {
     s.workload.means = (0..n).map(|i| means[i % means.len()]).collect();
     let speeds = std::mem::take(&mut s.gpu_speed);
     s.gpu_speed = (0..n).map(|i| speeds[i % speeds.len()]).collect();
+    s.faults = std::mem::take(&mut s.faults).cycled(n);
     s.bandwidth.n_nodes = n;
     s.n_nodes = n;
     s
@@ -409,6 +480,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach a fault timeline (validated against the node count at
+    /// [`ScenarioBuilder::build`]).
+    pub fn faults(mut self, faults: FaultSchedule) -> Self {
+        self.s.faults = faults;
+        self
+    }
+
     pub fn build(mut self) -> Scenario {
         if let Some(cross) = self.cross_override {
             self.s.cross_mbps = cross;
@@ -506,6 +584,29 @@ mod tests {
         assert_eq!(scaled.omega, 15.0);
         assert_eq!(scaled.n_nodes, 8);
         assert_eq!(scaled.workload.means.len(), 8);
+    }
+
+    #[test]
+    fn chaos_entries_carry_fault_schedules() {
+        for name in ["node-churn", "link-flap", "brownout"] {
+            let s = Scenario::by_name(name).unwrap();
+            assert!(!s.faults.is_empty(), "{name} must inject faults");
+            s.validate();
+            // deterministic: the registry always yields the same timeline
+            assert_eq!(s.faults, Scenario::by_name(name).unwrap().faults);
+            // rescaling keeps a valid, non-empty schedule
+            for n in [1usize, 3, 16] {
+                let at = Scenario::at_nodes(name, n).unwrap();
+                assert!(!at.faults.is_empty(), "{name} at {n}");
+                at.validate();
+            }
+        }
+        // every pre-existing entry stays fault-free
+        for name in Scenario::names() {
+            if !["node-churn", "link-flap", "brownout"].contains(name) {
+                assert!(Scenario::by_name(name).unwrap().faults.is_empty());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Dep-free heuristic serving comparison — every registered baseline
+//! (including the failure-aware [`crate::baselines::FailoverController`]
+//! wrapper) on the event-driven serving engine, one conservation-checked
+//! row per (scenario, method).
+//!
+//! This is the chaos-scenario acceptance surface: CI smoke-runs it over
+//! the fault-injection registry entries (`node-churn`, `link-flap`,
+//! `brownout`) without the PJRT stack, and the row set makes the headline
+//! contrast auditable — `failover_shortest_queue_min` must complete
+//! strictly more requests than the failure-oblivious
+//! `shortest_queue_min` under `node-churn`, because only the former reads
+//! the liveness surface instead of the crashed node's stale zero-delay
+//! telemetry. The PJRT experiments harness
+//! (`experiments::serving_comparison`) adds the trained actor on top of
+//! the same sweep; columns match so downstream tooling reads either file.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::scenario::Scenario;
+use crate::serving::engine::{serve_scenario, ServingReport};
+use crate::util::csv::CsvWriter;
+
+/// Run every heuristic baseline under every named scenario. Each report
+/// is conservation-checked (extended ledger — faults included), and
+/// fault-free scenarios are additionally pinned to `lost_to_failure == 0`.
+/// Deterministic in `seed`: repeated calls yield identical rows.
+pub fn comparison_rows(
+    scenario_names: &[&str],
+    duration_virtual_secs: f64,
+    seed: u64,
+) -> Result<Vec<(String, String, ServingReport)>> {
+    let mut rows = Vec::new();
+    for name in scenario_names {
+        let scenario = Scenario::by_name(name)?;
+        for h in baselines::HEURISTICS {
+            // same construction-seed salt as the PJRT sweep: reset mixes
+            // the run seed multiplicatively, so salting here keeps the
+            // pair seed-dependent without cancellation
+            let mut policy = baselines::by_name(
+                h,
+                scenario.n_nodes,
+                seed ^ 0x5EED_BA5E,
+            )?;
+            let report = serve_scenario(
+                policy.as_mut(),
+                &scenario,
+                duration_virtual_secs,
+                seed,
+            )?;
+            anyhow::ensure!(
+                report.conserved(),
+                "{h} leaked requests under scenario {name}"
+            );
+            anyhow::ensure!(
+                !scenario.faults.is_empty() || report.lost_to_failure == 0,
+                "{h} lost {} requests to failure under fault-free {name}",
+                report.lost_to_failure
+            );
+            rows.push((name.to_string(), h.to_string(), report));
+        }
+    }
+    Ok(rows)
+}
+
+/// [`comparison_rows`] plus the CSV emit — the dep-free producer of
+/// `results/serving_comparison.csv` (column-compatible with the PJRT
+/// experiments harness, minus its trained-actor rows).
+pub fn comparison_to_csv(
+    scenario_names: &[&str],
+    duration_virtual_secs: f64,
+    seed: u64,
+    path: impl AsRef<Path>,
+) -> Result<Vec<(String, String, ServingReport)>> {
+    let rows =
+        comparison_rows(scenario_names, duration_virtual_secs, seed)?;
+    let mut w = CsvWriter::create(
+        path.as_ref(),
+        &[
+            "scenario",
+            "method",
+            "emitted",
+            "completed",
+            "dropped",
+            "residual",
+            "lost_to_failure",
+            "dispatched",
+            "throughput_rps",
+            "p95_latency",
+            "mean_accuracy",
+        ],
+    )?;
+    for (scenario, method, r) in &rows {
+        w.row(&[
+            scenario.clone(),
+            method.clone(),
+            r.emitted.to_string(),
+            r.completed.to_string(),
+            r.dropped.to_string(),
+            r.residual.to_string(),
+            r.lost_to_failure.to_string(),
+            r.dispatched.to_string(),
+            format!("{:.3}", r.throughput_rps),
+            format!("{:.4}", r.p95_latency),
+            format!("{:.4}", r.mean_accuracy),
+        ])?;
+    }
+    Ok(rows)
+}
+
+/// Completed-request count for `method` under `scenario` in a row set
+/// (0 when absent) — the acceptance probe CI and the chaos tests use to
+/// pin "failover strictly beats the oblivious baseline under churn".
+pub fn completed_of(
+    rows: &[(String, String, ServingReport)],
+    scenario: &str,
+    method: &str,
+) -> usize {
+    rows.iter()
+        .find(|(s, m, _)| s == scenario && m == method)
+        .map_or(0, |(_, _, r)| r.completed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_every_heuristic_and_are_deterministic() {
+        let a = comparison_rows(&["steady"], 5.0, 7).unwrap();
+        assert_eq!(a.len(), baselines::HEURISTICS.len());
+        let b = comparison_rows(&["steady"], 5.0, 7).unwrap();
+        for ((s1, m1, r1), (s2, m2, r2)) in a.iter().zip(&b) {
+            assert_eq!((s1, m1), (s2, m2));
+            assert_eq!(r1.completed, r2.completed);
+            assert_eq!(r1.emitted, r2.emitted);
+            assert_eq!(r1.dropped, r2.dropped);
+        }
+    }
+
+    #[test]
+    fn csv_has_fault_column() {
+        let dir = std::env::temp_dir().join("ev_serving_comparison_test");
+        let path = dir.join("serving_comparison.csv");
+        let rows = comparison_to_csv(&["steady"], 4.0, 3, &path).unwrap();
+        assert!(!rows.is_empty());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("lost_to_failure"));
+        assert_eq!(text.lines().count(), rows.len() + 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -60,9 +60,11 @@ impl ServingOptions {
 }
 
 /// End-of-run report. Request accounting is exhaustive:
-/// `emitted + imported == completed + dropped + residual + exported`
+/// `emitted + imported ==
+///  completed + dropped + lost_to_failure + residual + exported`
 /// (the boundary terms are zero outside the sharded fleet runtime, where
-/// the per-shard reports carry cross-shard traffic).
+/// the per-shard reports carry cross-shard traffic; `lost_to_failure` is
+/// zero unless the scenario injects faults).
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     /// Scenario the run was parameterized by.
@@ -80,6 +82,10 @@ pub struct ServingReport {
     pub dropped: usize,
     /// Requests still in flight when the horizon cut the run.
     pub residual: usize,
+    /// Requests destroyed by injected faults (crashed-node queues and
+    /// in-flight batches, arrivals/deliveries at dead nodes). Exactly 0
+    /// for fault-free scenarios.
+    pub lost_to_failure: usize,
     pub dispatched: usize,
     /// GPU batch executions and their size distribution.
     pub batches: usize,
@@ -136,6 +142,7 @@ impl ServingReport {
             completed: completed.len(),
             dropped,
             residual: cluster.residual as usize,
+            lost_to_failure: cluster.lost_to_failure as usize,
             dispatched: served.iter().filter(|s| s.origin != s.target).count(),
             batches,
             mean_batch_size: if batches == 0 {
@@ -163,12 +170,17 @@ impl ServingReport {
 
     /// Request conservation: every request that entered (emitted locally
     /// or imported over a shard boundary) is accounted for (served,
-    /// dropped, still in flight, or exported to another shard). For
-    /// unsharded runs the boundary terms are zero and this reduces to
-    /// `emitted == completed + dropped + residual`.
+    /// dropped, destroyed by a fault, still in flight, or exported to
+    /// another shard). For unsharded fault-free runs the extra terms are
+    /// zero and this reduces to `emitted == completed + dropped +
+    /// residual`.
     pub fn conserved(&self) -> bool {
         self.emitted + self.imported
-            == self.completed + self.dropped + self.residual + self.exported
+            == self.completed
+                + self.dropped
+                + self.lost_to_failure
+                + self.residual
+                + self.exported
     }
 
     pub fn print(&self) {
@@ -181,6 +193,12 @@ impl ServingReport {
             100.0 * self.dropped as f64 / self.total.max(1) as f64
         );
         println!("  residual        {} (in flight at horizon)", self.residual);
+        if self.lost_to_failure > 0 {
+            println!(
+                "  lost to failure {} (destroyed by injected faults)",
+                self.lost_to_failure
+            );
+        }
         if self.imported + self.exported > 0 {
             println!(
                 "  cross-shard     {} in / {} out",

@@ -10,6 +10,7 @@
 //! detector zoo sit behind the `pjrt` cargo feature. The synthetic frame
 //! source is pure Rust and always available.
 
+pub mod comparison;
 pub mod engine;
 pub mod frames;
 #[cfg(feature = "pjrt")]
@@ -17,6 +18,7 @@ pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod zoo;
 
+pub use comparison::{comparison_to_csv, completed_of};
 pub use engine::{
     run_profile_serving, serve_scenario, ServingOptions, ServingReport,
 };

@@ -76,6 +76,7 @@ impl ComputeHook for RealCompute<'_> {
 
     fn detect(&mut self, _node: usize, model: usize, res: usize) -> Result<f64> {
         self.ensure_frame(res)?;
+        // invariant: ensure_frame populated last_frames[res] above
         let frame = self.last_frames[res].as_deref().unwrap();
         let (_scores, secs) = self.zoo.detect(model, res, frame)?;
         self.detect_calls += 1;
@@ -91,6 +92,7 @@ impl ComputeHook for RealCompute<'_> {
         k: usize,
     ) -> Result<f64> {
         self.ensure_frame(res)?;
+        // invariant: ensure_frame populated last_frames[res] above
         let frame = self.last_frames[res].as_deref().unwrap();
         let (_scores, secs) = self.zoo.detect_batch(model, res, frame, k)?;
         self.detect_calls += k;

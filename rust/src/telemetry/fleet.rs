@@ -8,7 +8,7 @@
 use crate::coordinator::EdgeCluster;
 
 /// One shard's end-of-run balance summary.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct ShardStats {
     pub shard: usize,
     /// Nodes in the shard.
@@ -21,10 +21,41 @@ pub struct ShardStats {
     pub completed: usize,
     pub dropped: usize,
     pub residual: usize,
+    /// Requests destroyed by injected faults inside the shard.
+    pub lost_to_failure: usize,
     /// Mean GPU busy fraction across the shard's nodes over the horizon.
     pub utilization: f64,
     /// `dropped / (completed + dropped)` over resolved requests.
     pub drop_rate: f64,
+    /// Wall-clock seconds this shard's worker spent blocked at the epoch
+    /// barrier waiting for the coordinator (recv-blocked between epochs).
+    /// Measured, not virtual — varies run to run.
+    pub stall_secs: f64,
+    /// `stall_secs / wall-clock run seconds` — the fraction of the run
+    /// this shard sat idle at barriers (0.0 when the runtime did not
+    /// measure, e.g. the shards=1 in-process path).
+    pub stall_frac: f64,
+}
+
+/// Virtual-time results must be bit-identical run to run; the stall
+/// fields are *measured wall-clock* and legitimately differ between two
+/// otherwise identical runs. Equality (used by the fleet determinism
+/// tests) therefore compares everything except `stall_secs` /
+/// `stall_frac`.
+impl PartialEq for ShardStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.shard == other.shard
+            && self.nodes == other.nodes
+            && self.emitted == other.emitted
+            && self.imported == other.imported
+            && self.exported == other.exported
+            && self.completed == other.completed
+            && self.dropped == other.dropped
+            && self.residual == other.residual
+            && self.lost_to_failure == other.lost_to_failure
+            && self.utilization == other.utilization
+            && self.drop_rate == other.drop_rate
+    }
 }
 
 impl ShardStats {
@@ -47,6 +78,7 @@ impl ShardStats {
             completed,
             dropped,
             residual: cluster.residual as usize,
+            lost_to_failure: cluster.lost_to_failure as usize,
             utilization: if horizon > 0.0 {
                 busy / (cluster.n_nodes as f64 * horizon)
             } else {
@@ -57,7 +89,20 @@ impl ShardStats {
             } else {
                 0.0
             },
+            stall_secs: 0.0,
+            stall_frac: 0.0,
         }
+    }
+
+    /// Record the measured barrier-stall wall-clock for this shard.
+    /// `run_secs` is the whole run's wall-clock duration.
+    pub fn set_stall(&mut self, stall_secs: f64, run_secs: f64) {
+        self.stall_secs = stall_secs;
+        self.stall_frac = if run_secs > 0.0 {
+            (stall_secs / run_secs).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
     }
 }
 
@@ -92,9 +137,26 @@ mod tests {
             completed: 8,
             dropped: 2,
             residual: 0,
+            lost_to_failure: 0,
             utilization: util,
             drop_rate: 0.2,
+            stall_secs: 0.0,
+            stall_frac: 0.0,
         }
+    }
+
+    #[test]
+    fn equality_ignores_measured_stall_wall_clock() {
+        let a = stats(0.5);
+        let mut b = stats(0.5);
+        b.set_stall(1.25, 5.0);
+        assert_eq!(b.stall_secs, 1.25);
+        assert_eq!(b.stall_frac, 0.25);
+        // wall-clock telemetry must not break run-to-run determinism
+        assert_eq!(a, b);
+        let mut c = stats(0.5);
+        c.lost_to_failure = 1;
+        assert_ne!(a, c);
     }
 
     #[test]

@@ -41,7 +41,10 @@ pub fn method_row(
 }
 
 /// Write rows to CSV with the standard column layout.
-pub fn write_method_csv(path: &str, rows: &[MethodSummary]) -> Result<()> {
+pub fn write_method_csv(
+    path: impl AsRef<std::path::Path>,
+    rows: &[MethodSummary],
+) -> Result<()> {
     let mut header = vec![
         "method".to_string(),
         "omega".into(),

@@ -32,6 +32,8 @@ impl Args {
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false);
                     if is_val {
+                        // invariant: is_val means peek() was Some, so
+                        // next() cannot return None here
                         out.flags
                             .insert(stripped.to_string(), it.next().unwrap());
                     } else {

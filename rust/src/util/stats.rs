@@ -57,6 +57,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
+    // invariant: callers pass finite samples (latencies/rates), never NaN
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]

@@ -156,6 +156,7 @@ fn steady_state_hot_path_allocates_nothing() {
         0,
         plan.cross_mbps,
         scenario.gpu_speed.clone(),
+        scenario.faults.clone(),
         scenario.hist_len,
     ));
     let mut policy = ShortestQueueController::new(Selection::Min);

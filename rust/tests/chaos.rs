@@ -1,0 +1,359 @@
+//! Chaos-engineering contracts (dep-free): fault injection across both
+//! substrates and the sharded fleet.
+//!
+//! * `prop_chaos_conservation` — the extended ledger
+//!   `emitted == completed + dropped + lost_to_failure + residual` holds
+//!   for every chaos registry entry at shards {1, 2, 4}, and fault-free
+//!   scenarios keep `lost_to_failure == 0` at every shard count;
+//! * deterministic crash-mid-inference repros on the event-driven
+//!   cluster: a `NodeDown` mid-batch reclaims the in-flight batch and the
+//!   lane-resident frames, the stale `GpuDone` is neutralized (serial
+//!   GPU service survives the crash), and recovery serves cleanly;
+//! * the slot simulator replays the same schedules with its own
+//!   conservation ledger (`arrived == finished + in_flight +
+//!   lost_to_failure`);
+//! * the self-healing acceptance headline: `FailoverController` over
+//!   shortest-queue completes strictly more than the failure-oblivious
+//!   shortest-queue under `node-churn`, seed-deterministically.
+
+use anyhow::Result;
+
+use edgevision::baselines;
+use edgevision::coordinator::{
+    EdgeCluster, ProfileCompute, ServedRequest,
+};
+use edgevision::env::{Action, Profiles, Simulator};
+use edgevision::fleet::{heuristic_factory, Fleet};
+use edgevision::policy::{Policy, PolicyView};
+use edgevision::scenario::{FaultKind, FaultSchedule, Scenario};
+use edgevision::serving::serve_scenario;
+
+const EPS: f64 = 1e-9;
+const CHAOS: [&str; 3] = ["node-churn", "link-flap", "brownout"];
+
+/// Policy returning one fixed action for every node at every instant.
+struct Fixed(Action);
+impl Policy for Fixed {
+    fn name(&self) -> &str {
+        "fixed"
+    }
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        out.clear();
+        for _ in 0..view.n_nodes() {
+            out.push(self.0);
+        }
+        Ok(())
+    }
+}
+
+/// Silent-workload 2-node cluster (all arrivals injected by the test)
+/// with a scripted fault timeline.
+fn scripted_cluster(faults: FaultSchedule) -> EdgeCluster {
+    let scenario = Scenario::custom("chaos-script")
+        .nodes(2)
+        .arrival_means(vec![0.0; 2])
+        .drop_threshold(10.0)
+        .max_batch(4)
+        .batch_wait(0.0)
+        .faults(faults)
+        .build();
+    EdgeCluster::new(&scenario, 0)
+}
+
+fn by_id(served: &[ServedRequest], id: u64) -> &ServedRequest {
+    served.iter().find(|s| s.id == id).expect("request accounted")
+}
+
+/// No two service intervals may overlap on any node — the serial-GPU
+/// invariant, asserted on the raw served records.
+fn assert_serial_service(served: &[ServedRequest]) {
+    let mut intervals: Vec<(usize, u64, f64, f64)> = served
+        .iter()
+        .filter(|s| s.batch_size > 0)
+        .map(|s| (s.target, s.batch_id, s.service_start, s.finish))
+        .collect();
+    intervals.sort_by(|a, b| {
+        (a.0, a.2).partial_cmp(&(b.0, b.2)).unwrap()
+    });
+    for w in intervals.windows(2) {
+        let (n0, b0, _, f0) = w[0];
+        let (n1, b1, s1, _) = w[1];
+        if n0 == n1 && b0 != b1 {
+            assert!(
+                s1 >= f0 - EPS,
+                "overlapping service on node {n0}: batch {b1} starts at \
+                 {s1} while batch {b0} runs until {f0}"
+            );
+        }
+    }
+}
+
+/// The acceptance matrix: every chaos scenario at shards {1, 2, 4} keeps
+/// the extended ledger balanced, only crashes (not degrades) destroy
+/// work, and fault-free scenarios never report `lost_to_failure`.
+#[test]
+fn prop_chaos_conservation() {
+    for name in CHAOS {
+        let scenario = Scenario::by_name(name).unwrap();
+        assert!(!scenario.faults.is_empty(), "{name} must carry faults");
+        for shards in [1usize, 2, 4] {
+            let report = Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                8.0,
+                9,
+                shards,
+            )
+            .unwrap();
+            assert!(report.emitted > 0, "{name} x{shards}: nothing emitted");
+            assert!(
+                report.conserved(),
+                "{name} x{shards} leaked: emitted {} != {} + {} + {} + {}",
+                report.emitted,
+                report.completed,
+                report.dropped,
+                report.lost_to_failure,
+                report.residual
+            );
+            if name == "node-churn" {
+                assert!(
+                    report.lost_to_failure > 0,
+                    "{name} x{shards}: rotating crashes must destroy work"
+                );
+            } else {
+                // link-flap / brownout only degrade — nothing is destroyed
+                assert_eq!(
+                    report.lost_to_failure, 0,
+                    "{name} x{shards}: degradation faults must not lose work"
+                );
+            }
+        }
+    }
+    // fault-free scenarios never lose work to failure, at any shard count
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        if !scenario.faults.is_empty() {
+            continue;
+        }
+        for shards in [1usize, 2, 4] {
+            let report = Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                4.0,
+                9,
+                shards,
+            )
+            .unwrap();
+            assert!(report.conserved(), "{name} x{shards}");
+            assert_eq!(
+                report.lost_to_failure, 0,
+                "{name} x{shards}: fault-free run lost work"
+            );
+        }
+    }
+}
+
+/// Chaos runs stay seed-deterministic across repeated multi-shard
+/// executions — fault replay must not depend on thread interleaving.
+#[test]
+fn chaos_fleet_runs_are_seed_deterministic() {
+    let scenario = Scenario::by_name("node-churn").unwrap();
+    for shards in [2usize, 4] {
+        let run = || {
+            Fleet::serve(
+                heuristic_factory("shortest_queue_min"),
+                &scenario,
+                8.0,
+                42,
+                shards,
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.emitted, b.emitted, "shards {shards}");
+        assert_eq!(a.completed, b.completed, "shards {shards}");
+        assert_eq!(a.dropped, b.dropped, "shards {shards}");
+        assert_eq!(a.residual, b.residual, "shards {shards}");
+        assert_eq!(
+            a.lost_to_failure, b.lost_to_failure,
+            "shards {shards}"
+        );
+        for (x, y) in a.per_shard.iter().zip(b.per_shard.iter()) {
+            assert_eq!(
+                x.lost_to_failure, y.lost_to_failure,
+                "shards {shards}: per-shard fault accounting drifted"
+            );
+        }
+        // ShardStats equality deliberately ignores the measured
+        // wall-clock stall fields
+        assert_eq!(a.shard_stats, b.shard_stats, "shards {shards}");
+    }
+}
+
+/// THE crash-mid-inference repro: a node crashes while a batch executes.
+/// The in-flight batch's optimistic `ServedRequest` record is retracted,
+/// lane-resident and source-lost frames join it in `lost_to_failure`,
+/// and after recovery the node serves cleanly — with the ledger exact.
+#[test]
+fn crash_mid_inference_reclaims_inflight_batch() {
+    let mut faults = FaultSchedule::new();
+    faults.push(0.05, 0, FaultKind::NodeDown);
+    faults.push(1.0, 0, FaultKind::NodeUp);
+    let mut c = scripted_cluster(faults);
+    let infer = Profiles::default().infer_delay[3][0]; // 0.171 s
+
+    let _a = c.inject_request(0, 0.0); // mid-batch when the crash hits
+    let _b = c.inject_request(0, 0.04); // lane-resident at the crash
+    let _d = c.inject_request(0, 0.5); // arrives while the node is down
+    let e = c.inject_request(0, 2.0); // after recovery: served cleanly
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 5.0).unwrap();
+
+    assert_eq!(c.emitted, 4);
+    assert_eq!(
+        c.lost_to_failure, 3,
+        "in-flight batch + lane frame + dead-node arrival must be lost"
+    );
+    assert_eq!(c.served.len(), 1, "only the post-recovery frame survives");
+    assert_eq!(c.residual, 0);
+    assert!(c.node_alive(0), "node 0 recovered at t=1.0");
+    let se = by_id(&c.served, e);
+    assert!(!se.dropped);
+    assert!((se.service_start - 2.0).abs() < EPS);
+    assert!((se.finish - (2.0 + infer)).abs() < EPS);
+    // extended ledger: emitted == completed + dropped + lost + residual
+    let completed = c.served.iter().filter(|s| !s.dropped).count();
+    let dropped = c.served.len() - completed;
+    assert_eq!(
+        c.emitted as usize,
+        completed + dropped + c.lost_to_failure as usize
+            + c.residual as usize
+    );
+}
+
+/// Recovery *before* the reclaimed batch's stale `GpuDone` fires: the
+/// generation counter must swallow the stale completion, or the restarted
+/// node would begin a second, overlapping service interval.
+#[test]
+fn stale_gpu_done_is_neutralized_after_recovery() {
+    let mut faults = FaultSchedule::new();
+    faults.push(0.05, 0, FaultKind::NodeDown);
+    faults.push(0.1, 0, FaultKind::NodeUp);
+    let mut c = scripted_cluster(faults);
+    let infer = Profiles::default().infer_delay[3][0]; // 0.171 s
+
+    let _a = c.inject_request(0, 0.0); // reclaimed; its GpuDone at 0.171 is stale
+    let x = c.inject_request(0, 0.11); // starts the post-recovery batch
+    let y = c.inject_request(0, 0.12); // must wait for X's completion
+    let mut hook = ProfileCompute::new(Profiles::default());
+    c.run(&mut Fixed(Action::new(0, 3, 0)), &mut hook, 5.0).unwrap();
+
+    assert_eq!(c.lost_to_failure, 1);
+    assert_eq!(c.served.len(), 2);
+    assert_eq!(c.residual, 0);
+    let (sx, sy) = (by_id(&c.served, x), by_id(&c.served, y));
+    assert!((sx.service_start - 0.11).abs() < EPS);
+    assert!((sx.finish - (0.11 + infer)).abs() < EPS);
+    // pre-fix failure mode: the stale GpuDone at t=0.171 frees the GPU
+    // and Y starts mid-X — the serial-service invariant breaks
+    assert!(
+        sy.service_start >= sx.finish - EPS,
+        "stale GpuDone leaked: Y started at {} while X ran until {}",
+        sy.service_start,
+        sx.finish
+    );
+    assert_serial_service(&c.served);
+}
+
+/// The slot simulator replays the same chaos schedules under its own
+/// ledger: `arrived == finished + in_flight + lost_to_failure`, liveness
+/// follows the timeline at slot granularity, and fault-free runs never
+/// lose work.
+#[test]
+fn simulator_chaos_conservation() {
+    let sc = Scenario::by_name("node-churn").unwrap();
+    let mut sim = Simulator::from_scenario(&sc, 11);
+    let actions: Vec<Action> =
+        (0..sc.n_nodes).map(|i| Action::new(i, 0, 0)).collect();
+    let mut arrived = 0usize;
+    let mut finished = 0usize;
+    // node-churn: node 0 down over [1.0, 2.25); slots are 0.2 s
+    for _ in 0..5 {
+        let out = sim.step(&actions);
+        arrived += out.arrivals.iter().sum::<usize>();
+        finished += out.finished.len();
+    }
+    assert!(sim.node_alive(0), "churn starts at t=1.0");
+    for _ in 0..2 {
+        let out = sim.step(&actions);
+        arrived += out.arrivals.iter().sum::<usize>();
+        finished += out.finished.len();
+    }
+    assert!(!sim.node_alive(0), "node 0 is down by t=1.2");
+    for _ in 0..93 {
+        let out = sim.step(&actions);
+        arrived += out.arrivals.iter().sum::<usize>();
+        finished += out.finished.len();
+    }
+    assert!(sim.node_alive(0), "node 0 recovered at t=2.25");
+    let lost = sim.lost_to_failure() as usize;
+    assert!(lost > 0, "arrivals at the dead node must be lost");
+    assert_eq!(
+        arrived,
+        finished + sim.in_flight() + lost,
+        "slot-substrate chaos ledger leaked"
+    );
+
+    // fault-free control: same workload shape, empty schedule
+    let steady = Scenario::by_name("steady").unwrap();
+    let mut sim = Simulator::from_scenario(&steady, 11);
+    for _ in 0..50 {
+        sim.step(&actions);
+    }
+    assert_eq!(sim.lost_to_failure(), 0);
+    assert!((0..steady.n_nodes).all(|i| sim.node_alive(i)));
+}
+
+/// The self-healing acceptance headline: wrapping the same
+/// shortest-queue policy in `FailoverController` strictly increases
+/// completions under `node-churn` (the oblivious argmin floods the
+/// crashed node's stale zero-delay telemetry), and both runs are
+/// seed-deterministic.
+#[test]
+fn failover_beats_oblivious_shortest_queue_on_churn() {
+    let sc = Scenario::by_name("node-churn").unwrap();
+    let run = |name: &str| {
+        let mut policy =
+            baselines::by_name(name, sc.n_nodes, 0).unwrap();
+        serve_scenario(policy.as_mut(), &sc, 20.0, 0).unwrap()
+    };
+    let oblivious = run("shortest_queue_min");
+    let healed = run("failover_shortest_queue_min");
+    assert!(oblivious.conserved());
+    assert!(healed.conserved());
+    assert!(
+        healed.completed > oblivious.completed,
+        "failover ({}) must strictly beat oblivious shortest-queue ({}) \
+         under node-churn",
+        healed.completed,
+        oblivious.completed
+    );
+    // the oblivious policy keeps feeding the dead node: everything it
+    // routes there is destroyed, so it must lose at least as much
+    assert!(
+        oblivious.lost_to_failure >= healed.lost_to_failure,
+        "oblivious lost {} < failover lost {}",
+        oblivious.lost_to_failure,
+        healed.lost_to_failure
+    );
+    // seed determinism of the chaos sweep
+    let again = run("failover_shortest_queue_min");
+    assert_eq!(healed.completed, again.completed);
+    assert_eq!(healed.dropped, again.dropped);
+    assert_eq!(healed.lost_to_failure, again.lost_to_failure);
+    assert_eq!(healed.residual, again.residual);
+}

@@ -9,8 +9,9 @@
 //!   seed produce bit-identical merged reports regardless of thread
 //!   interleaving (conservative barriers + (shard id, seq) merge order);
 //! * **global conservation** — `emitted == completed + dropped +
-//!   residual` with residual counting cross-shard dispatches still on
-//!   the backhaul, for every registered scenario at shards in {1, 2, 4};
+//!   lost_to_failure + residual` with residual counting cross-shard
+//!   dispatches still on the backhaul, for every registered scenario
+//!   (chaos entries included) at shards in {1, 2, 4};
 //! * cross-shard traffic actually flows (and balances: imports ==
 //!   exports minus in-flight).
 
@@ -32,6 +33,10 @@ fn assert_reports_bit_identical(
     assert_eq!(a.completed, b.completed, "{ctx}: completed");
     assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
     assert_eq!(a.residual, b.residual, "{ctx}: residual");
+    assert_eq!(
+        a.lost_to_failure, b.lost_to_failure,
+        "{ctx}: lost_to_failure"
+    );
     assert_eq!(a.dispatched, b.dispatched, "{ctx}: dispatched");
     assert_eq!(a.batches, b.batches, "{ctx}: batches");
     assert_eq!(a.max_batch_size, b.max_batch_size, "{ctx}: max_batch");
@@ -151,10 +156,11 @@ fn prop_fleet_conservation_every_scenario() {
             assert!(report.emitted > 0, "{name} x{shards}: nothing emitted");
             assert!(
                 report.conserved(),
-                "{name} x{shards} leaked: emitted {} != {} + {} + {}",
+                "{name} x{shards} leaked: emitted {} != {} + {} + {} + {}",
                 report.emitted,
                 report.completed,
                 report.dropped,
+                report.lost_to_failure,
                 report.residual
             );
             // per-shard boundary bookkeeping balances globally
