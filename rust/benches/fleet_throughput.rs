@@ -23,8 +23,10 @@ use edgevision::util::cli::Args;
 use edgevision::util::json::Json;
 
 /// (scenario, node count) grid: the paper's native 4 nodes plus the
-/// production-scale clusters the fleet exists for.
-const GRID: [(&str, usize); 3] = [("paper", 4), ("steady", 64), ("hotspot", 64)];
+/// production-scale clusters the fleet exists for, up to a 256-node
+/// sweep point.
+const GRID: [(&str, usize); 4] =
+    [("paper", 4), ("steady", 64), ("hotspot", 64), ("steady", 256)];
 
 const DURATION_VIRTUAL_SECS: f64 = 10.0;
 
@@ -88,7 +90,11 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             let target = format!("fleet::scenario={name}{nodes}::shards={shards}");
-            let iters = if nodes >= 64 { 6 } else { 12 };
+            let iters = match nodes {
+                n if n >= 256 => 3,
+                n if n >= 64 => 6,
+                _ => 12,
+            };
             let r = bench(&target, scaled(1), scaled(iters), || {
                 Fleet::serve(
                     heuristic_factory("shortest_queue_min"),

@@ -13,19 +13,24 @@
 //!
 //! `--list-scenarios` prints the registry and exits (the dep-free CLI
 //! path CI exercises). `--comparison [NAMES]` runs the dep-free
-//! heuristic comparison sweep (default: the three chaos scenarios) into
+//! heuristic comparison sweep (default: the chaos scenarios) into
 //! `results/serving_comparison.csv` and asserts the self-healing
 //! headline — the failover wrapper must complete strictly more requests
 //! than the failure-oblivious shortest-queue under `node-churn`.
+//! `--openloop` runs the open-loop SLO experiment (admission on/off
+//! across every `openloop-*` scenario) into `results/slo_comparison.csv`
+//! and asserts the admission headline.
 
 use edgevision::scenario::Scenario;
 use edgevision::serving::{
-    comparison_to_csv, completed_of, run_profile_serving, ServingOptions,
+    assert_admission_headline, comparison_to_csv, completed_of,
+    openloop_to_csv, run_profile_serving, ServingOptions,
 };
 use edgevision::util::bench::BenchReport;
 use edgevision::util::json::Json;
 
-const CHAOS_SCENARIOS: [&str; 3] = ["node-churn", "link-flap", "brownout"];
+const CHAOS_SCENARIOS: [&str; 4] =
+    ["node-churn", "node-churn-rand", "link-flap", "brownout"];
 
 fn main() -> anyhow::Result<()> {
     if std::env::args().any(|a| a == "--list-scenarios") {
@@ -43,6 +48,9 @@ fn main() -> anyhow::Result<()> {
             _ => CHAOS_SCENARIOS.iter().map(|s| s.to_string()).collect(),
         };
         return chaos_comparison(&names);
+    }
+    if args.iter().any(|a| a == "--openloop") {
+        return openloop_experiment();
     }
 
     let mut rep = BenchReport::new("serving");
@@ -131,8 +139,55 @@ fn chaos_comparison(names: &[String]) -> anyhow::Result<()> {
         println!(
             "headline: failover {healed} completed vs oblivious {oblivious} under node-churn"
         );
+        let hedged =
+            completed_of(&rows, "node-churn", "hedged_shortest_queue_min");
+        println!(
+            "hedged dispatch: {hedged} completed vs failover {healed} under node-churn"
+        );
     }
     println!("wrote results/serving_comparison.csv");
+    Ok(())
+}
+
+/// The dep-free open-loop acceptance run: every `openloop-*` scenario
+/// with admission on and off, one conserved row each into
+/// `results/slo_comparison.csv`, and the PR's robustness headline —
+/// admission control strictly beats no-admission on goodput-under-SLO
+/// for the sustained-overload Poisson regime.
+fn openloop_experiment() -> anyhow::Result<()> {
+    let rows = openloop_to_csv(20.0, 0, "results/slo_comparison.csv")?;
+    println!(
+        "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "scenario", "adm", "emitted", "shed", "done", "p50", "p99",
+        "goodput"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8.3} {:>8.3} {:>9.3}",
+            r.scenario,
+            if r.admission { "on" } else { "off" },
+            r.report.emitted,
+            r.report.shed,
+            r.report.completed,
+            r.slo.p50,
+            r.slo.p99,
+            r.slo.goodput_rps
+        );
+    }
+    assert_admission_headline(&rows)?;
+    let on = rows
+        .iter()
+        .find(|r| r.scenario == "openloop-poisson" && r.admission)
+        .map_or(0.0, |r| r.slo.goodput_rps);
+    let off = rows
+        .iter()
+        .find(|r| r.scenario == "openloop-poisson" && !r.admission)
+        .map_or(0.0, |r| r.slo.goodput_rps);
+    println!(
+        "headline: admission {on:.3} req/s goodput-under-SLO vs \
+         no-admission {off:.3} under openloop-poisson"
+    );
+    println!("wrote results/slo_comparison.csv");
     Ok(())
 }
 

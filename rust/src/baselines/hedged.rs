@@ -1,0 +1,245 @@
+//! Hedged-dispatch layer — wraps any inner [`Policy`] and duplicates a
+//! request to a second alive node whenever the primary target looks
+//! unlikely to meet the deadline (its Eq. 1 delay estimate exceeds a
+//! fraction of the drop threshold, or it is outright dead). The first
+//! copy to reach GPU service wins; the serving substrate cancel-accounts
+//! the loser in the `cancelled` ledger column, so conservation stays
+//! exhaustive.
+//!
+//! This is the classic tail-latency hedge (defer-and-duplicate) adapted
+//! to the edge cluster: instead of re-issuing after a timeout — which the
+//! virtual-time engine would have to model as a new arrival — the hedge
+//! is issued at routing time, from the same telemetry the router already
+//! reads. Hedges draw from a bounded per-episode budget, so an overload
+//! (where *every* node's estimate is past the trigger) cannot melt down
+//! into unbounded duplication; once spent, the layer goes passive and the
+//! inner policy's decisions pass through untouched.
+//!
+//! Only the event-driven serving engine consults
+//! [`Policy::hedge_target`]; on the slot simulator this wrapper behaves
+//! exactly like its inner policy.
+
+use anyhow::Result;
+
+use crate::env::Action;
+use crate::policy::{Policy, PolicyView};
+
+/// Hedges allowed per episode before the layer goes passive.
+pub const DEFAULT_HEDGE_BUDGET: u64 = 1_000_000;
+
+/// Default trigger: hedge when the primary's queue-delay estimate
+/// exceeds this fraction of the drop threshold.
+pub const DEFAULT_HEDGE_FRACTION: f64 = 0.5;
+
+pub struct HedgedController {
+    name: String,
+    inner: Box<dyn Policy>,
+    /// Hedge when `queue_delay_estimate(primary) > fraction *
+    /// drop_threshold` (or the primary is dead).
+    fraction: f64,
+    max_budget: u64,
+    budget: u64,
+    /// Hedges issued since the last reset (telemetry/tests).
+    hedges: u64,
+}
+
+impl HedgedController {
+    /// Wrap `inner` with the default trigger fraction and budget. The
+    /// reported name is `hedged_<inner name>`.
+    pub fn new(inner: Box<dyn Policy>) -> Self {
+        Self::with_params(inner, DEFAULT_HEDGE_FRACTION, DEFAULT_HEDGE_BUDGET)
+    }
+
+    pub fn with_params(
+        inner: Box<dyn Policy>,
+        fraction: f64,
+        max_budget: u64,
+    ) -> Self {
+        assert!(
+            fraction > 0.0 && fraction.is_finite(),
+            "hedge fraction must be positive"
+        );
+        HedgedController {
+            name: format!("hedged_{}", inner.name()),
+            inner,
+            fraction,
+            max_budget,
+            budget: max_budget,
+            hedges: 0,
+        }
+    }
+
+    pub fn hedges(&self) -> u64 {
+        self.hedges
+    }
+
+    /// Best alive node other than `primary` by queue-delay estimate.
+    fn best_alive_except(
+        view: &dyn PolicyView,
+        primary: usize,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..view.n_nodes() {
+            if j == primary || !view.is_alive(j) {
+                continue;
+            }
+            let q = view.queue_delay_estimate(j);
+            if best.map_or(true, |(_, bq)| q < bq) {
+                best = Some((j, q));
+            }
+        }
+        best.map(|(j, _)| j)
+    }
+}
+
+impl Policy for HedgedController {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn reset(&mut self, episode_seed: u64) {
+        self.inner.reset(episode_seed);
+        self.budget = self.max_budget;
+        self.hedges = 0;
+    }
+
+    fn decide_into(
+        &mut self,
+        view: &dyn PolicyView,
+        out: &mut Vec<Action>,
+    ) -> Result<()> {
+        self.inner.decide_into(view, out)
+    }
+
+    fn hedge_target(
+        &mut self,
+        view: &dyn PolicyView,
+        origin: usize,
+        primary: usize,
+    ) -> Option<usize> {
+        let _ = origin;
+        if self.budget == 0 {
+            return None;
+        }
+        let risky = !view.is_alive(primary)
+            || view.queue_delay_estimate(primary)
+                > self.fraction * view.drop_threshold();
+        if !risky {
+            return None;
+        }
+        let twin = Self::best_alive_except(view, primary)?;
+        self.budget -= 1;
+        self.hedges += 1;
+        Some(twin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{Selection, ShortestQueueController};
+    use crate::env::profiles::Profiles;
+
+    /// Node 0 dead (stale empty queue), node 1 alive but past the hedge
+    /// trigger, node 2 alive and light.
+    struct ChaosView {
+        profiles: Profiles,
+    }
+
+    impl PolicyView for ChaosView {
+        fn n_nodes(&self) -> usize {
+            3
+        }
+        fn now(&self) -> f64 {
+            1.0
+        }
+        fn slot(&self) -> u64 {
+            0
+        }
+        fn queue_len(&self, node: usize) -> usize {
+            [0, 7, 1][node]
+        }
+        fn queue_delay_estimate(&self, node: usize) -> f64 {
+            [0.0, 0.7, 0.1][node]
+        }
+        fn link_backlog(&self, _: usize, _: usize) -> usize {
+            0
+        }
+        fn bandwidth_mbps(&self, _: usize, _: usize) -> f64 {
+            10.0
+        }
+        fn for_each_rate(&self, _: usize, _: &mut dyn FnMut(f64)) {}
+        fn rate_norm(&self) -> f64 {
+            1.0
+        }
+        fn queue_norm(&self) -> f64 {
+            1.0
+        }
+        fn bw_norm(&self) -> f64 {
+            1.0
+        }
+        fn profiles(&self) -> &Profiles {
+            &self.profiles
+        }
+        fn omega(&self) -> f64 {
+            1.0
+        }
+        fn drop_threshold(&self) -> f64 {
+            1.0
+        }
+        fn drop_penalty(&self) -> f64 {
+            1.0
+        }
+        fn is_alive(&self, node: usize) -> bool {
+            node != 0
+        }
+    }
+
+    fn hedged() -> HedgedController {
+        HedgedController::new(Box::new(ShortestQueueController::new(
+            Selection::Min,
+        )))
+    }
+
+    #[test]
+    fn name_and_decide_pass_through() {
+        let view = ChaosView { profiles: Profiles::default() };
+        let mut h = hedged();
+        assert_eq!(h.name(), "hedged_shortest_queue_min");
+        let mut inner = ShortestQueueController::new(Selection::Min);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        h.decide_into(&view, &mut a).unwrap();
+        inner.decide_into(&view, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hedges_dead_and_overloaded_primaries_only() {
+        let view = ChaosView { profiles: Profiles::default() };
+        let mut h = hedged();
+        // dead primary: hedge to the best alive node that is not it
+        assert_eq!(h.hedge_target(&view, 0, 0), Some(2));
+        // overloaded primary (0.7 > 0.5 * 1.0): hedge to node 2
+        assert_eq!(h.hedge_target(&view, 0, 1), Some(2));
+        // healthy light primary: no hedge; the twin search must also
+        // exclude the primary itself
+        assert_eq!(h.hedge_target(&view, 0, 2), None);
+        assert_eq!(h.hedges(), 2);
+    }
+
+    #[test]
+    fn budget_bounds_duplication_and_reset_replenishes() {
+        let view = ChaosView { profiles: Profiles::default() };
+        let mut h = HedgedController::with_params(
+            Box::new(ShortestQueueController::new(Selection::Min)),
+            0.5,
+            1,
+        );
+        assert_eq!(h.hedge_target(&view, 0, 1), Some(2));
+        assert_eq!(h.hedge_target(&view, 0, 1), None, "budget spent");
+        h.reset(0);
+        assert_eq!(h.hedges(), 0);
+        assert_eq!(h.hedge_target(&view, 0, 1), Some(2));
+    }
+}

@@ -1,7 +1,8 @@
 //! Baseline methods from the paper's evaluation (Section VI-A):
 //! Shortest-Queue-{Min,Max}, Random-{Min,Max} and the Predictive
-//! controller, plus the failure-aware [`FailoverController`] wrapper for
-//! the chaos scenarios. (IPPO and Local-PPO are trained through the same
+//! controller, plus the failure-aware [`FailoverController`] and
+//! tail-cutting [`HedgedController`] wrappers for the chaos scenarios.
+//! (IPPO and Local-PPO are trained through the same
 //! [`crate::rl::Trainer`] with `--ippo` / `--local-only`.)
 //!
 //! Every baseline implements the unified [`crate::policy::Policy`] trait,
@@ -13,23 +14,26 @@ use anyhow::{bail, Result};
 use crate::policy::Policy;
 
 pub mod failover;
+pub mod hedged;
 pub mod heuristics;
 pub mod predictive;
 
 pub use failover::FailoverController;
+pub use hedged::HedgedController;
 pub use heuristics::{RandomController, ShortestQueueController, Selection};
 pub use predictive::PredictiveController;
 
 /// Names of the heuristic baselines, in the paper's reporting order
-/// (the failover wrapper last — it is the chaos-scenario contrast to the
-/// failure-oblivious shortest-queue).
-pub const HEURISTICS: [&str; 6] = [
+/// (the failover and hedged wrappers last — they are the chaos-scenario
+/// contrasts to the failure-oblivious shortest-queue).
+pub const HEURISTICS: [&str; 7] = [
     "predictive",
     "shortest_queue_min",
     "shortest_queue_max",
     "random_min",
     "random_max",
     "failover_shortest_queue_min",
+    "hedged_shortest_queue_min",
 ];
 
 /// Instantiate a heuristic baseline by its reporting name — the one
@@ -46,6 +50,9 @@ pub fn by_name(name: &str, n_nodes: usize, seed: u64) -> Result<Box<dyn Policy>>
         "random_max" => Box::new(RandomController::new(Selection::Max, seed)),
         "predictive" => Box::new(PredictiveController::new(n_nodes)),
         "failover_shortest_queue_min" => Box::new(FailoverController::new(
+            Box::new(ShortestQueueController::new(Selection::Min)),
+        )),
+        "hedged_shortest_queue_min" => Box::new(HedgedController::new(
             Box::new(ShortestQueueController::new(Selection::Min)),
         )),
         other => bail!(

@@ -23,10 +23,24 @@
 //! and cleared **only** by the matching [`Event::GpuDone`] completion, so
 //! no two service intervals on one node can ever overlap (pinned by
 //! `prop_gpu_mutual_exclusion`). Every emitted request is accounted:
-//! `emitted == completed + dropped + lost_to_failure + residual` (pinned
-//! by `prop_serving_conservation` and `prop_chaos_conservation`), where
-//! residual counts requests still in flight when the horizon cuts the run
-//! and `lost_to_failure` counts work destroyed by injected faults.
+//! `emitted == completed + dropped + lost_to_failure + shed + cancelled +
+//! residual` (pinned by `prop_serving_conservation`,
+//! `prop_chaos_conservation` and `prop_openloop_conservation`), where
+//! residual counts requests still in flight when the horizon cuts the run,
+//! `lost_to_failure` counts work destroyed by injected faults, `shed`
+//! counts open-loop arrivals refused by admission control (always 0 in
+//! closed-loop runs), and `cancelled` counts hedge copies retired because
+//! their twin reached GPU service first (always 0 without a hedging
+//! policy).
+//!
+//! Open-loop ingestion: when a [`Scenario`]'s `ingest` descriptor names an
+//! arrival process, the per-slot closed-loop emission is replaced by
+//! [`Event::OpenArrival`] events drawn from a seeded
+//! [`crate::ingest::ArrivalGen`] — exactly one outstanding event per node
+//! stream keeps the heap bounded. Each arrival passes through the
+//! [`crate::ingest::Intake`] admission gate (queue cap, deadline
+//! feasibility against `queue_delay_estimate`, optional token bucket);
+//! refusals count as `shed`, never entering the pending map.
 //!
 //! Fault model: a [`Scenario`]'s `FaultSchedule` is replayed through
 //! first-class heap events ([`Event::NodeDown`] / [`Event::NodeUp`] /
@@ -51,12 +65,13 @@
 //! outbox as [`BoundaryDispatch`]es (`exported`), and frames arriving
 //! from other shards enter through [`EdgeCluster::inject_boundary`]
 //! (`imported`). Shard-local conservation then reads
-//! `emitted + imported == completed + dropped + residual + exported`.
+//! `emitted + imported == completed + dropped + lost_to_failure + shed +
+//! cancelled + residual + exported`.
 //! Without an exterior nothing changes — an unsharded cluster is
 //! bit-identical to the pre-fleet behavior.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 
 use anyhow::Result;
 
@@ -70,6 +85,7 @@ use crate::env::bandwidth::Bandwidth;
 use crate::env::profiles::{Profiles, N_MODELS, N_RES};
 use crate::env::workload::Workload;
 use crate::env::Action;
+use crate::ingest::{ArrivalGen, Intake};
 use crate::policy::{DecisionCache, Policy, PolicyView};
 use crate::scenario::{FaultKind, Scenario};
 
@@ -197,6 +213,11 @@ enum Event {
     /// Fault timeline: the node's GPU serves at `factor` x nominal speed
     /// from here on (in-flight batches keep their scheduled finish).
     GpuRate { node: usize, factor: f64 },
+    /// Open-loop ingestion: the next generated arrival instant at `node`
+    /// (exactly one outstanding per node stream, so the heap population
+    /// stays bounded). Only exists when the scenario's
+    /// [`crate::ingest::IngestConfig`] is open-loop.
+    OpenArrival { node: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -313,6 +334,21 @@ pub struct EdgeCluster {
     /// in-flight batches reclaimed by a crash, frames arriving at a dead
     /// node). Exactly 0 when the scenario's fault schedule is empty.
     pub lost_to_failure: u64,
+    /// Requests refused at the door by open-loop admission control.
+    /// Exactly 0 for closed-loop scenarios (which never consult the
+    /// intake) and for open-loop runs with admission disabled.
+    pub shed: u64,
+    /// Hedged duplicates cancelled because their twin reached GPU
+    /// service first. Exactly 0 unless the driving policy hedges.
+    pub cancelled: u64,
+    /// Open-loop arrival generator (empty/never consulted closed-loop).
+    arrivals: ArrivalGen,
+    /// Admission state guarding the door (consulted open-loop only).
+    intake: Intake,
+    /// Hedge pairing `id <-> duplicate id` while a race is unresolved.
+    hedge_partner: HashMap<u64, u64>,
+    /// Hedge-race losers awaiting cancel accounting at their batch pull.
+    hedge_cancel: HashSet<u64>,
     /// Cross-shard widening of the policy view + outbound dispatch
     /// collection; `None` for an unsharded cluster.
     exterior: Option<Exterior>,
@@ -350,6 +386,28 @@ impl EdgeCluster {
             };
             heap.push(Timed { at: e.at, seq, ev });
             seq += 1;
+        }
+        // open-loop ingestion: seed one outstanding arrival event per
+        // node stream; closed-loop scenarios build an empty generator
+        // and push nothing — bit-identical to the pre-ingest engine
+        let arrivals = ArrivalGen::new(
+            &scenario.ingest,
+            &scenario.workload.means,
+            scenario.slot_secs,
+            seed,
+        );
+        if arrivals.is_open() {
+            for i in 0..n {
+                let at = arrivals.peek(i);
+                if at.is_finite() {
+                    heap.push(Timed {
+                        at,
+                        seq,
+                        ev: Event::OpenArrival { node: i },
+                    });
+                    seq += 1;
+                }
+            }
         }
         EdgeCluster {
             n_nodes: n,
@@ -405,6 +463,12 @@ impl EdgeCluster {
             imported: 0,
             exported: 0,
             lost_to_failure: 0,
+            shed: 0,
+            cancelled: 0,
+            arrivals,
+            intake: Intake::new(scenario.ingest.admission.clone(), n),
+            hedge_partner: HashMap::new(),
+            hedge_cancel: HashSet::new(),
             exterior: None,
             rates_scratch: Vec::new(),
             counts_scratch: Vec::new(),
@@ -705,9 +769,31 @@ impl EdgeCluster {
                 Event::GpuRate { node, factor } => {
                     self.gpu_factor[node] = factor;
                 }
+                Event::OpenArrival { node } => self.on_open_arrival(node),
             }
         }
         Ok(())
+    }
+
+    /// One open-loop arrival instant at `node`: advance the stream,
+    /// schedule its next instant (the stream is independent of admission
+    /// — traffic keeps coming whether or not the door is open), and
+    /// apply admission. Every generated arrival counts as emitted;
+    /// refused ones are shed at the door and never enter the system.
+    fn on_open_arrival(&mut self, node: usize) {
+        self.arrivals.pop(node);
+        let next = self.arrivals.peek(node);
+        if next.is_finite() {
+            self.push_event(next, Event::OpenArrival { node });
+        }
+        let q = EdgeCluster::queue_len(self, node);
+        let d = EdgeCluster::queue_delay_estimate(self, node);
+        if self.intake.admit(node, self.now, q, d, self.drop_deadline) {
+            self.emit_request(node, self.now);
+        } else {
+            self.emitted += 1;
+            self.shed += 1;
+        }
     }
 
     /// Crash `node`: reclaim its orphaned work as lost to failure — the
@@ -736,6 +822,7 @@ impl EdgeCluster {
         for &id in scratch.iter() {
             if self.reqs.remove(&id).is_some() {
                 self.lost_to_failure += 1;
+                self.unlink_hedge(id);
             }
         }
         scratch.clear();
@@ -752,6 +839,10 @@ impl EdgeCluster {
         self.now = horizon;
         self.residual = self.reqs.len() as u64;
         self.reqs.clear();
+        // unresolved hedge races at the horizon count as residual (both
+        // copies were still in flight); the pairing state is spent
+        self.hedge_partner.clear();
+        self.hedge_cancel.clear();
         for b in &mut self.batchers {
             b.clear();
         }
@@ -769,15 +860,22 @@ impl EdgeCluster {
         let mut rates = std::mem::take(&mut self.rates_scratch);
         let mut counts = std::mem::take(&mut self.counts_scratch);
         self.workload.step_into(&mut rates, &mut counts);
+        // open-loop scenarios replace the closed-loop emission with the
+        // arrival generator's event stream; the workload still advances
+        // the observable rate history (the policy's intensity signal)
+        let closed_loop = !self.arrivals.is_open();
         for i in 0..self.n_nodes {
             self.rate_hist[i].push_back(rates[i]);
             if self.rate_hist[i].len() > self.hist_len {
                 self.rate_hist[i].pop_front();
             }
-            for k in 0..counts[i] {
-                let at = self.now
-                    + self.slot_secs * (k as f64 + 0.5) / counts[i] as f64;
-                self.emit_request(i, at);
+            if closed_loop {
+                for k in 0..counts[i] {
+                    let at = self.now
+                        + self.slot_secs * (k as f64 + 0.5)
+                            / counts[i] as f64;
+                    self.emit_request(i, at);
+                }
             }
         }
         self.rates_scratch = rates;
@@ -800,6 +898,7 @@ impl EdgeCluster {
             // the origin node is down: its frames are lost at the source
             if self.reqs.remove(&req).is_some() {
                 self.lost_to_failure += 1;
+                self.unlink_hedge(req);
             }
             return Ok(());
         }
@@ -843,6 +942,7 @@ impl EdgeCluster {
         let pre_secs = compute.preprocess(node, action.res)?
             / (self.gpu_speed[node] * self.gpu_factor[node]);
         let ready = self.now + pre_secs;
+        let mut primary_local: Option<usize> = None;
         if action.edge == origin_v {
             if let Some(r) = self.reqs.get_mut(&req) {
                 r.action = Action::new(node, action.model, action.res);
@@ -851,6 +951,7 @@ impl EdgeCluster {
                 ready.max(self.now),
                 Event::FrameReady { node, req },
             );
+            primary_local = Some(node);
         } else if let Some(target) = self.view_to_local(action.edge) {
             let finish = self.transfers.schedule(
                 node,
@@ -865,6 +966,7 @@ impl EdgeCluster {
                 r.in_transfer = true;
             }
             self.push_event(finish, Event::TransferDone { req });
+            primary_local = Some(target);
         } else {
             // cross-shard dispatch: the frame leaves this shard over the
             // fixed backhaul link and re-enters the target shard at the
@@ -892,7 +994,88 @@ impl EdgeCluster {
                 seq,
             });
         }
+        // hedged dispatch: offer the policy a duplicate of an in-shard
+        // primary (cross-shard primaries are not hedged — the duplicate
+        // would race an epoch barrier instead of a queue)
+        if let Some(primary) = primary_local {
+            self.try_hedge(node, req, primary, action, ready, policy)?;
+        }
         Ok(())
+    }
+
+    /// Offer the driving policy a hedged duplicate of `req`, whose
+    /// primary copy was just routed to local node `primary`. A hedging
+    /// policy returns a second (policy-view) node; the duplicate — the
+    /// same preprocessed frame — is dispatched there as its own emitted
+    /// request. The first copy to reach GPU service wins the race; the
+    /// other is cancel-accounted (`cancelled`) when its batch is pulled.
+    /// Policies without a hedge surface return `None` (the default) and
+    /// this is a no-op.
+    fn try_hedge(
+        &mut self,
+        origin: usize,
+        req: u64,
+        primary: usize,
+        action: Action,
+        ready: f64,
+        policy: &mut dyn Policy,
+    ) -> Result<()> {
+        let primary_v = self.view_origin(primary);
+        let Some(h) =
+            policy.hedge_target(self, self.view_origin(origin), primary_v)
+        else {
+            return Ok(());
+        };
+        let Some(h_local) = self.view_to_local(h) else {
+            return Ok(()); // duplicates stay in-shard
+        };
+        if h_local == primary || !self.alive[h_local] {
+            return Ok(());
+        }
+        let Some(r) = self.reqs.get(&req) else { return Ok(()) };
+        let arrival = r.arrival;
+        let hid = self.next_id;
+        self.next_id += 1;
+        self.emitted += 1;
+        self.reqs.insert(
+            hid,
+            PendingReq {
+                id: hid,
+                origin,
+                action: Action::new(h_local, action.model, action.res),
+                arrival,
+                in_transfer: h_local != origin,
+            },
+        );
+        self.hedge_partner.insert(req, hid);
+        self.hedge_partner.insert(hid, req);
+        if h_local == origin {
+            self.push_event(
+                ready.max(self.now),
+                Event::FrameReady { node: origin, req: hid },
+            );
+        } else {
+            let finish = self.transfers.schedule(
+                origin,
+                h_local,
+                hid,
+                self.profiles.frame_mbits[action.res],
+                self.link_bw(origin, h_local),
+                ready,
+            );
+            self.push_event(finish, Event::TransferDone { req: hid });
+        }
+        Ok(())
+    }
+
+    /// Remove any hedge pairing involving `id` (request lost to a fault
+    /// or resolved) so its twin proceeds standalone. Cheap no-op when no
+    /// hedging policy is active (both maps stay empty).
+    fn unlink_hedge(&mut self, id: u64) {
+        if let Some(p) = self.hedge_partner.remove(&id) {
+            self.hedge_partner.remove(&p);
+        }
+        self.hedge_cancel.remove(&id);
     }
 
     /// A transfer-completion instant: pop every transfer the scheduler has
@@ -928,6 +1111,7 @@ impl EdgeCluster {
             // the frame reached a crashed node — lost with it
             if self.reqs.remove(&req).is_some() {
                 self.lost_to_failure += 1;
+                self.unlink_hedge(req);
             }
             return Ok(());
         }
@@ -990,13 +1174,22 @@ impl EdgeCluster {
         compute: &mut dyn ComputeHook,
     ) -> Result<bool> {
         debug_assert!(!self.gpu_busy[node]);
-        // first pass: separate survivors from already-expired frames
+        // first pass: separate survivors from already-expired frames and
+        // cancel hedge-race losers (their twin already reached service)
         let mut survivors = 0usize;
         for &id in items {
+            if self.hedge_cancel.remove(&id) {
+                if self.reqs.remove(&id).is_some() {
+                    self.cancelled += 1;
+                }
+                continue;
+            }
             let Some(r) = self.reqs.get(&id) else { continue };
             if self.now - r.arrival > self.drop_deadline {
                 // invariant: get(&id) just returned Some
                 let r = self.reqs.remove(&id).unwrap();
+                // an expired frame resolves its hedge race as a loss
+                self.unlink_hedge(r.id);
                 self.served.push(ServedRequest {
                     id: r.id,
                     origin: r.origin,
@@ -1031,6 +1224,15 @@ impl EdgeCluster {
             // a completion past the deadline still counts as a drop —
             // and a drop earns no accuracy (the paper's reward definition)
             let dropped = finish - r.arrival > self.drop_deadline;
+            // reaching service resolves a hedge race: a winner marks its
+            // still-pending twin for cancellation, a late (dropped) copy
+            // just unlinks so the twin proceeds standalone
+            if let Some(partner) = self.hedge_partner.remove(&id) {
+                self.hedge_partner.remove(&partner);
+                if !dropped && self.reqs.contains_key(&partner) {
+                    self.hedge_cancel.insert(partner);
+                }
+            }
             self.served.push(ServedRequest {
                 id: r.id,
                 origin: r.origin,
@@ -1184,6 +1386,17 @@ impl PolicyView for EdgeCluster {
                 let ext = self.exterior.as_ref().unwrap();
                 ext.gpu_speed[node] * ext.faults.gpu_factor_at(node, self.now)
             }
+        }
+    }
+
+    fn intake_pressure(&self, node: usize) -> f64 {
+        match self.view_to_local(node) {
+            Some(l) => {
+                self.intake.pressure(l, EdgeCluster::queue_len(self, l))
+            }
+            // remote intake state is not exported across shards; report
+            // the no-pressure default rather than a stale guess
+            None => 0.0,
         }
     }
 

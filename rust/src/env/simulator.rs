@@ -15,6 +15,15 @@
 //! (wrapped by `coordinator::Cluster`) for the online serving runtime. It is
 //! fully deterministic given a seed.
 //!
+//! Open-loop ingestion: a [`Scenario`] whose `ingest` descriptor names an
+//! arrival process replaces the per-slot sampled workload counts with
+//! exact-instant arrivals from a seeded [`crate::ingest::ArrivalGen`],
+//! gated by [`crate::ingest::Intake`] admission control. Refused arrivals
+//! count as `shed`; conservation extends to
+//! `arrived == finished + in_flight + lost_to_failure + shed`. Closed-loop
+//! configs keep `shed == 0` and step bit-identically to the pre-ingest
+//! simulator.
+//!
 //! Hot-path contract: [`Simulator::step_into`] and the `*_into` observation
 //! builders perform **zero heap allocations** once queues and scratch
 //! buffers have reached their steady-state high-water marks (enforced by
@@ -29,6 +38,7 @@ use super::profiles::{Profiles, N_MODELS, N_RES};
 use super::request::{Action, Finished, Outcome, Request};
 use super::workload::{Workload, WorkloadConfig};
 use crate::config::EnvConfig;
+use crate::ingest::{ArrivalGen, IngestConfig, Intake};
 use crate::scenario::{FaultKind, FaultSchedule, Scenario};
 
 /// Static simulator configuration, derived from a [`Scenario`] (or, for
@@ -55,6 +65,10 @@ pub struct SimConfig {
     /// fault-free: every factor stays exactly 1.0 and no liveness branch
     /// changes behavior, so pre-chaos runs are bit-identical.
     pub faults: FaultSchedule,
+    /// Open-loop ingestion descriptor. Closed-loop (the default) keeps the
+    /// workload's per-slot sampled arrivals and sheds nothing — the open
+    /// path is never consulted, so pre-ingest runs are bit-identical.
+    pub ingest: IngestConfig,
 }
 
 impl SimConfig {
@@ -83,6 +97,7 @@ impl SimConfig {
             profiles: sc.profiles.clone(),
             gpu_speed: sc.gpu_speed.clone(),
             faults: sc.faults.clone(),
+            ingest: sc.ingest.clone(),
         }
     }
 
@@ -195,6 +210,12 @@ pub struct Simulator {
     /// Requests destroyed by faults: queued work on a crashing node,
     /// arrivals captured by a dead node, deliveries to a dead node.
     lost_to_failure: u64,
+    /// Open-loop arrival generator (empty streams when closed-loop).
+    arrivals: ArrivalGen,
+    /// Admission gate for open-loop arrivals.
+    intake: Intake,
+    /// Open-loop arrivals refused by the admission gate (0 closed-loop).
+    shed: u64,
     now: f64,
     slot: u64,
     next_id: u64,
@@ -222,6 +243,14 @@ impl Simulator {
             link_factor: vec![1.0; n],
             fault_cursor: 0,
             lost_to_failure: 0,
+            arrivals: ArrivalGen::new(
+                &cfg.ingest,
+                &cfg.workload.means,
+                cfg.slot_secs,
+                seed,
+            ),
+            intake: Intake::new(cfg.ingest.admission.clone(), n),
+            shed: 0,
             now: 0.0,
             slot: 0,
             next_id: 0,
@@ -273,9 +302,15 @@ impl Simulator {
 
     /// Requests destroyed by injected faults so far — the
     /// `lost_to_failure` ledger column: conservation is
-    /// `arrived == finished + in_flight + lost_to_failure`.
+    /// `arrived == finished + in_flight + lost_to_failure + shed`.
     pub fn lost_to_failure(&self) -> u64 {
         self.lost_to_failure
+    }
+
+    /// Open-loop arrivals refused by the admission gate so far — the
+    /// `shed` ledger column. Exactly 0 for closed-loop configs.
+    pub fn shed(&self) -> u64 {
+        self.shed
     }
 
     /// Estimated queuing delay at node i given current queue contents
@@ -391,10 +426,62 @@ impl Simulator {
             }
         }
 
-        // 1. new arrivals, preprocessed and routed per the slot's action
+        // 1. new arrivals, preprocessed and routed per the slot's action.
+        //    Open-loop configs replace the workload's sampled counts with
+        //    arrivals drawn from the seeded generator at exact instants,
+        //    each passing the admission gate before it enters the system
+        //    (rates above still feed the observation history either way).
+        let open_loop = self.arrivals.is_open();
         for i in 0..n {
             let a = actions[i];
             debug_assert!(a.edge < n);
+            if open_loop {
+                out.arrivals[i] = 0;
+                while self.arrivals.peek(i) < t1 {
+                    let arrival = self.arrivals.pop(i);
+                    out.arrivals[i] += 1;
+                    if !self.alive[i] {
+                        // a crashed node captures nothing: its open-loop
+                        // arrivals are lost to failure, not shed
+                        self.lost_to_failure += 1;
+                        continue;
+                    }
+                    let q = self.task_queues[i].len();
+                    let d = Simulator::queue_delay_estimate(self, i);
+                    if !self.intake.admit(
+                        i,
+                        arrival,
+                        q,
+                        d,
+                        self.cfg.drop_threshold,
+                    ) {
+                        self.shed += 1;
+                        continue;
+                    }
+                    let ready = arrival
+                        + self.cfg.profiles.preproc_delay[a.res]
+                            / (self.cfg.gpu_speed[i] * self.gpu_factor[i]);
+                    let req = Request {
+                        id: self.next_id,
+                        origin: i,
+                        target: a.edge,
+                        model: a.model,
+                        res: a.res,
+                        arrival,
+                        ready,
+                        mbits_left: self.cfg.profiles.frame_mbits[a.res],
+                    };
+                    self.next_id += 1;
+                    if a.edge == i {
+                        self.backlog[i].add(a.model, a.res);
+                        self.task_queues[i].push_back(req);
+                    } else {
+                        out.dispatched += 1;
+                        self.dispatch_queues[i * n + a.edge].push_back(req);
+                    }
+                }
+                continue;
+            }
             let count = out.arrivals[i];
             if !self.alive[i] {
                 // a crashed node captures nothing: its arrivals are lost
@@ -692,6 +779,10 @@ impl crate::policy::PolicyView for Simulator {
 
     fn drop_penalty(&self) -> f64 {
         self.cfg.drop_penalty
+    }
+
+    fn intake_pressure(&self, node: usize) -> f64 {
+        self.intake.pressure(node, self.task_queues[node].len())
     }
 }
 
@@ -1050,6 +1141,66 @@ mod tests {
             s.step(&all_to_0);
         }
         assert!(s.queue_delay_estimate(0) > base);
+    }
+
+    #[test]
+    fn closed_loop_sheds_nothing() {
+        let mut s = sim(14);
+        for t in 0..100 {
+            let a: Vec<Action> =
+                (0..4).map(|i| Action::new((i + t) % 4, t % 4, t % 5)).collect();
+            s.step(&a);
+        }
+        assert_eq!(s.shed(), 0);
+        for i in 0..4 {
+            assert_eq!(
+                crate::policy::PolicyView::intake_pressure(&s, i),
+                0.0
+            );
+        }
+    }
+
+    #[test]
+    fn open_loop_overload_sheds_and_conserves() {
+        let sc = Scenario::at_nodes("openloop-poisson", 4).unwrap();
+        let mut s = Simulator::from_scenario(&sc, 42);
+        // force the heaviest config locally: service capacity is far below
+        // the scaled open-loop rate, so the admission gate must engage
+        let a = local_actions(4, 3, 0);
+        let mut arrived = 0u64;
+        let mut finished = 0u64;
+        for _ in 0..200 {
+            let out = s.step(&a);
+            arrived += out.arrivals.iter().sum::<usize>() as u64;
+            finished += out.finished.len() as u64;
+        }
+        assert!(s.shed() > 0, "overload never engaged the admission gate");
+        assert_eq!(
+            arrived,
+            finished
+                + s.in_flight() as u64
+                + s.lost_to_failure()
+                + s.shed()
+        );
+    }
+
+    #[test]
+    fn open_loop_is_seed_deterministic() {
+        let sc = Scenario::at_nodes("openloop-burst", 4).unwrap();
+        let mut a = Simulator::from_scenario(&sc, 5);
+        let mut b = Simulator::from_scenario(&sc, 5);
+        let acts = local_actions(4, 1, 2);
+        for _ in 0..150 {
+            let oa = a.step(&acts);
+            let ob = b.step(&acts);
+            assert_eq!(oa.arrivals, ob.arrivals);
+            assert_eq!(oa.finished.len(), ob.finished.len());
+            assert_eq!(
+                oa.shared_reward.to_bits(),
+                ob.shared_reward.to_bits()
+            );
+        }
+        assert_eq!(a.shed(), b.shed());
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //!   the same `(policy, scenario, duration, seed)`.
 //! * Multi-shard runs are seed-deterministic across repeated executions.
 //! * [`FleetReport`] conservation holds globally:
-//!   `emitted == completed + dropped + lost_to_failure + residual`,
-//!   counting cross-shard requests still on the backhaul at the horizon
-//!   (`lost_to_failure` is zero unless the scenario injects faults; the
+//!   `emitted == completed + dropped + lost_to_failure + shed +
+//!   cancelled + residual`, counting cross-shard requests still on the
+//!   backhaul at the horizon (`lost_to_failure` is zero unless the
+//!   scenario injects faults, `shed` zero unless it runs open-loop with
+//!   admission enabled, `cancelled` zero unless the policy hedges; the
 //!   planner hands each shard its slice of the global fault timeline, so
 //!   chaos scenarios hold this at every shard count).
 //! * Per-shard steady-state stepping stays zero-alloc
@@ -77,6 +79,7 @@ pub fn sweep_to_csv(
             "dropped",
             "residual",
             "lost_to_failure",
+            "shed",
             "cross_shard",
             "cross_in_flight",
             "throughput_rps",
@@ -149,6 +152,7 @@ pub fn sweep_to_csv(
                 report.dropped.to_string(),
                 report.residual.to_string(),
                 report.lost_to_failure.to_string(),
+                report.shed.to_string(),
                 report.cross_dispatches.to_string(),
                 report.cross_in_flight.to_string(),
                 format!("{:.3}", report.throughput_rps),
@@ -195,6 +199,7 @@ mod tests {
         assert!(header.contains("util_mean"));
         assert!(header.contains("cross_shard"));
         assert!(header.contains("lost_to_failure"));
+        assert!(header.contains("shed"));
         assert!(header.contains("stall_frac"));
         assert_eq!(text.lines().count(), 3);
         let _ = std::fs::remove_dir_all(&dir);

@@ -6,10 +6,12 @@ use crate::util::stats::{mean, percentile};
 
 /// Aggregate of every shard's [`ServingReport`] plus the cross-shard
 /// accounting. Global conservation:
-/// `emitted == completed + dropped + lost_to_failure + residual`, where
-/// `residual` counts in-shard in-flight requests **and** cross-shard
-/// dispatches still in the fleet mailbox at the horizon, and
-/// `lost_to_failure` is zero unless the scenario injects faults.
+/// `emitted == completed + dropped + lost_to_failure + shed + cancelled +
+/// residual`, where `residual` counts in-shard in-flight requests **and**
+/// cross-shard dispatches still in the fleet mailbox at the horizon,
+/// `lost_to_failure` is zero unless the scenario injects faults, `shed`
+/// is zero unless it runs open-loop with admission enabled, and
+/// `cancelled` is zero unless the policy hedges.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub scenario: String,
@@ -26,6 +28,10 @@ pub struct FleetReport {
     pub residual: usize,
     /// Requests destroyed by injected faults across every shard.
     pub lost_to_failure: usize,
+    /// Open-loop arrivals refused at admission gates across every shard.
+    pub shed: usize,
+    /// Hedge copies cancel-accounted across every shard.
+    pub cancelled: usize,
     /// Requests that crossed a shard boundary (sum of shard exports).
     pub cross_dispatches: usize,
     /// Cross-shard dispatches still undelivered at the horizon.
@@ -64,6 +70,8 @@ impl FleetReport {
         let shard_residual: usize = per_shard.iter().map(|r| r.residual).sum();
         let lost_to_failure: usize =
             per_shard.iter().map(|r| r.lost_to_failure).sum();
+        let shed: usize = per_shard.iter().map(|r| r.shed).sum();
+        let cancelled: usize = per_shard.iter().map(|r| r.cancelled).sum();
         let cross_dispatches: usize =
             per_shard.iter().map(|r| r.exported).sum();
         let acc_weighted: f64 = per_shard
@@ -80,6 +88,8 @@ impl FleetReport {
             dropped,
             residual: shard_residual + cross_in_flight,
             lost_to_failure,
+            shed,
+            cancelled,
             cross_dispatches,
             cross_in_flight,
             virtual_secs,
@@ -101,14 +111,16 @@ impl FleetReport {
 
     /// Global request conservation, including cross-shard traffic: every
     /// camera-emitted request is completed, dropped, destroyed by a
-    /// fault, or in flight somewhere (in a shard or on the cross-shard
-    /// backhaul) — and every shard's own boundary-aware accounting
-    /// balances too.
+    /// fault, shed at an admission gate, hedge-cancelled, or in flight
+    /// somewhere (in a shard or on the cross-shard backhaul) — and every
+    /// shard's own boundary-aware accounting balances too.
     pub fn conserved(&self) -> bool {
         self.emitted
             == self.completed
                 + self.dropped
                 + self.lost_to_failure
+                + self.shed
+                + self.cancelled
                 + self.residual
             && self.per_shard.iter().all(|r| r.conserved())
     }
@@ -139,6 +151,18 @@ impl FleetReport {
             println!(
                 "  lost to failure {} (destroyed by injected faults)",
                 self.lost_to_failure
+            );
+        }
+        if self.shed > 0 {
+            println!(
+                "  shed            {} (refused at admission gates)",
+                self.shed
+            );
+        }
+        if self.cancelled > 0 {
+            println!(
+                "  hedge-cancelled {} (twin reached service first)",
+                self.cancelled
             );
         }
         println!("  cross-shard     {} dispatches", self.cross_dispatches);

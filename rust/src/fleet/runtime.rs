@@ -288,12 +288,14 @@ impl Fleet {
             anyhow::ensure!(
                 report.conserved(),
                 "fleet leaked requests: global emitted {} vs completed {} \
-                 + dropped {} + lost_to_failure {} + residual {}; \
-                 per-shard boundary conservation: {:?}",
+                 + dropped {} + lost_to_failure {} + shed {} + cancelled \
+                 {} + residual {}; per-shard boundary conservation: {:?}",
                 report.emitted,
                 report.completed,
                 report.dropped,
                 report.lost_to_failure,
+                report.shed,
+                report.cancelled,
                 report.residual,
                 report
                     .per_shard

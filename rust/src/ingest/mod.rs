@@ -1,0 +1,727 @@
+//! Open-loop ingestion — arrival processes + admission control in front
+//! of both execution substrates.
+//!
+//! Every pre-PR workload is *closed-loop*: the slot [`crate::env::Workload`]
+//! decides per-slot arrival counts, and the cluster absorbs exactly what
+//! the generator emits. Production serving is *open-loop*: traffic keeps
+//! arriving whether or not the cluster can absorb it, and the system
+//! must refuse work at the door (admission control, backpressure) or
+//! collapse. This module supplies both halves:
+//!
+//! * [`ArrivalProcess`] / [`ArrivalGen`] — deterministic, seeded
+//!   per-node arrival-time generators: Poisson, bursty MMPP-style
+//!   on-off, heavy-tailed Pareto interarrivals, and trace replay
+//!   (file-backed or the embedded builtin trace). Plain comparable
+//!   descriptor data rides on a [`crate::scenario::Scenario`]
+//!   (`ingest` field); the default [`ArrivalProcess::ClosedLoop`] keeps
+//!   every pre-existing scenario bit-identical — the hot paths never
+//!   consult a closed-loop config.
+//! * [`AdmissionConfig`] / [`Intake`] — deterministic per-node
+//!   admission: a queue-cap backpressure check, a deadline-feasibility
+//!   test against the substrate's `queue_delay_estimate`, and a
+//!   token-bucket shed policy. A refused request is **shed**, a
+//!   first-class ledger column: the conservation form every report
+//!   checks extends to
+//!   `emitted == completed + dropped + lost_to_failure + shed + residual`,
+//!   and closed-loop runs must keep `shed == 0` exactly.
+//!
+//! Both substrates consume the same generator: the event-driven
+//! `EdgeCluster` pulls exact arrival instants as first-class events; the
+//! slot `Simulator` pulls the arrivals falling inside each slot and
+//! admits at the slot boundary (quantized admission, same contract as
+//! the fault schedule's slot quantization).
+
+use crate::util::rng::Rng;
+
+/// Seed salt decorrelating arrival streams from the workload/bandwidth
+/// RNG streams that share the scenario seed.
+const ARRIVAL_SEED_SALT: u64 = 0x0DE0_0B5E55ED_1E7;
+
+/// How requests arrive at the cluster. `ClosedLoop` (the default) defers
+/// to the scenario's [`crate::env::workload::WorkloadConfig`] slot
+/// generator — the pre-PR behavior, bit for bit. The open-loop variants
+/// generate per-node arrival *instants*; their aggregate intensity is
+/// anchored to the closed-loop regime: node `i`'s base rate is
+/// `workload.means[i] / slot_secs` requests per second, scaled by
+/// `rate_scale` (so `rate_scale = 2.0` is a 2x-capacity flash crowd).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Slot-quantized closed-loop workload (the pre-PR generator).
+    ClosedLoop,
+    /// Memoryless arrivals: exponential interarrivals at the scaled base
+    /// rate.
+    Poisson { rate_scale: f64 },
+    /// MMPP-style on-off burst process: exponential interarrivals whose
+    /// rate switches between `base` (off) and `base * burst_gain` (on);
+    /// state durations are exponential with means `mean_on` / `mean_off`
+    /// seconds.
+    OnOff {
+        rate_scale: f64,
+        burst_gain: f64,
+        mean_on: f64,
+        mean_off: f64,
+    },
+    /// Heavy-tailed Pareto interarrivals with shape `alpha` (> 1), scale
+    /// chosen so the mean interarrival matches the scaled base rate —
+    /// same average load as `Poisson`, far burstier extremes.
+    Pareto { rate_scale: f64, alpha: f64 },
+    /// Replay a recorded trace of `(seconds, node)` arrivals, looping
+    /// with period `ceil(max t)`. `path` names a CSV file (`t,node` per
+    /// line, `#` comments); the reserved name `"builtin"` replays the
+    /// embedded flash-crowd trace, so registry entries need no files.
+    Trace { path: String },
+}
+
+impl Default for ArrivalProcess {
+    fn default() -> Self {
+        ArrivalProcess::ClosedLoop
+    }
+}
+
+/// Deterministic per-node admission knobs. `enabled = false` admits
+/// everything (the no-admission ablation of an open-loop run);
+/// closed-loop scenarios never consult the config at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    pub enabled: bool,
+    /// Backpressure at the door: refuse when the node already has this
+    /// many requests pending GPU service.
+    pub queue_cap: usize,
+    /// Deadline feasibility: refuse when the node's
+    /// `queue_delay_estimate` exceeds this fraction of the scenario's
+    /// drop threshold — work that would arrive at the GPU already dead
+    /// is shed instead of queued.
+    pub deadline_fraction: f64,
+    /// Token-bucket rate limit in requests/second per node
+    /// (`0.0` = unlimited; the cap/deadline checks still apply).
+    pub bucket_rate: f64,
+    /// Token-bucket burst depth in requests.
+    pub bucket_depth: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            enabled: false,
+            queue_cap: 64,
+            deadline_fraction: 0.9,
+            bucket_rate: 0.0,
+            bucket_depth: 8.0,
+        }
+    }
+}
+
+/// The scenario-level ingestion descriptor: an arrival process plus the
+/// admission policy guarding the door. Defaults to closed-loop with
+/// admission off — the exact pre-PR regime.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct IngestConfig {
+    pub arrival: ArrivalProcess,
+    pub admission: AdmissionConfig,
+}
+
+impl IngestConfig {
+    /// True when the scenario generates open-loop traffic (the hot paths
+    /// only consult the ingest layer when this holds).
+    pub fn is_open(&self) -> bool {
+        self.arrival != ArrivalProcess::ClosedLoop
+    }
+
+    /// Panic unless the descriptor is well-formed (mirrors
+    /// `FaultSchedule::validate`; called from `Scenario::validate`).
+    pub fn validate(&self, scenario: &str) {
+        let check_scale = |s: f64| {
+            assert!(
+                s > 0.0 && s.is_finite(),
+                "scenario {scenario}: arrival rate_scale {s} must be \
+                 positive and finite"
+            );
+        };
+        match &self.arrival {
+            ArrivalProcess::ClosedLoop => {}
+            ArrivalProcess::Poisson { rate_scale } => check_scale(*rate_scale),
+            ArrivalProcess::OnOff {
+                rate_scale,
+                burst_gain,
+                mean_on,
+                mean_off,
+            } => {
+                check_scale(*rate_scale);
+                assert!(
+                    *burst_gain >= 1.0 && burst_gain.is_finite(),
+                    "scenario {scenario}: burst_gain {burst_gain} must be >= 1"
+                );
+                assert!(
+                    *mean_on > 0.0 && *mean_off > 0.0,
+                    "scenario {scenario}: on/off state means must be positive"
+                );
+            }
+            ArrivalProcess::Pareto { rate_scale, alpha } => {
+                check_scale(*rate_scale);
+                assert!(
+                    *alpha > 1.0 && alpha.is_finite(),
+                    "scenario {scenario}: Pareto alpha {alpha} must be > 1 \
+                     (finite mean)"
+                );
+            }
+            ArrivalProcess::Trace { path } => {
+                assert!(
+                    !path.is_empty(),
+                    "scenario {scenario}: trace path must be non-empty \
+                     (use \"builtin\" for the embedded trace)"
+                );
+            }
+        }
+        if self.admission.enabled {
+            assert!(
+                self.admission.queue_cap >= 1,
+                "scenario {scenario}: queue_cap must be >= 1"
+            );
+            assert!(
+                self.admission.deadline_fraction > 0.0
+                    && self.admission.deadline_fraction.is_finite(),
+                "scenario {scenario}: deadline_fraction must be positive"
+            );
+            assert!(
+                self.admission.bucket_rate >= 0.0
+                    && self.admission.bucket_rate.is_finite(),
+                "scenario {scenario}: bucket_rate must be finite and >= 0"
+            );
+            if self.admission.bucket_rate > 0.0 {
+                assert!(
+                    self.admission.bucket_depth >= 1.0,
+                    "scenario {scenario}: bucket_depth must be >= 1 when \
+                     rate-limited"
+                );
+            }
+        }
+    }
+}
+
+/// The embedded trace behind `Trace { path: "builtin" }`: an 8-second
+/// loop of a steady drizzle (80 ms spacing, round-robin over 4 streams)
+/// with a 1-second flash crowd (20 ms spacing) at t = 3 s. Deterministic
+/// data, no RNG — same role as the rotating fault generators.
+fn builtin_trace() -> Vec<(f64, usize)> {
+    let mut v = Vec::new();
+    let mut k = 0usize;
+    let mut t = 0.05;
+    while t < 8.0 {
+        v.push((t, k % 4));
+        k += 1;
+        t += 0.08;
+    }
+    let mut t = 3.01;
+    while t < 4.0 {
+        v.push((t, k % 4));
+        k += 1;
+        t += 0.02;
+    }
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    v
+}
+
+/// Parse a `t,node` CSV trace (blank lines and `#` comments skipped).
+fn parse_trace(text: &str, origin: &str) -> Vec<(f64, usize)> {
+    let mut v: Vec<(f64, usize)> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| {
+            let (t, n) = l.split_once(',').unwrap_or_else(|| {
+                panic!("trace {origin}: line {l:?} is not `t,node`")
+            });
+            let t: f64 = t.trim().parse().unwrap_or_else(|_| {
+                panic!("trace {origin}: bad time in line {l:?}")
+            });
+            let n: usize = n.trim().parse().unwrap_or_else(|_| {
+                panic!("trace {origin}: bad node in line {l:?}")
+            });
+            assert!(t.is_finite() && t >= 0.0, "trace {origin}: time {t}");
+            (t, n)
+        })
+        .collect();
+    assert!(!v.is_empty(), "trace {origin}: no arrival events");
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    v
+}
+
+#[derive(Debug, Clone)]
+enum StreamKind {
+    Poisson {
+        rate: f64,
+    },
+    OnOff {
+        rate_off: f64,
+        rate_on: f64,
+        mean_on: f64,
+        mean_off: f64,
+        on: bool,
+        until: f64,
+    },
+    Pareto {
+        xm: f64,
+        inv_alpha: f64,
+    },
+    /// This node's slice of the trace (already node-filtered), looping
+    /// with `period`. Empty slice = this node never receives traffic.
+    Trace {
+        times: Vec<f64>,
+        period: f64,
+        idx: usize,
+        cycle: u64,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct NodeStream {
+    rng: Rng,
+    kind: StreamKind,
+    next_at: f64,
+}
+
+impl NodeStream {
+    /// Exponential interarrival at `rate` (memoryless).
+    fn exp(rng: &mut Rng, rate: f64) -> f64 {
+        -(1.0 - rng.f64()).ln() / rate
+    }
+
+    /// Advance past the current arrival, sampling the next instant.
+    fn advance(&mut self) {
+        let t = self.next_at;
+        self.next_at = match &mut self.kind {
+            StreamKind::Poisson { rate } => t + Self::exp(&mut self.rng, *rate),
+            StreamKind::OnOff {
+                rate_off,
+                rate_on,
+                mean_on,
+                mean_off,
+                on,
+                until,
+            } => {
+                // memoryless within a state: sample at the current rate,
+                // and on crossing a state boundary advance to it, flip,
+                // and resample — the standard exact MMPP simulation
+                let mut now = t;
+                loop {
+                    let rate = if *on { *rate_on } else { *rate_off };
+                    let cand = now + Self::exp(&mut self.rng, rate);
+                    if cand <= *until {
+                        break cand;
+                    }
+                    now = *until;
+                    *on = !*on;
+                    let mean = if *on { *mean_on } else { *mean_off };
+                    *until = now + Self::exp(&mut self.rng, 1.0 / mean);
+                }
+            }
+            StreamKind::Pareto { xm, inv_alpha } => {
+                let u = 1.0 - self.rng.f64();
+                t + *xm * u.powf(-*inv_alpha)
+            }
+            StreamKind::Trace { times, period, idx, cycle } => {
+                if times.is_empty() {
+                    f64::INFINITY
+                } else {
+                    *idx += 1;
+                    if *idx >= times.len() {
+                        *idx = 0;
+                        *cycle += 1;
+                    }
+                    times[*idx] + *cycle as f64 * *period
+                }
+            }
+        };
+    }
+}
+
+/// Deterministic per-node arrival-instant generator. Same `(config,
+/// means, slot_secs, seed)` always yields the same arrival sequence;
+/// node streams are decorrelated by forked RNG streams. Closed-loop
+/// configs build an empty generator that is never consulted.
+/// `advance` is allocation-free — all stream state is built up front.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    streams: Vec<NodeStream>,
+}
+
+impl ArrivalGen {
+    pub fn new(
+        ingest: &IngestConfig,
+        means: &[f64],
+        slot_secs: f64,
+        seed: u64,
+    ) -> ArrivalGen {
+        if !ingest.is_open() {
+            return ArrivalGen { streams: Vec::new() };
+        }
+        let mut root = Rng::new(seed ^ ARRIVAL_SEED_SALT);
+        let trace: Option<Vec<(f64, usize)>> = match &ingest.arrival {
+            ArrivalProcess::Trace { path } if path == "builtin" => {
+                Some(builtin_trace())
+            }
+            ArrivalProcess::Trace { path } => {
+                let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                    panic!("trace {path}: unreadable ({e})")
+                });
+                Some(parse_trace(&text, path))
+            }
+            _ => None,
+        };
+        let n = means.len();
+        let streams = (0..n)
+            .map(|i| {
+                let mut rng = root.fork(i as u64);
+                let base = means[i].max(1e-9) / slot_secs;
+                let kind = match &ingest.arrival {
+                    ArrivalProcess::ClosedLoop => unreachable!(),
+                    ArrivalProcess::Poisson { rate_scale } => {
+                        StreamKind::Poisson { rate: base * rate_scale }
+                    }
+                    ArrivalProcess::OnOff {
+                        rate_scale,
+                        burst_gain,
+                        mean_on,
+                        mean_off,
+                    } => {
+                        let off = base * rate_scale;
+                        let until =
+                            NodeStream::exp(&mut rng, 1.0 / mean_off);
+                        StreamKind::OnOff {
+                            rate_off: off,
+                            rate_on: off * burst_gain,
+                            mean_on: *mean_on,
+                            mean_off: *mean_off,
+                            on: false,
+                            until,
+                        }
+                    }
+                    ArrivalProcess::Pareto { rate_scale, alpha } => {
+                        // xm so the mean interarrival is 1 / (base * scale)
+                        let rate = base * rate_scale;
+                        StreamKind::Pareto {
+                            xm: (alpha - 1.0) / (alpha * rate),
+                            inv_alpha: 1.0 / alpha,
+                        }
+                    }
+                    ArrivalProcess::Trace { .. } => {
+                        let all = trace.as_ref().unwrap();
+                        let max_t =
+                            all.iter().fold(0.0f64, |m, e| m.max(e.0));
+                        let period = max_t.ceil().max(1.0);
+                        let times: Vec<f64> = all
+                            .iter()
+                            .filter(|(_, node)| node % n == i)
+                            .map(|(t, _)| *t)
+                            .collect();
+                        StreamKind::Trace { times, period, idx: 0, cycle: 0 }
+                    }
+                };
+                let mut s = NodeStream { rng, kind, next_at: 0.0 };
+                // position at the first arrival
+                match &mut s.kind {
+                    StreamKind::Trace { times, .. } => {
+                        s.next_at = times
+                            .first()
+                            .copied()
+                            .unwrap_or(f64::INFINITY);
+                    }
+                    _ => s.advance(),
+                }
+                s
+            })
+            .collect();
+        ArrivalGen { streams }
+    }
+
+    /// True when this generator produces open-loop traffic.
+    pub fn is_open(&self) -> bool {
+        !self.streams.is_empty()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// The next arrival instant at `node` (`f64::INFINITY` = none).
+    pub fn peek(&self, node: usize) -> f64 {
+        self.streams[node].next_at
+    }
+
+    /// Consume the next arrival at `node`, returning its instant and
+    /// advancing the stream.
+    pub fn pop(&mut self, node: usize) -> f64 {
+        let at = self.streams[node].next_at;
+        self.streams[node].advance();
+        at
+    }
+}
+
+/// Per-node admission state: the token buckets behind
+/// [`AdmissionConfig`]. All state is preallocated at construction — the
+/// admit path is allocation-free.
+#[derive(Debug, Clone)]
+pub struct Intake {
+    cfg: AdmissionConfig,
+    tokens: Vec<f64>,
+    refilled_at: Vec<f64>,
+}
+
+impl Intake {
+    pub fn new(cfg: AdmissionConfig, n_nodes: usize) -> Intake {
+        let depth = cfg.bucket_depth;
+        Intake {
+            cfg,
+            tokens: vec![depth; n_nodes],
+            refilled_at: vec![0.0; n_nodes],
+        }
+    }
+
+    /// Decide admission for one arrival at `node` at time `now`, given
+    /// the substrate's current queue length and delay estimate. `true`
+    /// admits; `false` sheds. Deterministic: same inputs, same answer
+    /// (the token bucket is the only stateful part and is advanced only
+    /// here).
+    pub fn admit(
+        &mut self,
+        node: usize,
+        now: f64,
+        queue_len: usize,
+        delay_estimate: f64,
+        drop_threshold: f64,
+    ) -> bool {
+        if !self.cfg.enabled {
+            return true;
+        }
+        // backpressure at the door: the queue is already saturated
+        if queue_len >= self.cfg.queue_cap {
+            return false;
+        }
+        // deadline feasibility: the request would reach the GPU dead
+        if delay_estimate > self.cfg.deadline_fraction * drop_threshold {
+            return false;
+        }
+        // token bucket (0 rate = unlimited)
+        if self.cfg.bucket_rate > 0.0 {
+            let dt = (now - self.refilled_at[node]).max(0.0);
+            self.tokens[node] = (self.tokens[node]
+                + dt * self.cfg.bucket_rate)
+                .min(self.cfg.bucket_depth);
+            self.refilled_at[node] = now;
+            if self.tokens[node] < 1.0 {
+                return false;
+            }
+            self.tokens[node] -= 1.0;
+        }
+        true
+    }
+
+    /// Intake pressure at `node` in [0, 1]: how close the door is to
+    /// refusing work (queue occupancy against the admission cap). 0 when
+    /// admission is disabled — closed-loop views read zero pressure.
+    pub fn pressure(&self, node: usize, queue_len: usize) -> f64 {
+        let _ = node;
+        if !self.cfg.enabled {
+            return 0.0;
+        }
+        (queue_len as f64 / self.cfg.queue_cap as f64).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_cfg(scale: f64) -> IngestConfig {
+        IngestConfig {
+            arrival: ArrivalProcess::Poisson { rate_scale: scale },
+            admission: AdmissionConfig::default(),
+        }
+    }
+
+    #[test]
+    fn closed_loop_builds_an_empty_generator() {
+        let g = ArrivalGen::new(&IngestConfig::default(), &[1.0; 4], 1.0, 7);
+        assert!(!g.is_open());
+        assert!(!IngestConfig::default().is_open());
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        for ingest in [
+            poisson_cfg(2.0),
+            IngestConfig {
+                arrival: ArrivalProcess::OnOff {
+                    rate_scale: 1.5,
+                    burst_gain: 4.0,
+                    mean_on: 0.5,
+                    mean_off: 2.0,
+                },
+                ..Default::default()
+            },
+            IngestConfig {
+                arrival: ArrivalProcess::Pareto {
+                    rate_scale: 1.5,
+                    alpha: 1.5,
+                },
+                ..Default::default()
+            },
+            IngestConfig {
+                arrival: ArrivalProcess::Trace { path: "builtin".into() },
+                ..Default::default()
+            },
+        ] {
+            let means = [0.5, 1.1, 1.3, 2.4];
+            let mut a = ArrivalGen::new(&ingest, &means, 1.0, 42);
+            let mut b = ArrivalGen::new(&ingest, &means, 1.0, 42);
+            let mut c = ArrivalGen::new(&ingest, &means, 1.0, 43);
+            let mut diverged = false;
+            for _ in 0..200 {
+                for node in 0..4 {
+                    let x = a.pop(node);
+                    assert_eq!(x.to_bits(), b.pop(node).to_bits());
+                    assert!(x > 0.0);
+                    if x.to_bits() != c.pop(node).to_bits() {
+                        diverged = true;
+                    }
+                }
+            }
+            // trace replay is seed-independent by design
+            if !matches!(ingest.arrival, ArrivalProcess::Trace { .. }) {
+                assert!(diverged, "different seeds must differ");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_times_are_strictly_increasing_per_node() {
+        let mut g =
+            ArrivalGen::new(&poisson_cfg(2.0), &[1.0, 2.0], 0.5, 11);
+        for node in 0..2 {
+            let mut last = 0.0;
+            for _ in 0..500 {
+                let t = g.pop(node);
+                assert!(t > last, "node {node}: {t} after {last}");
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_matches_the_scaled_mean() {
+        let mut g = ArrivalGen::new(&poisson_cfg(2.0), &[1.0], 1.0, 3);
+        // expect ~2 arrivals/sec: count arrivals before t = 2000
+        let mut count = 0usize;
+        while g.peek(0) < 2000.0 {
+            g.pop(0);
+            count += 1;
+        }
+        let rate = count as f64 / 2000.0;
+        assert!((rate - 2.0).abs() < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn pareto_matches_mean_but_has_heavier_tail() {
+        let ingest = IngestConfig {
+            arrival: ArrivalProcess::Pareto { rate_scale: 1.0, alpha: 1.5 },
+            ..Default::default()
+        };
+        let mut g = ArrivalGen::new(&ingest, &[1.0], 1.0, 5);
+        let mut gaps = Vec::new();
+        let mut last = 0.0;
+        for _ in 0..20_000 {
+            let t = g.pop(0);
+            gaps.push(t - last);
+            last = t;
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 1.0).abs() < 0.25, "mean gap {mean}");
+        let max = gaps.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 10.0, "heavy tail should show extreme gaps ({max})");
+    }
+
+    #[test]
+    fn builtin_trace_replays_and_loops() {
+        let ingest = IngestConfig {
+            arrival: ArrivalProcess::Trace { path: "builtin".into() },
+            ..Default::default()
+        };
+        let mut g = ArrivalGen::new(&ingest, &[1.0; 4], 1.0, 0);
+        let first: Vec<f64> = (0..4).map(|n| g.peek(n)).collect();
+        // consume one full 8-second cycle everywhere
+        let mut count = 0usize;
+        for node in 0..4 {
+            while g.peek(node) < 8.0 {
+                g.pop(node);
+                count += 1;
+            }
+        }
+        // the loop repeats shifted by the period
+        for node in 0..4 {
+            assert!((g.peek(node) - (first[node] + 8.0)).abs() < 1e-9);
+        }
+        assert!(count > 100, "builtin trace carries a flash crowd");
+        // a 2-node cluster folds trace nodes mod n
+        let g2 = ArrivalGen::new(&ingest, &[1.0; 2], 1.0, 0);
+        assert!(g2.peek(0).is_finite() && g2.peek(1).is_finite());
+    }
+
+    #[test]
+    fn parse_trace_reads_csv() {
+        let t = parse_trace("# demo\n0.5, 1\n0.25,0\n\n1.0,3\n", "test");
+        assert_eq!(t, vec![(0.25, 0), (0.5, 1), (1.0, 3)]);
+    }
+
+    #[test]
+    fn intake_sheds_on_cap_deadline_and_bucket() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            queue_cap: 4,
+            deadline_fraction: 0.5,
+            bucket_rate: 1.0,
+            bucket_depth: 2.0,
+        };
+        let mut intake = Intake::new(cfg, 2);
+        // queue cap
+        assert!(!intake.admit(0, 0.0, 4, 0.0, 1.0));
+        // deadline feasibility (threshold 1.0, fraction 0.5)
+        assert!(!intake.admit(0, 0.0, 0, 0.6, 1.0));
+        // token bucket: depth 2 admits two back-to-back, refuses third,
+        // refills after a second
+        assert!(intake.admit(0, 1.0, 0, 0.0, 1.0));
+        assert!(intake.admit(0, 1.0, 0, 0.0, 1.0));
+        assert!(!intake.admit(0, 1.0, 0, 0.0, 1.0));
+        assert!(intake.admit(0, 2.5, 0, 0.0, 1.0));
+        // node 1's bucket is independent
+        assert!(intake.admit(1, 1.0, 0, 0.0, 1.0));
+        // pressure tracks queue occupancy against the cap
+        assert_eq!(intake.pressure(0, 0), 0.0);
+        assert_eq!(intake.pressure(0, 2), 0.5);
+        assert_eq!(intake.pressure(0, 8), 1.0);
+        // disabled admission admits everything and reads zero pressure
+        let mut off = Intake::new(AdmissionConfig::default(), 1);
+        assert!(off.admit(0, 0.0, 1_000_000, 1e9, 1.0));
+        assert_eq!(off.pressure(0, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_descriptors() {
+        IngestConfig::default().validate("ok");
+        poisson_cfg(2.0).validate("ok");
+        let bad = std::panic::catch_unwind(|| {
+            poisson_cfg(0.0).validate("bad");
+        });
+        assert!(bad.is_err());
+        let bad = std::panic::catch_unwind(|| {
+            IngestConfig {
+                arrival: ArrivalProcess::Pareto {
+                    rate_scale: 1.0,
+                    alpha: 1.0,
+                },
+                ..Default::default()
+            }
+            .validate("bad");
+        });
+        assert!(bad.is_err());
+    }
+}

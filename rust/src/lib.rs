@@ -53,6 +53,7 @@ pub mod env;
 #[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod fleet;
+pub mod ingest;
 pub mod policy;
 pub mod rl;
 #[cfg(feature = "pjrt")]

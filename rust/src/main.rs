@@ -32,8 +32,9 @@ const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios
   repro serve [--duration 30] [--policy FILE] [--scenario NAME] [--list-scenarios]
               [--shards S] [--epoch SECS] [--baseline NAME]   (shards > 1: sharded fleet runtime)
   repro scenarios
-  repro experiment <fig3|fig45|fig6|fig7|fig8|serving|fleet|headline|all> [--episodes N]
-    fleet flags: [--shards 1,2,4] [--nodes 16] [--duration 20]";
+  repro experiment <fig3|fig45|fig6|fig7|fig8|serving|openloop|fleet|headline|all> [--episodes N]
+    fleet flags: [--shards 1,2,4] [--nodes 16] [--duration 20]
+    openloop flags: [--duration 20]   (admission on/off SLO sweep -> slo_comparison.csv)";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -272,7 +273,7 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|serving|fleet|headline|all)")?;
+        .context("experiment needs a figure id (fig3|fig45|fig6|fig7|fig8|serving|openloop|fleet|headline|all)")?;
     let ctx = ExpContext::new(rt, manifest, cfg);
     match which {
         "fig3" => ctx.fig3(),
@@ -301,6 +302,36 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
                     r.mean_accuracy
                 );
             }
+            Ok(())
+        }
+        "openloop" => {
+            // open-loop SLO sweep: admission on/off across the
+            // openloop-* scenarios, headline-asserted
+            let path = ctx.results.join("slo_comparison.csv");
+            let rows = edgevision::serving::openloop_to_csv(
+                args.f64_or("duration", 20.0)?,
+                ctx.base.rl.seed,
+                &path,
+            )?;
+            println!(
+                "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8} {:>9}",
+                "scenario", "adm", "emitted", "shed", "done", "p99",
+                "goodput"
+            );
+            for r in &rows {
+                println!(
+                    "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8.3} {:>9.3}",
+                    r.scenario,
+                    if r.admission { "on" } else { "off" },
+                    r.report.emitted,
+                    r.report.shed,
+                    r.report.completed,
+                    r.slo.p99,
+                    r.slo.goodput_rps
+                );
+            }
+            edgevision::serving::assert_admission_headline(&rows)?;
+            println!("wrote {}", path.display());
             Ok(())
         }
         "fleet" => {

@@ -147,6 +147,16 @@ pub trait PolicyView {
         self.gpu_speed(node)
     }
 
+    /// Open-loop intake pressure at `node` in [0, 1]: how close the
+    /// admission door is to refusing work (queue occupancy against the
+    /// admission cap). Closed-loop views — and open-loop runs with
+    /// admission disabled — read 0.0, the default, so policies can react
+    /// to backpressure without caring which substrate they drive.
+    fn intake_pressure(&self, node: usize) -> f64 {
+        let _ = node;
+        0.0
+    }
+
     /// Delay penalty weight omega (Eq. 5).
     fn omega(&self) -> f64;
 
@@ -176,6 +186,22 @@ pub trait Policy {
         view: &dyn PolicyView,
         out: &mut Vec<Action>,
     ) -> Result<()>;
+
+    /// Hedged-dispatch surface: after a request from `origin` has been
+    /// routed to `primary` (both policy-view indices), a hedging policy
+    /// may return a second node to duplicate the request to — first copy
+    /// to reach GPU service wins, the other is cancel-accounted by the
+    /// engine. The default never hedges, so ordinary policies and the
+    /// slot simulator (which has no duplicate path) are unaffected.
+    fn hedge_target(
+        &mut self,
+        view: &dyn PolicyView,
+        origin: usize,
+        primary: usize,
+    ) -> Option<usize> {
+        let _ = (view, origin, primary);
+        None
+    }
 }
 
 /// Adapts the batch [`Policy::decide_into`] to per-arrival queries: the

@@ -248,6 +248,75 @@ impl FaultSchedule {
         s
     }
 
+    /// Seeded-random crash/recover churn: crash instants arrive as a
+    /// Poisson process at `rate` crashes/second over `[start, horizon)`,
+    /// each hitting a uniformly chosen node for `downtime` seconds. A
+    /// node already down is skipped (no nested Down/Down), so the
+    /// timeline stays well-formed. Deterministic: same arguments, same
+    /// schedule — the randomness is baked into the descriptor at build
+    /// time, exactly like the rotating generators, so both substrates
+    /// still replay one identical timeline.
+    pub fn random_churn(
+        n_nodes: usize,
+        seed: u64,
+        rate: f64,
+        downtime: f64,
+        start: f64,
+        horizon: f64,
+    ) -> FaultSchedule {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xC4A0_5EED);
+        let mut s = FaultSchedule::new();
+        let mut down_until = vec![f64::NEG_INFINITY; n_nodes];
+        let mut at = start;
+        loop {
+            at += -(1.0 - rng.f64()).ln() / rate;
+            if at >= horizon {
+                break;
+            }
+            let node = rng.below(n_nodes);
+            if at < down_until[node] {
+                continue; // already dead: skip, keep the stream aligned
+            }
+            down_until[node] = at + downtime;
+            s.push(at, node, FaultKind::NodeDown);
+            s.push(at + downtime, node, FaultKind::NodeUp);
+        }
+        s
+    }
+
+    /// Seeded-random link flap: degrade instants arrive as a Poisson
+    /// process at `rate` flaps/second; each collapses the chosen node's
+    /// links to `factor x` bandwidth for `downtime` seconds (restores to
+    /// 1.0). Same determinism contract as [`FaultSchedule::random_churn`].
+    pub fn random_flap(
+        n_nodes: usize,
+        seed: u64,
+        rate: f64,
+        downtime: f64,
+        factor: f64,
+        start: f64,
+        horizon: f64,
+    ) -> FaultSchedule {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xF1A9_5EED);
+        let mut s = FaultSchedule::new();
+        let mut degraded_until = vec![f64::NEG_INFINITY; n_nodes];
+        let mut at = start;
+        loop {
+            at += -(1.0 - rng.f64()).ln() / rate;
+            if at >= horizon {
+                break;
+            }
+            let node = rng.below(n_nodes);
+            if at < degraded_until[node] {
+                continue;
+            }
+            degraded_until[node] = at + downtime;
+            s.push(at, node, FaultKind::LinkDegrade(factor));
+            s.push(at + downtime, node, FaultKind::LinkDegrade(1.0));
+        }
+        s
+    }
+
     /// Rotating GPU brownout: node `i % n_nodes` serves at `factor x`
     /// nominal speed from `start + i * period` until `downtime` later.
     pub fn rotating_brownout(
@@ -360,5 +429,48 @@ mod tests {
             .validate(3, "test");
         FaultSchedule::rotating_link_flap(3, 1.5, 3.0, 1.5, 0.05, 60.0)
             .validate(3, "test");
+    }
+
+    #[test]
+    fn random_generators_are_seed_deterministic() {
+        let a = FaultSchedule::random_churn(4, 9, 0.4, 1.25, 1.0, 120.0);
+        let b = FaultSchedule::random_churn(4, 9, 0.4, 1.25, 1.0, 120.0);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty());
+        a.validate(4, "test");
+        let c = FaultSchedule::random_churn(4, 10, 0.4, 1.25, 1.0, 120.0);
+        assert_ne!(a, c, "different seeds diverge");
+        // Down/Up events pair up: every node alive again at the end
+        assert!((0..4).all(|n| a.alive_at(n, 1e6)));
+
+        let f = FaultSchedule::random_flap(3, 5, 0.5, 1.0, 0.05, 1.0, 60.0);
+        assert_eq!(
+            f,
+            FaultSchedule::random_flap(3, 5, 0.5, 1.0, 0.05, 1.0, 60.0)
+        );
+        assert!(!f.is_empty());
+        f.validate(3, "test");
+        assert!((0..3).all(|n| f.link_factor_at(n, 1e6) == 1.0));
+    }
+
+    #[test]
+    fn random_churn_never_nests_downtime() {
+        let s = FaultSchedule::random_churn(2, 3, 2.0, 1.5, 0.5, 90.0);
+        // a Down for a node already down would corrupt the liveness
+        // timeline; the generator must skip those draws
+        let mut down = vec![false; 2];
+        for e in s.events() {
+            match e.kind {
+                FaultKind::NodeDown => {
+                    assert!(!down[e.node], "nested Down at {}", e.at);
+                    down[e.node] = true;
+                }
+                FaultKind::NodeUp => {
+                    assert!(down[e.node]);
+                    down[e.node] = false;
+                }
+                _ => unreachable!(),
+            }
+        }
     }
 }

@@ -30,12 +30,23 @@
 //! | `node-churn`    | steady load + rotating node crash/recover (one node dead ~half the time) |
 //! | `link-flap`     | paper load, but links touching a rotating node collapse to 5% bandwidth |
 //! | `brownout`      | uniform load + rotating GPU thermal throttle to 25% speed |
+//! | `node-churn-rand` | steady load + seeded-random Poisson crash/recover churn |
+//! | `openloop-poisson` | open-loop Poisson arrivals at ~2x the heavy-config capacity, admission on |
+//! | `openloop-burst`   | open-loop MMPP on-off bursts (4x gain flash crowds), admission on |
+//! | `openloop-trace`   | replay of the embedded flash-crowd trace, admission on |
 //!
-//! The last three are the **chaos registry**: their [`FaultSchedule`] is
-//! deterministic scenario data (no RNG), both substrates replay it
-//! identically, and work destroyed by a fault lands in the
-//! `lost_to_failure` ledger column. Fault-free entries carry an empty
-//! schedule and must report `lost_to_failure == 0` exactly.
+//! `node-churn` / `link-flap` / `brownout` / `node-churn-rand` are the
+//! **chaos registry**: their [`FaultSchedule`] is deterministic scenario
+//! data (the `-rand` entry bakes its RNG draws into the descriptor at
+//! build time), both substrates replay it identically, and work
+//! destroyed by a fault lands in the `lost_to_failure` ledger column.
+//! Fault-free entries carry an empty schedule and must report
+//! `lost_to_failure == 0` exactly.
+//!
+//! The `openloop-*` family carries a non-default
+//! [`crate::ingest::IngestConfig`]: open-loop arrival generators plus
+//! admission control at the door. Refused work lands in the `shed`
+//! ledger column; closed-loop entries keep `shed == 0` exactly.
 
 use anyhow::{bail, Result};
 
@@ -43,6 +54,7 @@ use crate::config::EnvConfig;
 use crate::env::bandwidth::BandwidthConfig;
 use crate::env::profiles::Profiles;
 use crate::env::workload::WorkloadConfig;
+use crate::ingest::{AdmissionConfig, ArrivalProcess, IngestConfig};
 
 mod faults;
 pub use faults::{FaultEvent, FaultKind, FaultSchedule};
@@ -93,6 +105,11 @@ pub struct Scenario {
     /// link flap) applied by both substrates. Empty = fault-free, and
     /// the hot paths never consult an empty schedule.
     pub faults: FaultSchedule,
+    /// Open-loop ingestion descriptor: arrival process + admission
+    /// policy. Defaults to closed-loop (the scenario's `workload`
+    /// generator, no admission) and the hot paths never consult a
+    /// closed-loop config — pre-existing scenarios stay bit-identical.
+    pub ingest: IngestConfig,
 }
 
 impl Default for Scenario {
@@ -136,6 +153,7 @@ impl Scenario {
             batch_wait: 0.004,
             cross_mbps: env.bw_min_mbps,
             faults: FaultSchedule::default(),
+            ingest: IngestConfig::default(),
         }
     }
 
@@ -152,6 +170,10 @@ impl Scenario {
             "node-churn",
             "link-flap",
             "brownout",
+            "node-churn-rand",
+            "openloop-poisson",
+            "openloop-burst",
+            "openloop-trace",
         ]
     }
 
@@ -272,6 +294,60 @@ impl Scenario {
                 );
                 s
             }
+            "node-churn-rand" => {
+                // steady uniform load + seeded-random Poisson churn; the
+                // RNG draws are baked into the descriptor at build time,
+                // so the entry is as deterministic as `node-churn`
+                let mut s = steady_base(base("node-churn-rand"));
+                s.faults = FaultSchedule::random_churn(
+                    s.n_nodes,
+                    0xC0FFEE,
+                    0.4,
+                    1.25,
+                    1.0,
+                    120.0,
+                );
+                s
+            }
+            // --- open-loop registry: traffic arrives whether or not the
+            //     cluster can absorb it; admission guards the door -------
+            "openloop-poisson" => {
+                // memoryless arrivals at ~2x the heavy-config service
+                // capacity (15 req/s/node vs ~7.9) — a sustained overload
+                let mut s = steady_base(base("openloop-poisson"));
+                s.ingest = IngestConfig {
+                    arrival: ArrivalProcess::Poisson { rate_scale: 3.0 },
+                    admission: open_admission(),
+                };
+                s
+            }
+            "openloop-burst" => {
+                // MMPP on-off: calm base intensity with 4x flash crowds
+                // (~1 s bursts every ~4 s)
+                let mut s = steady_base(base("openloop-burst"));
+                s.ingest = IngestConfig {
+                    arrival: ArrivalProcess::OnOff {
+                        rate_scale: 1.0,
+                        burst_gain: 4.0,
+                        mean_on: 1.0,
+                        mean_off: 3.0,
+                    },
+                    admission: open_admission(),
+                };
+                s
+            }
+            "openloop-trace" => {
+                // replay the embedded flash-crowd trace (no external
+                // files; `Trace { path }` also accepts a CSV path)
+                let mut s = steady_base(base("openloop-trace"));
+                s.ingest = IngestConfig {
+                    arrival: ArrivalProcess::Trace {
+                        path: "builtin".into(),
+                    },
+                    admission: open_admission(),
+                };
+                s
+            }
             other => bail!(
                 "unknown scenario {other:?} (registered: {})",
                 Scenario::names().join(", ")
@@ -360,6 +436,7 @@ impl Scenario {
             self.name
         );
         self.faults.validate(self.n_nodes, &self.name);
+        self.ingest.validate(&self.name);
     }
 }
 
@@ -377,6 +454,32 @@ fn cycle_nodes(mut s: Scenario, n: usize) -> Scenario {
     s.bandwidth.n_nodes = n;
     s.n_nodes = n;
     s
+}
+
+/// The calm uniform-load regime shared by the chaos and open-loop
+/// entries: the only disturbance left is the one the entry injects.
+fn steady_base(mut s: Scenario) -> Scenario {
+    s.workload.means = vec![1.0; s.n_nodes];
+    s.workload.diurnal_amp = 0.0;
+    s.workload.burst_prob = 0.0;
+    s.workload.noise = 0.05;
+    s
+}
+
+/// The admission policy the `openloop-*` registry entries guard their
+/// door with: backpressure at 32 queued requests, shed anything whose
+/// queue-delay estimate already eats half the drop deadline (the other
+/// half is margin for batching and service, so admitted work finishes
+/// comfortably inside the deadline), no rate limit (the feasibility test
+/// is the binding constraint under overload).
+fn open_admission() -> AdmissionConfig {
+    AdmissionConfig {
+        enabled: true,
+        queue_cap: 32,
+        deadline_fraction: 0.5,
+        bucket_rate: 0.0,
+        bucket_depth: 8.0,
+    }
 }
 
 /// The paper-shaped heterogeneity profile at any node count: one fast
@@ -487,6 +590,25 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach a full ingestion descriptor (validated at
+    /// [`ScenarioBuilder::build`]).
+    pub fn ingest(mut self, ingest: IngestConfig) -> Self {
+        self.s.ingest = ingest;
+        self
+    }
+
+    /// Switch the arrival process, keeping the current admission policy.
+    pub fn arrival(mut self, arrival: ArrivalProcess) -> Self {
+        self.s.ingest.arrival = arrival;
+        self
+    }
+
+    /// Set the admission policy, keeping the current arrival process.
+    pub fn admission(mut self, admission: AdmissionConfig) -> Self {
+        self.s.ingest.admission = admission;
+        self
+    }
+
     pub fn build(mut self) -> Scenario {
         if let Some(cross) = self.cross_override {
             self.s.cross_mbps = cross;
@@ -588,7 +710,8 @@ mod tests {
 
     #[test]
     fn chaos_entries_carry_fault_schedules() {
-        for name in ["node-churn", "link-flap", "brownout"] {
+        let chaos = ["node-churn", "link-flap", "brownout", "node-churn-rand"];
+        for name in chaos {
             let s = Scenario::by_name(name).unwrap();
             assert!(!s.faults.is_empty(), "{name} must inject faults");
             s.validate();
@@ -601,10 +724,37 @@ mod tests {
                 at.validate();
             }
         }
-        // every pre-existing entry stays fault-free
+        // every other entry stays fault-free
         for name in Scenario::names() {
-            if !["node-churn", "link-flap", "brownout"].contains(name) {
+            if !chaos.contains(name) {
                 assert!(Scenario::by_name(name).unwrap().faults.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn openloop_entries_carry_ingest_configs() {
+        let open = ["openloop-poisson", "openloop-burst", "openloop-trace"];
+        for name in open {
+            let s = Scenario::by_name(name).unwrap();
+            assert!(s.ingest.is_open(), "{name} must be open-loop");
+            assert!(s.ingest.admission.enabled, "{name} guards its door");
+            s.validate();
+            // deterministic: the registry always yields one descriptor
+            assert_eq!(s.ingest, Scenario::by_name(name).unwrap().ingest);
+            // the ingest descriptor is node-count-free and survives
+            // rescaling intact
+            for n in [1usize, 3, 16] {
+                let at = Scenario::at_nodes(name, n).unwrap();
+                assert_eq!(at.ingest, s.ingest, "{name} at {n}");
+                at.validate();
+            }
+        }
+        // every other entry stays closed-loop (shed == 0 territory)
+        for name in Scenario::names() {
+            if !open.contains(name) {
+                let s = Scenario::by_name(name).unwrap();
+                assert!(!s.ingest.is_open(), "{name} must stay closed-loop");
             }
         }
     }

@@ -59,6 +59,11 @@ pub fn comparison_rows(
                 "{h} lost {} requests to failure under fault-free {name}",
                 report.lost_to_failure
             );
+            anyhow::ensure!(
+                scenario.ingest.is_open() || report.shed == 0,
+                "{h} shed {} requests under closed-loop {name}",
+                report.shed
+            );
             rows.push((name.to_string(), h.to_string(), report));
         }
     }
@@ -86,6 +91,8 @@ pub fn comparison_to_csv(
             "dropped",
             "residual",
             "lost_to_failure",
+            "shed",
+            "cancelled",
             "dispatched",
             "throughput_rps",
             "p95_latency",
@@ -101,6 +108,8 @@ pub fn comparison_to_csv(
             r.dropped.to_string(),
             r.residual.to_string(),
             r.lost_to_failure.to_string(),
+            r.shed.to_string(),
+            r.cancelled.to_string(),
             r.dispatched.to_string(),
             format!("{:.3}", r.throughput_rps),
             format!("{:.4}", r.p95_latency),
@@ -149,6 +158,8 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let header = text.lines().next().unwrap();
         assert!(header.contains("lost_to_failure"));
+        assert!(header.contains("shed"));
+        assert!(header.contains("cancelled"));
         assert_eq!(text.lines().count(), rows.len() + 1);
         let _ = std::fs::remove_dir_all(&dir);
     }

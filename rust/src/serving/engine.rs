@@ -61,10 +61,13 @@ impl ServingOptions {
 
 /// End-of-run report. Request accounting is exhaustive:
 /// `emitted + imported ==
-///  completed + dropped + lost_to_failure + residual + exported`
+///  completed + dropped + lost_to_failure + shed + cancelled + residual
+///  + exported`
 /// (the boundary terms are zero outside the sharded fleet runtime, where
 /// the per-shard reports carry cross-shard traffic; `lost_to_failure` is
-/// zero unless the scenario injects faults).
+/// zero unless the scenario injects faults; `shed` is zero unless the
+/// scenario runs an open-loop ingest with admission enabled; `cancelled`
+/// is zero unless the policy hedges).
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     /// Scenario the run was parameterized by.
@@ -86,6 +89,12 @@ pub struct ServingReport {
     /// in-flight batches, arrivals/deliveries at dead nodes). Exactly 0
     /// for fault-free scenarios.
     pub lost_to_failure: usize,
+    /// Open-loop arrivals refused by the admission gate. Exactly 0 for
+    /// closed-loop scenarios.
+    pub shed: usize,
+    /// Hedge copies retired because their twin reached GPU service first.
+    /// Exactly 0 unless the policy hedges.
+    pub cancelled: usize,
     pub dispatched: usize,
     /// GPU batch executions and their size distribution.
     pub batches: usize,
@@ -143,6 +152,8 @@ impl ServingReport {
             dropped,
             residual: cluster.residual as usize,
             lost_to_failure: cluster.lost_to_failure as usize,
+            shed: cluster.shed as usize,
+            cancelled: cluster.cancelled as usize,
             dispatched: served.iter().filter(|s| s.origin != s.target).count(),
             batches,
             mean_batch_size: if batches == 0 {
@@ -170,15 +181,17 @@ impl ServingReport {
 
     /// Request conservation: every request that entered (emitted locally
     /// or imported over a shard boundary) is accounted for (served,
-    /// dropped, destroyed by a fault, still in flight, or exported to
-    /// another shard). For unsharded fault-free runs the extra terms are
-    /// zero and this reduces to `emitted == completed + dropped +
-    /// residual`.
+    /// dropped, destroyed by a fault, shed at the admission gate,
+    /// hedge-cancelled, still in flight, or exported to another shard).
+    /// For unsharded closed-loop fault-free runs the extra terms are zero
+    /// and this reduces to `emitted == completed + dropped + residual`.
     pub fn conserved(&self) -> bool {
         self.emitted + self.imported
             == self.completed
                 + self.dropped
                 + self.lost_to_failure
+                + self.shed
+                + self.cancelled
                 + self.residual
                 + self.exported
     }
@@ -197,6 +210,18 @@ impl ServingReport {
             println!(
                 "  lost to failure {} (destroyed by injected faults)",
                 self.lost_to_failure
+            );
+        }
+        if self.shed > 0 {
+            println!(
+                "  shed            {} (refused at the admission gate)",
+                self.shed
+            );
+        }
+        if self.cancelled > 0 {
+            println!(
+                "  hedge-cancelled {} (twin reached service first)",
+                self.cancelled
             );
         }
         if self.imported + self.exported > 0 {

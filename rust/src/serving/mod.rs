@@ -4,6 +4,10 @@
 //! cluster with per-(model, res) GPU batching, and latency/throughput
 //! reporting with exhaustive request accounting.
 //!
+//! The [`openloop`] experiment drives the engine with open-loop
+//! `openloop-*` scenarios to contrast admission control on/off on
+//! goodput-under-SLO (`results/slo_comparison.csv`).
+//!
 //! The engine (options, report, profile-table runs) is dep-free and
 //! driven by the unified [`crate::policy::Policy`] trait under
 //! [`crate::scenario::Scenario`] descriptors; the PJRT-backed server and
@@ -13,6 +17,7 @@
 pub mod comparison;
 pub mod engine;
 pub mod frames;
+pub mod openloop;
 #[cfg(feature = "pjrt")]
 pub mod server;
 #[cfg(feature = "pjrt")]
@@ -21,6 +26,10 @@ pub mod zoo;
 pub use comparison::{comparison_to_csv, completed_of};
 pub use engine::{
     run_profile_serving, serve_scenario, ServingOptions, ServingReport,
+};
+pub use openloop::{
+    assert_admission_headline, goodput_of, openloop_rows, openloop_to_csv,
+    OpenLoopRow, OPENLOOP_SCENARIOS,
 };
 pub use frames::FrameSource;
 #[cfg(feature = "pjrt")]

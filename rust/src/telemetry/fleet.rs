@@ -23,6 +23,10 @@ pub struct ShardStats {
     pub residual: usize,
     /// Requests destroyed by injected faults inside the shard.
     pub lost_to_failure: usize,
+    /// Open-loop arrivals refused at the shard's admission gates.
+    pub shed: usize,
+    /// Hedge copies cancel-accounted inside the shard.
+    pub cancelled: usize,
     /// Mean GPU busy fraction across the shard's nodes over the horizon.
     pub utilization: f64,
     /// `dropped / (completed + dropped)` over resolved requests.
@@ -53,6 +57,8 @@ impl PartialEq for ShardStats {
             && self.dropped == other.dropped
             && self.residual == other.residual
             && self.lost_to_failure == other.lost_to_failure
+            && self.shed == other.shed
+            && self.cancelled == other.cancelled
             && self.utilization == other.utilization
             && self.drop_rate == other.drop_rate
     }
@@ -79,6 +85,8 @@ impl ShardStats {
             dropped,
             residual: cluster.residual as usize,
             lost_to_failure: cluster.lost_to_failure as usize,
+            shed: cluster.shed as usize,
+            cancelled: cluster.cancelled as usize,
             utilization: if horizon > 0.0 {
                 busy / (cluster.n_nodes as f64 * horizon)
             } else {
@@ -138,6 +146,8 @@ mod tests {
             dropped: 2,
             residual: 0,
             lost_to_failure: 0,
+            shed: 0,
+            cancelled: 0,
             utilization: util,
             drop_rate: 0.2,
             stall_secs: 0.0,

@@ -1,8 +1,11 @@
 //! Telemetry: result persistence (CSV + JSON), the paper-vs-measured
-//! report generator, and per-shard fleet balance summaries.
+//! report generator, per-shard fleet balance summaries, and the SLO
+//! latency-histogram surface behind the open-loop experiment.
 
 pub mod fleet;
 pub mod report;
+pub mod slo;
 
 pub use fleet::{utilization_spread, ShardStats};
 pub use report::{method_row, write_method_csv, MethodSummary};
+pub use slo::{LatencyHistogram, SloSummary};

@@ -5,7 +5,9 @@
 //! touch the heap once queues and scratch buffers have grown to their
 //! high-water marks; the event-driven serving engine's `step_until` holds
 //! the same contract once its event/request populations reach steady state
-//! and the `served` log has reserved capacity. This file is its own test
+//! and the `served` log has reserved capacity — including under open-loop
+//! ingestion, where the arrival generator and admission gate join the hot
+//! path. This file is its own test
 //! binary so the counting global allocator only sees this probe's traffic;
 //! the measurement takes the minimum over several windows to shrug off any
 //! stray harness-thread allocation.
@@ -140,6 +142,32 @@ fn steady_state_hot_path_allocates_nothing() {
         "steady-state EdgeCluster::step_until hit the allocator"
     );
     assert!(cluster.emitted > 0);
+
+    // --- open-loop ingestion stepping (arrivals + admission gate) ----------
+    // Sustained ~2x overload: the arrival streams, intake gate and shed
+    // accounting all sit on the hot path. The admission gate caps every
+    // queue, so the event heap and request map reach stationary high-water
+    // marks; after that a step_until window must stay off the allocator.
+    let scenario =
+        Scenario::by_name("openloop-poisson").expect("registered scenario");
+    let mut cluster = EdgeCluster::new(&scenario, 5);
+    let mut policy = ShortestQueueController::new(Selection::Min);
+    let mut compute = ProfileCompute::new(Profiles::default());
+    let mut t = 0.0;
+    for _ in 0..60 {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    }
+    cluster.served.reserve(100_000);
+    let best = min_window_allocs(6, || {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    });
+    assert_eq!(
+        best, 0,
+        "steady-state open-loop EdgeCluster stepping hit the allocator"
+    );
+    assert!(cluster.shed > 0, "the admission gate never engaged");
 
     // --- fleet shard stepping (exterior-attached cluster) ------------------
     // One shard of a 2-shard steady@8 fleet, stepped in epochs exactly as

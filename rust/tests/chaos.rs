@@ -2,8 +2,9 @@
 //! substrates and the sharded fleet.
 //!
 //! * `prop_chaos_conservation` — the extended ledger
-//!   `emitted == completed + dropped + lost_to_failure + residual` holds
-//!   for every chaos registry entry at shards {1, 2, 4}, and fault-free
+//!   `emitted == completed + dropped + lost_to_failure + shed + cancelled
+//!   + residual` holds for every chaos registry entry (including the
+//!   seeded-random `node-churn-rand`) at shards {1, 2, 4}, and fault-free
 //!   scenarios keep `lost_to_failure == 0` at every shard count;
 //! * deterministic crash-mid-inference repros on the event-driven
 //!   cluster: a `NodeDown` mid-batch reclaims the in-flight batch and the
@@ -29,7 +30,8 @@ use edgevision::scenario::{FaultKind, FaultSchedule, Scenario};
 use edgevision::serving::serve_scenario;
 
 const EPS: f64 = 1e-9;
-const CHAOS: [&str; 3] = ["node-churn", "link-flap", "brownout"];
+const CHAOS: [&str; 4] =
+    ["node-churn", "link-flap", "brownout", "node-churn-rand"];
 
 /// Policy returning one fixed action for every node at every instant.
 struct Fixed(Action);
@@ -124,8 +126,10 @@ fn prop_chaos_conservation() {
                     report.lost_to_failure > 0,
                     "{name} x{shards}: rotating crashes must destroy work"
                 );
-            } else {
+            } else if name != "node-churn-rand" {
                 // link-flap / brownout only degrade — nothing is destroyed
+                // (node-churn-rand's crash count over this short horizon
+                // is a seeded draw, so only conservation is asserted)
                 assert_eq!(
                     report.lost_to_failure, 0,
                     "{name} x{shards}: degradation faults must not lose work"
