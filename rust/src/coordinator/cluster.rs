@@ -538,12 +538,16 @@ impl EdgeCluster {
         let offset = self
             .exterior
             .as_ref()
+            // invariant: only the fleet runtime calls inject_boundary,
+            // and it always attaches an exterior to multi-shard clusters
             .expect("inject_boundary needs an attached exterior")
             .offset;
         let local = d
             .target
             .checked_sub(offset)
             .filter(|l| *l < self.n_nodes)
+            // invariant: the coordinator mailboxes route each dispatch
+            // to shard_of(target), so the target is in-range here
             .expect("boundary dispatch routed to a node outside this shard");
         let id = self.next_id;
         self.next_id += 1;
@@ -1296,6 +1300,8 @@ impl PolicyView for EdgeCluster {
     fn queue_len(&self, node: usize) -> usize {
         match self.view_to_local(node) {
             Some(l) => EdgeCluster::queue_len(self, l),
+            // invariant: view_to_local returns None only for remote view
+            // indices, which exist only when an exterior is attached
             None => self.exterior.as_ref().unwrap().snapshot.queue_len[node],
         }
     }
@@ -1303,6 +1309,8 @@ impl PolicyView for EdgeCluster {
     fn queue_delay_estimate(&self, node: usize) -> f64 {
         match self.view_to_local(node) {
             Some(l) => EdgeCluster::queue_delay_estimate(self, l),
+            // invariant: view_to_local returns None only for remote view
+            // indices, which exist only when an exterior is attached
             None => self.exterior.as_ref().unwrap().snapshot.queue_delay[node],
         }
     }
@@ -1312,6 +1320,7 @@ impl PolicyView for EdgeCluster {
             (Some(f), Some(t)) => self.transfers.in_flight(f, t),
             // local -> remote: dispatches waiting in the exterior outbox
             (Some(_), None) => {
+                // invariant: a remote `to` index implies an attached exterior
                 self.exterior.as_ref().unwrap().out_backlog[to]
             }
             // remote-origin links are outside this shard's knowledge
@@ -1326,6 +1335,7 @@ impl PolicyView for EdgeCluster {
         match (self.view_to_local(from), self.view_to_local(to)) {
             (Some(f), Some(t)) => self.link_bw(f, t),
             // any cross-shard hop runs at the fixed backhaul floor
+            // (invariant: a remote endpoint implies an attached exterior)
             _ => self.exterior.as_ref().unwrap().cross_mbps,
         }
     }
@@ -1338,6 +1348,7 @@ impl PolicyView for EdgeCluster {
                 }
             }
             None => {
+                // invariant: remote view index implies exterior attached
                 let snap = &self.exterior.as_ref().unwrap().snapshot;
                 let h = snap.hist_len;
                 for &r in &snap.rates[node * h..(node + 1) * h] {
@@ -1374,6 +1385,7 @@ impl PolicyView for EdgeCluster {
             // timeline (static deterministic data every shard carries),
             // not the epoch snapshot — so it is exact, never stale
             None => {
+                // invariant: remote view index implies exterior attached
                 self.exterior.as_ref().unwrap().faults.alive_at(node, self.now)
             }
         }
@@ -1383,6 +1395,7 @@ impl PolicyView for EdgeCluster {
         match self.view_to_local(node) {
             Some(l) => self.gpu_speed[l] * self.gpu_factor[l],
             None => {
+                // invariant: remote view index implies exterior attached
                 let ext = self.exterior.as_ref().unwrap();
                 ext.gpu_speed[node] * ext.faults.gpu_factor_at(node, self.now)
             }

@@ -39,6 +39,7 @@
 pub mod plan;
 pub mod report;
 pub mod runtime;
+pub mod sync;
 
 use std::path::Path;
 
@@ -80,6 +81,7 @@ pub fn sweep_to_csv(
             "residual",
             "lost_to_failure",
             "shed",
+            "cancelled",
             "cross_shard",
             "cross_in_flight",
             "throughput_rps",
@@ -153,6 +155,7 @@ pub fn sweep_to_csv(
                 report.residual.to_string(),
                 report.lost_to_failure.to_string(),
                 report.shed.to_string(),
+                report.cancelled.to_string(),
                 report.cross_dispatches.to_string(),
                 report.cross_in_flight.to_string(),
                 format!("{:.3}", report.throughput_rps),
@@ -200,6 +203,7 @@ mod tests {
         assert!(header.contains("cross_shard"));
         assert!(header.contains("lost_to_failure"));
         assert!(header.contains("shed"));
+        assert!(header.contains("cancelled"));
         assert!(header.contains("stall_frac"));
         assert_eq!(text.lines().count(), 3);
         let _ = std::fs::remove_dir_all(&dir);

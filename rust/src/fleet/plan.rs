@@ -148,6 +148,8 @@ impl ShardPlan {
         self.ranges
             .iter()
             .position(|&(lo, hi)| g >= lo && g < hi)
+            // invariant: ranges partition [0, n_nodes) and callers only
+            // pass validated global node indices
             .expect("global node outside every shard range")
     }
 

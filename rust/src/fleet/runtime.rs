@@ -1,7 +1,10 @@
 //! The conservative-time parallel fleet engine.
 //!
 //! One [`EdgeCluster`] per shard, each on its own `std::thread`, advanced
-//! in lock-step epochs over bounded (`sync_channel`) message channels:
+//! in lock-step epochs over the bounded barrier fabric of
+//! [`super::sync`] (one `sync_channel(1)` rendezvous slot per direction
+//! per shard — the façade owns every primitive, this file only speaks
+//! the protocol):
 //!
 //! 1. the coordinator sends every shard `Step { until = t + Δ }` with the
 //!    dispatches other shards produced last epoch and a fresh
@@ -20,9 +23,6 @@
 //! and, with the deterministic merge order, bit-reproducible regardless
 //! of thread interleaving.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::{Duration, Instant};
-
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::boundary::{
@@ -36,6 +36,7 @@ use crate::telemetry::fleet::ShardStats;
 
 use super::plan::ShardPlan;
 use super::report::FleetReport;
+use super::sync::{barrier, CoordinatorHub, Stopwatch, WorkerPort};
 
 /// Builds one policy per shard — the fleet's hook into the unified
 /// control plane. `n_nodes` is the width of the policy's view: the
@@ -162,18 +163,11 @@ impl Fleet {
         let s = plan.shards;
         let n_global = plan.n_nodes();
         let hist = plan.scenario.hist_len;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
 
         std::thread::scope(|scope| -> Result<FleetReport> {
-            let mut to_workers: Vec<SyncSender<ToWorker>> =
-                Vec::with_capacity(s);
-            let mut from_workers: Vec<Receiver<Result<WorkerMsg>>> =
-                Vec::with_capacity(s);
-            for k in 0..s {
-                let (to_tx, to_rx) = sync_channel::<ToWorker>(1);
-                let (from_tx, from_rx) = sync_channel::<Result<WorkerMsg>>(1);
-                to_workers.push(to_tx);
-                from_workers.push(from_rx);
+            let (hub, ports) = barrier::<ToWorker, Result<WorkerMsg>>(s);
+            for (k, mut port) in ports.into_iter().enumerate() {
                 let sub = plan.sub_scenario(k);
                 let wseed = plan.shard_seed(seed, k);
                 let exterior = (s > 1).then(|| {
@@ -190,12 +184,12 @@ impl Fleet {
                 });
                 scope.spawn(move || {
                     let r = shard_worker(
-                        &to_rx, &from_tx, sub, wseed, factory, k, exterior,
+                        &mut port, sub, wseed, factory, k, exterior,
                     );
                     if let Err(e) = r {
                         // a failed send means the coordinator is gone —
                         // nothing left to report to
-                        let _ = from_tx.send(Err(e));
+                        let _ = port.send(Err(e));
                     }
                 });
             }
@@ -213,20 +207,23 @@ impl Fleet {
             let mut t = 0.0;
             while t < duration {
                 let until = (t + plan.epoch).min(duration);
-                for (k, tx) in to_workers.iter().enumerate() {
-                    tx.send(ToWorker::Step {
-                        until,
-                        imports: std::mem::take(&mut mailbox[k]),
-                        snapshot: (s > 1).then(|| snapshot.clone()),
-                        summary: std::mem::take(&mut summaries[k]),
-                        exports: std::mem::take(&mut export_bufs[k]),
-                    })
-                    .map_err(|_| worker_gone(&from_workers[k], k))?;
+                for k in 0..s {
+                    hub.send(
+                        k,
+                        ToWorker::Step {
+                            until,
+                            imports: std::mem::take(&mut mailbox[k]),
+                            snapshot: (s > 1).then(|| snapshot.clone()),
+                            summary: std::mem::take(&mut summaries[k]),
+                            exports: std::mem::take(&mut export_bufs[k]),
+                        },
+                    )
+                    .map_err(|()| worker_gone(&hub, k))?;
                 }
-                for (k, rx) in from_workers.iter().enumerate() {
-                    let msg = rx
-                        .recv()
-                        .map_err(|_| anyhow!("shard {k} worker died"))??;
+                for k in 0..s {
+                    let msg = hub
+                        .recv(k)
+                        .map_err(|()| anyhow!("shard {k} worker died"))??;
                     let WorkerMsg::Step { mut exports, summary } = msg else {
                         bail!("shard {k}: out-of-phase worker message");
                     };
@@ -251,18 +248,18 @@ impl Fleet {
                 mailbox.iter().map(|m| m.len()).sum();
 
             // ---- finish + merge -----------------------------------------
-            for (k, tx) in to_workers.iter().enumerate() {
-                tx.send(ToWorker::Finish { horizon: duration })
-                    .map_err(|_| worker_gone(&from_workers[k], k))?;
+            for k in 0..s {
+                hub.send(k, ToWorker::Finish { horizon: duration })
+                    .map_err(|()| worker_gone(&hub, k))?;
             }
             let mut per_shard = Vec::with_capacity(s);
             let mut shard_stats = Vec::with_capacity(s);
             let mut latencies = Vec::new();
             let mut policy_name = String::new();
-            for (k, rx) in from_workers.iter().enumerate() {
-                let msg = rx
-                    .recv()
-                    .map_err(|_| anyhow!("shard {k} worker died"))??;
+            for k in 0..s {
+                let msg = hub
+                    .recv(k)
+                    .map_err(|()| anyhow!("shard {k} worker died"))??;
                 let WorkerMsg::Done(out) = msg else {
                     bail!("shard {k}: out-of-phase worker message");
                 };
@@ -279,7 +276,7 @@ impl Fleet {
                 policy_name,
                 plan.epoch,
                 duration,
-                t0.elapsed().as_secs_f64(),
+                t0.elapsed_secs(),
                 cross_in_flight,
                 per_shard,
                 shard_stats,
@@ -309,13 +306,13 @@ impl Fleet {
 }
 
 /// A worker's inbound channel closed: surface the error it parked on its
-/// outbound channel if there is one, else a generic hang-up.
+/// outbound slot if there is one, else a generic hang-up.
 fn worker_gone(
-    from: &Receiver<Result<WorkerMsg>>,
+    hub: &CoordinatorHub<ToWorker, Result<WorkerMsg>>,
     shard: usize,
 ) -> anyhow::Error {
-    match from.try_recv() {
-        Ok(Err(e)) => e.context(format!("shard {shard} worker failed")),
+    match hub.try_recv(shard) {
+        Some(Err(e)) => e.context(format!("shard {shard} worker failed")),
         _ => anyhow!("shard {shard} worker hung up"),
     }
 }
@@ -323,8 +320,7 @@ fn worker_gone(
 /// One shard's worker loop: owns the shard cluster, its policy and its
 /// compute hook; driven entirely by coordinator messages.
 fn shard_worker(
-    rx: &Receiver<ToWorker>,
-    tx: &SyncSender<Result<WorkerMsg>>,
+    port: &mut WorkerPort<ToWorker, Result<WorkerMsg>>,
     sub: Scenario,
     wseed: u64,
     factory: &dyn PolicyFactory,
@@ -343,15 +339,11 @@ fn shard_worker(
     let mut policy = factory.build(shard, n_view, wseed)?;
     policy.reset(wseed);
     let mut compute = ProfileCompute::new(sub.profiles.clone());
-    // barrier-stall telemetry: wall-clock spent recv-blocked waiting for
-    // the coordinator (the lock-step tax a slow sibling shard imposes)
-    let wall_start = Instant::now();
-    let mut stalled = Duration::ZERO;
     loop {
-        // a closed channel means the coordinator bailed; just exit
-        let wait_start = Instant::now();
-        let Ok(msg) = rx.recv() else { return Ok(()) };
-        stalled += wait_start.elapsed();
+        // a closed port means the coordinator bailed; just exit. The
+        // port itself accounts the recv-blocked wait as barrier stall
+        // (the lock-step tax a slow sibling shard imposes).
+        let Some(msg) = port.recv() else { return Ok(()) };
         match msg {
             ToWorker::Step {
                 until,
@@ -376,7 +368,9 @@ fn shard_worker(
                     cluster.drain_outbox_into(&mut exports, until);
                     cluster.summary_into(&mut summary);
                 }
-                if tx.send(Ok(WorkerMsg::Step { exports, summary })).is_err()
+                if port
+                    .send(Ok(WorkerMsg::Step { exports, summary }))
+                    .is_err()
                 {
                     return Ok(());
                 }
@@ -394,11 +388,8 @@ fn shard_worker(
                     .collect();
                 let mut stats =
                     ShardStats::from_cluster(shard, &cluster, horizon);
-                stats.set_stall(
-                    stalled.as_secs_f64(),
-                    wall_start.elapsed().as_secs_f64(),
-                );
-                let _ = tx.send(Ok(WorkerMsg::Done(Box::new(ShardOutcome {
+                stats.set_stall(port.stall_secs(), port.run_secs());
+                let _ = port.send(Ok(WorkerMsg::Done(Box::new(ShardOutcome {
                     report,
                     stats,
                     latencies,

@@ -1,0 +1,185 @@
+//! The epoch-barrier synchronization façade — every synchronization
+//! primitive (and every wall-clock read) the fleet runtime uses lives in
+//! this one file.
+//!
+//! The fleet's barrier handshake is deliberately tiny: one bounded
+//! rendezvous slot in each direction per shard
+//! (`sync_channel(1)`), driven strictly in phases — the coordinator
+//! sends every shard a step message, then collects every shard's reply
+//! in shard-id order. Keeping the whole primitive surface behind
+//! [`CoordinatorHub`] / [`WorkerPort`] buys two things:
+//!
+//! 1. **Model-checkability.** The protocol above this façade is a pure
+//!    message-passing state machine, so
+//!    `rust/tests/fleet_barrier_model.rs` can enumerate *every*
+//!    interleaving of worker progress exhaustively (2–3 shards, multiple
+//!    epochs; the `--cfg loom` CI lane deepens the exploration to 4
+//!    shards) and assert the contracts the runtime relies on: the
+//!    outbox merge is `(shard id, seq)`-deterministic regardless of
+//!    scheduling, imports are delivered strictly after the epoch that
+//!    produced them, and no dispatch is lost or duplicated. If the
+//!    handshake ever grows a new primitive (a shared atomic, a second
+//!    channel, an unbounded buffer), it must be added HERE and the model
+//!    extended with it — `tools/contract-lint`'s determinism rule keeps
+//!    `Instant::now`/channel use out of `runtime.rs` itself.
+//! 2. **Determinism by construction.** Workers interact only at
+//!    barriers, and the coordinator's collection order is fixed, so
+//!    thread scheduling cannot reorder anything observable. The only
+//!    wall-clock reads in the fleet layer are the stall/elapsed
+//!    telemetry below, which is explicitly excluded from determinism
+//!    comparisons (`ShardStats::eq`).
+//!
+//! `contract-lint: allow(determinism)` rationale: this file is the
+//! fleet's allowlisted home for `Instant::now` — barrier-stall and
+//! wall-clock telemetry are *measured* quantities; everything
+//! result-bearing stays on virtual time.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+/// Coordinator-side endpoints: one bounded send slot and one bounded
+/// receive slot per shard worker.
+pub struct CoordinatorHub<C, W> {
+    to: Vec<SyncSender<C>>,
+    from: Vec<Receiver<W>>,
+}
+
+/// Worker-side endpoint of the barrier: the mirror of one
+/// [`CoordinatorHub`] slot pair, plus the worker's barrier-stall
+/// accounting (wall-clock spent blocked waiting on the coordinator).
+pub struct WorkerPort<C, W> {
+    rx: Receiver<C>,
+    tx: SyncSender<W>,
+    started: Instant,
+    stalled: Duration,
+}
+
+/// Build the barrier fabric for `shards` workers: one hub for the
+/// coordinator, one port per worker (index order = shard order).
+pub fn barrier<C, W>(
+    shards: usize,
+) -> (CoordinatorHub<C, W>, Vec<WorkerPort<C, W>>) {
+    let mut to = Vec::with_capacity(shards);
+    let mut from = Vec::with_capacity(shards);
+    let mut ports = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        // capacity 1: a rendezvous slot per direction, so an epoch's
+        // exchange is exactly one message each way and the coordinator
+        // can never run ahead of a worker (or vice versa)
+        let (to_tx, to_rx) = sync_channel::<C>(1);
+        let (from_tx, from_rx) = sync_channel::<W>(1);
+        to.push(to_tx);
+        from.push(from_rx);
+        ports.push(WorkerPort {
+            rx: to_rx,
+            tx: from_tx,
+            started: Instant::now(),
+            stalled: Duration::ZERO,
+        });
+    }
+    (CoordinatorHub { to, from }, ports)
+}
+
+impl<C, W> CoordinatorHub<C, W> {
+    /// Send shard `k` its next message. `Err(())` means the worker hung
+    /// up (it may have parked an error in its outbound slot — see
+    /// [`CoordinatorHub::try_recv`]).
+    pub fn send(&self, k: usize, msg: C) -> Result<(), ()> {
+        self.to[k].send(msg).map_err(|_| ())
+    }
+
+    /// Blocking receive of shard `k`'s reply. `Err(())` = worker gone.
+    pub fn recv(&self, k: usize) -> Result<W, ()> {
+        self.from[k].recv().map_err(|_| ())
+    }
+
+    /// Non-blocking drain of shard `k`'s outbound slot — error
+    /// recovery: a failed worker parks its error here before exiting.
+    pub fn try_recv(&self, k: usize) -> Option<W> {
+        self.from[k].try_recv().ok()
+    }
+}
+
+impl<C, W> WorkerPort<C, W> {
+    /// Blocking receive of the next coordinator message, accounting the
+    /// blocked wait as barrier stall. `None` means the coordinator is
+    /// gone (normal shutdown of an abandoned run).
+    pub fn recv(&mut self) -> Option<C> {
+        let wait = Instant::now();
+        let msg = self.rx.recv().ok();
+        self.stalled += wait.elapsed();
+        msg
+    }
+
+    /// Reply to the coordinator. `Err(())` = coordinator gone.
+    pub fn send(&self, msg: W) -> Result<(), ()> {
+        self.tx.send(msg).map_err(|_| ())
+    }
+
+    /// Wall-clock seconds this worker spent recv-blocked at barriers.
+    pub fn stall_secs(&self) -> f64 {
+        self.stalled.as_secs_f64()
+    }
+
+    /// Wall-clock seconds since the port was created (≈ worker start).
+    pub fn run_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Measured wall-clock for fleet telemetry (`FleetReport::wall_secs`).
+/// Lives here so the runtime itself stays free of time sources.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_round_trip_and_stall_accounting() {
+        let (hub, mut ports) = barrier::<u32, u32>(2);
+        std::thread::scope(|scope| {
+            for (k, port) in ports.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    while let Some(x) = port.recv() {
+                        if port.send(x + k as u32).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            for epoch in 0..3u32 {
+                for k in 0..2 {
+                    hub.send(k, 10 * epoch).unwrap();
+                }
+                for k in 0..2 {
+                    assert_eq!(hub.recv(k).unwrap(), 10 * epoch + k as u32);
+                }
+            }
+            // release the senders before the scope joins, so the blocked
+            // workers observe hang-up and exit
+            drop(hub);
+        });
+    }
+
+    #[test]
+    fn dropped_hub_ends_workers() {
+        let (hub, ports) = barrier::<u8, u8>(1);
+        drop(hub);
+        for mut p in ports {
+            assert!(p.recv().is_none());
+            assert!(p.stall_secs() >= 0.0);
+            assert!(p.run_secs() >= 0.0);
+        }
+    }
+}

@@ -222,18 +222,25 @@ fn builtin_trace() -> Vec<(f64, usize)> {
 }
 
 /// Parse a `t,node` CSV trace (blank lines and `#` comments skipped).
+///
+/// invariant: trace corpora are operator-supplied config; a malformed
+/// line is a fatal configuration error (loud panic), never a silently
+/// skipped request — conservation depends on replaying every arrival.
 fn parse_trace(text: &str, origin: &str) -> Vec<(f64, usize)> {
     let mut v: Vec<(f64, usize)> = text
         .lines()
         .map(str::trim)
         .filter(|l| !l.is_empty() && !l.starts_with('#'))
         .map(|l| {
+            // invariant: see fn doc — malformed trace lines are fatal
             let (t, n) = l.split_once(',').unwrap_or_else(|| {
                 panic!("trace {origin}: line {l:?} is not `t,node`")
             });
+            // invariant: see fn doc — malformed trace lines are fatal
             let t: f64 = t.trim().parse().unwrap_or_else(|_| {
                 panic!("trace {origin}: bad time in line {l:?}")
             });
+            // invariant: see fn doc — malformed trace lines are fatal
             let n: usize = n.trim().parse().unwrap_or_else(|_| {
                 panic!("trace {origin}: bad node in line {l:?}")
             });
@@ -361,6 +368,8 @@ impl ArrivalGen {
                 Some(builtin_trace())
             }
             ArrivalProcess::Trace { path } => {
+                // invariant: an unreadable trace file is a fatal
+                // configuration error, same policy as parse_trace
                 let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
                     panic!("trace {path}: unreadable ({e})")
                 });
@@ -374,6 +383,8 @@ impl ArrivalGen {
                 let mut rng = root.fork(i as u64);
                 let base = means[i].max(1e-9) / slot_secs;
                 let kind = match &ingest.arrival {
+                    // invariant: callers gate on is_open_loop() before
+                    // building generators
                     ArrivalProcess::ClosedLoop => unreachable!(),
                     ArrivalProcess::Poisson { rate_scale } => {
                         StreamKind::Poisson { rate: base * rate_scale }
@@ -405,6 +416,8 @@ impl ArrivalGen {
                         }
                     }
                     ArrivalProcess::Trace { .. } => {
+                        // invariant: the match above filled `trace`
+                        // for every Trace arrival process
                         let all = trace.as_ref().unwrap();
                         let max_t =
                             all.iter().fold(0.0f64, |m, e| m.max(e.0));

@@ -24,8 +24,9 @@ use edgevision::serving::{run_serving, ServingOptions};
 use edgevision::telemetry::report::method_row;
 use edgevision::util::cli::Args;
 
-const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios|experiment> [flags]
+const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios|lint|experiment> [flags]
   repro info
+  repro lint [--root DIR]     run the standing-contract linter (alias of cargo run -p contract-lint)
   repro train --omega 5 --episodes 600 [--variant full|noattn|local] [--ippo] [--local-only] [--save FILE]
   repro evaluate --params FILE [--omega 5] [--eval-episodes 30] [--greedy]
   repro baselines [--omega 5]
@@ -45,6 +46,11 @@ fn main() -> Result<()> {
     if cmd == "scenarios" || args.bool("list-scenarios") {
         return list_scenarios();
     }
+    // `repro lint` short-circuits before Manifest::load like `scenarios`:
+    // the contract linter needs the source tree, not the artifacts
+    if cmd == "lint" {
+        return lint_cmd(&args);
+    }
     let mut cfg = Config::default();
     cfg.apply_args(&args)?;
 
@@ -60,6 +66,27 @@ fn main() -> Result<()> {
         "experiment" => experiment(&rt, &manifest, cfg, &args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// `repro lint [--root DIR]` — the standing-contract linter, callable
+/// from the main CLI. Defaults to the workspace root this binary was
+/// built from, so `repro lint` works from any cwd.
+fn lint_cmd(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            // rust/ crate dir -> workspace root one level up
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+        }
+    };
+    anyhow::ensure!(
+        root.join("rust/src").is_dir(),
+        "{} does not look like the repo root (no rust/src); pass --root",
+        root.display()
+    );
+    let code = contract_lint::run(&root, &contract_lint::Manifest::repo());
+    anyhow::ensure!(code == 0, "contract-lint reported findings");
+    Ok(())
 }
 
 fn list_scenarios() -> Result<()> {

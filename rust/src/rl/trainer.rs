@@ -166,6 +166,7 @@ impl<'rt> Trainer<'rt> {
             let host = self
                 .store
                 .cached_host(i)
+                // invariant: ensure_host_cache just filled every leaf
                 .expect("ensure_host_cache just filled every leaf");
             let buf = self.rt.buffer_f32(host, &leaf.shape)?;
             if actor.len() < n_actor {

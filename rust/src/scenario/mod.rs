@@ -393,6 +393,8 @@ impl Scenario {
             // omega, env-derived "paper" configs, ...) are never
             // silently discarded
             if registered == self {
+                // invariant: by_name(self.name) succeeded above, so the
+                // same name resolves through at_nodes too
                 return Scenario::at_nodes(&self.name, n)
                     .expect("name came from the registry");
             }

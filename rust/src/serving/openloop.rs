@@ -149,6 +149,8 @@ pub fn openloop_to_csv(
             "shed",
             "completed",
             "dropped",
+            "lost_to_failure",
+            "cancelled",
             "residual",
             "shed_rate",
             "p50",
@@ -168,6 +170,8 @@ pub fn openloop_to_csv(
             r.report.shed.to_string(),
             r.report.completed.to_string(),
             r.report.dropped.to_string(),
+            r.report.lost_to_failure.to_string(),
+            r.report.cancelled.to_string(),
             r.report.residual.to_string(),
             format!("{:.4}", r.slo.shed_rate),
             format!("{:.4}", r.slo.p50),
@@ -242,7 +246,14 @@ mod tests {
         assert_eq!(rows.len(), 6);
         let text = std::fs::read_to_string(&path).unwrap();
         let header = text.lines().next().unwrap();
-        for col in ["goodput_rps", "shed_rate", "p999", "admission"] {
+        for col in [
+            "goodput_rps",
+            "shed_rate",
+            "p999",
+            "admission",
+            "lost_to_failure",
+            "cancelled",
+        ] {
             assert!(header.contains(col), "missing column {col}");
         }
         assert_eq!(text.lines().count(), 7);

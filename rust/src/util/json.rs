@@ -213,7 +213,7 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| anyhow!("unexpected end of input"))
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn consume(&mut self, b: u8) -> Result<()> {
         if self.peek()? != b {
             bail!(
                 "expected {:?} at byte {}, found {:?}",
@@ -249,7 +249,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.consume(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek()? == b'}' {
@@ -260,7 +260,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.consume(b':')?;
             let v = self.value()?;
             m.insert(k, v);
             self.skip_ws();
@@ -276,7 +276,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.consume(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
@@ -298,7 +298,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.consume(b'"')?;
         let mut s = String::new();
         loop {
             let b = self.peek()?;

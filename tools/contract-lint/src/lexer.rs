@@ -1,0 +1,287 @@
+//! A deliberately small Rust lexer: just enough to blank comments and
+//! string/char literals (preserving newlines and byte offsets), find
+//! `fn` items with their brace-matched bodies, and find `#[cfg(test)]`
+//! spans. Byte-oriented: multi-byte UTF-8 only ever appears inside
+//! comments and strings, which are blanked wholesale.
+
+/// `code`: source with comment and literal *contents* replaced by
+/// spaces. `comments`: the inverse — spaces everywhere except comment
+/// text. Both are the same length as the input with newlines intact, so
+/// byte offsets and line numbers carry over.
+pub struct Blanked {
+    pub code: Vec<u8>,
+    pub comments: Vec<u8>,
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and literals out of `src`.
+pub fn blank(src: &[u8]) -> Blanked {
+    let n = src.len();
+    let mut code = src.to_vec();
+    let mut comments: Vec<u8> =
+        src.iter().map(|&b| if b == b'\n' { b'\n' } else { b' ' }).collect();
+    let mut i = 0;
+    while i < n {
+        let two = &src[i..n.min(i + 2)];
+        if two == b"//" {
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                comments[j] = src[j];
+                code[j] = b' ';
+                j += 1;
+            }
+            i = j;
+        } else if two == b"/*" {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            comments[i] = b'/';
+            comments[i + 1] = b'*';
+            while j < n && depth > 0 {
+                if src[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if src[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                    continue;
+                }
+                if src[j] != b'\n' {
+                    comments[j] = src[j];
+                }
+                j += 1;
+            }
+            for k in i..j.min(n) {
+                if src[k] != b'\n' {
+                    code[k] = b' ';
+                }
+            }
+            i = j;
+        } else if src[i] == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if src[j] == b'"' {
+                    break;
+                }
+                j += 1;
+            }
+            for k in (i + 1)..j.min(n) {
+                if src[k] != b'\n' {
+                    code[k] = b' ';
+                }
+            }
+            i = j + 1;
+        } else if src[i] == b'r' && raw_string_open(&src[i..]).is_some() {
+            // invariant: raw_string_open(&src[i..]).is_some() was just
+            // checked by this branch's guard
+            let (open_len, hashes) = raw_string_open(&src[i..]).unwrap();
+            let mut close = vec![b'#'; hashes + 1];
+            close[0] = b'"';
+            let body = i + open_len;
+            let j = find_sub(src, &close, body).unwrap_or(n);
+            for k in body..j.min(n) {
+                if src[k] != b'\n' {
+                    code[k] = b' ';
+                }
+            }
+            i = j + close.len();
+        } else if src[i] == b'\'' {
+            // char literal or lifetime; a lifetime is left untouched
+            if i + 3 < n && src[i + 1] == b'\\' && src[i + 3] == b'\'' {
+                code[i + 1] = b' ';
+                code[i + 2] = b' ';
+                i += 4;
+            } else if i + 2 < n
+                && src[i + 2] == b'\''
+                && !matches!(src[i + 1], b'\'' | b'\\' | b'\n')
+            {
+                code[i + 1] = b' ';
+                i += 3;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Blanked { code, comments }
+}
+
+/// `r#*"` raw-string opener at the start of `s`: (opener length, #count).
+fn raw_string_open(s: &[u8]) -> Option<(usize, usize)> {
+    if s.first() != Some(&b'r') {
+        return None;
+    }
+    let mut j = 1;
+    while j < s.len() && s[j] == b'#' {
+        j += 1;
+    }
+    (s.get(j) == Some(&b'"')).then_some((j + 1, j - 1))
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find_sub(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// A `fn` item with a body, found on blanked code.
+pub struct FnItem {
+    pub name: String,
+    /// Byte offset of the `fn` keyword.
+    pub header: usize,
+    /// Body byte range, *inside* the braces (exclusive of both).
+    pub body: (usize, usize),
+}
+
+/// Every `fn name ... { body }` in blanked code; bodiless declarations
+/// (trait methods, externs) are skipped.
+pub fn functions(code: &[u8]) -> Vec<FnItem> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_sub(code, b"fn", from) {
+        from = p + 1;
+        let bounded = (p == 0 || !is_word(code[p - 1]))
+            && p + 2 < n
+            && code[p + 2].is_ascii_whitespace();
+        if !bounded {
+            continue;
+        }
+        let mut q = p + 2;
+        while q < n && code[q].is_ascii_whitespace() {
+            q += 1;
+        }
+        let name_start = q;
+        if q >= n || !(code[q].is_ascii_alphabetic() || code[q] == b'_') {
+            continue;
+        }
+        while q < n && is_word(code[q]) {
+            q += 1;
+        }
+        let name = String::from_utf8_lossy(&code[name_start..q]).into_owned();
+        // body start: first top-level '{' or ';' after the name (a ';'
+        // inside brackets, e.g. the array type `[T; 4]`, is part of the
+        // signature, not a bodiless declaration)
+        let mut j = q;
+        let mut depth = 0usize;
+        while j < n {
+            match code[j] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth = depth.saturating_sub(1),
+                b'{' | b';' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= n || code[j] == b';' {
+            continue;
+        }
+        let k = match_brace(code, j);
+        out.push(FnItem { name, header: p, body: (j + 1, k) });
+    }
+    out
+}
+
+/// Offset of the `}` matching the `{` at `open` (or end of input).
+fn match_brace(code: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = open;
+    while k < code.len() {
+        match code[k] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Byte spans `(start, end)` covered by `#[cfg(test)]` items.
+pub fn test_spans(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_sub(code, b"#[cfg(test)]", from) {
+        from = p + 1;
+        let Some(j) = find_sub(code, b"{", p + 12) else { continue };
+        spans.push((p, match_brace(code, j)));
+    }
+    spans
+}
+
+pub fn in_spans(pos: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= pos && pos <= b)
+}
+
+/// 1-based line number of byte offset `pos`.
+pub fn line_of(src: &[u8], pos: usize) -> usize {
+    src[..pos.min(src.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_strings_chars() {
+        let src = br##"let x = "Vec::new"; // Vec::new
+let c = 'a'; /* Box::new */ let r = r#"fmt"#;"##;
+        let b = blank(src);
+        let code = String::from_utf8(b.code).unwrap();
+        assert!(!code.contains("Vec::new"));
+        assert!(!code.contains("Box::new"));
+        assert!(!code.contains("fmt"));
+        assert!(code.contains("let c ="));
+        let comments = String::from_utf8(b.comments).unwrap();
+        assert!(comments.contains("Vec::new"));
+        assert_eq!(src.len(), code.len());
+    }
+
+    #[test]
+    fn finds_functions_and_bodies() {
+        let src = b"fn alpha() { inner(); }\ntrait T { fn decl(&self); }\nfn beta(x: u8) -> u8 { x }\n";
+        let b = blank(src);
+        let fns = functions(&b.code);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"]);
+        let body = &src[fns[0].body.0..fns[0].body.1];
+        assert_eq!(body, b" inner(); ");
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_test_modules() {
+        let src = b"fn live() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\n";
+        let b = blank(src);
+        let spans = test_spans(&b.code);
+        assert_eq!(spans.len(), 1);
+        let p = find_sub(src, b"unwrap", 0).unwrap();
+        assert!(in_spans(p, &spans));
+        assert!(!in_spans(0, &spans));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = b"fn f<'a>(x: &'a str) -> &'a str { x }";
+        let b = blank(src);
+        assert_eq!(b.code, src.to_vec());
+    }
+}

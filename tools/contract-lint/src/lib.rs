@@ -1,0 +1,76 @@
+//! contract-lint: machine-checks the standing contracts the ROADMAP
+//! promises, straight from source. Five rules:
+//!
+//! 1. **ledger** — every `conserved()` impl (auto-discovered) and every
+//!    manifest report-merge/CSV site mentions all six ledger terms
+//!    `completed + dropped + lost_to_failure + shed + cancelled +
+//!    residual`. A new ledger term added without touching every site is
+//!    exactly the drift this catches.
+//! 2. **hot-alloc** — functions in the `hot_paths` manifest (the
+//!    per-event serving path) contain no allocating calls.
+//! 3. **registry** — `Scenario` registry closure: `names()` ⇔
+//!    `by_name`/`at_nodes` arms, every scenario exercised by a
+//!    conservation test (literal or whole-registry iteration), every
+//!    name asserted by the CI `--list-scenarios` gate.
+//! 4. **determinism** — no wall-clock/entropy/hash-iteration sources
+//!    outside a per-file allowlist with documented rationale.
+//! 5. **unwrap** — `unwrap`/`expect`/`panic!` in non-test library code
+//!    requires an adjacent `// invariant:` annotation saying *why* it
+//!    cannot fire.
+//!
+//! Suppression: `// contract-lint: allow(<rule>)` on the finding line
+//! or the line above. Stale manifests are themselves findings: a
+//! manifest entry whose file or function no longer exists fails the
+//! lint rather than silently guarding nothing.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+pub use manifest::Manifest;
+
+use std::path::Path;
+
+/// One contract violation (or stale-manifest complaint).
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// 1-based line, or 0 for whole-file findings.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+/// Lint the tree rooted at `root` (the repo checkout) against `m`.
+/// Findings come back in rule order, deterministically sorted within a
+/// rule by the walk order.
+pub fn lint_tree(root: &Path, m: &Manifest) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    rules::rule_ledger(root, m, &mut findings);
+    rules::rule_hot_alloc(root, m, &mut findings);
+    rules::rule_registry(root, m, &mut findings);
+    rules::rule_determinism(root, m, &mut findings);
+    rules::rule_unwrap(root, m, &mut findings);
+    findings
+}
+
+/// Bin/CLI entry: lint, print findings, return the process exit code.
+pub fn run(root: &Path, m: &Manifest) -> i32 {
+    let findings = lint_tree(root, m);
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("contract-lint: clean ({} rules)", 5);
+        0
+    } else {
+        eprintln!("contract-lint: {} finding(s)", findings.len());
+        1
+    }
+}

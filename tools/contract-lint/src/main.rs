@@ -1,0 +1,51 @@
+//! `cargo run -p contract-lint [-- --root <path>]`
+//!
+//! Lints the repo checkout against the standing-contract manifest and
+//! exits non-zero on any finding (the tier-1 CI `lint` job's gate).
+//! `--root` defaults to the workspace root (two levels up from this
+//! crate when run via cargo, else the current directory).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use contract_lint::{run, Manifest};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!("usage: contract-lint [--root <repo-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("contract-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(default_root);
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "contract-lint: {} does not look like the repo root \
+             (no rust/src); pass --root",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    ExitCode::from(u8::try_from(run(&root, &Manifest::repo())).unwrap_or(1))
+}
+
+/// When run through cargo, the crate dir is `tools/contract-lint`; the
+/// repo root is two levels up. Fall back to the current directory.
+fn default_root() -> PathBuf {
+    let here = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let candidate = here.join("../..");
+    if candidate.join("rust/src").is_dir() {
+        candidate
+    } else {
+        PathBuf::from(".")
+    }
+}

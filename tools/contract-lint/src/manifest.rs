@@ -1,0 +1,159 @@
+//! The manifests naming the sites each contract guards. Injectable so
+//! the fixture tests can lint miniature trees with their own manifests;
+//! the shipped binary and the tier-1 gate use [`Manifest::repo`].
+//!
+//! Growing the system? Update the manifest in the same PR: new
+//! report-merge/CSV sites go in `ledger_sites`, new per-event functions
+//! in `hot_paths`, and any new measured-wall-clock or keyed-hash use
+//! needs a `det_allow` entry with a rationale comment here.
+
+/// Which determinism token families a file is allowed to use.
+#[derive(Clone, Copy, PartialEq)]
+pub struct DetAllow {
+    /// Wall-clock reads (`Instant::now`, `SystemTime`, entropy).
+    pub time: bool,
+    /// `HashMap`/`HashSet` (keyed access only — never iterated for
+    /// anything result-bearing).
+    pub hash: bool,
+}
+
+pub struct Manifest {
+    /// The six conservation-ledger terms; every ledger site must
+    /// mention all of them.
+    pub ledger_terms: Vec<&'static str>,
+    /// `(file, fn)` report-merge / CSV sites checked for ledger
+    /// completeness, in addition to every auto-discovered `conserved()`.
+    pub ledger_sites: Vec<(&'static str, &'static str)>,
+    /// `(file, fn)` per-event hot paths where allocation is banned.
+    pub hot_paths: Vec<(&'static str, &'static str)>,
+    /// Tokens treated as allocations in hot paths.
+    pub banned_alloc: Vec<&'static str>,
+    /// Wall-clock / entropy tokens banned outside the allowlist.
+    pub det_time: Vec<&'static str>,
+    /// Iteration-order-hazard tokens banned outside the allowlist.
+    pub det_hash: Vec<&'static str>,
+    /// Per-file determinism allowlist (see [`DetAllow`]).
+    pub det_allow: Vec<(&'static str, DetAllow)>,
+    /// Test files that count as conservation coverage for the registry
+    /// rule (a literal `"name"` or a whole-registry `Scenario::names()`
+    /// iteration satisfies it).
+    pub coverage_tests: Vec<&'static str>,
+    /// The scenario registry source file.
+    pub registry_file: &'static str,
+    /// CI workflow that must assert every scenario name.
+    pub ci_file: &'static str,
+}
+
+const TIME: DetAllow = DetAllow { time: true, hash: false };
+const HASH: DetAllow = DetAllow { time: false, hash: true };
+const BOTH: DetAllow = DetAllow { time: true, hash: true };
+
+impl Manifest {
+    /// The real repository's manifest.
+    pub fn repo() -> Manifest {
+        Manifest {
+            ledger_terms: vec![
+                "completed",
+                "dropped",
+                "lost_to_failure",
+                "shed",
+                "cancelled",
+                "residual",
+            ],
+            ledger_sites: vec![
+                ("rust/src/serving/engine.rs", "from_cluster"),
+                ("rust/src/fleet/report.rs", "assemble"),
+                ("rust/src/serving/comparison.rs", "comparison_to_csv"),
+                ("rust/src/serving/openloop.rs", "openloop_to_csv"),
+                ("rust/src/fleet/mod.rs", "sweep_to_csv"),
+            ],
+            hot_paths: vec![
+                ("rust/src/env/simulator.rs", "step_into"),
+                ("rust/src/env/simulator.rs", "observation_into"),
+                ("rust/src/env/simulator.rs", "observations_into"),
+                ("rust/src/env/simulator.rs", "queue_delay_estimate"),
+                ("rust/src/env/simulator.rs", "apply_faults_until"),
+                ("rust/src/env/workload.rs", "step_into"),
+                ("rust/src/env/vecenv.rs", "observations_into"),
+                ("rust/src/coordinator/cluster.rs", "step_until"),
+                ("rust/src/coordinator/cluster.rs", "drain_outbox_into"),
+                ("rust/src/coordinator/cluster.rs", "summary_into"),
+                ("rust/src/coordinator/cluster.rs", "observation_into"),
+                ("rust/src/coordinator/cluster.rs", "queue_delay_estimate"),
+                ("rust/src/coordinator/batcher.rs", "offer"),
+                ("rust/src/coordinator/batcher.rs", "pop_ready_into"),
+                ("rust/src/coordinator/batcher.rs", "drain_into"),
+                ("rust/src/coordinator/dispatcher.rs", "completed_into"),
+                ("rust/src/coordinator/router.rs", "route"),
+                ("rust/src/ingest/mod.rs", "admit"),
+                ("rust/src/ingest/mod.rs", "pressure"),
+                ("rust/src/telemetry/slo.rs", "record"),
+                ("rust/src/policy/mod.rs", "observation_into"),
+                ("rust/src/policy/mod.rs", "action_for"),
+                ("rust/src/baselines/heuristics.rs", "decide_into"),
+                ("rust/src/baselines/failover.rs", "decide_into"),
+                ("rust/src/baselines/hedged.rs", "decide_into"),
+                ("rust/src/baselines/predictive.rs", "decide_into"),
+                ("rust/src/rl/policy.rs", "decide_into"),
+            ],
+            banned_alloc: vec![
+                "Vec::new",
+                "VecDeque::new",
+                "HashMap::new",
+                "HashSet::new",
+                "BTreeMap::new",
+                "Box::new",
+                "String::new",
+                "String::from",
+                "vec!",
+                "format!",
+                ".to_string()",
+                ".to_owned()",
+                ".to_vec()",
+                ".collect()",
+                ".collect::<",
+                "with_capacity(",
+                ".clone()",
+            ],
+            det_time: vec![
+                "Instant::now",
+                "SystemTime",
+                "thread_rng",
+                "from_entropy",
+            ],
+            det_hash: vec!["HashMap", "HashSet"],
+            det_allow: vec![
+                // bench harness: wall-clock IS the measurement
+                ("rust/src/util/bench.rs", TIME),
+                // PJRT client: device timing + keyed executable cache
+                ("rust/src/runtime/client.rs", BOTH),
+                // model zoo: load timing + keyed artifact cache
+                ("rust/src/serving/zoo.rs", BOTH),
+                // trainer: wall-clock telemetry for train throughput
+                ("rust/src/rl/trainer.rs", TIME),
+                // the fleet's one home for wall-clock: barrier-stall and
+                // run telemetry, excluded from determinism comparisons
+                ("rust/src/fleet/sync.rs", TIME),
+                // request ledger maps: keyed access only, never iterated
+                ("rust/src/coordinator/cluster.rs", HASH),
+            ],
+            coverage_tests: vec![
+                "rust/tests/chaos.rs",
+                "rust/tests/openloop.rs",
+                "rust/tests/fleet_runtime.rs",
+                "rust/tests/scenario_api.rs",
+                "rust/tests/proptests.rs",
+            ],
+            registry_file: "rust/src/scenario/mod.rs",
+            ci_file: ".github/workflows/ci.yml",
+        }
+    }
+
+    pub fn det_allow_for(&self, rel: &str) -> DetAllow {
+        self.det_allow
+            .iter()
+            .find(|(p, _)| *p == rel)
+            .map(|&(_, a)| a)
+            .unwrap_or(DetAllow { time: false, hash: false })
+    }
+}

@@ -1,0 +1,462 @@
+//! The five contract rules. Each takes the tree root, the manifest and
+//! the shared findings sink. Scanning conventions:
+//!
+//! * the **ledger** rule searches ORIGINAL source (CSV header strings
+//!   must count as mentions);
+//! * **hot-alloc**, **determinism** and **unwrap** search blanked code
+//!   (a banned token inside a comment or string is not a violation);
+//! * `#[cfg(test)]` spans are exempt from determinism and unwrap;
+//! * `// contract-lint: allow(<rule>)` on the finding line or the line
+//!   above suppresses a finding.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::lexer::{blank, functions, in_spans, line_of, test_spans};
+use crate::manifest::Manifest;
+use crate::Finding;
+
+fn load(root: &Path, rel: &str) -> Option<String> {
+    std::fs::read_to_string(root.join(rel)).ok()
+}
+
+/// Every `.rs` under `rust/src`, repo-relative with `/` separators,
+/// in deterministic (sorted, depth-first) order.
+fn src_files(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    walk(root, "rust/src", &mut out);
+    out
+}
+
+fn walk(root: &Path, rel: &str, out: &mut Vec<String>) {
+    let Ok(rd) = std::fs::read_dir(root.join(rel)) else { return };
+    let mut names: Vec<String> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .collect();
+    names.sort();
+    for n in names {
+        let child = format!("{rel}/{n}");
+        let p = root.join(&child);
+        if p.is_dir() {
+            walk(root, &child, out);
+        } else if n.ends_with(".rs") {
+            out.push(child);
+        }
+    }
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All occurrences of `needle` in `hay` (overlap-tolerant, like the
+/// step-by-one scan the rules use for token search).
+fn occurrences(hay: &[u8], needle: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    if needle.is_empty() || hay.len() < needle.len() {
+        return out;
+    }
+    for p in 0..=hay.len() - needle.len() {
+        if &hay[p..p + needle.len()] == needle {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// `word` present in `hay` with non-word bytes (or edges) on both sides.
+fn has_word(hay: &[u8], word: &[u8]) -> bool {
+    occurrences(hay, word).iter().any(|&p| {
+        (p == 0 || !is_word(hay[p - 1]))
+            && (p + word.len() >= hay.len() || !is_word(hay[p + word.len()]))
+    })
+}
+
+/// Suppression comment on the finding line or the line above.
+fn allowed(lines: &[&str], lineno: usize, rule: &str) -> bool {
+    let tag = format!("contract-lint: allow({rule})");
+    [lineno, lineno.wrapping_sub(1)].iter().any(|&ln| {
+        ln >= 1 && ln <= lines.len() && lines[ln - 1].contains(&tag)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: ledger completeness
+// ---------------------------------------------------------------------------
+
+pub fn rule_ledger(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
+    let mut sites: Vec<(String, String)> = m
+        .ledger_sites
+        .iter()
+        .map(|&(f, n)| (f.to_string(), n.to_string()))
+        .collect();
+    // auto-discover every conserved() impl: a ledger term added to the
+    // struct but not the balance check can never slip past the manifest
+    for rel in src_files(root) {
+        let Some(src) = load(root, &rel) else { continue };
+        let code = blank(src.as_bytes()).code;
+        for f in functions(&code) {
+            if f.name == "conserved" {
+                sites.push((rel.clone(), f.name));
+            }
+        }
+    }
+    let mut seen = BTreeSet::new();
+    for (rel, fname) in sites {
+        if !seen.insert((rel.clone(), fname.clone())) {
+            continue;
+        }
+        let Some(src) = load(root, &rel) else {
+            findings.push(Finding {
+                rule: "ledger",
+                path: rel,
+                line: 0,
+                msg: format!("manifest site {fname} missing: file not found"),
+            });
+            continue;
+        };
+        let bytes = src.as_bytes();
+        let code = blank(bytes).code;
+        let fns: Vec<_> =
+            functions(&code).into_iter().filter(|f| f.name == fname).collect();
+        if fns.is_empty() {
+            findings.push(Finding {
+                rule: "ledger",
+                path: rel,
+                line: 0,
+                msg: format!(
+                    "manifest site fn {fname} not found (stale manifest?)"
+                ),
+            });
+            continue;
+        }
+        for f in fns {
+            let body = &bytes[f.body.0..f.body.1]; // ORIGINAL text
+            for term in &m.ledger_terms {
+                if !has_word(body, term.as_bytes()) {
+                    findings.push(Finding {
+                        rule: "ledger",
+                        path: rel.clone(),
+                        line: line_of(bytes, f.header),
+                        msg: format!("fn {fname} misses ledger term `{term}`"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: hot-path allocation ban
+// ---------------------------------------------------------------------------
+
+pub fn rule_hot_alloc(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
+    // group by file, preserving manifest order
+    let mut files: Vec<&str> = Vec::new();
+    for &(rel, _) in &m.hot_paths {
+        if !files.contains(&rel) {
+            files.push(rel);
+        }
+    }
+    for rel in files {
+        let Some(src) = load(root, rel) else {
+            findings.push(Finding {
+                rule: "hot-alloc",
+                path: rel.to_string(),
+                line: 0,
+                msg: "manifest file not found".to_string(),
+            });
+            continue;
+        };
+        let bytes = src.as_bytes();
+        let lines: Vec<&str> = src.split('\n').collect();
+        let code = blank(bytes).code;
+        let fns = functions(&code);
+        for &(frel, fname) in m.hot_paths.iter().filter(|&&(f, _)| f == rel) {
+            let matches: Vec<_> =
+                fns.iter().filter(|f| f.name == fname).collect();
+            if matches.is_empty() {
+                findings.push(Finding {
+                    rule: "hot-alloc",
+                    path: frel.to_string(),
+                    line: 0,
+                    msg: format!(
+                        "HOT_PATHS fn {fname} not found (stale manifest?)"
+                    ),
+                });
+            }
+            for f in matches {
+                let body = &code[f.body.0..f.body.1];
+                for tok in &m.banned_alloc {
+                    for p in occurrences(body, tok.as_bytes()) {
+                        let ln = line_of(bytes, f.body.0 + p);
+                        if allowed(&lines, ln, "hot-alloc") {
+                            continue;
+                        }
+                        findings.push(Finding {
+                            rule: "hot-alloc",
+                            path: frel.to_string(),
+                            line: ln,
+                            msg: format!(
+                                "allocating call `{tok}` in hot path fn {fname}"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: registry coverage
+// ---------------------------------------------------------------------------
+
+/// Quoted `[a-z0-9-]+` literals in `body`; `arms_only` additionally
+/// requires the literal to be a match arm (followed by `=>`).
+fn quoted_names(body: &[u8], arms_only: bool) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < body.len() {
+        if body[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < body.len() && body[j] != b'"' && body[j] != b'\n' {
+            j += 1;
+        }
+        if j >= body.len() || body[j] != b'"' {
+            break;
+        }
+        let name = &body[start..j];
+        let valid = !name.is_empty()
+            && name.iter().all(|&b| {
+                b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-'
+            });
+        if valid {
+            let mut k = j + 1;
+            while k < body.len() && body[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            let is_arm = body[k..].starts_with(b"=>");
+            if !arms_only || is_arm {
+                out.push(String::from_utf8_lossy(name).into_owned());
+            }
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// `name` present in `text` delimited the way the CI gate writes it:
+/// preceded by start/whitespace/quote, followed by
+/// end/whitespace/quote/backslash.
+fn ci_asserts(text: &[u8], name: &[u8]) -> bool {
+    occurrences(text, name).iter().any(|&p| {
+        let left = p == 0
+            || text[p - 1].is_ascii_whitespace()
+            || text[p - 1] == b'"';
+        let q = p + name.len();
+        let right = q >= text.len()
+            || text[q].is_ascii_whitespace()
+            || text[q] == b'"'
+            || text[q] == b'\\';
+        left && right
+    })
+}
+
+pub fn rule_registry(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
+    let rel = m.registry_file;
+    let Some(src) = load(root, rel) else {
+        findings.push(Finding {
+            rule: "registry",
+            path: rel.to_string(),
+            line: 0,
+            msg: "registry file not found".to_string(),
+        });
+        return;
+    };
+    let bytes = src.as_bytes();
+    let code = blank(bytes).code;
+    let fns = functions(&code);
+    let names_fn = fns.iter().find(|f| f.name == "names");
+    let at_nodes_fn = fns.iter().find(|f| f.name == "at_nodes");
+    let (Some(nf), Some(af)) = (names_fn, at_nodes_fn) else {
+        findings.push(Finding {
+            rule: "registry",
+            path: rel.to_string(),
+            line: 0,
+            msg: "names()/at_nodes() not found".to_string(),
+        });
+        return;
+    };
+    let names = quoted_names(&bytes[nf.body.0..nf.body.1], false);
+    let arms = quoted_names(&bytes[af.body.0..af.body.1], true);
+    for n in &arms {
+        if !names.contains(n) {
+            findings.push(Finding {
+                rule: "registry",
+                path: rel.to_string(),
+                line: 0,
+                msg: format!("by_name arm `{n}` missing from names()"),
+            });
+        }
+    }
+    for n in &names {
+        if !arms.contains(n) {
+            findings.push(Finding {
+                rule: "registry",
+                path: rel.to_string(),
+                line: 0,
+                msg: format!("names() entry `{n}` has no by_name arm"),
+            });
+        }
+    }
+    // conservation coverage: a literal "name" in any coverage test, or a
+    // whole-registry Scenario::names() iteration, satisfies the rule
+    let mut cover_all = false;
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for &trel in &m.coverage_tests {
+        let Some(t) = load(root, trel) else { continue };
+        if t.contains("Scenario::names()") {
+            cover_all = true;
+        }
+        for n in &names {
+            if t.contains(&format!("\"{n}\"")) {
+                covered.insert(n.clone());
+            }
+        }
+    }
+    for n in &names {
+        if !cover_all && !covered.contains(n) {
+            findings.push(Finding {
+                rule: "registry",
+                path: rel.to_string(),
+                line: 0,
+                msg: format!(
+                    "scenario `{n}` not exercised by any conservation proptest"
+                ),
+            });
+        }
+    }
+    let Some(ci) = load(root, m.ci_file) else {
+        findings.push(Finding {
+            rule: "registry",
+            path: m.ci_file.to_string(),
+            line: 0,
+            msg: "ci.yml not found".to_string(),
+        });
+        return;
+    };
+    for n in &names {
+        if !ci_asserts(ci.as_bytes(), n.as_bytes()) {
+            findings.push(Finding {
+                rule: "registry",
+                path: m.ci_file.to_string(),
+                line: 0,
+                msg: format!(
+                    "scenario `{n}` not asserted by the CI --list-scenarios gate"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: determinism ban
+// ---------------------------------------------------------------------------
+
+pub fn rule_determinism(
+    root: &Path,
+    m: &Manifest,
+    findings: &mut Vec<Finding>,
+) {
+    for rel in src_files(root) {
+        let Some(src) = load(root, &rel) else { continue };
+        let bytes = src.as_bytes();
+        let lines: Vec<&str> = src.split('\n').collect();
+        let code = blank(bytes).code;
+        let spans = test_spans(&code);
+        let allow = m.det_allow_for(&rel);
+        let mut toks: Vec<&str> = Vec::new();
+        if !allow.time {
+            toks.extend(&m.det_time);
+        }
+        if !allow.hash {
+            toks.extend(&m.det_hash);
+        }
+        for tok in toks {
+            for p in occurrences(&code, tok.as_bytes()) {
+                // right word boundary (e.g. `HashMap` != `HashMapper`)
+                let q = p + tok.len();
+                if q < code.len() && is_word(code[q]) {
+                    continue;
+                }
+                if in_spans(p, &spans) {
+                    continue;
+                }
+                let ln = line_of(bytes, p);
+                if allowed(&lines, ln, "determinism") {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: "determinism",
+                    path: rel.clone(),
+                    line: ln,
+                    msg: format!(
+                        "nondeterminism source `{tok}` outside the allowlist"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule 5: unwrap discipline
+// ---------------------------------------------------------------------------
+
+const UNWRAP_TOKS: [&str; 5] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "unwrap_unchecked",
+];
+
+pub fn rule_unwrap(root: &Path, _m: &Manifest, findings: &mut Vec<Finding>) {
+    for rel in src_files(root) {
+        let Some(src) = load(root, &rel) else { continue };
+        let bytes = src.as_bytes();
+        let lines: Vec<&str> = src.split('\n').collect();
+        let code = blank(bytes).code;
+        let spans = test_spans(&code);
+        for tok in UNWRAP_TOKS {
+            for p in occurrences(&code, tok.as_bytes()) {
+                if in_spans(p, &spans) {
+                    continue;
+                }
+                let ln = line_of(bytes, p);
+                // an `invariant:` annotation on the same line or within
+                // the five lines above justifies the panic site
+                let annotated = (ln.saturating_sub(5).max(1)..=ln)
+                    .any(|c| lines[c - 1].contains("invariant:"));
+                if annotated || allowed(&lines, ln, "unwrap") {
+                    continue;
+                }
+                findings.push(Finding {
+                    rule: "unwrap",
+                    path: rel.clone(),
+                    line: ln,
+                    msg: format!(
+                        "`{}` without an adjacent `// invariant:` annotation",
+                        tok.trim_matches('.')
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Every escape hatch at once — the lint must stay silent here.
+use std::time::Instant;
+
+pub struct Cache {
+    stamp: Option<Instant>,
+}
+
+impl Cache {
+    pub fn refresh(&mut self) {
+        // contract-lint: allow(determinism) — measured telemetry stub
+        self.stamp = Some(Instant::now());
+    }
+
+    pub fn head(v: &[u64]) -> u64 {
+        // invariant: callers guarantee v is non-empty
+        *v.first().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = [1u64];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}

@@ -1,0 +1,4 @@
+//! Seeded violation: wall-clock read outside the allowlist.
+pub fn stamp() -> f64 {
+    std::time::Instant::now().elapsed().as_secs_f64()
+}

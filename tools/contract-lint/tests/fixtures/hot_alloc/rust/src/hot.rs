@@ -1,0 +1,7 @@
+//! Seeded violation: a per-event hot path that allocates.
+pub fn step_into(out: &mut [u64]) {
+    let scratch: Vec<u64> = Vec::new();
+    for (slot, v) in out.iter_mut().zip(scratch.iter()) {
+        *slot = *v;
+    }
+}

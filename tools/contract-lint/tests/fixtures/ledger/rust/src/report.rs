@@ -1,0 +1,21 @@
+//! Seeded violation: `conserved()` forgets the `shed` ledger term.
+pub struct Report {
+    pub emitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub lost_to_failure: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub residual: u64,
+}
+
+impl Report {
+    pub fn conserved(&self) -> bool {
+        self.emitted
+            == self.completed
+                + self.dropped
+                + self.lost_to_failure
+                + self.cancelled
+                + self.residual
+    }
+}

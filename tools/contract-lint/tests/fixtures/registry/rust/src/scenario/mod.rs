@@ -1,0 +1,16 @@
+//! Seeded violation: `beta` is registered but has no by_name arm, no
+//! conservation coverage and no CI assertion.
+pub struct Scenario;
+
+impl Scenario {
+    pub fn names() -> [&'static str; 2] {
+        ["alpha", "beta"]
+    }
+
+    pub fn at_nodes(name: &str) -> Option<Scenario> {
+        match name {
+            "alpha" => Some(Scenario),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! Seeded violation: unannotated unwrap in non-test code.
+pub fn last(v: &[u64]) -> u64 {
+    *v.last().unwrap()
+}

@@ -1,0 +1,107 @@
+//! Fixture corpus: one seeded violation per rule, each asserted to
+//! fire; an escape-hatch tree asserted silent; and the real repository
+//! tree asserted clean — the latter is what makes `cargo test` at the
+//! workspace root a standing tier-1 contract gate.
+
+use std::path::{Path, PathBuf};
+
+use contract_lint::{lint_tree, Finding, Manifest};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Manifest for the miniature fixture trees: same rule configuration as
+/// the repo, with the repo-specific site lists swapped for the
+/// fixtures' own.
+fn fixture_manifest() -> Manifest {
+    let mut m = Manifest::repo();
+    m.ledger_sites = vec![];
+    m.hot_paths = vec![];
+    m.det_allow = vec![];
+    m.coverage_tests = vec!["rust/tests/cover.rs"];
+    m
+}
+
+fn dump(findings: &[Finding]) -> String {
+    findings.iter().map(|f| format!("{f}\n")).collect()
+}
+
+#[test]
+fn ledger_rule_fires_on_incomplete_conserved() {
+    let findings = lint_tree(&fixture("ledger"), &fixture_manifest());
+    assert_eq!(findings.len(), 1, "{}", dump(&findings));
+    assert_eq!(findings[0].rule, "ledger");
+    assert!(findings[0].msg.contains("`shed`"), "{}", findings[0]);
+    assert_eq!(findings[0].path, "rust/src/report.rs");
+}
+
+#[test]
+fn hot_alloc_rule_fires_on_allocating_hot_path() {
+    let mut m = fixture_manifest();
+    m.hot_paths = vec![("rust/src/hot.rs", "step_into")];
+    let findings = lint_tree(&fixture("hot_alloc"), &m);
+    assert_eq!(findings.len(), 1, "{}", dump(&findings));
+    assert_eq!(findings[0].rule, "hot-alloc");
+    assert!(findings[0].msg.contains("Vec::new"), "{}", findings[0]);
+}
+
+#[test]
+fn hot_alloc_rule_reports_stale_manifest() {
+    let mut m = fixture_manifest();
+    m.hot_paths = vec![("rust/src/hot.rs", "renamed_away")];
+    let findings = lint_tree(&fixture("hot_alloc"), &m);
+    // the seeded alloc is no longer guarded, but the stale entry fires
+    assert_eq!(findings.len(), 1, "{}", dump(&findings));
+    assert!(findings[0].msg.contains("stale manifest"), "{}", findings[0]);
+}
+
+#[test]
+fn registry_rule_fires_on_unwired_scenario() {
+    let findings = lint_tree(&fixture("registry"), &fixture_manifest());
+    assert_eq!(findings.len(), 3, "{}", dump(&findings));
+    assert!(findings.iter().all(|f| f.rule == "registry"));
+    assert!(findings.iter().any(|f| f.msg.contains("no by_name arm")));
+    assert!(findings.iter().any(|f| f.msg.contains("conservation")));
+    assert!(findings.iter().any(|f| f.msg.contains("--list-scenarios")));
+    assert!(findings.iter().all(|f| f.msg.contains("`beta`")));
+}
+
+#[test]
+fn determinism_rule_fires_on_wall_clock() {
+    let findings = lint_tree(&fixture("determinism"), &fixture_manifest());
+    assert_eq!(findings.len(), 1, "{}", dump(&findings));
+    assert_eq!(findings[0].rule, "determinism");
+    assert!(findings[0].msg.contains("Instant::now"), "{}", findings[0]);
+    assert_eq!(findings[0].path, "rust/src/det.rs");
+    assert_eq!(findings[0].line, 3);
+}
+
+#[test]
+fn unwrap_rule_fires_on_unannotated_unwrap() {
+    let findings = lint_tree(&fixture("unwrap"), &fixture_manifest());
+    assert_eq!(findings.len(), 1, "{}", dump(&findings));
+    assert_eq!(findings[0].rule, "unwrap");
+    assert!(findings[0].msg.contains("invariant"), "{}", findings[0]);
+}
+
+#[test]
+fn escape_hatches_keep_the_clean_tree_silent() {
+    let mut m = fixture_manifest();
+    m.hot_paths = vec![("rust/src/hot.rs", "step_into")];
+    let findings = lint_tree(&fixture("clean"), &m);
+    assert!(findings.is_empty(), "{}", dump(&findings));
+}
+
+/// THE gate: the shipped tree holds every contract. Runs under the
+/// workspace-wide `cargo test`, so tier-1 fails on any new violation.
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let findings = lint_tree(&root, &Manifest::repo());
+    assert!(
+        findings.is_empty(),
+        "contract violations in the shipped tree:\n{}",
+        dump(&findings)
+    );
+}
