@@ -26,7 +26,7 @@ use edgevision::util::cli::Args;
 
 const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios|lint|experiment> [flags]
   repro info
-  repro lint [--root DIR]     run the standing-contract linter (alias of cargo run -p contract-lint)
+  repro lint [--root DIR] [--json]   run the standing-contract analyzer (alias of cargo run -p contract-lint)
   repro train --omega 5 --episodes 600 [--variant full|noattn|local] [--ippo] [--local-only] [--save FILE]
   repro evaluate --params FILE [--omega 5] [--eval-episodes 30] [--greedy]
   repro baselines [--omega 5]
@@ -68,9 +68,11 @@ fn main() -> Result<()> {
     }
 }
 
-/// `repro lint [--root DIR]` — the standing-contract linter, callable
-/// from the main CLI. Defaults to the workspace root this binary was
-/// built from, so `repro lint` works from any cwd.
+/// `repro lint [--root DIR] [--json]` — the standing-contract
+/// analyzer, callable from the main CLI. Defaults to the workspace
+/// root this binary was built from, so `repro lint` works from any
+/// cwd. `--json` prints the machine-readable findings artifact (same
+/// format as `contract-lint --format json`).
 fn lint_cmd(args: &Args) -> Result<()> {
     let root = match args.get("root") {
         Some(r) => std::path::PathBuf::from(r),
@@ -84,7 +86,11 @@ fn lint_cmd(args: &Args) -> Result<()> {
         "{} does not look like the repo root (no rust/src); pass --root",
         root.display()
     );
-    let code = contract_lint::run(&root, &contract_lint::Manifest::repo());
+    let opts = contract_lint::Options {
+        json: args.bool("json"),
+        github: false,
+    };
+    let code = contract_lint::run(&root, &contract_lint::Manifest::repo(), opts);
     anyhow::ensure!(code == 0, "contract-lint reported findings");
     Ok(())
 }

@@ -34,8 +34,10 @@ impl CsvWriter {
     }
 }
 
-/// Format a float cell compactly.
-pub fn f(v: f64) -> String {
+/// Format a float cell compactly. Named `cell` (not `f`) so the crate
+/// call-graph linter cannot confuse it with `f(..)` closure-parameter
+/// calls inside `for_each_rate` impls.
+pub fn cell(v: f64) -> String {
     format!("{v:.6}")
 }
 

@@ -1,0 +1,575 @@
+//! Crate-wide call graph over `rust/src`, built on the PR 8 lexer, and
+//! the three interprocedural passes that run over it:
+//!
+//! * **transitive hot-alloc** — banned allocation tokens anywhere
+//!   reachable from a hot-path root, reported with the full blame chain
+//!   (`step_into → route → rebuild_weights: .collect() at line N`);
+//! * **panic reachability (`hot-panic`)** — `unwrap`/`expect`/`panic!`
+//!   reachable from a hot root. Stricter than the crate-wide `unwrap`
+//!   rule: an `// invariant:` annotation downgrades the finding to a
+//!   surfaced *note* (the chain still appears in the report and the
+//!   JSON artifact) instead of silencing it; only an explicit
+//!   `// contract-lint: allow(hot-panic)` fully suppresses.
+//! * **determinism taint (`det-taint`)** — wall-clock/entropy/
+//!   hash-iteration sources propagate along call edges; a result-bearing
+//!   sink (a `conserved()` impl or a manifest report-merge/CSV site)
+//!   that can reach a tainted function is a finding unless the source is
+//!   in the manifest `taint_allow` list with a rationale.
+//!
+//! # Name-resolution heuristic (documented contract)
+//!
+//! The graph is name-based — no type inference. A call site resolves to
+//! crate functions as follows:
+//!
+//! * `free_fn(...)` — every ownerless `fn free_fn` in `rust/src`;
+//! * `path::free_fn(...)` (lowercase final + lowercase qualifier) —
+//!   same as a free call on the final segment;
+//! * `Type::method(...)` (uppercase qualifier) — methods named `method`
+//!   whose `impl` self-type is `Type`; if `Type` has no such method but
+//!   the crate defines same-named methods on other types, ALL of them
+//!   (the qualifier may be a re-export or trait name);
+//! * `Self::method(...)` — methods of the enclosing `impl`'s self type;
+//! * `recv.method(...)` — receiver type unknown, so every crate method
+//!   named `method` **except** names on the [`STD_METHODS`] list, which
+//!   overwhelmingly belong to std containers (`get`, `push`, `insert`,
+//!   …). A crate method that shadows a std name is still resolved via
+//!   its qualified spellings; keep hot-path helper names distinctive.
+//! * `Type::method` / `path::func` *without* parens (a function passed
+//!   as a value, e.g. a policy factory) — resolved like the called
+//!   form, so higher-order indirection stays in the graph.
+//!
+//! **Unresolved-call policy**: a callee name with no crate definition
+//! is external (std or a gated dependency) and contributes no edge —
+//! the token rules already catch the direct allocation/panic/clock
+//! spellings, so externals cannot hide a contract violation. Unresolved
+//! and std-skipped counts are reported in the JSON `stats` block so a
+//! resolution regression is visible.
+//!
+//! Cycles (recursion, mutual recursion) are handled by Tarjan SCC
+//! condensation: reachability runs on the acyclic condensation, blame
+//! chains come from a BFS parent tree over the original graph, so the
+//! walk terminates on any input (pinned by the `recursion` fixture).
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{
+    blank, functions, impl_spans, in_spans, line_of, test_spans,
+};
+
+/// Bare-method names never resolved from a `.name(` receiver call:
+/// std-container vocabulary that would otherwise alias every slice /
+/// map / iterator call site onto same-named crate methods. Qualified
+/// calls (`Type::name`) still resolve. Documented in the module header.
+pub const STD_METHODS: &[&str] = &[
+    "get", "get_mut", "insert", "remove", "push", "pop", "len",
+    "is_empty", "clear", "contains", "contains_key", "iter", "iter_mut",
+    "next", "extend", "drain", "retain", "sort", "sort_by",
+    "sort_by_key", "min", "max", "abs", "clone", "to_vec", "write",
+    "read", "fold", "map", "filter", "rev", "take", "skip", "last",
+    "first", "split", "join", "push_str", "entry", "or_insert",
+    "unwrap_or", "get_or_insert", "merge", "flush", "send", "recv",
+    "push_back", "push_front", "pop_back", "pop_front", "swap",
+    "resize", "fill", "count", "sum", "any", "all", "find", "position",
+    "powf", "powi", "sqrt", "floor", "ceil", "round", "exp", "ln",
+];
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Rust keywords that look like call heads when followed by `(`.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "match", "while", "for", "loop", "return", "break",
+    "continue", "let", "fn", "impl", "pub", "use", "mod", "where",
+    "unsafe", "dyn", "as", "in", "ref", "mut", "move", "struct", "enum",
+    "trait", "type", "const", "static", "crate", "super", "self",
+    "true", "false", "await", "box", "yield",
+];
+
+/// One function node of the crate-wide graph.
+pub struct FnNode {
+    /// Index into [`CallGraph::files`].
+    pub file: usize,
+    pub name: String,
+    /// `impl` self-type, `None` for free functions.
+    pub owner: Option<String>,
+    /// Byte offset of the `fn` keyword in the file.
+    pub header: usize,
+    /// Body byte range, inside the braces.
+    pub body: (usize, usize),
+    /// Inside a `#[cfg(test)]` span — excluded from all passes.
+    pub in_test: bool,
+}
+
+/// The crate-wide call graph plus the per-file source/blanked buffers
+/// the interprocedural passes scan.
+pub struct CallGraph {
+    /// Repo-relative file paths, sorted walk order.
+    pub files: Vec<String>,
+    /// Original bytes per file.
+    pub srcs: Vec<Vec<u8>>,
+    /// Comment/literal-blanked bytes per file.
+    pub codes: Vec<Vec<u8>>,
+    pub fns: Vec<FnNode>,
+    /// Adjacency: `edges[f]` = callee fn indices, deduped, sorted.
+    pub edges: Vec<Vec<usize>>,
+    /// Call sites whose name has no crate definition (external).
+    pub unresolved: usize,
+    /// Bare `.method(` sites skipped via [`STD_METHODS`].
+    pub std_skipped: usize,
+}
+
+impl CallGraph {
+    /// Build the graph from `(rel_path, source)` pairs (every `.rs`
+    /// under `rust/src`, in walk order).
+    pub fn build(sources: Vec<(String, String)>) -> CallGraph {
+        let mut files = Vec::new();
+        let mut srcs: Vec<Vec<u8>> = Vec::new();
+        let mut codes: Vec<Vec<u8>> = Vec::new();
+        let mut fns: Vec<FnNode> = Vec::new();
+        for (rel, src) in sources {
+            let bytes = src.into_bytes();
+            let code = blank(&bytes).code;
+            let impls = impl_spans(&code);
+            let tests = test_spans(&code);
+            let fi = files.len();
+            for f in functions(&code) {
+                let owner = impls
+                    .iter()
+                    .filter(|s| s.body.0 <= f.header && f.header < s.body.1)
+                    .min_by_key(|s| s.body.1 - s.body.0)
+                    .map(|s| s.owner.clone());
+                fns.push(FnNode {
+                    file: fi,
+                    name: f.name,
+                    owner,
+                    header: f.header,
+                    body: f.body,
+                    in_test: in_spans(f.header, &tests),
+                });
+            }
+            files.push(rel);
+            srcs.push(bytes);
+            codes.push(code);
+        }
+
+        // name → candidate indices, split free vs method
+        let find = |name: &str, pred: &dyn Fn(&FnNode) -> bool| -> Vec<usize> {
+            fns.iter()
+                .enumerate()
+                .filter(|(_, f)| f.name == name && !f.in_test && pred(f))
+                .map(|(i, _)| i)
+                .collect()
+        };
+
+        let mut edges: Vec<BTreeSet<usize>> =
+            fns.iter().map(|_| BTreeSet::new()).collect();
+        let mut unresolved = 0usize;
+        let mut std_skipped = 0usize;
+
+        for i in 0..fns.len() {
+            if fns[i].in_test {
+                continue;
+            }
+            // exclude nested fn items' bodies from this body's scan
+            let nested: Vec<(usize, usize)> = fns
+                .iter()
+                .filter(|g| {
+                    g.file == fns[i].file
+                        && g.body.0 > fns[i].body.0
+                        && g.body.1 < fns[i].body.1
+                })
+                .map(|g| g.body)
+                .collect();
+            let code = &codes[fns[i].file];
+            for call in call_sites(code, fns[i].body, &nested) {
+                let callee = call.segments.last().map(String::as_str);
+                // invariant: call_sites never yields an empty path
+                let callee = callee.unwrap();
+                let qualifier = (call.segments.len() >= 2)
+                    .then(|| call.segments[call.segments.len() - 2].as_str());
+                let targets: Vec<usize> = match (call.method, qualifier) {
+                    // recv.method( — any crate method, minus std names
+                    (true, None) => {
+                        if STD_METHODS.contains(&callee) {
+                            std_skipped += 1;
+                            continue;
+                        }
+                        find(callee, &|f| f.owner.is_some())
+                    }
+                    // Self::m — the enclosing impl's methods
+                    (_, Some("Self")) => {
+                        let own = fns[i].owner.clone();
+                        find(callee, &|f| f.owner == own)
+                    }
+                    (_, Some(q))
+                        if q.starts_with(|c: char| c.is_ascii_uppercase()) =>
+                    {
+                        let exact =
+                            find(callee, &|f| f.owner.as_deref() == Some(q));
+                        if exact.is_empty() {
+                            // re-export / trait-qualified: any method
+                            find(callee, &|f| f.owner.is_some())
+                        } else {
+                            exact
+                        }
+                    }
+                    // module-qualified or free call — free functions
+                    _ => find(callee, &|f| f.owner.is_none()),
+                };
+                if targets.is_empty() {
+                    unresolved += 1;
+                }
+                edges[i].extend(targets);
+            }
+        }
+        CallGraph {
+            files,
+            srcs,
+            codes,
+            fns,
+            edges: edges
+                .into_iter()
+                .map(|s| s.into_iter().collect())
+                .collect(),
+            unresolved,
+            std_skipped,
+        }
+    }
+
+    /// `file::fn` display label for blame chains.
+    pub fn label(&self, f: usize) -> String {
+        self.fns[f].name.clone()
+    }
+
+    /// 1-based line of a function's header.
+    pub fn header_line(&self, f: usize) -> usize {
+        line_of(&self.srcs[self.fns[f].file], self.fns[f].header)
+    }
+
+    /// Indices of non-test functions matching `(file, name)`.
+    pub fn lookup(&self, rel: &str, name: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                !f.in_test && f.name == name && self.files[f.file] == rel
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Tarjan SCC condensation: `comp[f]` = component id, components
+    /// numbered in reverse topological order (callees before callers).
+    pub fn sccs(&self) -> Vec<usize> {
+        let n = self.fns.len();
+        let mut index = vec![usize::MAX; n];
+        let mut low = vec![0usize; n];
+        let mut on_stack = vec![false; n];
+        let mut stack: Vec<usize> = Vec::new();
+        let mut comp = vec![usize::MAX; n];
+        let mut next_index = 0usize;
+        let mut next_comp = 0usize;
+        // iterative Tarjan: (node, edge cursor) frames
+        for root in 0..n {
+            if index[root] != usize::MAX {
+                continue;
+            }
+            let mut frames: Vec<(usize, usize)> = vec![(root, 0)];
+            while let Some(&mut (v, ref mut cursor)) = frames.last_mut() {
+                if *cursor == 0 {
+                    index[v] = next_index;
+                    low[v] = next_index;
+                    next_index += 1;
+                    stack.push(v);
+                    on_stack[v] = true;
+                }
+                if let Some(&w) = self.edges[v].get(*cursor) {
+                    *cursor += 1;
+                    if index[w] == usize::MAX {
+                        frames.push((w, 0));
+                    } else if on_stack[w] {
+                        low[v] = low[v].min(index[w]);
+                    }
+                } else {
+                    frames.pop();
+                    if low[v] == index[v] {
+                        loop {
+                            // invariant: v was pushed onto `stack` when
+                            // its frame opened and is still on it here
+                            let w = stack.pop().unwrap();
+                            on_stack[w] = false;
+                            comp[w] = next_comp;
+                            if w == v {
+                                break;
+                            }
+                        }
+                        next_comp += 1;
+                    }
+                    if let Some(&mut (u, _)) = frames.last_mut() {
+                        low[u] = low[u].min(low[v]);
+                    }
+                }
+            }
+        }
+        comp
+    }
+
+    /// BFS from `roots`: `(reachable, parent)` where `parent[f]` is the
+    /// predecessor on a shortest chain from some root (roots have
+    /// `parent[f] == f`). Reachability agrees with a walk over the SCC
+    /// condensation (the condensation is how termination is argued; the
+    /// visited set is how it is implemented — both are cycle-proof).
+    pub fn reach(&self, roots: &[usize]) -> (Vec<bool>, Vec<usize>) {
+        self.reach_stopped(roots, &[])
+    }
+
+    /// [`reach`](Self::reach) with a boundary: traversal neither enters
+    /// nor scans a node with `stop[f]` (the hot-alloc allocation-domain
+    /// boundary — e.g. the PJRT adapter, which allocates by design).
+    /// An empty `stop` slice means no boundary.
+    pub fn reach_stopped(
+        &self,
+        roots: &[usize],
+        stop: &[bool],
+    ) -> (Vec<bool>, Vec<usize>) {
+        let n = self.fns.len();
+        let stopped = |f: usize| stop.get(f).copied().unwrap_or(false);
+        let mut seen = vec![false; n];
+        let mut parent = vec![usize::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        for &r in roots {
+            if !seen[r] && !stopped(r) {
+                seen[r] = true;
+                parent[r] = r;
+                queue.push_back(r);
+            }
+        }
+        while let Some(v) = queue.pop_front() {
+            for &w in &self.edges[v] {
+                if !seen[w] && !self.fns[w].in_test && !stopped(w) {
+                    seen[w] = true;
+                    parent[w] = v;
+                    queue.push_back(w);
+                }
+            }
+        }
+        (seen, parent)
+    }
+
+    /// Root-to-`f` blame chain of fn labels, shortest-path by BFS tree.
+    pub fn chain(&self, parent: &[usize], f: usize) -> Vec<String> {
+        let mut rev = vec![self.label(f)];
+        let mut v = f;
+        let mut hops = 0;
+        while parent[v] != v && parent[v] != usize::MAX {
+            v = parent[v];
+            rev.push(self.label(v));
+            hops += 1;
+            if hops > self.fns.len() {
+                break; // defensive: parent maps from reach() are acyclic
+            }
+        }
+        rev.reverse();
+        rev
+    }
+}
+
+/// One call site: path segments (`["Type", "method"]` / `["free_fn"]`)
+/// and whether it was a `.method(` receiver call.
+struct CallSite {
+    segments: Vec<String>,
+    method: bool,
+}
+
+/// Extract call sites from `body` (byte range into `code`), skipping
+/// `nested` sub-ranges (nested fn items get their own node).
+fn call_sites(
+    code: &[u8],
+    body: (usize, usize),
+    nested: &[(usize, usize)],
+) -> Vec<CallSite> {
+    let mut out = Vec::new();
+    let mut i = body.0;
+    let end = body.1.min(code.len());
+    'scan: while i < end {
+        if let Some(&(a, b)) = nested.iter().find(|&&(a, b)| a <= i && i < b)
+        {
+            let _ = a;
+            i = b;
+            continue;
+        }
+        if !is_word(code[i]) || (i > 0 && is_word(code[i - 1])) {
+            i += 1;
+            continue;
+        }
+        // at the start of an identifier; a path cannot start mid-way
+        let prev = code[..i]
+            .iter()
+            .rev()
+            .find(|b| !b.is_ascii_whitespace())
+            .copied();
+        let method = prev == Some(b'.');
+        if prev == Some(b':') {
+            i += 1; // mid-path segment; the path head already consumed it
+            continue;
+        }
+        // read `seg(::seg)*`
+        let mut segments = Vec::new();
+        let mut j = i;
+        loop {
+            let s = j;
+            while j < end && is_word(code[j]) {
+                j += 1;
+            }
+            if j == s {
+                break;
+            }
+            segments.push(String::from_utf8_lossy(&code[s..j]).into_owned());
+            // a turbofish ends the path: `ident::<T>(` — generic args,
+            // not a segment
+            if code[j..end.min(j + 3)].starts_with(b"::<") {
+                j += 2;
+                break;
+            }
+            if code[j..end.min(j + 2)].starts_with(b"::") {
+                j += 2;
+            } else {
+                break;
+            }
+        }
+        let mut k = j;
+        if k < end && code[k] == b'!' {
+            i = j + 1; // macro invocation — token rules own these
+            continue;
+        }
+        while k < end && code[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        let called = k < end && code[k] == b'(';
+        // invariant: the identifier loop above pushed at least once
+        let name = segments.last().unwrap().as_str();
+        let lowercase_head =
+            name.starts_with(|c: char| c.is_ascii_lowercase() || c == '_');
+        if !lowercase_head {
+            i = j + 1; // Type constructor / enum variant / const
+            continue;
+        }
+        if segments.len() == 1 {
+            if KEYWORDS.contains(&name) {
+                i = j + 1;
+                continue 'scan;
+            }
+            // single segment needs parens: a bare ident is a variable,
+            // a parenless `.ident` is a field access
+            if !called {
+                i = j + 1;
+                continue;
+            }
+        }
+        // multi-segment paths count even uncalled (fn passed as value)
+        out.push(CallSite { segments, method });
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_of(files: &[(&str, &str)]) -> CallGraph {
+        CallGraph::build(
+            files
+                .iter()
+                .map(|&(p, s)| (p.to_string(), s.to_string()))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn resolves_free_qualified_and_method_calls() {
+        let g = graph_of(&[
+            (
+                "rust/src/a.rs",
+                "pub fn root() { helper(); W::make(); x.refresh(); }\n\
+                 fn helper() {}\n",
+            ),
+            (
+                "rust/src/b.rs",
+                "pub struct W; impl W { pub fn make() {} \
+                 pub fn refresh(&self) {} }\n",
+            ),
+        ]);
+        let root = g.lookup("rust/src/a.rs", "root")[0];
+        let names: Vec<String> =
+            g.edges[root].iter().map(|&t| g.label(t)).collect();
+        assert_eq!(names, ["helper", "make", "refresh"]);
+    }
+
+    #[test]
+    fn std_method_names_are_not_resolved_bare() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "pub fn root(v: &mut Vec<u8>) { v.push(1); }\n\
+             pub struct S; impl S { pub fn push(&mut self, _x: u8) {} }\n",
+        )]);
+        let root = g.lookup("rust/src/a.rs", "root")[0];
+        assert!(g.edges[root].is_empty());
+        assert_eq!(g.std_skipped, 1);
+    }
+
+    #[test]
+    fn qualified_owner_beats_name_pool() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "pub struct A; impl A { pub fn go() {} }\n\
+             pub struct B; impl B { pub fn go() {} }\n\
+             pub fn root() { A::go(); }\n",
+        )]);
+        let root = g.lookup("rust/src/a.rs", "root")[0];
+        assert_eq!(g.edges[root].len(), 1);
+        let a_go = g.edges[root][0];
+        assert_eq!(g.fns[a_go].owner.as_deref(), Some("A"));
+    }
+
+    #[test]
+    fn uncalled_path_still_creates_edge() {
+        // a function handed to a combinator stays in the graph
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "pub fn root(xs: &[u8]) { xs.iter().map(util::double); }\n\
+             pub mod util { pub fn double(_x: &u8) {} }\n",
+        )]);
+        let root = g.lookup("rust/src/a.rs", "root")[0];
+        assert_eq!(g.edges[root].len(), 1);
+    }
+
+    #[test]
+    fn scc_terminates_on_mutual_recursion() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "pub fn ping() { pong(); }\npub fn pong() { ping(); }\n\
+             pub fn solo() { solo(); }\n",
+        )]);
+        let comp = g.sccs();
+        let ping = g.lookup("rust/src/a.rs", "ping")[0];
+        let pong = g.lookup("rust/src/a.rs", "pong")[0];
+        let solo = g.lookup("rust/src/a.rs", "solo")[0];
+        assert_eq!(comp[ping], comp[pong]);
+        assert_ne!(comp[ping], comp[solo]);
+        let (seen, parent) = g.reach(&[ping]);
+        assert!(seen[pong]);
+        assert_eq!(g.chain(&parent, pong), ["ping", "pong"]);
+    }
+
+    #[test]
+    fn test_functions_are_excluded() {
+        let g = graph_of(&[(
+            "rust/src/a.rs",
+            "pub fn root() { helper(); }\nfn helper() {}\n\
+             #[cfg(test)]\nmod tests { fn helper() { panic!() } }\n",
+        )]);
+        assert_eq!(g.lookup("rust/src/a.rs", "helper").len(), 1);
+    }
+}

@@ -216,6 +216,117 @@ fn match_brace(code: &[u8], open: usize) -> usize {
     k
 }
 
+/// An `impl` block span with the name of the type it implements on
+/// (the self type — for `impl Trait for Foo` that is `Foo`).
+pub struct ImplSpan {
+    pub owner: String,
+    /// Body byte range, *inside* the braces (exclusive of both).
+    pub body: (usize, usize),
+}
+
+/// Every `impl ... { ... }` block in blanked code, with the self-type
+/// name (path-final segment, generics stripped). Used to attribute
+/// method ownership for call-graph resolution.
+pub fn impl_spans(code: &[u8]) -> Vec<ImplSpan> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = find_sub(code, b"impl", from) {
+        from = p + 1;
+        let bounded = (p == 0 || !is_word(code[p - 1]))
+            && p + 4 < n
+            && !is_word(code[p + 4]);
+        if !bounded {
+            continue;
+        }
+        // scan the header up to the body `{` at zero bracket depth,
+        // tracking the last ` for ` at zero angle/paren depth
+        let mut j = p + 4;
+        let mut depth = 0isize;
+        let mut for_at: Option<usize> = None;
+        while j < n {
+            match code[j] {
+                b'<' | b'(' | b'[' => depth += 1,
+                b'>' | b')' | b']' => depth -= 1,
+                b'{' if depth <= 0 => break,
+                b';' if depth <= 0 => break, // e.g. blanket decl — skip
+                b'f' if depth <= 0
+                    && code[j..].starts_with(b"for")
+                    && !is_word(code[j.saturating_sub(1)])
+                    && j + 3 < n
+                    && !is_word(code[j + 3]) =>
+                {
+                    for_at = Some(j + 3);
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= n || code[j] != b'{' {
+            continue;
+        }
+        let head_start = for_at.unwrap_or(p + 4);
+        let owner = self_type_name(&code[head_start..j]);
+        let Some(owner) = owner else { continue };
+        out.push(ImplSpan { owner, body: (j + 1, match_brace(code, j)) });
+    }
+    out
+}
+
+/// Final path segment of the first type path in an impl header slice
+/// (generic parameter group and leading `&`/`dyn` stripped):
+/// `<T: Bound> Foo<T> where ...` → `Foo`; `crate::a::Bar` → `Bar`.
+fn self_type_name(head: &[u8]) -> Option<String> {
+    let mut i = 0;
+    let n = head.len();
+    // skip whitespace and a leading generic-parameter group
+    while i < n && head[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i < n && head[i] == b'<' {
+        let mut depth = 0isize;
+        while i < n {
+            match head[i] {
+                b'<' => depth += 1,
+                b'>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    while i < n
+        && (head[i].is_ascii_whitespace() || head[i] == b'&' || head[i] == b'\'')
+    {
+        i += 1;
+    }
+    if head[i..].starts_with(b"dyn ") {
+        i += 4;
+    }
+    // read the type path: segments of word chars joined by `::`, with
+    // the last segment winning; stop at generics or whitespace
+    let mut last_start = i;
+    let mut j = i;
+    while j < n {
+        if is_word(head[j]) {
+            j += 1;
+        } else if head[j] == b':' && j + 1 < n && head[j + 1] == b':' {
+            j += 2;
+            last_start = j;
+        } else {
+            break;
+        }
+    }
+    (j > last_start).then(|| {
+        String::from_utf8_lossy(&head[last_start..j]).into_owned()
+    })
+}
+
 /// Byte spans `(start, end)` covered by `#[cfg(test)]` items.
 pub fn test_spans(code: &[u8]) -> Vec<(usize, usize)> {
     let mut spans = Vec::new();

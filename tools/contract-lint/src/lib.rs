@@ -1,20 +1,34 @@
 //! contract-lint: machine-checks the standing contracts the ROADMAP
-//! promises, straight from source. Five rules:
+//! promises, straight from source — since PR 9 as a real static
+//! analyzer: a crate-wide call graph (`callgraph.rs`) feeds
+//! interprocedural reachability passes, so a hot path that calls a
+//! helper which allocates, panics or reads the wall clock is caught
+//! with the full blame chain. Seven rules:
 //!
 //! 1. **ledger** — every `conserved()` impl (auto-discovered) and every
 //!    manifest report-merge/CSV site mentions all six ledger terms
 //!    `completed + dropped + lost_to_failure + shed + cancelled +
-//!    residual`. A new ledger term added without touching every site is
-//!    exactly the drift this catches.
-//! 2. **hot-alloc** — functions in the `hot_paths` manifest (the
-//!    per-event serving path) contain no allocating calls.
-//! 3. **registry** — `Scenario` registry closure: `names()` ⇔
-//!    `by_name`/`at_nodes` arms, every scenario exercised by a
-//!    conservation test (literal or whole-registry iteration), every
-//!    name asserted by the CI `--list-scenarios` gate.
-//! 4. **determinism** — no wall-clock/entropy/hash-iteration sources
-//!    outside a per-file allowlist with documented rationale.
-//! 5. **unwrap** — `unwrap`/`expect`/`panic!` in non-test library code
+//!    residual`.
+//! 2. **hot-alloc** — no allocating call anywhere *reachable* from a
+//!    hot-path root. Roots are auto-discovered (every non-test
+//!    `fn *_into`, which includes each `Policy::decide_into` impl) plus
+//!    the manifest's non-`_into` exceptions; redundant manifest entries
+//!    are drift findings. Each finding carries the blame chain
+//!    (`step_into → route → rebuild_weights: .collect() at line N`).
+//! 3. **hot-panic** — `unwrap`/`expect`/`panic!` reachable from a
+//!    hot-path root. Stricter than rule 5: an `// invariant:`
+//!    annotation only downgrades to a surfaced *note* (chain still in
+//!    the report); only `allow(hot-panic)` suppresses.
+//! 4. **registry** — `Scenario` registry closure: `names()` ⇔
+//!    `by_name`/`at_nodes` arms, conservation-test coverage, CI
+//!    `--list-scenarios` asserts.
+//! 5. **determinism** — no wall-clock/entropy/hash-iteration sources
+//!    outside a per-FUNCTION allowlist with documented rationale.
+//! 6. **det-taint** — nondeterminism sources propagate along call
+//!    edges; a result-bearing sink (`conserved()` impls, report
+//!    merges, CSV writers) reaching one is a finding unless the source
+//!    carries a `taint_allow` rationale.
+//! 7. **unwrap** — `unwrap`/`expect`/`panic!` in non-test library code
 //!    requires an adjacent `// invariant:` annotation saying *why* it
 //!    cannot fire.
 //!
@@ -23,15 +37,17 @@
 //! manifest entry whose file or function no longer exists fails the
 //! lint rather than silently guarding nothing.
 
+pub mod callgraph;
 pub mod lexer;
 pub mod manifest;
 pub mod rules;
 
+pub use callgraph::CallGraph;
 pub use manifest::Manifest;
 
 use std::path::Path;
 
-/// One contract violation (or stale-manifest complaint).
+/// One contract violation, stale-manifest complaint, or surfaced note.
 pub struct Finding {
     pub rule: &'static str,
     /// Repo-relative path with `/` separators.
@@ -39,38 +55,210 @@ pub struct Finding {
     /// 1-based line, or 0 for whole-file findings.
     pub line: usize,
     pub msg: String,
+    /// Blame chain of function names, hot-path root (or taint sink)
+    /// first; empty for intraprocedural findings.
+    pub chain: Vec<String>,
+    /// Notes are surfaced in the report and the JSON artifact but do
+    /// not fail the lint (invariant-annotated hot-panic sites).
+    pub note: bool,
+}
+
+impl Finding {
+    /// An intraprocedural error finding (no chain).
+    pub fn err(
+        rule: &'static str,
+        path: String,
+        line: usize,
+        msg: String,
+    ) -> Finding {
+        Finding { rule, path, line, msg, chain: Vec::new(), note: false }
+    }
 }
 
 impl std::fmt::Display for Finding {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "[{}] {}:{}: {}", self.rule, self.path, self.line, self.msg)
+        let tag = if self.note { ":note" } else { "" };
+        write!(
+            f,
+            "[{}{tag}] {}:{}: {}",
+            self.rule, self.path, self.line, self.msg
+        )
+    }
+}
+
+/// Call-graph shape counters, reported so a resolution regression (a
+/// rename silently emptying the graph) is visible in the artifact.
+pub struct Stats {
+    pub files: usize,
+    pub functions: usize,
+    pub edges: usize,
+    /// Call sites whose name has no crate definition (external).
+    pub unresolved: usize,
+    /// Bare `.method(` sites skipped via the std-name list.
+    pub std_skipped: usize,
+    /// Hot-path roots (auto-discovered + manifest).
+    pub roots: usize,
+    /// Strongly-connected components of the call graph.
+    pub sccs: usize,
+}
+
+/// The full result of one lint run: findings (errors and notes) plus
+/// graph statistics.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub stats: Stats,
+}
+
+impl Analysis {
+    /// Findings that fail the lint (everything but notes).
+    pub fn errors(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.note)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.errors().count()
     }
 }
 
 /// Lint the tree rooted at `root` (the repo checkout) against `m`.
 /// Findings come back in rule order, deterministically sorted within a
 /// rule by the walk order.
-pub fn lint_tree(root: &Path, m: &Manifest) -> Vec<Finding> {
+pub fn lint_tree(root: &Path, m: &Manifest) -> Analysis {
+    let sources: Vec<(String, String)> = rules::src_files(root)
+        .into_iter()
+        .filter_map(|rel| rules::load(root, &rel).map(|s| (rel, s)))
+        .collect();
+    let g = CallGraph::build(sources);
     let mut findings = Vec::new();
     rules::rule_ledger(root, m, &mut findings);
-    rules::rule_hot_alloc(root, m, &mut findings);
+    let hot = rules::hot_set(&g, m, &mut findings);
+    rules::rule_hot_alloc(&g, &hot, m, &mut findings);
+    rules::rule_hot_panic(&g, &hot, m, &mut findings);
     rules::rule_registry(root, m, &mut findings);
-    rules::rule_determinism(root, m, &mut findings);
+    rules::rule_determinism(&g, m, &mut findings);
+    rules::rule_det_taint(&g, m, &mut findings);
     rules::rule_unwrap(root, m, &mut findings);
-    findings
+    let sccs = {
+        let comp = g.sccs();
+        comp.iter().copied().max().map_or(0, |m| m + 1)
+    };
+    let stats = Stats {
+        files: g.files.len(),
+        functions: g.fns.len(),
+        edges: g.edges.iter().map(Vec::len).sum(),
+        unresolved: g.unresolved,
+        std_skipped: g.std_skipped,
+        roots: hot.roots.len(),
+        sccs,
+    };
+    Analysis { findings, stats }
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Machine-readable findings: the CI artifact format (`--format json`).
+pub fn to_json(a: &Analysis) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"version\": 1,\n  \"stats\": {");
+    let s = &a.stats;
+    out.push_str(&format!(
+        "\"files\": {}, \"functions\": {}, \"edges\": {}, \
+         \"unresolved_calls\": {}, \"std_method_skipped\": {}, \
+         \"hot_roots\": {}, \"sccs\": {}",
+        s.files, s.functions, s.edges, s.unresolved, s.std_skipped, s.roots,
+        s.sccs
+    ));
+    out.push_str("},\n  \"findings\": [");
+    for (i, f) in a.findings.iter().enumerate() {
+        out.push_str(if i == 0 { "\n" } else { ",\n" });
+        out.push_str("    {\"rule\": ");
+        json_escape(f.rule, &mut out);
+        out.push_str(", \"path\": ");
+        json_escape(&f.path, &mut out);
+        out.push_str(&format!(", \"line\": {}, \"note\": {}", f.line, f.note));
+        out.push_str(", \"chain\": [");
+        for (j, c) in f.chain.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            json_escape(c, &mut out);
+        }
+        out.push_str("], \"msg\": ");
+        json_escape(&f.msg, &mut out);
+        out.push('}');
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Output shaping for [`run`].
+#[derive(Clone, Copy, Default)]
+pub struct Options {
+    /// Emit the JSON artifact to stdout instead of human text.
+    pub json: bool,
+    /// Additionally emit GitHub Actions workflow-command annotations
+    /// (`::error file=...`) so findings land on the PR diff.
+    pub github: bool,
 }
 
 /// Bin/CLI entry: lint, print findings, return the process exit code.
-pub fn run(root: &Path, m: &Manifest) -> i32 {
-    let findings = lint_tree(root, m);
-    for f in &findings {
-        println!("{f}");
+/// Notes are printed (and annotated as `notice`) but only error-level
+/// findings fail the run.
+pub fn run(root: &Path, m: &Manifest, opts: Options) -> i32 {
+    let a = lint_tree(root, m);
+    if opts.json {
+        print!("{}", to_json(&a));
+    } else {
+        for f in &a.findings {
+            println!("{f}");
+        }
     }
-    if findings.is_empty() {
-        println!("contract-lint: clean ({} rules)", 5);
+    if opts.github {
+        for f in &a.findings {
+            let level = if f.note { "notice" } else { "error" };
+            // workflow-command data: escape %, CR, LF per the runner
+            let msg = f
+                .msg
+                .replace('%', "%25")
+                .replace('\r', "%0D")
+                .replace('\n', "%0A");
+            println!(
+                "::{level} file={},line={},title=contract-lint({})::{msg}",
+                f.path,
+                f.line.max(1),
+                f.rule
+            );
+        }
+    }
+    let errors = a.error_count();
+    if errors == 0 {
+        if !opts.json {
+            let notes = a.findings.len();
+            if notes > 0 {
+                println!("contract-lint: clean ({notes} note(s) surfaced)");
+            } else {
+                println!("contract-lint: clean");
+            }
+        }
         0
     } else {
-        eprintln!("contract-lint: {} finding(s)", findings.len());
+        eprintln!("contract-lint: {errors} finding(s)");
         1
     }
 }

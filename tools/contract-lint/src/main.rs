@@ -1,23 +1,42 @@
-//! `cargo run -p contract-lint [-- --root <path>]`
+//! `cargo run -p contract-lint [-- --root <path>] [--format json] [--github]`
 //!
 //! Lints the repo checkout against the standing-contract manifest and
-//! exits non-zero on any finding (the tier-1 CI `lint` job's gate).
-//! `--root` defaults to the workspace root (two levels up from this
-//! crate when run via cargo, else the current directory).
+//! exits non-zero on any error-level finding (the tier-1 CI `lint`
+//! job's gate). `--root` defaults to the workspace root (two levels up
+//! from this crate when run via cargo, else the current directory).
+//! `--format json` emits the machine-readable findings artifact;
+//! `--github` adds GitHub Actions annotations on top of either format.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use contract_lint::{run, Manifest};
+use contract_lint::{run, Manifest, Options};
 
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
+    let mut opts = Options::default();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--root" => root = args.next().map(PathBuf::from),
+            "--format" => match args.next().as_deref() {
+                Some("json") => opts.json = true,
+                Some("text") => opts.json = false,
+                other => {
+                    eprintln!(
+                        "contract-lint: unknown format {:?} (json|text)",
+                        other.unwrap_or("")
+                    );
+                    return ExitCode::from(2);
+                }
+            },
+            "--json" => opts.json = true,
+            "--github" => opts.github = true,
             "--help" | "-h" => {
-                println!("usage: contract-lint [--root <repo-root>]");
+                println!(
+                    "usage: contract-lint [--root <repo-root>] \
+                     [--format json|text] [--github]"
+                );
                 return ExitCode::SUCCESS;
             }
             other => {
@@ -35,7 +54,9 @@ fn main() -> ExitCode {
         );
         return ExitCode::from(2);
     }
-    ExitCode::from(u8::try_from(run(&root, &Manifest::repo())).unwrap_or(1))
+    ExitCode::from(
+        u8::try_from(run(&root, &Manifest::repo(), opts)).unwrap_or(1),
+    )
 }
 
 /// When run through cargo, the crate dir is `tools/contract-lint`; the

@@ -1,28 +1,36 @@
-//! The five contract rules. Each takes the tree root, the manifest and
-//! the shared findings sink. Scanning conventions:
+//! The contract rules. Each takes the tree root (or the prebuilt call
+//! graph), the manifest and the shared findings sink. Scanning
+//! conventions:
 //!
 //! * the **ledger** rule searches ORIGINAL source (CSV header strings
 //!   must count as mentions);
-//! * **hot-alloc**, **determinism** and **unwrap** search blanked code
-//!   (a banned token inside a comment or string is not a violation);
-//! * `#[cfg(test)]` spans are exempt from determinism and unwrap;
+//! * **hot-alloc**, **hot-panic**, **determinism**, **det-taint** and
+//!   **unwrap** search blanked code (a banned token inside a comment or
+//!   string is not a violation);
+//! * `#[cfg(test)]` spans are exempt from every interprocedural and
+//!   token pass;
 //! * `// contract-lint: allow(<rule>)` on the finding line or the line
 //!   above suppresses a finding.
+//!
+//! The interprocedural passes (hot-alloc, hot-panic, det-taint) run
+//! over the [`CallGraph`] built once per lint; blame chains come from
+//! its BFS parent tree.
 
 use std::collections::BTreeSet;
 use std::path::Path;
 
+use crate::callgraph::CallGraph;
 use crate::lexer::{blank, functions, in_spans, line_of, test_spans};
 use crate::manifest::Manifest;
 use crate::Finding;
 
-fn load(root: &Path, rel: &str) -> Option<String> {
+pub(crate) fn load(root: &Path, rel: &str) -> Option<String> {
     std::fs::read_to_string(root.join(rel)).ok()
 }
 
 /// Every `.rs` under `rust/src`, repo-relative with `/` separators,
 /// in deterministic (sorted, depth-first) order.
-fn src_files(root: &Path) -> Vec<String> {
+pub(crate) fn src_files(root: &Path) -> Vec<String> {
     let mut out = Vec::new();
     walk(root, "rust/src", &mut out);
     out
@@ -73,12 +81,57 @@ fn has_word(hay: &[u8], word: &[u8]) -> bool {
     })
 }
 
+/// `(pos, token)` hits of any of `toks` in `hay`: word-boundary aware
+/// (only where the token edge is itself a word byte) and overlap-deduped
+/// — at one position the longest token wins, and a hit starting inside
+/// an earlier kept hit is dropped (`Arc::new` beats its `Rc::new`
+/// suffix; `String::with_capacity` beats the bare `with_capacity(`).
+pub(crate) fn token_hits<'a>(
+    hay: &[u8],
+    toks: &[&'a str],
+) -> Vec<(usize, &'a str)> {
+    let mut hits: Vec<(usize, &str)> = Vec::new();
+    for &tok in toks {
+        let tb = tok.as_bytes();
+        for p in occurrences(hay, tb) {
+            let left_ok =
+                !is_word(tb[0]) || p == 0 || !is_word(hay[p - 1]);
+            let q = p + tb.len();
+            let right_ok = !is_word(tb[tb.len() - 1])
+                || q >= hay.len()
+                || !is_word(hay[q]);
+            if left_ok && right_ok {
+                hits.push((p, tok));
+            }
+        }
+    }
+    hits.sort_by_key(|&(p, t)| (p, std::cmp::Reverse(t.len())));
+    let mut kept: Vec<(usize, &str)> = Vec::new();
+    for (p, t) in hits {
+        let clear = match kept.last() {
+            Some(&(kp, kt)) => p >= kp + kt.len(),
+            None => true,
+        };
+        if clear {
+            kept.push((p, t));
+        }
+    }
+    kept
+}
+
 /// Suppression comment on the finding line or the line above.
 fn allowed(lines: &[&str], lineno: usize, rule: &str) -> bool {
     let tag = format!("contract-lint: allow({rule})");
-    [lineno, lineno.wrapping_sub(1)].iter().any(|&ln| {
-        ln >= 1 && ln <= lines.len() && lines[ln - 1].contains(&tag)
-    })
+    [lineno, lineno.wrapping_sub(1)]
+        .iter()
+        .any(|&ln| ln >= 1 && ln <= lines.len() && lines[ln - 1].contains(&tag))
+}
+
+/// Split a file into lines of the ORIGINAL text (for allow-comment and
+/// invariant-annotation checks; comments are blanked out of `code`).
+fn src_lines(src: &[u8]) -> Vec<&str> {
+    // invariant: rules only load files read as String, so src is UTF-8
+    std::str::from_utf8(src).unwrap().split('\n').collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -108,12 +161,12 @@ pub fn rule_ledger(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
             continue;
         }
         let Some(src) = load(root, &rel) else {
-            findings.push(Finding {
-                rule: "ledger",
-                path: rel,
-                line: 0,
-                msg: format!("manifest site {fname} missing: file not found"),
-            });
+            findings.push(Finding::err(
+                "ledger",
+                rel,
+                0,
+                format!("manifest site {fname} missing: file not found"),
+            ));
             continue;
         };
         let bytes = src.as_bytes();
@@ -121,26 +174,24 @@ pub fn rule_ledger(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
         let fns: Vec<_> =
             functions(&code).into_iter().filter(|f| f.name == fname).collect();
         if fns.is_empty() {
-            findings.push(Finding {
-                rule: "ledger",
-                path: rel,
-                line: 0,
-                msg: format!(
-                    "manifest site fn {fname} not found (stale manifest?)"
-                ),
-            });
+            findings.push(Finding::err(
+                "ledger",
+                rel,
+                0,
+                format!("manifest site fn {fname} not found (stale manifest?)"),
+            ));
             continue;
         }
         for f in fns {
             let body = &bytes[f.body.0..f.body.1]; // ORIGINAL text
             for term in &m.ledger_terms {
                 if !has_word(body, term.as_bytes()) {
-                    findings.push(Finding {
-                        rule: "ledger",
-                        path: rel.clone(),
-                        line: line_of(bytes, f.header),
-                        msg: format!("fn {fname} misses ledger term `{term}`"),
-                    });
+                    findings.push(Finding::err(
+                        "ledger",
+                        rel.clone(),
+                        line_of(bytes, f.header),
+                        format!("fn {fname} misses ledger term `{term}`"),
+                    ));
                 }
             }
         }
@@ -148,63 +199,214 @@ pub fn rule_ledger(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
 }
 
 // ---------------------------------------------------------------------------
-// rule 2: hot-path allocation ban
+// hot-path roots: auto-discovery + manifest exceptions + drift check
 // ---------------------------------------------------------------------------
 
-pub fn rule_hot_alloc(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
-    // group by file, preserving manifest order
-    let mut files: Vec<&str> = Vec::new();
-    for &(rel, _) in &m.hot_paths {
-        if !files.contains(&rel) {
-            files.push(rel);
+/// The hot-path root set and its reachability closure, shared by the
+/// hot-alloc and hot-panic passes.
+pub struct HotSet {
+    pub roots: Vec<usize>,
+    pub seen: Vec<bool>,
+    pub parent: Vec<usize>,
+}
+
+/// Roots = every non-test `fn *_into` (minus `hot_exempt`) plus the
+/// manifest's non-`_into` exceptions. Traversal stops at the
+/// `hot_stop` allocation-domain boundary (the boundary wins over root
+/// discovery). Emits stale/drift findings: a manifest entry that no
+/// longer exists, an exempt entry that no longer exists, and a
+/// manifest entry auto-discovery would find anyway (the hand list must
+/// shrink, not shadow the automation).
+pub fn hot_set(
+    g: &CallGraph,
+    m: &Manifest,
+    findings: &mut Vec<Finding>,
+) -> HotSet {
+    let stop: Vec<bool> = g
+        .fns
+        .iter()
+        .map(|f| m.hot_stopped(&g.files[f.file], &f.name))
+        .collect();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, f) in g.fns.iter().enumerate() {
+        if f.in_test || stop[i] || !f.name.ends_with("_into") {
+            continue;
+        }
+        let rel = g.files[f.file].as_str();
+        if m.hot_exempt.iter().any(|&(er, en)| er == rel && en == f.name) {
+            continue;
+        }
+        roots.push(i);
+    }
+    for &(rel, fname) in &m.hot_stop {
+        let present = if fname == "*" {
+            g.files.iter().any(|f| f == rel)
+        } else {
+            !g.lookup(rel, fname).is_empty()
+        };
+        if !present {
+            findings.push(Finding::err(
+                "hot-alloc",
+                rel.to_string(),
+                0,
+                format!("hot_stop entry {fname} not found (stale manifest?)"),
+            ));
         }
     }
-    for rel in files {
-        let Some(src) = load(root, rel) else {
+    for &(rel, fname) in &m.hot_exempt {
+        if g.lookup(rel, fname).is_empty() {
+            findings.push(Finding::err(
+                "hot-alloc",
+                rel.to_string(),
+                0,
+                format!("hot_exempt fn {fname} not found (stale manifest?)"),
+            ));
+        } else if !fname.ends_with("_into") {
+            findings.push(Finding::err(
+                "hot-alloc",
+                rel.to_string(),
+                0,
+                format!(
+                    "hot_exempt fn {fname} is not an auto-discovered \
+                     `*_into` root — drop the entry"
+                ),
+            ));
+        }
+    }
+    for &(rel, fname) in &m.hot_paths {
+        let found = g.lookup(rel, fname);
+        if found.is_empty() {
+            findings.push(Finding::err(
+                "hot-alloc",
+                rel.to_string(),
+                0,
+                format!("HOT_PATHS fn {fname} not found (stale manifest?)"),
+            ));
+            continue;
+        }
+        if fname.ends_with("_into") {
+            findings.push(Finding::err(
+                "hot-alloc",
+                rel.to_string(),
+                0,
+                format!(
+                    "HOT_PATHS fn {fname} is redundant: `*_into` roots \
+                     are auto-discovered (manifest drift)"
+                ),
+            ));
+        }
+        roots.extend(found);
+    }
+    roots.sort_unstable();
+    roots.dedup();
+    let (seen, parent) = g.reach_stopped(&roots, &stop);
+    HotSet { roots, seen, parent }
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: transitive hot-path allocation ban
+// ---------------------------------------------------------------------------
+
+pub fn rule_hot_alloc(
+    g: &CallGraph,
+    hot: &HotSet,
+    m: &Manifest,
+    findings: &mut Vec<Finding>,
+) {
+    let toks: Vec<&str> = m.banned_alloc.to_vec();
+    for (i, f) in g.fns.iter().enumerate() {
+        if !hot.seen[i] || f.in_test {
+            continue;
+        }
+        let bytes = &g.srcs[f.file];
+        let code = &g.codes[f.file];
+        let lines = src_lines(bytes);
+        let body = &code[f.body.0..f.body.1];
+        let chain = g.chain(&hot.parent, i);
+        for (p, tok) in token_hits(body, &toks) {
+            let ln = line_of(bytes, f.body.0 + p);
+            if allowed(&lines, ln, "hot-alloc") {
+                continue;
+            }
             findings.push(Finding {
                 rule: "hot-alloc",
-                path: rel.to_string(),
-                line: 0,
-                msg: "manifest file not found".to_string(),
+                path: g.files[f.file].clone(),
+                line: ln,
+                msg: format!(
+                    "{}: `{tok}` at line {ln} (allocation reachable from \
+                     a hot-path root)",
+                    chain.join(" → "),
+                ),
+                chain: chain.clone(),
+                note: false,
             });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: panic reachability from hot-path roots (hot-panic)
+// ---------------------------------------------------------------------------
+
+const UNWRAP_TOKS: [&str; 5] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "unwrap_unchecked",
+];
+
+/// `// invariant:` annotation on the token line or within the five
+/// lines above (same window as the crate-wide unwrap rule).
+fn invariant_annotated(lines: &[&str], ln: usize) -> bool {
+    (ln.saturating_sub(5).max(1)..=ln)
+        .any(|c| c <= lines.len() && lines[c - 1].contains("invariant:"))
+}
+
+/// Stricter than the crate-wide `unwrap` rule for code reachable from a
+/// hot-path root: an `// invariant:` annotation only *downgrades* the
+/// finding to a surfaced note (the blame chain still lands in the
+/// report and the JSON artifact); only an explicit
+/// `// contract-lint: allow(hot-panic)` suppresses it.
+pub fn rule_hot_panic(
+    g: &CallGraph,
+    hot: &HotSet,
+    _m: &Manifest,
+    findings: &mut Vec<Finding>,
+) {
+    for (i, f) in g.fns.iter().enumerate() {
+        if !hot.seen[i] || f.in_test {
             continue;
-        };
-        let bytes = src.as_bytes();
-        let lines: Vec<&str> = src.split('\n').collect();
-        let code = blank(bytes).code;
-        let fns = functions(&code);
-        for &(frel, fname) in m.hot_paths.iter().filter(|&&(f, _)| f == rel) {
-            let matches: Vec<_> =
-                fns.iter().filter(|f| f.name == fname).collect();
-            if matches.is_empty() {
-                findings.push(Finding {
-                    rule: "hot-alloc",
-                    path: frel.to_string(),
-                    line: 0,
-                    msg: format!(
-                        "HOT_PATHS fn {fname} not found (stale manifest?)"
-                    ),
-                });
+        }
+        let bytes = &g.srcs[f.file];
+        let code = &g.codes[f.file];
+        let lines = src_lines(bytes);
+        let body = &code[f.body.0..f.body.1];
+        let chain = g.chain(&hot.parent, i);
+        for (p, tok) in token_hits(body, &UNWRAP_TOKS) {
+            let ln = line_of(bytes, f.body.0 + p);
+            if allowed(&lines, ln, "hot-panic") {
+                continue;
             }
-            for f in matches {
-                let body = &code[f.body.0..f.body.1];
-                for tok in &m.banned_alloc {
-                    for p in occurrences(body, tok.as_bytes()) {
-                        let ln = line_of(bytes, f.body.0 + p);
-                        if allowed(&lines, ln, "hot-alloc") {
-                            continue;
-                        }
-                        findings.push(Finding {
-                            rule: "hot-alloc",
-                            path: frel.to_string(),
-                            line: ln,
-                            msg: format!(
-                                "allocating call `{tok}` in hot path fn {fname}"
-                            ),
-                        });
-                    }
-                }
-            }
+            let note = invariant_annotated(&lines, ln);
+            findings.push(Finding {
+                rule: "hot-panic",
+                path: g.files[f.file].clone(),
+                line: ln,
+                msg: format!(
+                    "{}: `{}` at line {ln} ({})",
+                    chain.join(" → "),
+                    tok.trim_matches('.'),
+                    if note {
+                        "invariant-annotated panic site on a hot path — \
+                         surfaced for review"
+                    } else {
+                        "panic site reachable from a hot-path root"
+                    },
+                ),
+                chain: chain.clone(),
+                note,
+            });
         }
     }
 }
@@ -271,12 +473,12 @@ fn ci_asserts(text: &[u8], name: &[u8]) -> bool {
 pub fn rule_registry(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
     let rel = m.registry_file;
     let Some(src) = load(root, rel) else {
-        findings.push(Finding {
-            rule: "registry",
-            path: rel.to_string(),
-            line: 0,
-            msg: "registry file not found".to_string(),
-        });
+        findings.push(Finding::err(
+            "registry",
+            rel.to_string(),
+            0,
+            "registry file not found".to_string(),
+        ));
         return;
     };
     let bytes = src.as_bytes();
@@ -285,34 +487,34 @@ pub fn rule_registry(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
     let names_fn = fns.iter().find(|f| f.name == "names");
     let at_nodes_fn = fns.iter().find(|f| f.name == "at_nodes");
     let (Some(nf), Some(af)) = (names_fn, at_nodes_fn) else {
-        findings.push(Finding {
-            rule: "registry",
-            path: rel.to_string(),
-            line: 0,
-            msg: "names()/at_nodes() not found".to_string(),
-        });
+        findings.push(Finding::err(
+            "registry",
+            rel.to_string(),
+            0,
+            "names()/at_nodes() not found".to_string(),
+        ));
         return;
     };
     let names = quoted_names(&bytes[nf.body.0..nf.body.1], false);
     let arms = quoted_names(&bytes[af.body.0..af.body.1], true);
     for n in &arms {
         if !names.contains(n) {
-            findings.push(Finding {
-                rule: "registry",
-                path: rel.to_string(),
-                line: 0,
-                msg: format!("by_name arm `{n}` missing from names()"),
-            });
+            findings.push(Finding::err(
+                "registry",
+                rel.to_string(),
+                0,
+                format!("by_name arm `{n}` missing from names()"),
+            ));
         }
     }
     for n in &names {
         if !arms.contains(n) {
-            findings.push(Finding {
-                rule: "registry",
-                path: rel.to_string(),
-                line: 0,
-                msg: format!("names() entry `{n}` has no by_name arm"),
-            });
+            findings.push(Finding::err(
+                "registry",
+                rel.to_string(),
+                0,
+                format!("names() entry `{n}` has no by_name arm"),
+            ));
         }
     }
     // conservation coverage: a literal "name" in any coverage test, or a
@@ -332,85 +534,223 @@ pub fn rule_registry(root: &Path, m: &Manifest, findings: &mut Vec<Finding>) {
     }
     for n in &names {
         if !cover_all && !covered.contains(n) {
-            findings.push(Finding {
-                rule: "registry",
-                path: rel.to_string(),
-                line: 0,
-                msg: format!(
+            findings.push(Finding::err(
+                "registry",
+                rel.to_string(),
+                0,
+                format!(
                     "scenario `{n}` not exercised by any conservation proptest"
                 ),
-            });
+            ));
         }
     }
     let Some(ci) = load(root, m.ci_file) else {
-        findings.push(Finding {
-            rule: "registry",
-            path: m.ci_file.to_string(),
-            line: 0,
-            msg: "ci.yml not found".to_string(),
-        });
+        findings.push(Finding::err(
+            "registry",
+            m.ci_file.to_string(),
+            0,
+            "ci.yml not found".to_string(),
+        ));
         return;
     };
     for n in &names {
         if !ci_asserts(ci.as_bytes(), n.as_bytes()) {
-            findings.push(Finding {
-                rule: "registry",
-                path: m.ci_file.to_string(),
-                line: 0,
-                msg: format!(
+            findings.push(Finding::err(
+                "registry",
+                m.ci_file.to_string(),
+                0,
+                format!(
                     "scenario `{n}` not asserted by the CI --list-scenarios gate"
                 ),
-            });
+            ));
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// rule 4: determinism ban
+// rule 4: determinism ban (function-granular)
 // ---------------------------------------------------------------------------
 
+/// Innermost function item whose span (header through body end)
+/// contains `pos`.
+fn enclosing_fn(g: &CallGraph, file: usize, pos: usize) -> Option<usize> {
+    g.fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| {
+            f.file == file && f.header <= pos && pos < f.body.1
+        })
+        .min_by_key(|(_, f)| f.body.1 - f.header)
+        .map(|(i, _)| i)
+}
+
 pub fn rule_determinism(
-    root: &Path,
+    g: &CallGraph,
     m: &Manifest,
     findings: &mut Vec<Finding>,
 ) {
-    for rel in src_files(root) {
-        let Some(src) = load(root, &rel) else { continue };
-        let bytes = src.as_bytes();
-        let lines: Vec<&str> = src.split('\n').collect();
-        let code = blank(bytes).code;
-        let spans = test_spans(&code);
-        let allow = m.det_allow_for(&rel);
-        let mut toks: Vec<&str> = Vec::new();
-        if !allow.time {
-            toks.extend(&m.det_time);
-        }
-        if !allow.hash {
-            toks.extend(&m.det_hash);
-        }
-        for tok in toks {
-            for p in occurrences(&code, tok.as_bytes()) {
-                // right word boundary (e.g. `HashMap` != `HashMapper`)
-                let q = p + tok.len();
-                if q < code.len() && is_word(code[q]) {
+    for (fi, rel) in g.files.iter().enumerate() {
+        let bytes = &g.srcs[fi];
+        let code = &g.codes[fi];
+        let lines = src_lines(bytes);
+        let spans = test_spans(code);
+        let file_allow = m.det_allow_file_scope(rel);
+        for (family_toks, is_time) in
+            [(&m.det_time, true), (&m.det_hash, false)]
+        {
+            let toks: Vec<&str> = family_toks.to_vec();
+            for (p, tok) in token_hits(code, &toks) {
+                if in_spans(p, &spans) {
                     continue;
                 }
-                if in_spans(p, &spans) {
+                let ok = match enclosing_fn(g, fi, p) {
+                    Some(f) => {
+                        let a = m.det_allow_for(rel, &g.fns[f].name);
+                        if is_time { a.time } else { a.hash }
+                    }
+                    // file scope (imports, struct fields): covered by
+                    // any same-family entry for this file
+                    None => {
+                        if is_time {
+                            file_allow.time
+                        } else {
+                            file_allow.hash
+                        }
+                    }
+                };
+                if ok {
                     continue;
                 }
                 let ln = line_of(bytes, p);
                 if allowed(&lines, ln, "determinism") {
                     continue;
                 }
-                findings.push(Finding {
-                    rule: "determinism",
-                    path: rel.clone(),
-                    line: ln,
-                    msg: format!(
-                        "nondeterminism source `{tok}` outside the allowlist"
+                findings.push(Finding::err(
+                    "determinism",
+                    rel.clone(),
+                    ln,
+                    format!(
+                        "nondeterminism source `{tok}` outside the \
+                         per-function allowlist"
                     ),
-                });
+                ));
             }
+        }
+    }
+    // stale per-function allowlist entries are findings
+    for &(rel, fname, _) in &m.det_allow {
+        if fname == "*" {
+            if !g.files.iter().any(|f| f == rel) {
+                findings.push(Finding::err(
+                    "determinism",
+                    rel.to_string(),
+                    0,
+                    "det_allow file not found (stale manifest?)".to_string(),
+                ));
+            }
+        } else if g.lookup(rel, fname).is_empty() {
+            findings.push(Finding::err(
+                "determinism",
+                rel.to_string(),
+                0,
+                format!("det_allow fn {fname} not found (stale manifest?)"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: determinism taint to result-bearing sinks (det-taint)
+// ---------------------------------------------------------------------------
+
+/// Sources: functions whose item span holds a wall-clock/entropy or
+/// hash token (allowlisted or not — the per-function allowlist mutes
+/// the *direct* rule, not the flow). Sinks: every `conserved()` impl
+/// plus the manifest report-merge/CSV sites. A sink that can reach a
+/// source is a finding unless the source carries a `taint_allow`
+/// rationale or the token line carries `allow(det-taint)`. One finding
+/// per source site, blamed from the first sink that reaches it.
+pub fn rule_det_taint(
+    g: &CallGraph,
+    m: &Manifest,
+    findings: &mut Vec<Finding>,
+) {
+    // collect tainted functions: (fn, token, line)
+    let mut tainted: Vec<(usize, &str, usize)> = Vec::new();
+    let all_toks: Vec<&str> = m
+        .det_time
+        .iter()
+        .chain(m.det_hash.iter())
+        .copied()
+        .collect();
+    for (i, f) in g.fns.iter().enumerate() {
+        if f.in_test {
+            continue;
+        }
+        let code = &g.codes[f.file];
+        let item = &code[f.header..f.body.1];
+        if let Some(&(p, tok)) = token_hits(item, &all_toks).first() {
+            let ln = line_of(&g.srcs[f.file], f.header + p);
+            tainted.push((i, tok, ln));
+        }
+    }
+    if tainted.is_empty() {
+        return;
+    }
+    // sinks: conserved() impls + ledger sites
+    let mut sinks: Vec<usize> = Vec::new();
+    for (i, f) in g.fns.iter().enumerate() {
+        if !f.in_test && f.name == "conserved" {
+            sinks.push(i);
+        }
+    }
+    for &(rel, fname) in &m.ledger_sites {
+        sinks.extend(g.lookup(rel, fname));
+    }
+    sinks.sort_unstable();
+    sinks.dedup();
+    let mut reported: BTreeSet<usize> = BTreeSet::new();
+    for &s in &sinks {
+        let (seen, parent) = g.reach(&[s]);
+        for &(t, tok, ln) in &tainted {
+            if t == s || !seen[t] || reported.contains(&t) {
+                continue;
+            }
+            let rel = g.files[g.fns[t].file].as_str();
+            if m.taint_allowed(rel, &g.fns[t].name) {
+                continue;
+            }
+            let lines = src_lines(&g.srcs[g.fns[t].file]);
+            if allowed(&lines, ln, "det-taint") {
+                continue;
+            }
+            reported.insert(t);
+            let chain = g.chain(&parent, t);
+            findings.push(Finding {
+                rule: "det-taint",
+                path: rel.to_string(),
+                line: ln,
+                msg: format!(
+                    "{}: result-bearing sink `{}` reaches nondeterminism \
+                     source `{}` (`{tok}` at line {ln})",
+                    chain.join(" → "),
+                    g.fns[s].name,
+                    g.fns[t].name,
+                ),
+                chain,
+                note: false,
+            });
+        }
+    }
+    // stale taint allowlist entries are findings
+    for &(rel, fname) in &m.taint_allow {
+        if g.lookup(rel, fname).is_empty() {
+            findings.push(Finding::err(
+                "det-taint",
+                rel.to_string(),
+                0,
+                format!("taint_allow fn {fname} not found (stale manifest?)"),
+            ));
         }
     }
 }
@@ -418,14 +758,6 @@ pub fn rule_determinism(
 // ---------------------------------------------------------------------------
 // rule 5: unwrap discipline
 // ---------------------------------------------------------------------------
-
-const UNWRAP_TOKS: [&str; 5] = [
-    ".unwrap()",
-    ".expect(",
-    "panic!(",
-    "unreachable!(",
-    "unwrap_unchecked",
-];
 
 pub fn rule_unwrap(root: &Path, _m: &Manifest, findings: &mut Vec<Finding>) {
     for rel in src_files(root) {
@@ -442,20 +774,20 @@ pub fn rule_unwrap(root: &Path, _m: &Manifest, findings: &mut Vec<Finding>) {
                 let ln = line_of(bytes, p);
                 // an `invariant:` annotation on the same line or within
                 // the five lines above justifies the panic site
-                let annotated = (ln.saturating_sub(5).max(1)..=ln)
-                    .any(|c| lines[c - 1].contains("invariant:"));
-                if annotated || allowed(&lines, ln, "unwrap") {
+                if invariant_annotated(&lines, ln)
+                    || allowed(&lines, ln, "unwrap")
+                {
                     continue;
                 }
-                findings.push(Finding {
-                    rule: "unwrap",
-                    path: rel.clone(),
-                    line: ln,
-                    msg: format!(
+                findings.push(Finding::err(
+                    "unwrap",
+                    rel.clone(),
+                    ln,
+                    format!(
                         "`{}` without an adjacent `// invariant:` annotation",
                         tok.trim_matches('.')
                     ),
-                });
+                ));
             }
         }
     }

@@ -1,0 +1,13 @@
+//! One seeded violation per allocation token added in PR 9 — pins the
+//! token list (word-boundary and longest-match handling included:
+//! `Arc::new` must not double-report as `Rc::new`, and
+//! `String::with_capacity` must report once, not also as bare
+//! `with_capacity(`).
+pub fn step_into(out: &mut [u64]) {
+    let a = std::sync::Arc::new(1u64);
+    let r = std::rc::Rc::new(2u64);
+    let v = Vec::from([3u64]);
+    let s = String::with_capacity(8);
+    let c = Clone::clone(&4u64);
+    out[0] = *a + *r + v[0] + s.len() as u64 + c;
+}

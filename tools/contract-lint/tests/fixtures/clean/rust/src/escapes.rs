@@ -15,6 +15,11 @@ impl Cache {
         // invariant: callers guarantee v is non-empty
         *v.first().unwrap()
     }
+
+    pub fn tail(v: &[u64]) -> u64 {
+        // contract-lint: allow(hot-panic) — invariant: v is non-empty
+        *v.last().unwrap()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,14 @@
+//! Panic sites reachable from a hot root: one bare (an error), one
+//! carrying an annotation (surfaced as a note with its chain).
+pub fn step_into(out: &mut [u64]) {
+    out[0] = checked(out[0]) + raw(out[0]);
+}
+
+fn raw(v: u64) -> u64 {
+    v.checked_mul(2).unwrap()
+}
+
+fn checked(v: u64) -> u64 {
+    // invariant: v stays below the fixture cap, so the add cannot wrap
+    v.checked_add(1).unwrap()
+}

@@ -1,0 +1,20 @@
+//! Allocation inside a call cycle reachable from a hot root: the walk
+//! must terminate (SCC condensation) and still blame the cycle member.
+pub fn step_into(out: &mut [u64]) {
+    out[0] = ping(out[0]);
+}
+
+fn ping(v: u64) -> u64 {
+    if v == 0 {
+        return pong(v);
+    }
+    ping(v - 1)
+}
+
+fn pong(v: u64) -> u64 {
+    let stash: Vec<u64> = Vec::new();
+    if v > 1 {
+        return ping(v);
+    }
+    stash.len() as u64
+}

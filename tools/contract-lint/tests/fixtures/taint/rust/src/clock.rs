@@ -1,0 +1,12 @@
+//! Two wall-clock sources, both on the per-function determinism
+//! allowlist. `stamp` has no taint rationale (the sink chain must
+//! flag it); `stamp_ok` carries a `taint_allow` entry (silent).
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    Instant::now().elapsed().as_secs_f64()
+}
+
+pub fn stamp_ok() -> f64 {
+    Instant::now().elapsed().as_secs_f64()
+}

@@ -1,0 +1,26 @@
+//! Result-bearing sink: a `conserved()` impl whose helper reaches the
+//! clock sources in `clock.rs`.
+pub struct Tally {
+    pub completed: u64,
+    pub dropped: u64,
+    pub lost_to_failure: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub residual: u64,
+}
+
+impl Tally {
+    pub fn conserved(&self) -> bool {
+        let total = self.completed
+            + self.dropped
+            + self.lost_to_failure
+            + self.shed
+            + self.cancelled
+            + self.residual;
+        total == self.probe()
+    }
+
+    fn probe(&self) -> u64 {
+        stamp() as u64 + stamp_ok() as u64
+    }
+}

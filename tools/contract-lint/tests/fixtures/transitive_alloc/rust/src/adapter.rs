@@ -1,0 +1,8 @@
+//! Device-adapter stand-in: allocates by design. Behind the
+//! `hot_stop` allocation-domain boundary in the fixture manifest, so
+//! the hot-alloc pass must not enter it — and must flag it the moment
+//! the boundary entry is dropped.
+pub fn upload(out: &mut [u64]) {
+    let staged = out.to_vec();
+    out[0] = staged.len() as u64;
+}

@@ -1,0 +1,5 @@
+//! Hot-path root: auto-discovered via the `*_into` naming contract.
+//! Allocates nothing itself — the violation is two calls away.
+pub fn step_into(out: &mut [u64]) {
+    route(out);
+}

@@ -1,0 +1,13 @@
+//! Mid-chain file: `route` is clean, its helper allocates, and it also
+//! crosses into the adapter behind the allocation-domain boundary.
+pub fn route(out: &mut [u64]) {
+    rebuild_weights(out);
+    upload(out);
+}
+
+fn rebuild_weights(out: &mut [u64]) {
+    let w: Vec<u64> = out.iter().copied().collect();
+    if let Some(v) = w.first() {
+        out[0] = *v;
+    }
+}
