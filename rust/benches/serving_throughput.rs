@@ -19,12 +19,15 @@
 //! than the failure-oblivious shortest-queue under `node-churn`.
 //! `--openloop` runs the open-loop SLO experiment (admission on/off
 //! across every `openloop-*` scenario) into `results/slo_comparison.csv`
-//! and asserts the admission headline.
+//! and asserts the admission headline. `--trace [FILE]` runs the flight
+//! recorder over `openloop-poisson` and writes schema-validated Chrome
+//! trace JSON (same artifacts as `repro trace`).
 
 use edgevision::scenario::Scenario;
 use edgevision::serving::{
     assert_admission_headline, comparison_to_csv, completed_of,
-    openloop_to_csv, run_profile_serving, ServingOptions,
+    openloop_to_csv, run_profile_serving, serve_scenario_traced,
+    ServingOptions,
 };
 use edgevision::util::bench::BenchReport;
 use edgevision::util::json::Json;
@@ -51,6 +54,13 @@ fn main() -> anyhow::Result<()> {
     }
     if args.iter().any(|a| a == "--openloop") {
         return openloop_experiment();
+    }
+    if let Some(i) = args.iter().position(|a| a == "--trace") {
+        let out = match args.get(i + 1) {
+            Some(p) if !p.starts_with("--") => p.clone(),
+            _ => "results/trace.json".to_string(),
+        };
+        return trace_run(&out);
     }
 
     let mut rep = BenchReport::new("serving");
@@ -94,6 +104,26 @@ fn main() -> anyhow::Result<()> {
     unbatched.scenario.max_batch = 1;
     rep.bench("serving_engine::paper (max_batch=1)", 2, 30, || {
         run_profile_serving(&unbatched).unwrap();
+    });
+
+    // flight-recorder overhead: the same paper run with a preallocated
+    // ring attached — the contrast against scenario=paper above is the
+    // per-event recording cost (expected within noise: pure index writes)
+    rep.bench("serving_engine::paper (traced ring)", 1, 20, || {
+        let mut policy = edgevision::baselines::by_name(
+            "shortest_queue_min",
+            opts.scenario.n_nodes,
+            0,
+        )
+        .unwrap();
+        serve_scenario_traced(
+            policy.as_mut(),
+            &opts.scenario,
+            opts.duration_virtual_secs,
+            opts.seed,
+            edgevision::telemetry::DEFAULT_RING_CAP,
+        )
+        .unwrap();
     });
 
     #[cfg(feature = "pjrt")]
@@ -188,6 +218,43 @@ fn openloop_experiment() -> anyhow::Result<()> {
          no-admission {off:.3} under openloop-poisson"
     );
     println!("wrote results/slo_comparison.csv");
+    Ok(())
+}
+
+/// The dep-free flight-recorder run: one traced `openloop-poisson`
+/// serve, Chrome-trace JSON + derived summary written and
+/// schema-validated — the same artifacts `repro trace` emits, reachable
+/// from the bench binary CI already drives.
+fn trace_run(out: &str) -> anyhow::Result<()> {
+    use edgevision::telemetry::{
+        validate_chrome_trace, write_chrome_trace, write_summary,
+        ShardTrace, DEFAULT_RING_CAP,
+    };
+
+    let scenario = Scenario::by_name("openloop-poisson")?;
+    let mut policy = edgevision::baselines::by_name(
+        "shortest_queue_min",
+        scenario.n_nodes,
+        0,
+    )?;
+    let (report, ring) = serve_scenario_traced(
+        policy.as_mut(),
+        &scenario,
+        20.0,
+        0,
+        DEFAULT_RING_CAP,
+    )?;
+    anyhow::ensure!(report.conserved(), "traced run leaked requests");
+    let traces = vec![ShardTrace {
+        shard: 0,
+        n_nodes: scenario.n_nodes,
+        ring,
+    }];
+    write_chrome_trace(out, &traces)?;
+    let events = validate_chrome_trace(&std::fs::read_to_string(out)?)?;
+    let summary = std::path::Path::new(out).with_extension("summary.json");
+    write_summary(&summary, &traces, None)?;
+    println!("wrote {out} ({events} events) and {}", summary.display());
     Ok(())
 }
 

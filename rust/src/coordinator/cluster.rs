@@ -85,9 +85,12 @@ use crate::env::bandwidth::Bandwidth;
 use crate::env::profiles::{Profiles, N_MODELS, N_RES};
 use crate::env::workload::Workload;
 use crate::env::Action;
-use crate::ingest::{ArrivalGen, Intake};
+use crate::ingest::{AdmitOutcome, ArrivalGen, Intake};
 use crate::policy::{DecisionCache, Policy, PolicyView};
 use crate::scenario::{FaultKind, Scenario};
+use crate::telemetry::trace::{
+    TraceKind, TraceRecord, TraceRing, TraceSink, NO_BATCH,
+};
 
 /// Marginal cost of each additional frame in a profile-table batch,
 /// relative to the single-frame inference delay: a batch of `k` takes
@@ -352,6 +355,11 @@ pub struct EdgeCluster {
     /// Cross-shard widening of the policy view + outbound dispatch
     /// collection; `None` for an unsharded cluster.
     exterior: Option<Exterior>,
+    /// Flight recorder. `Disabled` (the default) is a single dead branch
+    /// per record site — bit-identical to an uninstrumented engine; a
+    /// ring sink records every lifecycle/batch/fault event in virtual
+    /// time with zero steady-state allocations.
+    trace: TraceSink,
     /// Reusable per-slot workload buffers (serving hot path: no fresh
     /// Vecs per slot — same `*_into` idiom as the simulator core).
     rates_scratch: Vec<f64>,
@@ -470,6 +478,7 @@ impl EdgeCluster {
             hedge_partner: HashMap::new(),
             hedge_cancel: HashSet::new(),
             exterior: None,
+            trace: TraceSink::Disabled,
             rates_scratch: Vec::new(),
             counts_scratch: Vec::new(),
             batch_scratch: Vec::new(),
@@ -552,6 +561,12 @@ impl EdgeCluster {
         let id = self.next_id;
         self.next_id += 1;
         self.imported += 1;
+        self.trace.rec(TraceRecord::instant(
+            TraceKind::Import,
+            local,
+            id,
+            d.deliver_at.max(self.now),
+        ));
         self.reqs.insert(
             id,
             PendingReq {
@@ -586,6 +601,26 @@ impl EdgeCluster {
     /// Accumulated GPU service seconds per node (utilization telemetry).
     pub fn gpu_busy_secs(&self) -> &[f64] {
         &self.busy_secs
+    }
+
+    // ---- flight recorder --------------------------------------------------
+
+    /// Install a trace sink. With [`TraceSink::Disabled`] (the
+    /// construction default) the run is bit-identical to an
+    /// uninstrumented engine; with a ring sink every request-lifecycle,
+    /// GPU-batch and fault event is recorded in virtual time.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Detach the recorded ring for post-run export (`None` when tracing
+    /// was disabled). Leaves the sink disabled.
+    pub fn take_trace(&mut self) -> Option<TraceRing> {
+        self.trace.take_ring()
+    }
+
+    pub fn trace_ref(&self) -> Option<&TraceRing> {
+        self.trace.ring_ref()
     }
 
     /// Width of the policy view: the fleet's global node count when an
@@ -685,6 +720,7 @@ impl EdgeCluster {
         let id = self.next_id;
         self.next_id += 1;
         self.emitted += 1;
+        self.trace.rec(TraceRecord::instant(TraceKind::Emit, node, id, at));
         self.reqs.insert(
             id,
             PendingReq {
@@ -762,15 +798,52 @@ impl EdgeCluster {
                     self.next_poll[node] = f64::INFINITY;
                     self.try_dispatch(node, compute)?;
                 }
-                Event::NodeDown { node } => self.on_node_down(node),
+                Event::NodeDown { node } => {
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: node as u32,
+                        size: 0,
+                        t0: at,
+                        t1: at,
+                        ..TraceRecord::default()
+                    });
+                    self.on_node_down(node)
+                }
                 Event::NodeUp { node } => {
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: node as u32,
+                        size: 1,
+                        t0: at,
+                        t1: at,
+                        aux: 1.0,
+                        ..TraceRecord::default()
+                    });
                     self.alive[node] = true;
                     self.try_dispatch(node, compute)?;
                 }
                 Event::LinkChange { node, factor } => {
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: node as u32,
+                        size: 3,
+                        t0: at,
+                        t1: at,
+                        aux: factor,
+                        ..TraceRecord::default()
+                    });
                     self.link_factor[node] = factor;
                 }
                 Event::GpuRate { node, factor } => {
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: node as u32,
+                        size: 2,
+                        t0: at,
+                        t1: at,
+                        aux: factor,
+                        ..TraceRecord::default()
+                    });
                     self.gpu_factor[node] = factor;
                 }
                 Event::OpenArrival { node } => self.on_open_arrival(node),
@@ -792,11 +865,31 @@ impl EdgeCluster {
         }
         let q = EdgeCluster::queue_len(self, node);
         let d = EdgeCluster::queue_delay_estimate(self, node);
-        if self.intake.admit(node, self.now, q, d, self.drop_deadline) {
+        let verdict =
+            self.intake.admit_reason(node, self.now, q, d, self.drop_deadline);
+        if verdict == AdmitOutcome::Admitted {
             self.emit_request(node, self.now);
         } else {
             self.emitted += 1;
             self.shed += 1;
+            // shed arrivals never allocate a request id (they never enter
+            // the pending map); the sentinel keeps id assignment — and so
+            // every downstream record — bit-identical to a traceless run
+            self.trace.rec(TraceRecord::instant(
+                TraceKind::Emit,
+                node,
+                u64::MAX,
+                self.now,
+            ));
+            self.trace.rec(TraceRecord {
+                kind: TraceKind::Shed,
+                node: node as u32,
+                req: u64::MAX,
+                t0: self.now,
+                t1: self.now,
+                aux: verdict.code() as f64,
+                ..TraceRecord::default()
+            });
         }
     }
 
@@ -812,6 +905,31 @@ impl EdgeCluster {
             // with a precomputed finish; only the still-executing batch
             // can satisfy finish > now (service is serial per node)
             let now = self.now;
+            if self.trace.is_enabled() {
+                // each retracted record already produced an optimistic
+                // Complete/Drop trace event at batch start; net it out
+                // with a Retract and account the request as Lost (the
+                // ledger moves it to lost_to_failure below)
+                for s in &self.served {
+                    if s.target == node && s.finish > now {
+                        self.trace.rec(TraceRecord {
+                            kind: TraceKind::Retract,
+                            node: node as u32,
+                            size: u32::from(s.dropped),
+                            req: s.id,
+                            t0: now,
+                            t1: now,
+                            ..TraceRecord::default()
+                        });
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Lost,
+                            node,
+                            s.id,
+                            now,
+                        ));
+                    }
+                }
+            }
             let before = self.served.len();
             self.served.retain(|s| !(s.target == node && s.finish > now));
             self.lost_to_failure += (before - self.served.len()) as u64;
@@ -827,6 +945,12 @@ impl EdgeCluster {
             if self.reqs.remove(&id).is_some() {
                 self.lost_to_failure += 1;
                 self.unlink_hedge(id);
+                self.trace.rec(TraceRecord::instant(
+                    TraceKind::Lost,
+                    node,
+                    id,
+                    self.now,
+                ));
             }
         }
         scratch.clear();
@@ -842,6 +966,24 @@ impl EdgeCluster {
     pub fn finish(&mut self, horizon: f64) {
         self.now = horizon;
         self.residual = self.reqs.len() as u64;
+        if self.trace.is_enabled() {
+            // pending-map iteration order is arbitrary; sort the ids so
+            // the recorded residuals (and so the exported JSON) stay
+            // byte-identical per seed. Cold path — the one-off Vec is fine.
+            let mut ids: Vec<u64> = Vec::with_capacity(self.reqs.len());
+            for &id in self.reqs.keys() {
+                ids.push(id);
+            }
+            ids.sort_unstable();
+            for id in ids {
+                self.trace.rec(TraceRecord::instant(
+                    TraceKind::Residual,
+                    0,
+                    id,
+                    horizon,
+                ));
+            }
+        }
         self.reqs.clear();
         // unresolved hedge races at the horizon count as residual (both
         // copies were still in flight); the pairing state is spent
@@ -903,6 +1045,12 @@ impl EdgeCluster {
             if self.reqs.remove(&req).is_some() {
                 self.lost_to_failure += 1;
                 self.unlink_hedge(req);
+                self.trace.rec(TraceRecord::instant(
+                    TraceKind::Lost,
+                    node,
+                    req,
+                    self.now,
+                ));
             }
             return Ok(());
         }
@@ -997,6 +1145,12 @@ impl EdgeCluster {
                 deliver_at: finish,
                 seq,
             });
+            self.trace.rec(TraceRecord::instant(
+                TraceKind::Export,
+                node,
+                req,
+                self.now,
+            ));
         }
         // hedged dispatch: offer the policy a duplicate of an in-shard
         // primary (cross-shard primaries are not hedged — the duplicate
@@ -1041,6 +1195,21 @@ impl EdgeCluster {
         let hid = self.next_id;
         self.next_id += 1;
         self.emitted += 1;
+        self.trace.rec(TraceRecord::instant(
+            TraceKind::Emit,
+            origin,
+            hid,
+            self.now,
+        ));
+        self.trace.rec(TraceRecord {
+            kind: TraceKind::Hedge,
+            node: h_local as u32,
+            req: hid,
+            batch: req,
+            t0: self.now,
+            t1: self.now,
+            ..TraceRecord::default()
+        });
         self.reqs.insert(
             hid,
             PendingReq {
@@ -1116,6 +1285,12 @@ impl EdgeCluster {
             if self.reqs.remove(&req).is_some() {
                 self.lost_to_failure += 1;
                 self.unlink_hedge(req);
+                self.trace.rec(TraceRecord::instant(
+                    TraceKind::Lost,
+                    node,
+                    req,
+                    self.now,
+                ));
             }
             return Ok(());
         }
@@ -1185,6 +1360,12 @@ impl EdgeCluster {
             if self.hedge_cancel.remove(&id) {
                 if self.reqs.remove(&id).is_some() {
                     self.cancelled += 1;
+                    self.trace.rec(TraceRecord::instant(
+                        TraceKind::Cancel,
+                        node,
+                        id,
+                        self.now,
+                    ));
                 }
                 continue;
             }
@@ -1194,6 +1375,18 @@ impl EdgeCluster {
                 let r = self.reqs.remove(&id).unwrap();
                 // an expired frame resolves its hedge race as a loss
                 self.unlink_hedge(r.id);
+                self.trace.rec(TraceRecord {
+                    kind: TraceKind::Drop,
+                    node: node as u32,
+                    req: r.id,
+                    batch: NO_BATCH,
+                    model: r.action.model as u8,
+                    res: r.action.res as u8,
+                    t0: r.arrival,
+                    t1: self.now,
+                    aux: self.now,
+                    ..TraceRecord::default()
+                });
                 self.served.push(ServedRequest {
                     id: r.id,
                     origin: r.origin,
@@ -1223,6 +1416,17 @@ impl EdgeCluster {
         self.gpu_busy[node] = true;
         self.gpu_busy_until[node] = finish;
         self.busy_secs[node] += secs;
+        self.trace.rec(TraceRecord {
+            kind: TraceKind::Batch,
+            node: node as u32,
+            size: survivors as u32,
+            batch: batch_id,
+            model: model as u8,
+            res: res as u8,
+            t0: self.now,
+            t1: finish,
+            ..TraceRecord::default()
+        });
         for &id in items {
             let Some(r) = self.reqs.remove(&id) else { continue };
             // a completion past the deadline still counts as a drop —
@@ -1237,6 +1441,22 @@ impl EdgeCluster {
                     self.hedge_cancel.insert(partner);
                 }
             }
+            self.trace.rec(TraceRecord {
+                kind: if dropped {
+                    TraceKind::Drop
+                } else {
+                    TraceKind::Complete
+                },
+                node: node as u32,
+                size: survivors as u32,
+                req: r.id,
+                batch: batch_id,
+                model: r.action.model as u8,
+                res: r.action.res as u8,
+                t0: r.arrival,
+                t1: finish,
+                aux: self.now,
+            });
             self.served.push(ServedRequest {
                 id: r.id,
                 origin: r.origin,
@@ -1516,6 +1736,33 @@ mod tests {
         let mut hook = ProfileCompute::new(Profiles::default());
         c.run(&mut LocalMin, &mut hook, 12.0).unwrap();
         assert_eq!(c.emitted, c.served.len() as u64 + c.residual);
+    }
+
+    #[test]
+    fn flight_recorder_reconciles_with_ledger() {
+        let mut c = cluster(11);
+        c.set_trace(TraceSink::ring(1 << 16));
+        let mut hook = ProfileCompute::new(Profiles::default());
+        c.run(&mut LocalMin, &mut hook, 12.0).unwrap();
+        let ring = c.take_trace().unwrap();
+        assert_eq!(ring.dropped(), 0, "ring must not wrap at this horizon");
+        let tc = crate::telemetry::trace::terminal_counts(&ring);
+        assert_eq!(tc.emit, c.emitted);
+        let completed =
+            c.served.iter().filter(|s| !s.dropped).count() as u64;
+        assert_eq!(tc.net_complete(), completed);
+        assert_eq!(tc.net_dropped(), c.served.len() as u64 - completed);
+        assert_eq!(tc.residual, c.residual);
+        assert!(tc.batches > 0, "GPU batch spans must be recorded");
+    }
+
+    #[test]
+    fn disabled_trace_sink_detaches_nothing() {
+        let mut c = cluster(2);
+        let mut hook = ProfileCompute::new(Profiles::default());
+        c.run(&mut LocalMin, &mut hook, 5.0).unwrap();
+        assert!(c.trace_ref().is_none());
+        assert!(c.take_trace().is_none());
     }
 
     #[test]

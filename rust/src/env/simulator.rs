@@ -38,8 +38,11 @@ use super::profiles::{Profiles, N_MODELS, N_RES};
 use super::request::{Action, Finished, Outcome, Request};
 use super::workload::{Workload, WorkloadConfig};
 use crate::config::EnvConfig;
-use crate::ingest::{ArrivalGen, IngestConfig, Intake};
+use crate::ingest::{AdmitOutcome, ArrivalGen, IngestConfig, Intake};
 use crate::scenario::{FaultKind, FaultSchedule, Scenario};
+use crate::telemetry::trace::{
+    TraceKind, TraceRecord, TraceRing, TraceSink, NO_BATCH,
+};
 
 /// Static simulator configuration, derived from a [`Scenario`] (or, for
 /// the paper-default setting, an [`EnvConfig`]).
@@ -216,6 +219,9 @@ pub struct Simulator {
     intake: Intake,
     /// Open-loop arrivals refused by the admission gate (0 closed-loop).
     shed: u64,
+    /// Flight-recorder sink (disabled by default: zero work when off, so
+    /// untraced runs stay bit-identical with the pre-recorder substrate).
+    trace: TraceSink,
     now: f64,
     slot: u64,
     next_id: u64,
@@ -251,6 +257,7 @@ impl Simulator {
             ),
             intake: Intake::new(cfg.ingest.admission.clone(), n),
             shed: 0,
+            trace: TraceSink::Disabled,
             now: 0.0,
             slot: 0,
             next_id: 0,
@@ -311,6 +318,22 @@ impl Simulator {
     /// `shed` ledger column. Exactly 0 for closed-loop configs.
     pub fn shed(&self) -> u64 {
         self.shed
+    }
+
+    /// Attach (or detach) the flight-recorder sink. Note [`Self::reset`]
+    /// rebuilds the simulator and so reverts the sink to `Disabled`.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Detach the recorder ring, if one is attached.
+    pub fn take_trace(&mut self) -> Option<TraceRing> {
+        self.trace.take_ring()
+    }
+
+    /// Borrow the recorder ring, if one is attached.
+    pub fn trace_ref(&self) -> Option<&TraceRing> {
+        self.trace.ring_ref()
     }
 
     /// Estimated queuing delay at node i given current queue contents
@@ -444,18 +467,49 @@ impl Simulator {
                         // a crashed node captures nothing: its open-loop
                         // arrivals are lost to failure, not shed
                         self.lost_to_failure += 1;
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Emit,
+                            i,
+                            u64::MAX,
+                            arrival,
+                        ));
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Lost,
+                            i,
+                            u64::MAX,
+                            arrival,
+                        ));
                         continue;
                     }
                     let q = self.task_queues[i].len();
                     let d = Simulator::queue_delay_estimate(self, i);
-                    if !self.intake.admit(
+                    let verdict = self.intake.admit_reason(
                         i,
                         arrival,
                         q,
                         d,
                         self.cfg.drop_threshold,
-                    ) {
+                    );
+                    if verdict != AdmitOutcome::Admitted {
                         self.shed += 1;
+                        // shed arrivals never allocate an id — the sentinel
+                        // keeps id assignment bit-identical with untraced
+                        // runs
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Emit,
+                            i,
+                            u64::MAX,
+                            arrival,
+                        ));
+                        self.trace.rec(TraceRecord {
+                            kind: TraceKind::Shed,
+                            node: i as u32,
+                            req: u64::MAX,
+                            t0: arrival,
+                            t1: arrival,
+                            aux: verdict.code() as f64,
+                            ..TraceRecord::default()
+                        });
                         continue;
                     }
                     let ready = arrival
@@ -472,6 +526,12 @@ impl Simulator {
                         mbits_left: self.cfg.profiles.frame_mbits[a.res],
                     };
                     self.next_id += 1;
+                    self.trace.rec(TraceRecord::instant(
+                        TraceKind::Emit,
+                        i,
+                        req.id,
+                        arrival,
+                    ));
                     if a.edge == i {
                         self.backlog[i].add(a.model, a.res);
                         self.task_queues[i].push_back(req);
@@ -487,6 +547,22 @@ impl Simulator {
                 // a crashed node captures nothing: its arrivals are lost
                 // to failure (they still count as emitted work)
                 self.lost_to_failure += count as u64;
+                if self.trace.is_enabled() {
+                    for _ in 0..count {
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Emit,
+                            i,
+                            u64::MAX,
+                            t0,
+                        ));
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Lost,
+                            i,
+                            u64::MAX,
+                            t0,
+                        ));
+                    }
+                }
                 continue;
             }
             for k in 0..count {
@@ -510,6 +586,12 @@ impl Simulator {
                     mbits_left: self.cfg.profiles.frame_mbits[a.res],
                 };
                 self.next_id += 1;
+                self.trace.rec(TraceRecord::instant(
+                    TraceKind::Emit,
+                    i,
+                    req.id,
+                    arrival,
+                ));
                 if a.edge == i {
                     self.backlog[i].add(a.model, a.res);
                     self.task_queues[i].push_back(req);
@@ -557,6 +639,12 @@ impl Simulator {
                             // delivered into a crashed node: the frame is
                             // lost (the link time was still consumed)
                             self.lost_to_failure += 1;
+                            self.trace.rec(TraceRecord::instant(
+                                TraceKind::Lost,
+                                j,
+                                req.id,
+                                finish,
+                            ));
                         }
                     } else {
                         head.mbits_left -= avail;
@@ -585,6 +673,18 @@ impl Simulator {
                 if waited > self.cfg.drop_threshold {
                     // proactive drop: cannot possibly finish in time (IV-D)
                     out.finished.push(self.drop(&req, i, waited));
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Drop,
+                        node: i as u32,
+                        size: 0,
+                        req: req.id,
+                        batch: NO_BATCH,
+                        model: req.model as u8,
+                        res: req.res as u8,
+                        t0: req.arrival,
+                        t1: start,
+                        aux: start,
+                    });
                     continue;
                 }
                 let infer = self.cfg.profiles.infer_delay_of(req.model, req.res)
@@ -593,6 +693,18 @@ impl Simulator {
                 let delay = complete - req.arrival;
                 if delay > self.cfg.drop_threshold {
                     out.finished.push(self.drop(&req, i, delay));
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Drop,
+                        node: i as u32,
+                        size: 0,
+                        req: req.id,
+                        batch: NO_BATCH,
+                        model: req.model as u8,
+                        res: req.res as u8,
+                        t0: req.arrival,
+                        t1: complete,
+                        aux: start,
+                    });
                     // the GPU still burned the time attempting it
                     cursor = complete;
                     self.gpu_busy_until[i] = complete;
@@ -610,6 +722,18 @@ impl Simulator {
                     accuracy: acc,
                     dispatched: req.origin != i,
                 });
+                self.trace.rec(TraceRecord {
+                    kind: TraceKind::Complete,
+                    node: i as u32,
+                    size: 1,
+                    req: req.id,
+                    batch: NO_BATCH,
+                    model: req.model as u8,
+                    res: req.res as u8,
+                    t0: req.arrival,
+                    t1: complete,
+                    aux: start,
+                });
                 cursor = complete;
                 self.gpu_busy_until[i] = complete;
             }
@@ -622,11 +746,24 @@ impl Simulator {
         for i in 0..n {
             let backlog = &mut self.backlog[i];
             let finished = &mut out.finished;
+            let trace = &mut self.trace;
             self.task_queues[i].retain(|req| {
                 let age = t1 - req.arrival;
                 if age > threshold {
                     backlog.remove(req.model, req.res);
                     finished.push(dropped(req, i, age, drop_perf, req.origin != i));
+                    trace.rec(TraceRecord {
+                        kind: TraceKind::Drop,
+                        node: i as u32,
+                        size: 0,
+                        req: req.id,
+                        batch: NO_BATCH,
+                        model: req.model as u8,
+                        res: req.res as u8,
+                        t0: req.arrival,
+                        t1,
+                        aux: t1,
+                    });
                     false
                 } else {
                     true
@@ -641,6 +778,18 @@ impl Simulator {
                     if age > threshold {
                         // still en route to j: always an off-node drop
                         finished.push(dropped(req, i, age, drop_perf, true));
+                        trace.rec(TraceRecord {
+                            kind: TraceKind::Drop,
+                            node: i as u32,
+                            size: 0,
+                            req: req.id,
+                            batch: NO_BATCH,
+                            model: req.model as u8,
+                            res: req.res as u8,
+                            t0: req.arrival,
+                            t1,
+                            aux: t1,
+                        });
                         false
                     } else {
                         true
@@ -656,6 +805,27 @@ impl Simulator {
             out.node_rewards[f.node] += f.perf;
         }
         out.shared_reward = out.node_rewards.iter().sum();
+
+        // one control-track span per slot: the slot substrate's analogue of
+        // the event substrate's GPU-batch spans (a single ring write)
+        if self.trace.is_enabled() {
+            let mut arrived = 0u32;
+            for &a in out.arrivals.iter() {
+                arrived += a as u32;
+            }
+            self.trace.rec(TraceRecord {
+                kind: TraceKind::Slot,
+                node: 0,
+                size: arrived,
+                req: 0,
+                batch: self.slot,
+                model: 0,
+                res: 0,
+                t0,
+                t1,
+                aux: t0,
+            });
+        }
 
         self.now = t1;
         self.slot += 1;
@@ -674,18 +844,65 @@ impl Simulator {
             match e.kind {
                 FaultKind::NodeDown => {
                     self.alive[e.node] = false;
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: e.node as u32,
+                        size: 0,
+                        t0: e.at,
+                        t1: e.at,
+                        ..TraceRecord::default()
+                    });
                     while let Some(req) = self.task_queues[e.node].pop_front()
                     {
                         self.backlog[e.node].remove(req.model, req.res);
                         self.lost_to_failure += 1;
+                        self.trace.rec(TraceRecord::instant(
+                            TraceKind::Lost,
+                            e.node,
+                            req.id,
+                            t0,
+                        ));
                     }
                     if self.gpu_busy_until[e.node] > t0 {
                         self.gpu_busy_until[e.node] = t0;
                     }
                 }
-                FaultKind::NodeUp => self.alive[e.node] = true,
-                FaultKind::GpuDerate(f) => self.gpu_factor[e.node] = f,
-                FaultKind::LinkDegrade(f) => self.link_factor[e.node] = f,
+                FaultKind::NodeUp => {
+                    self.alive[e.node] = true;
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: e.node as u32,
+                        size: 1,
+                        t0: e.at,
+                        t1: e.at,
+                        aux: 1.0,
+                        ..TraceRecord::default()
+                    });
+                }
+                FaultKind::GpuDerate(f) => {
+                    self.gpu_factor[e.node] = f;
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: e.node as u32,
+                        size: 2,
+                        t0: e.at,
+                        t1: e.at,
+                        aux: f,
+                        ..TraceRecord::default()
+                    });
+                }
+                FaultKind::LinkDegrade(f) => {
+                    self.link_factor[e.node] = f;
+                    self.trace.rec(TraceRecord {
+                        kind: TraceKind::Fault,
+                        node: e.node as u32,
+                        size: 3,
+                        t0: e.at,
+                        t1: e.at,
+                        aux: f,
+                        ..TraceRecord::default()
+                    });
+                }
             }
         }
     }
@@ -1201,6 +1418,79 @@ mod tests {
             );
         }
         assert_eq!(a.shed(), b.shed());
+    }
+
+    #[test]
+    fn flight_recorder_reconciles_with_counters() {
+        let sc = Scenario::at_nodes("openloop-poisson", 4).unwrap();
+        let mut s = Simulator::from_scenario(&sc, 42);
+        s.set_trace(TraceSink::ring(1 << 16));
+        let a = local_actions(4, 3, 0);
+        let mut arrived = 0u64;
+        let mut finished = 0u64;
+        let mut completed = 0u64;
+        for _ in 0..200 {
+            let out = s.step(&a);
+            arrived += out.arrivals.iter().sum::<usize>() as u64;
+            finished += out.finished.len() as u64;
+            completed += out
+                .finished
+                .iter()
+                .filter(|f| f.outcome == Outcome::Completed)
+                .count() as u64;
+        }
+        let shed = s.shed();
+        let lost = s.lost_to_failure();
+        let slots = s.slot();
+        let ring = s.take_trace().unwrap();
+        assert_eq!(ring.dropped(), 0, "grow the test ring");
+        let tc = crate::telemetry::trace::terminal_counts(&ring);
+        assert_eq!(tc.emit, arrived);
+        assert_eq!(tc.shed, shed);
+        assert!(tc.shed > 0, "overload never engaged the gate");
+        assert_eq!(tc.lost, lost);
+        assert_eq!(tc.complete, completed);
+        assert_eq!(tc.complete + tc.dropped, finished);
+        assert_eq!(tc.slots, slots);
+    }
+
+    #[test]
+    fn flight_recorder_covers_faults_and_losses() {
+        let sc = Scenario::at_nodes("node-churn", 4).unwrap();
+        let mut s = Simulator::from_scenario(&sc, 7);
+        s.set_trace(TraceSink::ring(1 << 16));
+        let a = local_actions(4, 1, 2);
+        for _ in 0..100 {
+            s.step(&a);
+        }
+        let lost = s.lost_to_failure();
+        let ring = s.take_trace().unwrap();
+        assert_eq!(ring.dropped(), 0);
+        let tc = crate::telemetry::trace::terminal_counts(&ring);
+        assert!(tc.faults > 0, "churn schedule must record fault events");
+        assert_eq!(tc.lost, lost);
+        assert!(tc.lost > 0, "the crash window must destroy work");
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_run() {
+        let sc = Scenario::at_nodes("openloop-burst", 4).unwrap();
+        let mut plain = Simulator::from_scenario(&sc, 5);
+        let mut traced = Simulator::from_scenario(&sc, 5);
+        traced.set_trace(TraceSink::ring(1 << 14));
+        let acts = local_actions(4, 1, 2);
+        for _ in 0..150 {
+            let oa = plain.step(&acts);
+            let ob = traced.step(&acts);
+            assert_eq!(oa.arrivals, ob.arrivals);
+            assert_eq!(
+                oa.shared_reward.to_bits(),
+                ob.shared_reward.to_bits()
+            );
+        }
+        assert_eq!(plain.shed(), traced.shed());
+        assert!(plain.take_trace().is_none());
+        assert!(traced.take_trace().is_some());
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::scenario::Scenario;
 use crate::serving::engine::{serve_scenario, ServingReport};
 use crate::telemetry::report::{method_row, write_method_csv, MethodSummary};
 use crate::util::csv::CsvWriter;
+use crate::util::provenance::{write_sidecar_meta, RunMeta};
 use crate::util::stats::moving_avg;
 
 pub const OMEGAS: [f64; 4] = [0.2, 1.0, 5.0, 15.0];
@@ -117,6 +118,12 @@ impl<'rt> ExpContext<'rt> {
         self.results
             .join("curves")
             .join(format!("{}_omega{}.csv", method.name(), omega))
+    }
+
+    /// Provenance for figure CSVs: the paper-default regime at the
+    /// training seed (episode-driven, so no virtual-time horizon).
+    fn figure_meta(&self) -> RunMeta {
+        RunMeta::new(&["paper"], self.base.rl.seed, &[], 0.0)
     }
 
     fn cfg_for(&self, method: RlMethod, omega: f64) -> Config {
@@ -253,6 +260,7 @@ impl<'rt> ExpContext<'rt> {
                 w.row(&[format!("{omega}"), line.to_string()])?;
             }
         }
+        write_sidecar_meta(&path, &self.figure_meta())?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -265,8 +273,8 @@ impl<'rt> ExpContext<'rt> {
         }
         let p4 = self.results.join("fig4_distributions.csv");
         let p5 = self.results.join("fig5_metrics.csv");
-        write_method_csv(&p4, &rows)?;
-        write_method_csv(&p5, &rows)?;
+        write_method_csv(&p4, &rows, &self.figure_meta())?;
+        write_method_csv(&p5, &rows, &self.figure_meta())?;
         eprintln!("[exp] wrote {} and {}", p4.display(), p5.display());
         Ok(())
     }
@@ -283,7 +291,7 @@ impl<'rt> ExpContext<'rt> {
             }
         }
         let path = self.results.join("fig6_comparison.csv");
-        write_method_csv(&path, &rows)?;
+        write_method_csv(&path, &rows, &self.figure_meta())?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -299,7 +307,7 @@ impl<'rt> ExpContext<'rt> {
             rows.push(self.summary_heuristic(h, omega)?);
         }
         let path = self.results.join("fig7_breakdown.csv");
-        write_method_csv(&path, &rows)?;
+        write_method_csv(&path, &rows, &self.figure_meta())?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -317,7 +325,7 @@ impl<'rt> ExpContext<'rt> {
             }
         }
         let path = self.results.join("fig8_ablation.csv");
-        write_method_csv(&path, &rows)?;
+        write_method_csv(&path, &rows, &self.figure_meta())?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(())
     }
@@ -412,6 +420,10 @@ impl<'rt> ExpContext<'rt> {
                 format!("{:.4}", r.mean_accuracy),
             ])?;
         }
+        write_sidecar_meta(
+            &path,
+            &RunMeta::new(scenario_names, seed, &[], duration_virtual_secs),
+        )?;
         eprintln!("[exp] wrote {}", path.display());
         Ok(rows)
     }

@@ -52,6 +52,7 @@ pub use runtime::{heuristic_factory, Fleet, PolicyFactory};
 use crate::scenario::Scenario;
 use crate::telemetry::fleet::utilization_spread;
 use crate::util::csv::CsvWriter;
+use crate::util::provenance::{write_sidecar_meta, RunMeta};
 
 /// `repro experiment fleet` backend (dep-free): sweep shards × scenarios
 /// with one heuristic baseline, writing one row per (scenario, shards)
@@ -95,6 +96,8 @@ pub fn sweep_to_csv(
             "shard_emitted_max",
             "shard_drop_rate_max",
             "stall_frac",
+            "stall_p50",
+            "stall_p99",
             "wall_secs",
         ],
     )?;
@@ -144,6 +147,19 @@ pub fn sweep_to_csv(
                 .map(|s| s.stall_frac)
                 .sum::<f64>()
                 / report.shard_stats.len().max(1) as f64;
+            // worst per-epoch barrier-wait percentiles across shards
+            // (seconds, from each worker's stall histogram — measured
+            // wall-clock, like stall_frac)
+            let stall_p50 = report
+                .shard_stats
+                .iter()
+                .map(|s| s.stall_p50)
+                .fold(0.0, f64::max);
+            let stall_p99 = report
+                .shard_stats
+                .iter()
+                .map(|s| s.stall_p99)
+                .fold(0.0, f64::max);
             w.row(&[
                 name.to_string(),
                 shards.to_string(),
@@ -169,11 +185,17 @@ pub fn sweep_to_csv(
                 em_max.to_string(),
                 format!("{drop_max:.4}"),
                 format!("{stall_mean:.4}"),
+                format!("{stall_p50:.6}"),
+                format!("{stall_p99:.6}"),
                 format!("{:.3}", report.wall_secs),
             ])?;
             reports.push(report);
         }
     }
+    write_sidecar_meta(
+        path.as_ref(),
+        &RunMeta::new(scenario_names, seed, shard_counts, duration),
+    )?;
     Ok(reports)
 }
 
@@ -205,7 +227,19 @@ mod tests {
         assert!(header.contains("shed"));
         assert!(header.contains("cancelled"));
         assert!(header.contains("stall_frac"));
+        assert!(header.contains("stall_p50"));
+        assert!(header.contains("stall_p99"));
         assert_eq!(text.lines().count(), 3);
+        // the provenance sidecar lands next to the CSV
+        let meta =
+            std::fs::read_to_string(dir.join("fleet_scaling.meta.json"))
+                .unwrap();
+        let doc = crate::util::json::Json::parse(&meta).unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            doc.get("shards").unwrap().usize_vec().unwrap(),
+            vec![1, 2, 16]
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -33,6 +33,10 @@ use crate::policy::Policy;
 use crate::scenario::Scenario;
 use crate::serving::engine::ServingReport;
 use crate::telemetry::fleet::ShardStats;
+use crate::telemetry::trace::{
+    ShardTrace, TraceKind, TraceRecord, TraceRing, TraceSink,
+};
+use crate::telemetry::LatencyHistogram;
 
 use super::plan::ShardPlan;
 use super::report::FleetReport;
@@ -107,6 +111,10 @@ struct ShardOutcome {
     /// Completed-request latencies (for true fleet-wide percentiles).
     latencies: Vec<f64>,
     policy_name: String,
+    /// The shard's flight-recorder ring (traced runs only).
+    trace: Option<TraceRing>,
+    /// Per-epoch barrier-wait samples (measured wall-clock).
+    stall_hist: LatencyHistogram,
 }
 
 /// The sharded fleet serving runtime.
@@ -148,6 +156,34 @@ impl Fleet {
         duration: f64,
         seed: u64,
     ) -> Result<FleetReport> {
+        self.run_inner(factory, duration, seed, None).map(|(r, ..)| r)
+    }
+
+    /// [`Fleet::run`] with the flight recorder attached: every shard
+    /// records into its own preallocated ring (`trace_cap` records each)
+    /// and the coordinator records one barrier span per (shard, epoch).
+    /// Returns the merged report, the per-shard traces (the coordinator's
+    /// barrier track rides last, as a node-less pseudo shard), and the
+    /// fleet-wide per-epoch barrier-stall histogram (measured wall-clock —
+    /// everything inside the traces themselves stays virtual-time, so
+    /// traced runs are byte-reproducible per seed).
+    pub fn run_traced(
+        &self,
+        factory: &dyn PolicyFactory,
+        duration: f64,
+        seed: u64,
+        trace_cap: usize,
+    ) -> Result<(FleetReport, Vec<ShardTrace>, LatencyHistogram)> {
+        self.run_inner(factory, duration, seed, Some(trace_cap))
+    }
+
+    fn run_inner(
+        &self,
+        factory: &dyn PolicyFactory,
+        duration: f64,
+        seed: u64,
+        trace_cap: Option<usize>,
+    ) -> Result<(FleetReport, Vec<ShardTrace>, LatencyHistogram)> {
         let plan = &self.plan;
         plan.validate();
         anyhow::ensure!(
@@ -165,7 +201,8 @@ impl Fleet {
         let hist = plan.scenario.hist_len;
         let t0 = Stopwatch::start();
 
-        std::thread::scope(|scope| -> Result<FleetReport> {
+        type Traced = (FleetReport, Vec<ShardTrace>, LatencyHistogram);
+        std::thread::scope(|scope| -> Result<Traced> {
             let (hub, ports) = barrier::<ToWorker, Result<WorkerMsg>>(s);
             for (k, mut port) in ports.into_iter().enumerate() {
                 let sub = plan.sub_scenario(k);
@@ -185,6 +222,7 @@ impl Fleet {
                 scope.spawn(move || {
                     let r = shard_worker(
                         &mut port, sub, wseed, factory, k, exterior,
+                        trace_cap,
                     );
                     if let Err(e) = r {
                         // a failed send means the coordinator is gone —
@@ -204,10 +242,29 @@ impl Fleet {
                 .collect();
             let mut export_bufs: Vec<Vec<BoundaryDispatch>> =
                 (0..s).map(|_| Vec::new()).collect();
+            // coordinator-side barrier track: one span per (shard, epoch)
+            // with the epoch's import count — virtual-time only, so the
+            // exported trace stays seed-deterministic
+            let mut coord_trace = trace_cap.map(TraceRing::new);
+            let mut epoch_idx: u64 = 0;
             let mut t = 0.0;
             while t < duration {
                 let until = (t + plan.epoch).min(duration);
                 for k in 0..s {
+                    if let Some(ring) = coord_trace.as_mut() {
+                        ring.push(TraceRecord {
+                            kind: TraceKind::Epoch,
+                            node: k as u32,
+                            size: 0,
+                            req: mailbox[k].len() as u64,
+                            batch: epoch_idx,
+                            model: 0,
+                            res: 0,
+                            t0: t,
+                            t1: until,
+                            aux: 0.0,
+                        });
+                    }
                     hub.send(
                         k,
                         ToWorker::Step {
@@ -240,6 +297,7 @@ impl Fleet {
                     export_bufs[k] = exports;
                 }
                 t = until;
+                epoch_idx += 1;
             }
 
             // dispatches produced in the final epoch are still on the
@@ -256,6 +314,8 @@ impl Fleet {
             let mut shard_stats = Vec::with_capacity(s);
             let mut latencies = Vec::new();
             let mut policy_name = String::new();
+            let mut traces = Vec::new();
+            let mut stalls = LatencyHistogram::new();
             for k in 0..s {
                 let msg = hub
                     .recv(k)
@@ -270,6 +330,19 @@ impl Fleet {
                 per_shard.push(outcome.report);
                 shard_stats.push(outcome.stats);
                 latencies.extend(outcome.latencies);
+                stalls.merge(&outcome.stall_hist);
+                if let Some(ring) = outcome.trace {
+                    traces.push(ShardTrace {
+                        shard: k,
+                        n_nodes: plan.size(k),
+                        ring,
+                    });
+                }
+            }
+            if let Some(ring) = coord_trace {
+                // the coordinator's barrier track: a node-less pseudo
+                // shard whose Epoch spans point at each worker shard
+                traces.push(ShardTrace { shard: s, n_nodes: 0, ring });
             }
             let report = FleetReport::assemble(
                 plan.scenario.name.clone(),
@@ -300,7 +373,7 @@ impl Fleet {
                     .map(|r| r.conserved())
                     .collect::<Vec<_>>()
             );
-            Ok(report)
+            Ok((report, traces, stalls))
         })
     }
 }
@@ -326,8 +399,12 @@ fn shard_worker(
     factory: &dyn PolicyFactory,
     shard: usize,
     exterior: Option<Exterior>,
+    trace_cap: Option<usize>,
 ) -> Result<()> {
     let mut cluster = EdgeCluster::new(&sub, wseed);
+    if let Some(cap) = trace_cap {
+        cluster.set_trace(TraceSink::ring(cap));
+    }
     let n_view = match exterior {
         Some(ext) => {
             let n = ext.n_global;
@@ -389,11 +466,14 @@ fn shard_worker(
                 let mut stats =
                     ShardStats::from_cluster(shard, &cluster, horizon);
                 stats.set_stall(port.stall_secs(), port.run_secs());
+                stats.set_stall_dist(port.stall_hist());
                 let _ = port.send(Ok(WorkerMsg::Done(Box::new(ShardOutcome {
                     report,
                     stats,
                     latencies,
                     policy_name: policy.name().to_string(),
+                    trace: cluster.take_trace(),
+                    stall_hist: port.stall_hist().clone(),
                 }))));
                 return Ok(());
             }

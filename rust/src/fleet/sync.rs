@@ -37,6 +37,8 @@
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
+use crate::telemetry::LatencyHistogram;
+
 /// Coordinator-side endpoints: one bounded send slot and one bounded
 /// receive slot per shard worker.
 pub struct CoordinatorHub<C, W> {
@@ -52,6 +54,9 @@ pub struct WorkerPort<C, W> {
     tx: SyncSender<W>,
     started: Instant,
     stalled: Duration,
+    /// Per-epoch barrier-wait distribution: one sample per blocking
+    /// [`WorkerPort::recv`]. Measured wall-clock, like `stalled`.
+    stall_hist: LatencyHistogram,
 }
 
 /// Build the barrier fabric for `shards` workers: one hub for the
@@ -75,6 +80,7 @@ pub fn barrier<C, W>(
             tx: from_tx,
             started: Instant::now(),
             stalled: Duration::ZERO,
+            stall_hist: LatencyHistogram::new(),
         });
     }
     (CoordinatorHub { to, from }, ports)
@@ -107,7 +113,9 @@ impl<C, W> WorkerPort<C, W> {
     pub fn recv(&mut self) -> Option<C> {
         let wait = Instant::now();
         let msg = self.rx.recv().ok();
-        self.stalled += wait.elapsed();
+        let blocked = wait.elapsed();
+        self.stalled += blocked;
+        self.stall_hist.record(blocked.as_secs_f64());
         msg
     }
 
@@ -119,6 +127,11 @@ impl<C, W> WorkerPort<C, W> {
     /// Wall-clock seconds this worker spent recv-blocked at barriers.
     pub fn stall_secs(&self) -> f64 {
         self.stalled.as_secs_f64()
+    }
+
+    /// Per-epoch barrier-wait histogram (one sample per blocking recv).
+    pub fn stall_hist(&self) -> &LatencyHistogram {
+        &self.stall_hist
     }
 
     /// Wall-clock seconds since the port was created (≈ worker start).
@@ -180,6 +193,8 @@ mod tests {
             assert!(p.recv().is_none());
             assert!(p.stall_secs() >= 0.0);
             assert!(p.run_secs() >= 0.0);
+            // one blocking recv = one per-epoch stall sample
+            assert_eq!(p.stall_hist().count(), 1);
         }
     }
 }

@@ -470,6 +470,31 @@ impl ArrivalGen {
     }
 }
 
+/// Verdict of one admission decision, with the refusal reason — the
+/// flight recorder stamps this on `Shed` trace events (`code`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitOutcome {
+    Admitted,
+    /// Backpressure: the node's queue already holds `queue_cap` frames.
+    QueueFull,
+    /// Deadline infeasibility: the delay estimate eats the drop budget.
+    Infeasible,
+    /// Token bucket empty.
+    Throttled,
+}
+
+impl AdmitOutcome {
+    /// Stable small-integer code for trace args (Admitted has no code —
+    /// admitted arrivals never produce a Shed event).
+    pub fn code(self) -> u64 {
+        match self {
+            AdmitOutcome::Admitted | AdmitOutcome::QueueFull => 0,
+            AdmitOutcome::Infeasible => 1,
+            AdmitOutcome::Throttled => 2,
+        }
+    }
+}
+
 /// Per-node admission state: the token buckets behind
 /// [`AdmissionConfig`]. All state is preallocated at construction — the
 /// admit path is allocation-free.
@@ -503,16 +528,31 @@ impl Intake {
         delay_estimate: f64,
         drop_threshold: f64,
     ) -> bool {
+        self.admit_reason(node, now, queue_len, delay_estimate, drop_threshold)
+            == AdmitOutcome::Admitted
+    }
+
+    /// [`Intake::admit`] with the refusal reason surfaced — what the
+    /// flight recorder stamps on `Shed` events. Same decision, same
+    /// state updates, allocation-free.
+    pub fn admit_reason(
+        &mut self,
+        node: usize,
+        now: f64,
+        queue_len: usize,
+        delay_estimate: f64,
+        drop_threshold: f64,
+    ) -> AdmitOutcome {
         if !self.cfg.enabled {
-            return true;
+            return AdmitOutcome::Admitted;
         }
         // backpressure at the door: the queue is already saturated
         if queue_len >= self.cfg.queue_cap {
-            return false;
+            return AdmitOutcome::QueueFull;
         }
         // deadline feasibility: the request would reach the GPU dead
         if delay_estimate > self.cfg.deadline_fraction * drop_threshold {
-            return false;
+            return AdmitOutcome::Infeasible;
         }
         // token bucket (0 rate = unlimited)
         if self.cfg.bucket_rate > 0.0 {
@@ -522,11 +562,11 @@ impl Intake {
                 .min(self.cfg.bucket_depth);
             self.refilled_at[node] = now;
             if self.tokens[node] < 1.0 {
-                return false;
+                return AdmitOutcome::Throttled;
             }
             self.tokens[node] -= 1.0;
         }
-        true
+        AdmitOutcome::Admitted
     }
 
     /// Intake pressure at `node` in [0, 1]: how close the door is to
@@ -715,6 +755,38 @@ mod tests {
         let mut off = Intake::new(AdmissionConfig::default(), 1);
         assert!(off.admit(0, 0.0, 1_000_000, 1e9, 1.0));
         assert_eq!(off.pressure(0, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn admit_reason_names_each_refusal() {
+        let cfg = AdmissionConfig {
+            enabled: true,
+            queue_cap: 4,
+            deadline_fraction: 0.5,
+            bucket_rate: 1.0,
+            bucket_depth: 1.0,
+        };
+        let mut intake = Intake::new(cfg, 1);
+        assert_eq!(
+            intake.admit_reason(0, 0.0, 4, 0.0, 1.0),
+            AdmitOutcome::QueueFull
+        );
+        assert_eq!(
+            intake.admit_reason(0, 0.0, 0, 0.6, 1.0),
+            AdmitOutcome::Infeasible
+        );
+        assert_eq!(
+            intake.admit_reason(0, 0.0, 0, 0.0, 1.0),
+            AdmitOutcome::Admitted
+        );
+        assert_eq!(
+            intake.admit_reason(0, 0.0, 0, 0.0, 1.0),
+            AdmitOutcome::Throttled
+        );
+        // reason codes are stable (the trace schema depends on them)
+        assert_eq!(AdmitOutcome::QueueFull.code(), 0);
+        assert_eq!(AdmitOutcome::Infeasible.code(), 1);
+        assert_eq!(AdmitOutcome::Throttled.code(), 2);
     }
 
     #[test]

@@ -7,24 +7,41 @@
 //!   baselines [--omega W]        evaluate the heuristic baselines
 //!   serve [--duration S]         online serving with real PJRT inference
 //!                                (--shards S > 1: sharded fleet runtime)
+//!   trace [--scenario NAME]      flight-recorder run -> Chrome trace JSON
 //!   experiment fig3|fig4|fig5|fig6|fig7|fig8|serving|fleet|headline|all
 //!
 //! Common flags: --artifacts DIR --results DIR --episodes N --seed S
 //! --variant full|noattn|local --ippo --local-only --config FILE
+//!
+//! The binary builds with no features: the dep-free surfaces (`lint`,
+//! `scenarios`, `trace`, heuristic `serve`, `experiment openloop|fleet`)
+//! always work, while the PJRT-backed commands (`train`, `evaluate`,
+//! `info`, trained-actor serving, the figure experiments) need
+//! `--features pjrt`.
+
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use edgevision::config::Config;
-use edgevision::experiments::ExpContext;
-use edgevision::rl::eval::evaluate;
-use edgevision::rl::policy::{ActorPolicy, PolicyController};
-use edgevision::rl::trainer::Trainer;
-use edgevision::runtime::{Manifest, Runtime};
-use edgevision::serving::{run_serving, ServingOptions};
-use edgevision::telemetry::report::method_row;
 use edgevision::util::cli::Args;
 
-const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios|lint|experiment> [flags]
+#[cfg(feature = "pjrt")]
+use edgevision::experiments::ExpContext;
+#[cfg(feature = "pjrt")]
+use edgevision::rl::eval::evaluate;
+#[cfg(feature = "pjrt")]
+use edgevision::rl::policy::{ActorPolicy, PolicyController};
+#[cfg(feature = "pjrt")]
+use edgevision::rl::trainer::Trainer;
+#[cfg(feature = "pjrt")]
+use edgevision::runtime::{Manifest, Runtime};
+#[cfg(feature = "pjrt")]
+use edgevision::serving::{run_serving, ServingOptions};
+#[cfg(feature = "pjrt")]
+use edgevision::telemetry::report::method_row;
+
+const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|trace|scenarios|lint|experiment> [flags]
   repro info
   repro lint [--root DIR] [--json]   run the standing-contract analyzer (alias of cargo run -p contract-lint)
   repro train --omega 5 --episodes 600 [--variant full|noattn|local] [--ippo] [--local-only] [--save FILE]
@@ -32,9 +49,12 @@ const USAGE: &str = "usage: repro <info|train|evaluate|baselines|serve|scenarios
   repro baselines [--omega 5]
   repro serve [--duration 30] [--policy FILE] [--scenario NAME] [--list-scenarios]
               [--shards S] [--epoch SECS] [--baseline NAME]   (shards > 1: sharded fleet runtime)
+  repro trace [--scenario openloop-poisson] [--out trace.json] [--duration 20] [--seed 7]
+              [--shards 1] [--nodes N] [--baseline NAME] [--ring 65536]
+              (flight recorder: Perfetto-loadable Chrome trace + <out>.summary.json)
   repro scenarios
   repro experiment <fig3|fig45|fig6|fig7|fig8|serving|openloop|fleet|headline|all> [--episodes N]
-    fleet flags: [--shards 1,2,4] [--nodes 16] [--duration 20]
+    fleet flags: [--shards 1,2,4] [--nodes 16] [--duration 20] [--trace [--trace-scenario node-churn]]
     openloop flags: [--duration 20]   (admission on/off SLO sweep -> slo_comparison.csv)";
 
 fn main() -> Result<()> {
@@ -51,19 +71,42 @@ fn main() -> Result<()> {
     if cmd == "lint" {
         return lint_cmd(&args);
     }
+    // `repro trace` is dep-free like `lint`: it drives the serving engine
+    // (or the sharded fleet) directly, no artifacts involved
+    if cmd == "trace" {
+        return trace_cmd(&args);
+    }
     let mut cfg = Config::default();
     cfg.apply_args(&args)?;
+    dispatch(cmd, cfg, &args)
+}
 
+#[cfg(feature = "pjrt")]
+fn dispatch(cmd: &str, cfg: Config, args: &Args) -> Result<()> {
     let manifest = Manifest::load(&cfg.paths.artifacts)?;
     let rt = Runtime::new(cfg.paths.artifacts.clone())?;
-
     match cmd {
         "info" => info(&manifest),
-        "train" => train(&rt, &manifest, cfg, &args),
-        "evaluate" => eval_cmd(&rt, &manifest, cfg, &args),
-        "baselines" => baselines_cmd(&rt, &manifest, cfg, &args),
-        "serve" => serve_cmd(&rt, &manifest, cfg, &args),
-        "experiment" => experiment(&rt, &manifest, cfg, &args),
+        "train" => train(&rt, &manifest, cfg, args),
+        "evaluate" => eval_cmd(&rt, &manifest, cfg, args),
+        "baselines" => baselines_cmd(&rt, &manifest, cfg, args),
+        "serve" => serve_cmd(&rt, &manifest, cfg, args),
+        "experiment" => experiment(&rt, &manifest, cfg, args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Featureless dispatch: the dep-free serving surfaces keep working
+/// without the PJRT stack; everything artifact-bound names the feature
+/// it needs instead of failing on a missing manifest.
+#[cfg(not(feature = "pjrt"))]
+fn dispatch(cmd: &str, cfg: Config, args: &Args) -> Result<()> {
+    match cmd {
+        "serve" => serve_cmd_depfree(cfg, args),
+        "experiment" => experiment_depfree(cfg, args),
+        "info" | "train" | "evaluate" | "baselines" => bail!(
+            "`repro {cmd}` needs the PJRT stack; rebuild with --features pjrt"
+        ),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
 }
@@ -111,6 +154,236 @@ fn list_scenarios() -> Result<()> {
     Ok(())
 }
 
+/// `repro trace` — the flight-recorder CLI (dep-free). One traced run
+/// of a registry scenario on the event-driven serving engine (or the
+/// sharded fleet with `--shards > 1`), emitted as Perfetto-loadable
+/// Chrome trace JSON plus the derived `<out>.summary.json`, both
+/// re-read and schema-validated before reporting success.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let name = args.str_or("scenario", "openloop-poisson");
+    let out = PathBuf::from(args.str_or("out", "trace.json"));
+    let duration = args.f64_or("duration", 20.0)?;
+    let seed = args.u64_or("seed", 7)?;
+    let shards = args.usize_or("shards", 1)?;
+    let cap = args.usize_or("ring", edgevision::telemetry::DEFAULT_RING_CAP)?;
+    let baseline = args.str_or("baseline", "shortest_queue_min");
+    let scenario = match args.get("nodes") {
+        Some(_) => edgevision::scenario::Scenario::at_nodes(
+            name,
+            args.usize_or("nodes", 16)?,
+        )?,
+        None => edgevision::scenario::Scenario::by_name(name)?,
+    };
+    println!(
+        "tracing {duration} virtual seconds of {name} ({} nodes, {shards} shard(s), policy: {baseline}, ring {cap})...",
+        scenario.n_nodes
+    );
+    if shards > 1 {
+        let fleet = edgevision::fleet::Fleet::new(&scenario, shards)?;
+        let (report, traces, stalls) = fleet.run_traced(
+            &edgevision::fleet::heuristic_factory(baseline),
+            duration,
+            seed,
+            cap,
+        )?;
+        anyhow::ensure!(report.conserved(), "traced fleet run leaked requests");
+        report.print();
+        write_trace_outputs(&out, &traces, Some(&stalls))
+    } else {
+        let mut policy =
+            edgevision::baselines::by_name(baseline, scenario.n_nodes, seed)?;
+        let (report, ring) = edgevision::serving::serve_scenario_traced(
+            policy.as_mut(),
+            &scenario,
+            duration,
+            seed,
+            cap,
+        )?;
+        anyhow::ensure!(report.conserved(), "traced run leaked requests");
+        report.print();
+        let traces = vec![edgevision::telemetry::ShardTrace {
+            shard: 0,
+            n_nodes: scenario.n_nodes,
+            ring,
+        }];
+        write_trace_outputs(&out, &traces, None)
+    }
+}
+
+/// Write + re-validate the flight-recorder artifacts: Chrome trace JSON
+/// at `out`, derived summary at `<out stem>.summary.json`. Validation
+/// re-reads the emitted bytes through the schema checker so a CI smoke
+/// run fails loudly on malformed output.
+fn write_trace_outputs(
+    out: &Path,
+    traces: &[edgevision::telemetry::ShardTrace],
+    stall: Option<&edgevision::telemetry::slo::LatencyHistogram>,
+) -> Result<()> {
+    edgevision::telemetry::write_chrome_trace(out, traces)?;
+    let text = std::fs::read_to_string(out)?;
+    let events = edgevision::telemetry::validate_chrome_trace(&text)
+        .with_context(|| {
+            format!("emitted trace {} failed schema validation", out.display())
+        })?;
+    let summary = out.with_extension("summary.json");
+    edgevision::telemetry::write_summary(&summary, traces, stall)?;
+    println!("wrote {} ({events} events, schema-validated)", out.display());
+    println!("wrote {}", summary.display());
+    Ok(())
+}
+
+/// The serving scenario under the active flag set: `--scenario` picks a
+/// registry entry (scalar env flags — nodes/omega/drop-threshold/
+/// drop-penalty — still apply on top), no flag means the paper setting
+/// under the full `EnvConfig`.
+fn scenario_from_args(
+    cfg: &Config,
+    args: &Args,
+) -> Result<edgevision::scenario::Scenario> {
+    Ok(match args.get("scenario") {
+        Some(name) => {
+            let mut s = edgevision::scenario::Scenario::by_name(name)?
+                .with_nodes(cfg.env.n_nodes);
+            s.omega = cfg.env.omega;
+            s.drop_threshold = cfg.env.drop_threshold;
+            s.drop_penalty = cfg.env.drop_penalty;
+            s
+        }
+        None => edgevision::scenario::Scenario::from_env(&cfg.env),
+    })
+}
+
+/// `repro experiment openloop` (dep-free): admission on/off SLO sweep
+/// across the openloop-* registry entries -> slo_comparison.csv, with
+/// the admission headline asserted.
+fn openloop_experiment(results: &Path, seed: u64, args: &Args) -> Result<()> {
+    let path = results.join("slo_comparison.csv");
+    let rows = edgevision::serving::openloop_to_csv(
+        args.f64_or("duration", 20.0)?,
+        seed,
+        &path,
+    )?;
+    println!(
+        "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "scenario", "adm", "emitted", "shed", "done", "p99", "goodput"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8.3} {:>9.3}",
+            r.scenario,
+            if r.admission { "on" } else { "off" },
+            r.report.emitted,
+            r.report.shed,
+            r.report.completed,
+            r.slo.p99,
+            r.slo.goodput_rps
+        );
+    }
+    edgevision::serving::assert_admission_headline(&rows)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `repro experiment fleet --trace`: one traced fleet run alongside the
+/// scaling sweep — flight-recorder JSON + derived summary land next to
+/// the CSV (`results/fleet_trace.json`). No-op without `--trace`.
+fn maybe_fleet_trace(results: &Path, seed: u64, args: &Args) -> Result<()> {
+    if !args.bool("trace") {
+        return Ok(());
+    }
+    let name = args.str_or("trace-scenario", "node-churn");
+    let nodes = args.usize_or("nodes", 16)?;
+    let shards = args
+        .usize_list_or("shards", &[1, 2, 4])?
+        .into_iter()
+        .max()
+        .unwrap_or(1);
+    let scenario = edgevision::scenario::Scenario::at_nodes(name, nodes)?;
+    let fleet = edgevision::fleet::Fleet::new(
+        &scenario,
+        shards.min(scenario.n_nodes),
+    )?;
+    let (report, traces, stalls) = fleet.run_traced(
+        &edgevision::fleet::heuristic_factory("shortest_queue_min"),
+        args.f64_or("duration", 20.0)?,
+        seed,
+        args.usize_or("ring", edgevision::telemetry::DEFAULT_RING_CAP)?,
+    )?;
+    anyhow::ensure!(report.conserved(), "traced fleet run leaked requests");
+    write_trace_outputs(&results.join("fleet_trace.json"), &traces, Some(&stalls))
+}
+
+/// Heuristic serving without the PJRT stack: the single-cluster
+/// engine under a `--baseline` policy, or the fleet with `--shards > 1`.
+#[cfg(not(feature = "pjrt"))]
+fn serve_cmd_depfree(cfg: Config, args: &Args) -> Result<()> {
+    let scenario = scenario_from_args(&cfg, args)?;
+    if args.usize_or("shards", 1)? > 1 {
+        return serve_fleet(scenario, &cfg, args);
+    }
+    anyhow::ensure!(
+        args.get("policy").is_none(),
+        "--policy (trained actor) needs the PJRT stack; rebuild with --features pjrt or use --baseline NAME"
+    );
+    let baseline = args.str_or("baseline", "shortest_queue_min");
+    let duration = args.f64_or("duration", 30.0)?;
+    println!(
+        "serving {duration} virtual seconds on {} nodes (scenario: {}, policy: {baseline})...",
+        scenario.n_nodes, scenario.name
+    );
+    let mut policy = edgevision::baselines::by_name(
+        baseline,
+        scenario.n_nodes,
+        cfg.rl.seed,
+    )?;
+    let report = edgevision::serving::serve_scenario(
+        policy.as_mut(),
+        &scenario,
+        duration,
+        cfg.rl.seed,
+    )?;
+    report.print();
+    Ok(())
+}
+
+/// The dep-free experiment arms (`openloop`, `fleet`). The figure
+/// experiments need the trained actor and stay behind `pjrt`.
+#[cfg(not(feature = "pjrt"))]
+fn experiment_depfree(cfg: Config, args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).context(
+        "experiment needs an id (dep-free build: openloop|fleet; the figure experiments need --features pjrt)",
+    )?;
+    let results = PathBuf::from(&cfg.paths.results);
+    match which {
+        "openloop" => openloop_experiment(&results, cfg.rl.seed, args),
+        "fleet" => fleet_experiment(&results, cfg.rl.seed ^ 0xF1EE7, args),
+        other => bail!(
+            "experiment {other:?} needs the PJRT stack; rebuild with --features pjrt"
+        ),
+    }
+}
+
+/// Dep-free twin of `ExpContext::fleet`: shards x scenarios on the
+/// sharded runtime -> fleet_scaling.csv (same seed salt as the PJRT
+/// path, so both builds produce identical rows).
+#[cfg(not(feature = "pjrt"))]
+fn fleet_experiment(results: &Path, seed: u64, args: &Args) -> Result<()> {
+    let shards = args.usize_list_or("shards", &[1, 2, 4])?;
+    let path = results.join("fleet_scaling.csv");
+    let reports = edgevision::fleet::sweep_to_csv(
+        edgevision::scenario::Scenario::names(),
+        &shards,
+        args.usize_or("nodes", 16)?,
+        args.f64_or("duration", 20.0)?,
+        seed,
+        "shortest_queue_min",
+        &path,
+    )?;
+    println!("wrote {} ({} rows)", path.display(), reports.len());
+    maybe_fleet_trace(results, seed, args)
+}
+
+#[cfg(feature = "pjrt")]
 fn info(manifest: &Manifest) -> Result<()> {
     let n = &manifest.net;
     println!("EdgeVision artifacts @ {}", manifest.dir.display());
@@ -140,6 +413,7 @@ fn info(manifest: &Manifest) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn train(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
     let save = args.get("save").map(|s| s.to_string()).unwrap_or_else(|| {
         format!(
@@ -176,6 +450,7 @@ fn train(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn eval_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
     let path = args.get("params").context("--params FILE required")?;
     let spec = manifest.variant(&cfg.rl.variant)?;
@@ -204,6 +479,7 @@ fn eval_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Resu
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn baselines_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, _args: &Args) -> Result<()> {
     let ctx = ExpContext::new(rt, manifest, cfg.clone());
     println!("omega = {}", cfg.env.omega);
@@ -254,24 +530,9 @@ fn serve_fleet(scenario: edgevision::scenario::Scenario, cfg: &Config, args: &Ar
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
-    // --scenario picks a registry entry; the default is the paper setting
-    // under the active EnvConfig overrides. The scalar env flags
-    // (--nodes/--omega/--drop-threshold/--drop-penalty) apply in both
-    // paths — at their defaults this leaves a registry entry untouched —
-    // while the regime itself (arrival means, bandwidth, GPU speeds)
-    // stays the scenario's own.
-    let scenario = match args.get("scenario") {
-        Some(name) => {
-            let mut s = edgevision::scenario::Scenario::by_name(name)?
-                .with_nodes(cfg.env.n_nodes);
-            s.omega = cfg.env.omega;
-            s.drop_threshold = cfg.env.drop_threshold;
-            s.drop_penalty = cfg.env.drop_penalty;
-            s
-        }
-        None => edgevision::scenario::Scenario::from_env(&cfg.env),
-    };
+    let scenario = scenario_from_args(&cfg, args)?;
     if args.usize_or("shards", 1)? > 1 {
         return serve_fleet(scenario, &cfg, args);
     }
@@ -301,6 +562,7 @@ fn serve_cmd(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Res
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -340,43 +602,20 @@ fn experiment(rt: &Runtime, manifest: &Manifest, cfg: Config, args: &Args) -> Re
         "openloop" => {
             // open-loop SLO sweep: admission on/off across the
             // openloop-* scenarios, headline-asserted
-            let path = ctx.results.join("slo_comparison.csv");
-            let rows = edgevision::serving::openloop_to_csv(
-                args.f64_or("duration", 20.0)?,
-                ctx.base.rl.seed,
-                &path,
-            )?;
-            println!(
-                "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8} {:>9}",
-                "scenario", "adm", "emitted", "shed", "done", "p99",
-                "goodput"
-            );
-            for r in &rows {
-                println!(
-                    "{:<18} {:<5} {:>8} {:>8} {:>8} {:>8.3} {:>9.3}",
-                    r.scenario,
-                    if r.admission { "on" } else { "off" },
-                    r.report.emitted,
-                    r.report.shed,
-                    r.report.completed,
-                    r.slo.p99,
-                    r.slo.goodput_rps
-                );
-            }
-            edgevision::serving::assert_admission_headline(&rows)?;
-            println!("wrote {}", path.display());
-            Ok(())
+            openloop_experiment(&ctx.results, ctx.base.rl.seed, args)
         }
         "fleet" => {
             // shards x scenarios on the sharded fleet runtime -> one
-            // balance-annotated row per combination
+            // balance-annotated row per combination; --trace adds a
+            // flight-recorder run (results/fleet_trace.json)
             let shards = args.usize_list_or("shards", &[1, 2, 4])?;
             ctx.fleet(
                 edgevision::scenario::Scenario::names(),
                 &shards,
                 args.usize_or("nodes", 16)?,
                 args.f64_or("duration", 20.0)?,
-            )
+            )?;
+            maybe_fleet_trace(&ctx.results, ctx.base.rl.seed ^ 0xF1EE7, args)
         }
         "headline" => ctx.headline(),
         "all" => ctx.all(),

@@ -22,6 +22,7 @@ use crate::baselines;
 use crate::scenario::Scenario;
 use crate::serving::engine::{serve_scenario, ServingReport};
 use crate::util::csv::CsvWriter;
+use crate::util::provenance::{write_sidecar_meta, RunMeta};
 
 /// Run every heuristic baseline under every named scenario. Each report
 /// is conservation-checked (extended ledger — faults included), and
@@ -116,6 +117,10 @@ pub fn comparison_to_csv(
             format!("{:.4}", r.mean_accuracy),
         ])?;
     }
+    write_sidecar_meta(
+        path.as_ref(),
+        &RunMeta::new(scenario_names, seed, &[], duration_virtual_secs),
+    )?;
     Ok(rows)
 }
 
@@ -161,6 +166,7 @@ mod tests {
         assert!(header.contains("shed"));
         assert!(header.contains("cancelled"));
         assert_eq!(text.lines().count(), rows.len() + 1);
+        assert!(dir.join("serving_comparison.meta.json").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -21,6 +21,7 @@ use crate::baselines::{Selection, ShortestQueueController};
 use crate::coordinator::cluster::{ComputeHook, EdgeCluster, ProfileCompute};
 use crate::policy::Policy;
 use crate::scenario::Scenario;
+use crate::telemetry::trace::{TraceRing, TraceSink};
 use crate::util::stats::{mean, percentile};
 
 /// Serving-run options: a [`Scenario`] descriptor (workload, bandwidth,
@@ -294,6 +295,43 @@ pub fn serve_scenario(
     let mut compute = ProfileCompute::new(scenario.profiles.clone());
     let (_, report) = run_with(&opts, policy, &mut compute)?;
     Ok(report)
+}
+
+/// [`serve_scenario`] with the flight recorder enabled: the run records
+/// every request-lifecycle, GPU-batch and fault event into a
+/// preallocated ring of `ring_cap` records (virtual time only) and
+/// returns it alongside the report. The recorded run is bit-identical to
+/// the untraced one — the sink never touches RNG, heap layout, or event
+/// order (pinned by `tests/trace.rs`).
+pub fn serve_scenario_traced(
+    policy: &mut dyn Policy,
+    scenario: &Scenario,
+    duration_virtual_secs: f64,
+    seed: u64,
+    ring_cap: usize,
+) -> Result<(ServingReport, TraceRing)> {
+    let opts = ServingOptions {
+        scenario: scenario.clone(),
+        duration_virtual_secs,
+        seed,
+        ..Default::default()
+    };
+    let mut compute = ProfileCompute::new(scenario.profiles.clone());
+    let mut cluster = build_cluster(&opts);
+    cluster.set_trace(TraceSink::ring(ring_cap));
+    policy.reset(opts.seed);
+    cluster.run(policy, &mut compute, opts.duration_virtual_secs)?;
+    let report = ServingReport::from_cluster(
+        &cluster,
+        &opts.scenario.name,
+        opts.duration_virtual_secs,
+        0.0,
+        0.0,
+    );
+    // invariant: the sink was installed as a ring three lines up and
+    // nothing detaches it mid-run
+    let ring = cluster.take_trace().unwrap();
+    Ok((report, ring))
 }
 
 /// Dep-free serving run: the shortest-queue baseline (the same

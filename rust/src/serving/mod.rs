@@ -25,7 +25,8 @@ pub mod zoo;
 
 pub use comparison::{comparison_to_csv, completed_of};
 pub use engine::{
-    run_profile_serving, serve_scenario, ServingOptions, ServingReport,
+    run_profile_serving, serve_scenario, serve_scenario_traced,
+    ServingOptions, ServingReport,
 };
 pub use openloop::{
     assert_admission_headline, goodput_of, openloop_rows, openloop_to_csv,

@@ -32,6 +32,7 @@ use crate::scenario::Scenario;
 use crate::serving::engine::{run_with, ServingOptions, ServingReport};
 use crate::telemetry::slo::{LatencyHistogram, SloSummary};
 use crate::util::csv::CsvWriter;
+use crate::util::provenance::{write_sidecar_meta, RunMeta};
 
 /// The open-loop registry entries the experiment sweeps.
 pub const OPENLOOP_SCENARIOS: [&str; 3] =
@@ -181,6 +182,10 @@ pub fn openloop_to_csv(
             format!("{:.3}", r.report.throughput_rps),
         ])?;
     }
+    write_sidecar_meta(
+        path.as_ref(),
+        &RunMeta::new(&OPENLOOP_SCENARIOS, seed, &[], duration_virtual_secs),
+    )?;
     Ok(rows)
 }
 
@@ -257,6 +262,10 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         assert_eq!(text.lines().count(), 7);
+        assert!(
+            dir.join("slo_comparison.meta.json").exists(),
+            "CSV writers must drop a provenance sidecar"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

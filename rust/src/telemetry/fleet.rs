@@ -39,13 +39,19 @@ pub struct ShardStats {
     /// this shard sat idle at barriers (0.0 when the runtime did not
     /// measure, e.g. the shards=1 in-process path).
     pub stall_frac: f64,
+    /// Median per-epoch barrier wait (seconds) from the per-epoch stall
+    /// histogram. Measured wall-clock, like `stall_secs`.
+    pub stall_p50: f64,
+    /// 99th-percentile per-epoch barrier wait (seconds). Clamped to
+    /// `stall_secs` — one wait can never exceed the run's total stall.
+    pub stall_p99: f64,
 }
 
 /// Virtual-time results must be bit-identical run to run; the stall
 /// fields are *measured wall-clock* and legitimately differ between two
 /// otherwise identical runs. Equality (used by the fleet determinism
 /// tests) therefore compares everything except `stall_secs` /
-/// `stall_frac`.
+/// `stall_frac` / `stall_p50` / `stall_p99`.
 impl PartialEq for ShardStats {
     fn eq(&self, other: &Self) -> bool {
         self.shard == other.shard
@@ -99,6 +105,8 @@ impl ShardStats {
             },
             stall_secs: 0.0,
             stall_frac: 0.0,
+            stall_p50: 0.0,
+            stall_p99: 0.0,
         }
     }
 
@@ -111,6 +119,21 @@ impl ShardStats {
         } else {
             0.0
         };
+    }
+
+    /// Record per-epoch stall percentiles from the worker's barrier-wait
+    /// histogram. Non-finite percentiles (overflow bucket) clamp to the
+    /// total stall — a single barrier wait cannot exceed it.
+    pub fn set_stall_dist(&mut self, hist: &crate::telemetry::LatencyHistogram) {
+        let clamp = |x: f64| {
+            if x.is_finite() {
+                x.min(self.stall_secs.max(0.0))
+            } else {
+                self.stall_secs.max(0.0)
+            }
+        };
+        self.stall_p50 = clamp(hist.percentile(50.0));
+        self.stall_p99 = clamp(hist.percentile(99.0));
     }
 }
 
@@ -152,6 +175,8 @@ mod tests {
             drop_rate: 0.2,
             stall_secs: 0.0,
             stall_frac: 0.0,
+            stall_p50: 0.0,
+            stall_p99: 0.0,
         }
     }
 
@@ -162,11 +187,27 @@ mod tests {
         b.set_stall(1.25, 5.0);
         assert_eq!(b.stall_secs, 1.25);
         assert_eq!(b.stall_frac, 0.25);
+        let mut hist = crate::telemetry::LatencyHistogram::new();
+        hist.record(0.25);
+        hist.record(0.25);
+        b.set_stall_dist(&hist);
+        assert!(b.stall_p50 > 0.0);
         // wall-clock telemetry must not break run-to-run determinism
         assert_eq!(a, b);
         let mut c = stats(0.5);
         c.lost_to_failure = 1;
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stall_dist_clamps_to_total_stall() {
+        let mut s = stats(0.5);
+        s.set_stall(0.5, 5.0);
+        let mut hist = crate::telemetry::LatencyHistogram::new();
+        hist.record(10.0); // overflow bucket -> infinite percentile edge
+        s.set_stall_dist(&hist);
+        assert_eq!(s.stall_p50, 0.5);
+        assert_eq!(s.stall_p99, 0.5);
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! Telemetry: result persistence (CSV + JSON), the paper-vs-measured
-//! report generator, per-shard fleet balance summaries, and the SLO
-//! latency-histogram surface behind the open-loop experiment.
+//! report generator, per-shard fleet balance summaries, the SLO
+//! latency-histogram surface behind the open-loop experiment, and the
+//! flight recorder (`trace`) with its Chrome-trace/Perfetto exporter.
 
 pub mod fleet;
 pub mod report;
 pub mod slo;
+pub mod trace;
 
 pub use fleet::{utilization_spread, ShardStats};
 pub use report::{method_row, write_method_csv, MethodSummary};
 pub use slo::{LatencyHistogram, SloSummary};
+pub use trace::{
+    chrome_trace_json, summary_json, terminal_counts, validate_chrome_trace,
+    write_chrome_trace, write_summary, ShardTrace, TerminalCounts, TraceKind,
+    TraceRecord, TraceRing, TraceSink, DEFAULT_RING_CAP, NO_BATCH,
+};

@@ -6,6 +6,7 @@ use anyhow::Result;
 use crate::env::metrics::EpisodeMetrics;
 use crate::env::profiles::{MODEL_NAMES, N_MODELS, N_RES, RES_NAMES};
 use crate::util::csv::CsvWriter;
+use crate::util::provenance::{write_sidecar_meta, RunMeta};
 
 /// One method's aggregate at one penalty weight.
 #[derive(Debug, Clone)]
@@ -40,11 +41,14 @@ pub fn method_row(
     }
 }
 
-/// Write rows to CSV with the standard column layout.
+/// Write rows to CSV with the standard column layout, plus the
+/// run-provenance sidecar every `results/` artifact carries.
 pub fn write_method_csv(
     path: impl AsRef<std::path::Path>,
     rows: &[MethodSummary],
+    meta: &RunMeta,
 ) -> Result<()> {
+    let path = path.as_ref();
     let mut header = vec![
         "method".to_string(),
         "omega".into(),
@@ -72,6 +76,7 @@ pub fn write_method_csv(
         cells.extend(r.res_dist.iter().map(|v| format!("{v:.4}")));
         w.row(&cells)?;
     }
+    write_sidecar_meta(path, meta)?;
     Ok(())
 }
 
@@ -85,10 +90,13 @@ mod tests {
         let row = method_row("ours", 5.0, &m, 1.25);
         let dir = std::env::temp_dir().join("ev_report_test");
         let path = dir.join("rows.csv").to_string_lossy().to_string();
-        write_method_csv(&path, &[row]).unwrap();
+        let meta = RunMeta::new(&["paper"], 1, &[], 0.0);
+        write_method_csv(&path, &[row], &meta).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let header = text.lines().next().unwrap();
         assert_eq!(header.split(',').count(), 7 + N_MODELS + N_RES);
         assert!(text.contains("ours,5,1.25"));
+        assert!(dir.join("rows.meta.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -60,6 +60,15 @@ impl LatencyHistogram {
         self.total
     }
 
+    /// Fold another histogram's counts in (bucket layout is fixed at
+    /// compile time, so merging is an element-wise add).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+    }
+
     /// Upper edge of bucket `idx` in seconds (the overflow bucket reports
     /// infinity).
     fn upper_edge(&self, idx: usize) -> f64 {
@@ -171,6 +180,19 @@ mod tests {
         // upper edges over-estimate by at most one bucket width
         assert!(p50 >= 0.0059 && p50 <= 0.0059 * GROWTH * GROWTH, "{p50}");
         assert!(p999 >= 0.0109 && p999 <= 0.0109 * GROWTH * GROWTH, "{p999}");
+    }
+
+    #[test]
+    fn merge_is_elementwise_additive() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(0.01);
+        b.record(0.01);
+        b.record(5.0); // overflow bucket
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.count_within(0.1), 2);
+        assert!(a.percentile(100.0).is_infinite());
     }
 
     #[test]

@@ -1,0 +1,930 @@
+//! Flight recorder: deterministic per-event tracing for both substrates
+//! and the fleet, exported as Chrome trace event format JSON (Perfetto-
+//! loadable).
+//!
+//! Design contracts (pinned by tests + contract-lint):
+//!
+//! - **Zero overhead when off**: `TraceSink::Disabled` is a single branch
+//!   per record site; it never touches the heap, RNG, or event order, so a
+//!   disabled run is bit-identical to a build without tracing at all.
+//! - **Allocation-free when on**: `TraceRing` preallocates its buffer at
+//!   construction; `push` is a pure index write with wraparound (old
+//!   records are overwritten, counted in `dropped`). Both `push` and
+//!   `TraceSink::rec` are hot-path roots in the contract-lint manifest.
+//! - **Virtual time only**: records carry simulation seconds. Wall-clock
+//!   measurements (barrier stall) never enter the ring — they go to the
+//!   derived summary, which is explicitly excluded from determinism.
+//! - **Seed-deterministic export**: `Json` objects sort keys, rings
+//!   preserve record order, and shard traces export in shard order, so the
+//!   same seed yields byte-identical JSON.
+//! - **Ledger reconciliation**: every emitted request produces exactly one
+//!   terminal record per conservation-ledger class (`terminal_counts`
+//!   nets out optimistic completions retracted on node crash).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::telemetry::slo::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Default per-shard ring capacity (records). At ~64 B/record this is a
+/// ~4 MiB buffer — enough for the full event volume of every registry
+/// scenario at default durations without wrapping.
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// Batch id sentinel for terminal records that never reached a GPU batch
+/// (expired-in-queue drops).
+pub const NO_BATCH: u64 = u64::MAX;
+
+/// What a `TraceRecord` describes. Terminal kinds (Complete, Drop, Lost,
+/// Cancel, Shed, Residual) reconcile 1:1 with the conservation ledger;
+/// Retract nets out an optimistic terminal that a node crash rolled back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceKind {
+    /// Request entered the system (arrival accepted into the pending map,
+    /// or refused-at-the-door — a Shed record follows in that case).
+    #[default]
+    Emit,
+    /// Admission gate refused the request at arrival (`aux` = reason code:
+    /// 0 = queue full, 1 = deadline infeasible, 2 = throttled).
+    Shed,
+    /// Cross-shard dispatch delivered into this shard.
+    Import,
+    /// Request exported to a remote shard (terminal locally).
+    Export,
+    /// Hedged duplicate dispatched (`req` = twin id).
+    Hedge,
+    /// Hedge race loser retired.
+    Cancel,
+    /// Lost to a node failure.
+    Lost,
+    /// Served within deadline. Span: `t0` arrival, `aux` service start,
+    /// `t1` finish; `batch`/`size` identify the GPU batch.
+    Complete,
+    /// Served past deadline (or expired in queue when `batch == NO_BATCH`).
+    Drop,
+    /// Optimistic Complete/Drop rolled back by a node crash
+    /// (`size` = 1 if the retracted record was a Drop, 0 if a Complete).
+    Retract,
+    /// GPU batch execution span on a node (`t0` start, `t1` end,
+    /// `size` = frames).
+    Batch,
+    /// Fault-schedule event applied (`size` = code: 0 down, 1 up,
+    /// 2 gpu-derate, 3 link-change; `aux` = factor).
+    Fault,
+    /// Fleet epoch barrier span (`node` = shard, `batch` = epoch index,
+    /// `req` = imports delivered at the barrier).
+    Epoch,
+    /// Request still in flight at the horizon.
+    Residual,
+    /// Simulator slot span (`batch` = slot index, `size` = arrivals).
+    Slot,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Emit => "emit",
+            TraceKind::Shed => "shed",
+            TraceKind::Import => "import",
+            TraceKind::Export => "export",
+            TraceKind::Hedge => "hedge",
+            TraceKind::Cancel => "cancel",
+            TraceKind::Lost => "lost",
+            TraceKind::Complete => "complete",
+            TraceKind::Drop => "drop",
+            TraceKind::Retract => "retract",
+            TraceKind::Batch => "gpu batch",
+            TraceKind::Fault => "fault",
+            TraceKind::Epoch => "epoch",
+            TraceKind::Residual => "residual",
+            TraceKind::Slot => "slot",
+        }
+    }
+}
+
+/// One fixed-size trace record. `Copy` + `Default` so the ring can
+/// preallocate and sites can build records with struct-update syntax
+/// without touching the heap.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceRecord {
+    pub kind: TraceKind,
+    /// Node index (or shard index for Epoch records).
+    pub node: u32,
+    /// Kind-specific small integer (batch size, fault code, retract class).
+    pub size: u32,
+    /// Request id (or imports count for Epoch, slot arrivals for Slot).
+    pub req: u64,
+    /// Batch id (`NO_BATCH` when none), epoch index, or slot index.
+    pub batch: u64,
+    pub model: u8,
+    pub res: u8,
+    /// Span start / instant timestamp (virtual seconds).
+    pub t0: f64,
+    /// Span end (== `t0` for instants).
+    pub t1: f64,
+    /// Kind-specific scalar: service start (terminals), fault factor,
+    /// shed reason code.
+    pub aux: f64,
+}
+
+impl TraceRecord {
+    /// Point event at virtual time `at` — no heap, safe on hot paths.
+    #[inline]
+    pub fn instant(kind: TraceKind, node: usize, req: u64, at: f64) -> Self {
+        TraceRecord {
+            kind,
+            node: node as u32,
+            req,
+            t0: at,
+            t1: at,
+            aux: at,
+            ..TraceRecord::default()
+        }
+    }
+}
+
+/// Preallocated overwrite-oldest ring of trace records. Construction is
+/// the only allocation; `push` is a pure index write.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRing {
+    buf: Vec<TraceRecord>,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        assert!(cap > 0, "trace ring capacity must be positive");
+        TraceRing {
+            buf: vec![TraceRecord::default(); cap],
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record one event. Zero-alloc: overwrites the oldest slot once the
+    /// ring is full (the overwrite is counted in `dropped`).
+    #[inline]
+    pub fn push(&mut self, r: TraceRecord) {
+        self.buf[self.head] = r;
+        self.head += 1;
+        if self.head == self.buf.len() {
+            self.head = 0;
+        }
+        if self.len < self.buf.len() {
+            self.len += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Records overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Iterate records oldest-first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceRecord> {
+        let (a, b) = if self.len < self.buf.len() {
+            (&self.buf[..self.len], &self.buf[..0])
+        } else {
+            (&self.buf[self.head..], &self.buf[..self.head])
+        };
+        a.iter().chain(b.iter())
+    }
+}
+
+/// The recording endpoint both substrates and the fleet write to.
+/// `Disabled` is the default everywhere; enabling tracing swaps in a
+/// preallocated ring and changes nothing else about a run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum TraceSink {
+    #[default]
+    Disabled,
+    Ring(TraceRing),
+}
+
+impl TraceSink {
+    pub fn disabled() -> TraceSink {
+        TraceSink::Disabled
+    }
+
+    pub fn ring(cap: usize) -> TraceSink {
+        TraceSink::Ring(TraceRing::new(cap))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        matches!(self, TraceSink::Ring(_))
+    }
+
+    /// Record one event. One branch when disabled; never touches RNG,
+    /// heap, or event order, so disabling is bit-identity-safe.
+    #[inline]
+    pub fn rec(&mut self, r: TraceRecord) {
+        if let TraceSink::Ring(ring) = self {
+            ring.push(r);
+        }
+    }
+
+    pub fn ring_ref(&self) -> Option<&TraceRing> {
+        match self {
+            TraceSink::Ring(r) => Some(r),
+            TraceSink::Disabled => None,
+        }
+    }
+
+    /// Detach the ring (leaving the sink disabled) for post-run export.
+    pub fn take_ring(&mut self) -> Option<TraceRing> {
+        match std::mem::take(self) {
+            TraceSink::Ring(r) => Some(r),
+            TraceSink::Disabled => None,
+        }
+    }
+}
+
+/// One shard's recorded ring plus the layout facts the exporter needs.
+/// Single-cluster runs export as one `ShardTrace` with `shard == 0`; the
+/// fleet coordinator's barrier ring exports with `n_nodes == 0`.
+#[derive(Debug, Clone)]
+pub struct ShardTrace {
+    pub shard: usize,
+    pub n_nodes: usize,
+    pub ring: TraceRing,
+}
+
+// -- Chrome trace export -----------------------------------------------------
+//
+// Track layout (pid = shard):
+//   tid 0            "control"          slot spans, fault instants, epoch
+//                                       barrier spans (epochs land on the
+//                                       pid of the shard they stall)
+//   tid 1 + node     "node N gpu"       GPU batch spans (never overlap:
+//                                       GPU mutual exclusion)
+//   tid 1000 + node  "node N requests"  request lifecycle spans + instants
+
+const TID_CONTROL: f64 = 0.0;
+const TID_GPU_BASE: u32 = 1;
+const TID_REQ_BASE: u32 = 1000;
+
+fn micros(secs: f64) -> f64 {
+    secs * 1e6
+}
+
+fn meta_event(pid: f64, tid: f64, what: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("name", Json::str(what)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn span_event(
+    pid: f64,
+    tid: f64,
+    name: &str,
+    cat: &str,
+    t0: f64,
+    t1: f64,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("X")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ts", Json::num(micros(t0))),
+        ("dur", Json::num(micros((t1 - t0).max(0.0)))),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn instant_event(
+    pid: f64,
+    tid: f64,
+    name: &str,
+    cat: &str,
+    at: f64,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ts", Json::num(micros(at))),
+        ("s", Json::str("t")),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn fault_code_name(code: u32) -> &'static str {
+    match code {
+        0 => "node-down",
+        1 => "node-up",
+        2 => "gpu-derate",
+        _ => "link-change",
+    }
+}
+
+fn shed_reason_name(code: u32) -> &'static str {
+    match code {
+        0 => "queue-full",
+        1 => "deadline-infeasible",
+        _ => "throttled",
+    }
+}
+
+fn record_event(pid: f64, r: &TraceRecord) -> Json {
+    let req_tid = f64::from(TID_REQ_BASE + r.node);
+    let gpu_tid = f64::from(TID_GPU_BASE + r.node);
+    match r.kind {
+        TraceKind::Complete | TraceKind::Drop => {
+            let mut args = vec![
+                ("req", Json::num(r.req as f64)),
+                ("node", Json::num(f64::from(r.node))),
+                ("model", Json::num(f64::from(r.model))),
+                ("res", Json::num(f64::from(r.res))),
+                ("wait_ms", Json::num((r.aux - r.t0).max(0.0) * 1e3)),
+                ("service_ms", Json::num((r.t1 - r.aux).max(0.0) * 1e3)),
+            ];
+            if r.batch != NO_BATCH {
+                args.push(("batch", Json::num(r.batch as f64)));
+                args.push(("batch_size", Json::num(f64::from(r.size))));
+            }
+            span_event(pid, req_tid, r.kind.name(), "request", r.t0, r.t1, args)
+        }
+        TraceKind::Batch => span_event(
+            pid,
+            gpu_tid,
+            r.kind.name(),
+            "gpu",
+            r.t0,
+            r.t1,
+            vec![
+                ("batch", Json::num(r.batch as f64)),
+                ("size", Json::num(f64::from(r.size))),
+                ("model", Json::num(f64::from(r.model))),
+                ("res", Json::num(f64::from(r.res))),
+            ],
+        ),
+        // Epoch barrier spans land on the stalled shard's process row
+        // (pid = r.node), control track.
+        TraceKind::Epoch => span_event(
+            f64::from(r.node),
+            TID_CONTROL,
+            r.kind.name(),
+            "barrier",
+            r.t0,
+            r.t1,
+            vec![
+                ("epoch", Json::num(r.batch as f64)),
+                ("imports", Json::num(r.req as f64)),
+            ],
+        ),
+        TraceKind::Slot => span_event(
+            pid,
+            TID_CONTROL,
+            r.kind.name(),
+            "control",
+            r.t0,
+            r.t1,
+            vec![
+                ("slot", Json::num(r.batch as f64)),
+                ("arrivals", Json::num(f64::from(r.size))),
+            ],
+        ),
+        TraceKind::Fault => instant_event(
+            pid,
+            TID_CONTROL,
+            r.kind.name(),
+            "fault",
+            r.t0,
+            vec![
+                ("node", Json::num(f64::from(r.node))),
+                ("event", Json::str(fault_code_name(r.size))),
+                ("factor", Json::num(r.aux)),
+            ],
+        ),
+        TraceKind::Shed => instant_event(
+            pid,
+            req_tid,
+            r.kind.name(),
+            "request",
+            r.t0,
+            vec![
+                ("req", Json::num(r.req as f64)),
+                ("reason", Json::str(shed_reason_name(r.aux as u32))),
+            ],
+        ),
+        TraceKind::Retract => instant_event(
+            pid,
+            req_tid,
+            r.kind.name(),
+            "request",
+            r.t0,
+            vec![
+                ("req", Json::num(r.req as f64)),
+                (
+                    "was",
+                    Json::str(if r.size == 1 { "drop" } else { "complete" }),
+                ),
+            ],
+        ),
+        _ => instant_event(
+            pid,
+            req_tid,
+            r.kind.name(),
+            "request",
+            r.t0,
+            vec![("req", Json::num(r.req as f64))],
+        ),
+    }
+}
+
+/// Assemble the Chrome trace event JSON for a set of shard traces.
+/// Deterministic: object keys sort (BTreeMap), ring order is record
+/// order, shards export in slice order.
+pub fn chrome_trace_json(traces: &[ShardTrace]) -> Json {
+    let mut events = Vec::new();
+    for t in traces {
+        let pid = t.shard as f64;
+        events.push(meta_event(pid, TID_CONTROL, "process_name", &format!("shard {}", t.shard)));
+        events.push(meta_event(pid, TID_CONTROL, "thread_name", "control"));
+        for n in 0..t.n_nodes {
+            events.push(meta_event(
+                pid,
+                f64::from(TID_GPU_BASE + n as u32),
+                "thread_name",
+                &format!("node {n} gpu"),
+            ));
+            events.push(meta_event(
+                pid,
+                f64::from(TID_REQ_BASE + n as u32),
+                "thread_name",
+                &format!("node {n} requests"),
+            ));
+        }
+        for r in t.ring.iter() {
+            events.push(record_event(pid, r));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write the Chrome trace JSON to `path`, creating parent directories.
+pub fn write_chrome_trace(path: impl AsRef<Path>, traces: &[ShardTrace]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut out = chrome_trace_json(traces).to_string_pretty();
+    out.push('\n');
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+// -- schema checker ----------------------------------------------------------
+
+/// Minimal Chrome trace event schema check: top-level `traceEvents` array;
+/// every event has `ph` ∈ {M, X, i}, numeric `pid`/`tid`, string `name`;
+/// `X` events have a finite `ts` and `dur ≥ 0`; `i` events carry `ts` and a
+/// scope `s`; `M` events carry `args.name`. Returns the event count.
+pub fn validate_chrome_trace(src: &str) -> Result<usize> {
+    let root = Json::parse(src).context("trace is not valid JSON")?;
+    let events = root
+        .get("traceEvents")
+        .context("missing traceEvents")?
+        .as_arr()
+        .context("traceEvents is not an array")?;
+    for (i, ev) in events.iter().enumerate() {
+        check_event(ev).with_context(|| format!("event {i}"))?;
+    }
+    Ok(events.len())
+}
+
+fn check_event(ev: &Json) -> Result<()> {
+    let ph = ev.get("ph")?.as_str().context("ph must be a string")?;
+    ev.get("pid")?.as_f64().context("pid must be a number")?;
+    ev.get("tid")?.as_f64().context("tid must be a number")?;
+    ev.get("name")?.as_str().context("name must be a string")?;
+    match ph {
+        "M" => {
+            ev.get("args")?
+                .get("name")?
+                .as_str()
+                .context("metadata args.name must be a string")?;
+        }
+        "X" => {
+            let ts = ev.get("ts")?.as_f64()?;
+            if !ts.is_finite() {
+                bail!("non-finite ts {ts}");
+            }
+            let dur = ev.get("dur")?.as_f64()?;
+            if !dur.is_finite() || dur < 0.0 {
+                bail!("bad dur {dur}");
+            }
+        }
+        "i" => {
+            ev.get("ts")?.as_f64()?;
+            ev.get("s")?.as_str().context("instant scope s must be a string")?;
+        }
+        other => bail!("unknown phase {other:?}"),
+    }
+    Ok(())
+}
+
+// -- ledger reconciliation ---------------------------------------------------
+
+/// Per-class record tallies for reconciling a ring against the six-term
+/// conservation ledger. Net terminals subtract crash retractions: an
+/// optimistic Complete/Drop recorded at batch-execution time is rolled
+/// back by a Retract record when its node dies mid-service.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TerminalCounts {
+    pub emit: u64,
+    pub shed: u64,
+    pub import: u64,
+    pub export: u64,
+    pub complete: u64,
+    pub dropped: u64,
+    pub lost: u64,
+    pub cancel: u64,
+    pub retract_complete: u64,
+    pub retract_drop: u64,
+    pub residual: u64,
+    pub batches: u64,
+    pub hedges: u64,
+    pub epochs: u64,
+    pub faults: u64,
+    pub slots: u64,
+}
+
+impl TerminalCounts {
+    /// Completions net of crash retractions.
+    pub fn net_complete(&self) -> u64 {
+        self.complete - self.retract_complete
+    }
+
+    /// Drops net of crash retractions.
+    pub fn net_dropped(&self) -> u64 {
+        self.dropped - self.retract_drop
+    }
+
+    /// Fold another shard's counts in (fleet-wide reconciliation).
+    pub fn absorb(&mut self, other: &TerminalCounts) {
+        self.emit += other.emit;
+        self.shed += other.shed;
+        self.import += other.import;
+        self.export += other.export;
+        self.complete += other.complete;
+        self.dropped += other.dropped;
+        self.lost += other.lost;
+        self.cancel += other.cancel;
+        self.retract_complete += other.retract_complete;
+        self.retract_drop += other.retract_drop;
+        self.residual += other.residual;
+        self.batches += other.batches;
+        self.hedges += other.hedges;
+        self.epochs += other.epochs;
+        self.faults += other.faults;
+        self.slots += other.slots;
+    }
+}
+
+pub fn terminal_counts(ring: &TraceRing) -> TerminalCounts {
+    let mut c = TerminalCounts::default();
+    for r in ring.iter() {
+        match r.kind {
+            TraceKind::Emit => c.emit += 1,
+            TraceKind::Shed => c.shed += 1,
+            TraceKind::Import => c.import += 1,
+            TraceKind::Export => c.export += 1,
+            TraceKind::Complete => c.complete += 1,
+            TraceKind::Drop => c.dropped += 1,
+            TraceKind::Lost => c.lost += 1,
+            TraceKind::Cancel => c.cancel += 1,
+            TraceKind::Retract => {
+                if r.size == 1 {
+                    c.retract_drop += 1;
+                } else {
+                    c.retract_complete += 1;
+                }
+            }
+            TraceKind::Residual => c.residual += 1,
+            TraceKind::Batch => c.batches += 1,
+            TraceKind::Hedge => c.hedges += 1,
+            TraceKind::Epoch => c.epochs += 1,
+            TraceKind::Fault => c.faults += 1,
+            TraceKind::Slot => c.slots += 1,
+        }
+    }
+    c
+}
+
+// -- derived summary ---------------------------------------------------------
+
+/// Clamp a histogram percentile for JSON: the overflow bucket reports
+/// +inf, which is not valid JSON — encode "beyond histogram span" as -1.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        -1.0
+    }
+}
+
+/// Derived per-phase latency decomposition + request accounting for the
+/// recorded traces. `stall` (measured wall-clock, fleet runs only) is the
+/// ONE place non-virtual time may appear — never in the trace itself.
+pub fn summary_json(traces: &[ShardTrace], stall: Option<&LatencyHistogram>) -> Json {
+    let mut c = TerminalCounts::default();
+    let mut ring_dropped = 0u64;
+    let mut wait = LatencyHistogram::new();
+    let mut service = LatencyHistogram::new();
+    for t in traces {
+        let tc = terminal_counts(&t.ring);
+        c.absorb(&tc);
+        ring_dropped += t.ring.dropped();
+        for r in t.ring.iter() {
+            if r.kind == TraceKind::Complete {
+                wait.record((r.aux - r.t0).max(0.0));
+                service.record((r.t1 - r.aux).max(0.0));
+            }
+        }
+    }
+    let events: usize = traces.iter().map(|t| t.ring.len()).sum();
+    let mut fields = vec![
+        ("schema", Json::str("edgevision-trace-summary-v1")),
+        ("shards", Json::num(traces.len() as f64)),
+        ("events", Json::num(events as f64)),
+        ("ring_dropped", Json::num(ring_dropped as f64)),
+        (
+            "requests",
+            Json::obj(vec![
+                ("emitted", Json::num(c.emit as f64)),
+                ("completed", Json::num(c.net_complete() as f64)),
+                ("dropped", Json::num(c.net_dropped() as f64)),
+                ("lost_to_failure", Json::num(c.lost as f64)),
+                ("shed", Json::num(c.shed as f64)),
+                ("cancelled", Json::num(c.cancel as f64)),
+                ("residual", Json::num(c.residual as f64)),
+                ("imported", Json::num(c.import as f64)),
+                ("exported", Json::num(c.export as f64)),
+            ]),
+        ),
+        (
+            "phase_ms",
+            Json::obj(vec![
+                ("wait_p50", Json::num(finite(wait.percentile(50.0) * 1e3))),
+                ("wait_p99", Json::num(finite(wait.percentile(99.0) * 1e3))),
+                (
+                    "service_p50",
+                    Json::num(finite(service.percentile(50.0) * 1e3)),
+                ),
+                (
+                    "service_p99",
+                    Json::num(finite(service.percentile(99.0) * 1e3)),
+                ),
+            ]),
+        ),
+        ("gpu_batches", Json::num(c.batches as f64)),
+        ("epochs", Json::num(c.epochs as f64)),
+        ("faults", Json::num(c.faults as f64)),
+    ];
+    if let Some(h) = stall {
+        fields.push((
+            "stall",
+            Json::obj(vec![
+                ("samples", Json::num(h.count() as f64)),
+                ("p50_ms", Json::num(finite(h.percentile(50.0) * 1e3))),
+                ("p99_ms", Json::num(finite(h.percentile(99.0) * 1e3))),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Write the derived summary next to a trace artifact.
+pub fn write_summary(
+    path: impl AsRef<Path>,
+    traces: &[ShardTrace],
+    stall: Option<&LatencyHistogram>,
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    let mut out = summary_json(traces, stall).to_string_pretty();
+    out.push('\n');
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: TraceKind, req: u64, t: f64) -> TraceRecord {
+        TraceRecord {
+            kind,
+            req,
+            t0: t,
+            t1: t + 0.5,
+            aux: t + 0.1,
+            ..TraceRecord::default()
+        }
+    }
+
+    #[test]
+    fn ring_keeps_order_and_wraps() {
+        let mut ring = TraceRing::new(4);
+        for i in 0..3 {
+            ring.push(rec(TraceKind::Emit, i, i as f64));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 0);
+        let ids: Vec<u64> = ring.iter().map(|r| r.req).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+
+        for i in 3..10 {
+            ring.push(rec(TraceKind::Emit, i, i as f64));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let ids: Vec<u64> = ring.iter().map(|r| r.req).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn disabled_sink_is_noop_and_yields_no_ring() {
+        let mut sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        sink.rec(rec(TraceKind::Emit, 1, 0.0));
+        assert!(sink.ring_ref().is_none());
+        assert!(sink.take_ring().is_none());
+    }
+
+    #[test]
+    fn sink_ring_records_and_detaches() {
+        let mut sink = TraceSink::ring(8);
+        assert!(sink.is_enabled());
+        sink.rec(rec(TraceKind::Emit, 7, 0.0));
+        sink.rec(rec(TraceKind::Complete, 7, 1.0));
+        let ring = sink.take_ring().unwrap();
+        assert!(!sink.is_enabled());
+        assert_eq!(ring.len(), 2);
+        let c = terminal_counts(&ring);
+        assert_eq!(c.emit, 1);
+        assert_eq!(c.complete, 1);
+    }
+
+    #[test]
+    fn terminal_counts_net_out_retractions() {
+        let mut ring = TraceRing::new(16);
+        ring.push(rec(TraceKind::Emit, 1, 0.0));
+        ring.push(rec(TraceKind::Complete, 1, 1.0));
+        // crash rolls the completion back; the request is then lost
+        ring.push(TraceRecord {
+            kind: TraceKind::Retract,
+            req: 1,
+            size: 0,
+            t0: 1.2,
+            t1: 1.2,
+            ..TraceRecord::default()
+        });
+        ring.push(rec(TraceKind::Lost, 1, 1.2));
+        let c = terminal_counts(&ring);
+        assert_eq!(c.net_complete(), 0);
+        assert_eq!(c.net_dropped(), 0);
+        assert_eq!(c.lost, 1);
+        assert_eq!(c.emit, 1);
+    }
+
+    fn demo_traces() -> Vec<ShardTrace> {
+        let mut ring = TraceRing::new(64);
+        ring.push(rec(TraceKind::Emit, 1, 0.0));
+        ring.push(TraceRecord {
+            kind: TraceKind::Batch,
+            node: 0,
+            size: 2,
+            batch: 0,
+            t0: 0.2,
+            t1: 0.4,
+            ..TraceRecord::default()
+        });
+        ring.push(TraceRecord {
+            kind: TraceKind::Complete,
+            node: 0,
+            req: 1,
+            batch: 0,
+            size: 2,
+            t0: 0.0,
+            aux: 0.2,
+            t1: 0.4,
+            ..TraceRecord::default()
+        });
+        ring.push(TraceRecord {
+            kind: TraceKind::Shed,
+            node: 0,
+            req: 2,
+            t0: 0.3,
+            t1: 0.3,
+            aux: 1.0,
+            ..TraceRecord::default()
+        });
+        ring.push(TraceRecord {
+            kind: TraceKind::Fault,
+            node: 0,
+            size: 0,
+            t0: 0.5,
+            t1: 0.5,
+            ..TraceRecord::default()
+        });
+        ring.push(TraceRecord {
+            kind: TraceKind::Epoch,
+            node: 0,
+            batch: 3,
+            req: 5,
+            t0: 0.0,
+            t1: 0.6,
+            ..TraceRecord::default()
+        });
+        vec![ShardTrace { shard: 0, n_nodes: 1, ring }]
+    }
+
+    #[test]
+    fn chrome_export_is_schema_valid_and_deterministic() {
+        let traces = demo_traces();
+        let a = chrome_trace_json(&traces).to_string_pretty();
+        let b = chrome_trace_json(&traces).to_string_pretty();
+        assert_eq!(a, b, "export must be byte-identical for equal input");
+        let n = validate_chrome_trace(&a).unwrap();
+        // 4 metadata events (process, control, node gpu, node requests) + 6 records
+        assert_eq!(n, 4 + 6);
+        assert!(a.contains("\"gpu batch\""));
+        assert!(a.contains("\"barrier\""));
+        assert!(a.contains("deadline-infeasible"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_events() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"foo\": []}").is_err());
+        // unknown phase
+        let bad = r#"{"traceEvents": [{"ph": "Z", "pid": 0, "tid": 0, "name": "x"}]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+        // X without dur
+        let bad = r#"{"traceEvents": [{"ph": "X", "pid": 0, "tid": 0, "name": "x", "ts": 1}]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+        // minimal valid
+        let ok = r#"{"traceEvents": [{"ph": "i", "pid": 0, "tid": 0, "name": "x", "ts": 1, "s": "t"}]}"#;
+        assert_eq!(validate_chrome_trace(ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn summary_reports_requests_and_clamps_percentiles() {
+        let traces = demo_traces();
+        let s = summary_json(&traces, None);
+        let reqs = s.get("requests").unwrap();
+        assert_eq!(reqs.get("emitted").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(reqs.get("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(reqs.get("shed").unwrap().as_usize().unwrap(), 1);
+        // serialization must parse back (no inf/nan leakage)
+        let text = s.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), s);
+
+        let mut stall = LatencyHistogram::new();
+        stall.record(10.0); // beyond histogram span -> overflow bucket
+        let s = summary_json(&traces, Some(&stall));
+        let p99 = s.get("stall").unwrap().get("p99_ms").unwrap().as_f64().unwrap();
+        assert_eq!(p99, -1.0, "overflow percentile must clamp to -1");
+        assert!(Json::parse(&s.to_string_pretty()).is_ok());
+    }
+}

@@ -1,10 +1,11 @@
 //! Small self-contained substrates (the offline build has no serde / rand /
-//! clap / criterion, so we carry our own): JSON, PRNG, statistics, CSV and
-//! a mini CLI parser.
+//! clap / criterion, so we carry our own): JSON, PRNG, statistics, CSV, a
+//! mini CLI parser and run-provenance sidecars for `results/` artifacts.
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod provenance;
 pub mod rng;
 pub mod stats;

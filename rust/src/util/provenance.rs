@@ -1,0 +1,126 @@
+//! Run-provenance sidecars for experiment artifacts: every
+//! `results/*.csv` writer drops a sibling `<name>.meta.json` describing
+//! the run that produced it (scenarios, seed, shard counts, virtual
+//! duration, bench scaling, crate version), so a checked-in or
+//! CI-uploaded CSV is never an orphan. Deliberately wall-clock-free —
+//! two runs of the same configuration produce byte-identical sidecars.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::json::Json;
+
+/// What produced one `results/` artifact.
+#[derive(Debug, Clone, Default)]
+pub struct RunMeta {
+    /// Scenario names the artifact sweeps over.
+    pub scenarios: Vec<String>,
+    pub seed: u64,
+    /// Shard counts (empty for single-cluster artifacts).
+    pub shards: Vec<usize>,
+    /// Virtual-time horizon per run, seconds.
+    pub duration_virtual_secs: f64,
+}
+
+impl RunMeta {
+    pub fn new(
+        scenarios: &[&str],
+        seed: u64,
+        shards: &[usize],
+        duration_virtual_secs: f64,
+    ) -> Self {
+        RunMeta {
+            scenarios: scenarios.iter().map(|s| s.to_string()).collect(),
+            seed,
+            shards: shards.to_vec(),
+            duration_virtual_secs,
+        }
+    }
+}
+
+/// Write `<stem>.meta.json` next to `artifact` (e.g.
+/// `results/fleet_scaling.csv` → `results/fleet_scaling.meta.json`).
+/// Returns the sidecar path.
+pub fn write_sidecar_meta(
+    artifact: impl AsRef<Path>,
+    meta: &RunMeta,
+) -> Result<PathBuf> {
+    let artifact = artifact.as_ref();
+    let side = artifact.with_extension("meta.json");
+    let name = artifact
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let bench_scale = std::env::var("EDGEVISION_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok());
+    let doc = Json::obj(vec![
+        ("schema", Json::str("edgevision-run-meta-v1")),
+        ("artifact", Json::str(name)),
+        (
+            "scenarios",
+            Json::Arr(
+                meta.scenarios.iter().map(|s| Json::str(s.as_str())).collect(),
+            ),
+        ),
+        ("seed", Json::num(meta.seed as f64)),
+        (
+            "shards",
+            Json::Arr(
+                meta.shards.iter().map(|&s| Json::num(s as f64)).collect(),
+            ),
+        ),
+        ("duration_virtual_secs", Json::num(meta.duration_virtual_secs)),
+        (
+            "bench_scale",
+            match bench_scale {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            },
+        ),
+        ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
+    ]);
+    if let Some(dir) = side.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(&side, text)?;
+    Ok(side)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sidecar_lands_next_to_artifact() {
+        let dir = std::env::temp_dir().join("ev_provenance_test");
+        let csv = dir.join("fleet_scaling.csv");
+        let meta = RunMeta::new(&["steady", "paper"], 7, &[1, 2], 12.5);
+        let side = write_sidecar_meta(&csv, &meta).unwrap();
+        assert_eq!(side, dir.join("fleet_scaling.meta.json"));
+        let text = std::fs::read_to_string(&side).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(
+            doc.get("schema").unwrap().as_str().unwrap(),
+            "edgevision-run-meta-v1"
+        );
+        assert_eq!(
+            doc.get("artifact").unwrap().as_str().unwrap(),
+            "fleet_scaling.csv"
+        );
+        assert_eq!(doc.get("seed").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.get("shards").unwrap().usize_vec().unwrap(), vec![1, 2]);
+        assert_eq!(
+            doc.get("duration_virtual_secs").unwrap().as_f64().unwrap(),
+            12.5
+        );
+        // byte-identical on rewrite: provenance carries no wall-clock
+        let first = std::fs::read(&side).unwrap();
+        write_sidecar_meta(&csv, &meta).unwrap();
+        assert_eq!(first, std::fs::read(&side).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -21,6 +21,7 @@ use edgevision::coordinator::{EdgeCluster, Exterior, ProfileCompute};
 use edgevision::env::{Action, Profiles, SimConfig, Simulator, StepOutcome, VecEnv};
 use edgevision::fleet::ShardPlan;
 use edgevision::scenario::Scenario;
+use edgevision::telemetry::TraceSink;
 
 struct CountingAlloc;
 
@@ -168,6 +169,56 @@ fn steady_state_hot_path_allocates_nothing() {
         "steady-state open-loop EdgeCluster stepping hit the allocator"
     );
     assert!(cluster.shed > 0, "the admission gate never engaged");
+
+    // --- tracing-enabled stepping (flight recorder attached) ----------------
+    // The recording contract: with a ring sink attached, steady-state
+    // stepping performs ZERO allocations — every record is a pure index
+    // write into the preallocated buffer. The ring is sized to wrap well
+    // before the measurement window, so overwrite (the steady state of a
+    // long traced run) is what gets probed, not append.
+    let scenario = Scenario::by_name("steady").expect("registered scenario");
+    let mut cluster = EdgeCluster::new(&scenario, 5);
+    cluster.set_trace(TraceSink::ring(1 << 10));
+    let mut policy = ShortestQueueController::new(Selection::Min);
+    let mut compute = ProfileCompute::new(Profiles::default());
+    let mut t = 0.0;
+    for _ in 0..60 {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    }
+    cluster.served.reserve(50_000);
+    let best = min_window_allocs(6, || {
+        t += 5.0;
+        cluster.step_until(&mut policy, &mut compute, t).unwrap();
+    });
+    assert_eq!(
+        best, 0,
+        "traced EdgeCluster::step_until hit the allocator"
+    );
+    let ring = cluster.take_trace().expect("ring attached");
+    assert!(
+        ring.dropped() > 0,
+        "the probe ring never wrapped — overwrite was not exercised"
+    );
+
+    // the slot simulator under the same contract
+    let cfg = probe_cfg();
+    let mut sim = Simulator::new(cfg.clone(), 3);
+    sim.set_trace(TraceSink::ring(1 << 10));
+    let mut out = StepOutcome::new(cfg.n_nodes);
+    let actions: Vec<Action> =
+        (0..4).map(|i| Action::new((i + 1) % 4, 1, 2)).collect();
+    for _ in 0..1000 {
+        sim.step_into(&actions, &mut out);
+    }
+    let best = min_window_allocs(5, || {
+        for _ in 0..100 {
+            sim.step_into(&actions, &mut out);
+        }
+    });
+    assert_eq!(best, 0, "traced Simulator::step_into hit the allocator");
+    let ring = sim.take_trace().expect("ring attached");
+    assert!(ring.dropped() > 0, "the simulator probe ring never wrapped");
 
     // --- fleet shard stepping (exterior-attached cluster) ------------------
     // One shard of a 2-shard steady@8 fleet, stepped in epochs exactly as

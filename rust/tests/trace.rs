@@ -1,0 +1,299 @@
+//! Flight-recorder integration contracts (ROADMAP §Flight recorder):
+//!
+//! * **Ledger reconciliation** — across the whole scenario registry, the
+//!   ring's terminal records tally exactly to the six-term conservation
+//!   ledger (`emitted == completed + dropped + lost + shed + cancelled +
+//!   residual`, plus the import/export boundary terms per fleet shard).
+//! * **Determinism** — a traced run is byte-reproducible per seed: the
+//!   exported Chrome trace JSON is identical across repeats (traces hold
+//!   virtual time only), and distinct seeds produce distinct traces.
+//! * **Disabled-sink bit-identity** — attaching no sink leaves every
+//!   report field bit-identical to the pre-recorder engine output.
+//! * **Schema** — the emitted JSON passes the in-repo Chrome-trace
+//!   checker and contains request-lifecycle, GPU-track and barrier spans.
+
+use edgevision::baselines;
+use edgevision::fleet::{heuristic_factory, Fleet};
+use edgevision::scenario::Scenario;
+use edgevision::serving::{
+    serve_scenario, serve_scenario_traced, ServingReport,
+};
+use edgevision::telemetry::{
+    chrome_trace_json, summary_json, terminal_counts, validate_chrome_trace,
+    write_chrome_trace, write_summary, ShardTrace, TerminalCounts,
+    DEFAULT_RING_CAP,
+};
+
+fn traced(
+    policy_name: &str,
+    scenario: &Scenario,
+    duration: f64,
+    seed: u64,
+) -> (ServingReport, edgevision::telemetry::TraceRing) {
+    let mut policy =
+        baselines::by_name(policy_name, scenario.n_nodes, seed).unwrap();
+    serve_scenario_traced(
+        policy.as_mut(),
+        scenario,
+        duration,
+        seed,
+        DEFAULT_RING_CAP,
+    )
+    .unwrap()
+}
+
+fn assert_reconciles(ctx: &str, tc: &TerminalCounts, r: &ServingReport) {
+    assert_eq!(tc.emit as usize, r.emitted, "{ctx}: emitted");
+    assert_eq!(tc.import as usize, r.imported, "{ctx}: imported");
+    assert_eq!(tc.export as usize, r.exported, "{ctx}: exported");
+    assert_eq!(tc.net_complete() as usize, r.completed, "{ctx}: completed");
+    assert_eq!(tc.net_dropped() as usize, r.dropped, "{ctx}: dropped");
+    assert_eq!(tc.lost as usize, r.lost_to_failure, "{ctx}: lost");
+    assert_eq!(tc.shed as usize, r.shed, "{ctx}: shed");
+    assert_eq!(tc.cancel as usize, r.cancelled, "{ctx}: cancelled");
+    assert_eq!(tc.residual as usize, r.residual, "{ctx}: residual");
+    // report.batches is derived from the surviving served log (crash
+    // retractions remove entries), so the trace — which records every
+    // execution — can only see more
+    assert!(tc.batches as usize >= r.batches, "{ctx}: batches");
+}
+
+/// Proptest-style across the registry x two policy families (the hedged
+/// wrapper exercises Cancel/Hedge records): terminal trace records
+/// reconcile exactly with the conservation ledger.
+#[test]
+fn prop_trace_reconciles_with_ledger_every_scenario() {
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        for policy_name in ["shortest_queue_min", "hedged_shortest_queue_min"]
+        {
+            let ctx = format!("{name}/{policy_name}");
+            let (report, ring) = traced(policy_name, &scenario, 6.0, 11);
+            assert!(report.conserved(), "{ctx}: ledger leaked");
+            assert_eq!(ring.dropped(), 0, "{ctx}: ring wrapped");
+            assert_reconciles(&ctx, &terminal_counts(&ring), &report);
+        }
+    }
+}
+
+/// Fleet reconciliation: every shard's ring tallies to that shard's
+/// report, and the boundary terms balance globally (exports minus
+/// imports == cross-shard requests still on the backhaul).
+#[test]
+fn fleet_trace_reconciles_per_shard() {
+    let scenario = Scenario::at_nodes("node-churn", 8).unwrap();
+    let fleet = Fleet::new(&scenario, 2).unwrap();
+    let (report, traces, _stalls) = fleet
+        .run_traced(
+            &heuristic_factory("shortest_queue_min"),
+            8.0,
+            5,
+            DEFAULT_RING_CAP,
+        )
+        .unwrap();
+    assert!(report.conserved());
+    assert!(report.lost_to_failure > 0, "node-churn must lose requests");
+    // shards 0..S, then the coordinator's barrier track as a pseudo shard
+    assert_eq!(traces.len(), report.shards + 1);
+    let mut total = TerminalCounts::default();
+    for (k, shard_report) in report.per_shard.iter().enumerate() {
+        assert_eq!(traces[k].shard, k);
+        assert_eq!(traces[k].ring.dropped(), 0, "shard {k}: ring wrapped");
+        let tc = terminal_counts(&traces[k].ring);
+        assert_reconciles(&format!("shard {k}"), &tc, shard_report);
+        total.absorb(&tc);
+    }
+    assert_eq!(total.emit as usize, report.emitted);
+    assert_eq!(total.net_complete() as usize, report.completed);
+    assert_eq!(total.lost as usize, report.lost_to_failure);
+    assert_eq!(
+        (total.export - total.import) as usize,
+        report.cross_in_flight,
+        "undelivered boundary crossings"
+    );
+    // the coordinator track holds one barrier span per (shard, epoch)
+    let coord = terminal_counts(&traces[report.shards].ring);
+    assert!(coord.epochs > 0, "no barrier spans recorded");
+    assert_eq!(coord.epochs % report.shards as u64, 0);
+}
+
+/// Traces are byte-reproducible per seed (virtual time only, sorted-key
+/// JSON) and distinguish seeds.
+#[test]
+fn trace_json_is_byte_identical_per_seed() {
+    let scenario = Scenario::by_name("node-churn").unwrap();
+    let render = |seed: u64| {
+        let (_, ring) = traced("shortest_queue_min", &scenario, 6.0, seed);
+        let traces = vec![ShardTrace {
+            shard: 0,
+            n_nodes: scenario.n_nodes,
+            ring,
+        }];
+        (
+            chrome_trace_json(&traces).to_string_pretty(),
+            summary_json(&traces, None).to_string_pretty(),
+        )
+    };
+    let (trace_a, summary_a) = render(3);
+    let (trace_b, summary_b) = render(3);
+    assert_eq!(trace_a, trace_b, "same seed must render identical bytes");
+    assert_eq!(summary_a, summary_b);
+    let (trace_c, _) = render(4);
+    assert_ne!(trace_a, trace_c, "distinct seeds must differ");
+}
+
+/// Multi-shard traced runs are deterministic too: thread interleaving
+/// must not leak into the recorded virtual-time stream.
+#[test]
+fn fleet_trace_is_deterministic_across_threads() {
+    let scenario = Scenario::by_name("hotspot").unwrap().with_nodes(8);
+    let render = || {
+        let fleet = Fleet::new(&scenario, 4).unwrap();
+        let (_, traces, _) = fleet
+            .run_traced(
+                &heuristic_factory("shortest_queue_min"),
+                6.0,
+                9,
+                DEFAULT_RING_CAP,
+            )
+            .unwrap();
+        (
+            chrome_trace_json(&traces).to_string_pretty(),
+            summary_json(&traces, None).to_string_pretty(),
+        )
+    };
+    let (trace_a, summary_a) = render();
+    let (trace_b, summary_b) = render();
+    assert_eq!(trace_a, trace_b);
+    assert_eq!(summary_a, summary_b);
+}
+
+fn assert_reports_bit_identical(ctx: &str, a: &ServingReport, b: &ServingReport) {
+    assert_eq!(a.scenario, b.scenario, "{ctx}: scenario");
+    assert_eq!(a.emitted, b.emitted, "{ctx}: emitted");
+    assert_eq!(a.total, b.total, "{ctx}: total");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+    assert_eq!(a.residual, b.residual, "{ctx}: residual");
+    assert_eq!(a.lost_to_failure, b.lost_to_failure, "{ctx}: lost");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.cancelled, b.cancelled, "{ctx}: cancelled");
+    assert_eq!(a.dispatched, b.dispatched, "{ctx}: dispatched");
+    assert_eq!(a.batches, b.batches, "{ctx}: batches");
+    for (field, x, y) in [
+        ("mean_batch_size", a.mean_batch_size, b.mean_batch_size),
+        ("throughput_rps", a.throughput_rps, b.throughput_rps),
+        ("mean_latency", a.mean_latency, b.mean_latency),
+        ("p50_latency", a.p50_latency, b.p50_latency),
+        ("p95_latency", a.p95_latency, b.p95_latency),
+        ("p99_latency", a.p99_latency, b.p99_latency),
+        ("mean_accuracy", a.mean_accuracy, b.mean_accuracy),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {field} {x} vs {y}");
+    }
+}
+
+/// The zero-overhead-when-off contract, registry-wide: running with the
+/// recorder attached yields a bit-identical report to running without
+/// (recording never perturbs scheduling, ids or arithmetic), and the
+/// disabled path IS the pre-recorder engine (pinned separately by the
+/// unit test on `EdgeCluster`).
+#[test]
+fn prop_tracing_never_perturbs_the_run() {
+    for name in Scenario::names() {
+        let scenario = Scenario::by_name(name).unwrap();
+        let mut policy =
+            baselines::by_name("shortest_queue_min", scenario.n_nodes, 13)
+                .unwrap();
+        let plain =
+            serve_scenario(policy.as_mut(), &scenario, 5.0, 13).unwrap();
+        let (recorded, _) = traced("shortest_queue_min", &scenario, 5.0, 13);
+        assert_reports_bit_identical(name, &plain, &recorded);
+    }
+}
+
+/// The emitted artifact passes the schema checker and contains all three
+/// span families the tentpole promises: request lifecycle, GPU batch
+/// track, barrier spans (fleet), plus shed/fault instants.
+#[test]
+fn emitted_trace_passes_schema_and_covers_span_families() {
+    let dir = std::env::temp_dir().join("ev_trace_artifact_test");
+    // single cluster, open loop: request spans + gpu batches + shed marks
+    let scenario = Scenario::by_name("openloop-poisson").unwrap();
+    let (report, ring) = traced("shortest_queue_min", &scenario, 8.0, 7);
+    assert!(report.shed > 0, "overload regime must shed");
+    let single = vec![ShardTrace {
+        shard: 0,
+        n_nodes: scenario.n_nodes,
+        ring,
+    }];
+    let trace_path = dir.join("trace.json");
+    write_chrome_trace(&trace_path, &single).unwrap();
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let events = validate_chrome_trace(&text).unwrap();
+    assert!(events > 0);
+    for needle in ["\"request\"", "\"gpu\"", "\"shed\"", "wait_ms", "service_ms"]
+    {
+        assert!(text.contains(needle), "trace missing {needle}");
+    }
+    // fleet run on a chaos scenario: barrier spans + fault instants
+    let scenario = Scenario::at_nodes("node-churn", 8).unwrap();
+    let fleet = Fleet::new(&scenario, 2).unwrap();
+    let (_, traces, stalls) = fleet
+        .run_traced(
+            &heuristic_factory("shortest_queue_min"),
+            8.0,
+            5,
+            DEFAULT_RING_CAP,
+        )
+        .unwrap();
+    let fleet_path = dir.join("fleet_trace.json");
+    write_chrome_trace(&fleet_path, &traces).unwrap();
+    let text = std::fs::read_to_string(&fleet_path).unwrap();
+    validate_chrome_trace(&text).unwrap();
+    for needle in ["\"barrier\"", "\"fault\"", "epoch"] {
+        assert!(text.contains(needle), "fleet trace missing {needle}");
+    }
+    // the derived summary carries the ledger + phase decomposition +
+    // stall histogram and round-trips through the JSON parser
+    let summary_path = dir.join("trace.summary.json");
+    write_summary(&summary_path, &traces, Some(&stalls)).unwrap();
+    let doc = edgevision::util::json::Json::parse(
+        &std::fs::read_to_string(&summary_path).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        "edgevision-trace-summary-v1"
+    );
+    let requests = doc.get("requests").unwrap();
+    assert!(requests.get("emitted").unwrap().as_usize().unwrap() > 0);
+    assert!(doc.get("phase_ms").is_ok());
+    assert!(doc.get("stall").is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Ring-buffer overflow degrades gracefully: a tiny ring keeps the
+/// newest records, counts what it overwrote, and both exports still
+/// succeed (the summary surfaces `ring_dropped` so a truncated trace is
+/// never mistaken for a complete one).
+#[test]
+fn wrapped_ring_still_exports_and_reports_loss() {
+    let scenario = Scenario::by_name("steady").unwrap();
+    let mut policy =
+        baselines::by_name("shortest_queue_min", scenario.n_nodes, 3).unwrap();
+    let (_, ring) =
+        serve_scenario_traced(policy.as_mut(), &scenario, 10.0, 3, 64)
+            .unwrap();
+    assert!(ring.dropped() > 0, "a 64-slot ring must wrap on this run");
+    assert_eq!(ring.len(), 64);
+    let traces = vec![ShardTrace {
+        shard: 0,
+        n_nodes: scenario.n_nodes,
+        ring,
+    }];
+    let json = chrome_trace_json(&traces).to_string_pretty();
+    validate_chrome_trace(&json).unwrap();
+    let summary = summary_json(&traces, None);
+    assert!(summary.get("ring_dropped").unwrap().as_usize().unwrap() > 0);
+}

@@ -113,6 +113,12 @@ impl Manifest {
                 ("rust/src/ingest/mod.rs", "pressure"),
                 ("rust/src/telemetry/slo.rs", "record"),
                 ("rust/src/policy/mod.rs", "action_for"),
+                // flight recorder: per-event record sites inside
+                // step_until/step_into — a pure index write into the
+                // preallocated ring, so both sit under the zero-alloc
+                // contract as explicit roots
+                ("rust/src/telemetry/trace.rs", "rec"),
+                ("rust/src/telemetry/trace.rs", "push"),
             ],
             hot_exempt: vec![
                 // training-phase minibatch sampler: reuses caller

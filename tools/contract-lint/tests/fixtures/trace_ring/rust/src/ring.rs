@@ -1,0 +1,29 @@
+//! Seeded violation: a flight-recorder ring whose overflow path
+//! reallocates. Recording sits on the per-event hot path, so it must be
+//! a pure index write — overwrite oldest, bump a drop counter — never a
+//! buffer growth.
+pub struct Ring {
+    buf: [u64; 4],
+    head: usize,
+}
+
+impl Ring {
+    /// Clean hot path: overwrite in place, wrap the cursor.
+    pub fn push(&mut self, v: u64) {
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.buf.len();
+    }
+
+    /// Seeded violation: grows on overflow instead of overwriting.
+    pub fn record(&mut self, v: u64) {
+        if self.head == self.buf.len() {
+            self.grow();
+        }
+        self.push(v);
+    }
+
+    fn grow(&mut self) {
+        let spill = vec![0u64; 8];
+        self.head = spill.len();
+    }
+}

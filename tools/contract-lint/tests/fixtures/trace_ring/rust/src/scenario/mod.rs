@@ -1,0 +1,15 @@
+//! Minimal registry skeleton shared by the lint fixtures.
+pub struct Scenario;
+
+impl Scenario {
+    pub fn names() -> [&'static str; 1] {
+        ["alpha"]
+    }
+
+    pub fn at_nodes(name: &str) -> Option<Scenario> {
+        match name {
+            "alpha" => Some(Scenario),
+            _ => None,
+        }
+    }
+}

@@ -150,6 +150,27 @@ fn hot_stop_boundary_is_respected_and_checked() {
 }
 
 #[test]
+fn trace_ring_recorder_must_not_allocate() {
+    let mut m = fixture_manifest();
+    // ring-recorder fns are hot-path roots by manifest entry — their
+    // names do not end in `_into`, so auto-discovery cannot find them
+    // (mirrors the repo's telemetry/trace.rs `rec`/`push` entries)
+    m.hot_paths = vec![
+        ("rust/src/ring.rs", "push"),
+        ("rust/src/ring.rs", "record"),
+    ];
+    let a = lint_tree(&fixture("trace_ring"), &m);
+    let e = errors(&a);
+    // the clean overwrite path passes; the growing overflow path fires
+    // once, blamed through the recorder root
+    assert_eq!(e.len(), 1, "{}", dump(&a.findings));
+    assert_eq!(e[0].rule, "hot-alloc");
+    assert_eq!(e[0].path, "rust/src/ring.rs");
+    assert_eq!(e[0].chain, ["record", "grow"]);
+    assert!(e[0].msg.contains("vec!"), "{}", e[0]);
+}
+
+#[test]
 fn panic_reachability_notes_and_errors() {
     let a = lint_tree(&fixture("panic_reach"), &fixture_manifest());
     // invariant-annotated site: surfaced note with its chain
